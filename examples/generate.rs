@@ -1,0 +1,95 @@
+//! Generation demos reproducing the paper's qualitative tables.
+//!
+//!   --table3   sequences + latency at several thresholds (Table 3)
+//!   --table4   per-exit prediction/confidence per token   (Table 4)
+//!   (neither)  single generation with both engines
+//!
+//!     cargo run --release --example generate -- \
+//!         --config ee-e2e --checkpoint artifacts/runs/ee-e2e.eckpt \
+//!         --prompt "question: what is the capital of " --table3
+
+use std::path::PathBuf;
+
+use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
+use eellm::runtime::artifacts::Manifest;
+use eellm::util::cli::Args;
+use eellm::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["table3", "table4"]);
+    let config = args.get_or("config", "ee-tiny");
+    let prompt = args.get_or("prompt", "question: what is the capital of ");
+    let max_new = args.usize_or("max-new-tokens", 32);
+    let man = Manifest::load_config(&PathBuf::from("artifacts"), &config)?;
+    let n_layers = man.model.n_layers;
+
+    let state = match args.get("checkpoint") {
+        Some(p) => ModelState::from_checkpoint(man, std::path::Path::new(p))?,
+        None => {
+            eprintln!("[warn] no --checkpoint; random weights");
+            ModelState::init(man, 42)
+        }
+    };
+
+    if args.flag("table4") {
+        let report = eellm::inference::probe::probe_generation(
+            state, &prompt, max_new,
+        )?;
+        println!("prompt:    {prompt:?}");
+        println!("generated: {:?}", report.generated);
+        report.to_table().emit("table4");
+        println!(
+            "cross-exit agreement on confident (>=0.8) tokens: {:.1}%",
+            100.0 * report.agreement_at(0.8)
+        );
+        return Ok(());
+    }
+
+    if args.flag("table3") {
+        let mut t = Table::new(
+            "Table 3 analogue: generations vs confidence threshold",
+            &["threshold", "time", "early%", "generated"],
+        );
+        let mut full_text = String::new();
+        for tau in [1.0f32, 0.8, 0.4, 0.2] {
+            let mut eng = SequentialEngine::new(state.clone(), tau)?;
+            let out = eng.generate_text(&prompt, max_new)?;
+            if tau == 1.0 {
+                full_text = out.text.clone();
+            }
+            let marker = if out.text == full_text { "" } else { " *" };
+            t.row(vec![
+                format!("{tau}"),
+                format!("{:.0}ms", out.seconds * 1e3),
+                format!(
+                    "{:.0}%",
+                    100.0 * out.stats.early_fraction(n_layers)
+                ),
+                format!("{:?}{marker}", out.text),
+            ]);
+        }
+        println!("prompt: {prompt:?} (* = differs from full-model output)");
+        t.emit("table3");
+        return Ok(());
+    }
+
+    let tau = args.f64_or("threshold", 0.5) as f32;
+    let mut seq = SequentialEngine::new(state.clone(), tau)?;
+    let a = seq.generate_text(&prompt, max_new)?;
+    println!(
+        "recompute: {:?} ({:.0}ms, exits {:?})",
+        a.text,
+        a.seconds * 1e3,
+        a.stats.counts
+    );
+    let mut pipe = PipelinedEngine::new(state, tau)?;
+    let b = pipe.generate_text(&prompt, max_new)?;
+    println!(
+        "pipelined: {:?} ({:.0}ms, exits {:?})",
+        b.text,
+        b.seconds * 1e3,
+        b.stats.counts
+    );
+    pipe.shutdown();
+    Ok(())
+}

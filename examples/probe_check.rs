@@ -1,0 +1,34 @@
+use std::path::PathBuf;
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{Corpus, CorpusSpec};
+use eellm::inference::ModelState;
+use eellm::runtime::artifacts::Manifest;
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn main() {
+    let root = PathBuf::from("artifacts");
+    let man = Manifest::load_config(&root, "ee-tiny").unwrap();
+    let corpus = Corpus::build(&CorpusSpec { seed: 7, n_entities: 8, target_bytes: 120_000 });
+    let mut ds = Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let steps = 60;
+    let mut trainer = PipelineTrainer::new(man.clone(), TrainerOptions {
+        seed: 42, lr: LrSchedule::cosine(3e-3, 5, steps), grad_clip: 1.0,
+        loss_weights: LossWeightSchedule::Constant, total_steps: steps,
+        bubble_fill: 0, bf_ratio: 2.0 }).unwrap();
+    for i in 0..steps {
+        let batches: Vec<TrainBatch> = (0..2).map(|_| ds.next_microbatch()).collect();
+        let st = trainer.train_step(&batches, &[]).unwrap();
+        if i % 10 == 0 { println!("step {i} losses {:?}", st.losses); }
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    let state = ModelState { man: man.clone(), stage_params: params };
+    for prompt in ["abc: a b c d ", "count: 3 4 5 ", "the capital of "] {
+        let report = eellm::inference::probe::probe_generation(state.clone(), prompt, 12).unwrap();
+        println!("prompt {prompt:?} -> {:?}", report.generated);
+        for p in &report.probes {
+            println!("  pos {} exits {:?}", p.position, p.exits);
+        }
+    }
+}

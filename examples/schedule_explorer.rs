@@ -1,0 +1,79 @@
+//! Interactive tour of the paper's pipeline schedules (Figure 3): renders
+//! ASCII timelines for the standard 1F1B schedule, the early-exit variants
+//! with and without the deferral optimisation, the bubble-filled schedule
+//! (Figure 4), and the GPipe baseline — with iteration time, bubble
+//! fraction and peak-memory numbers from the discrete-event simulator.
+//!
+//!     cargo run --release --example schedule_explorer -- --model 7B --pp 4
+
+use eellm::schedule::costs::{CostModel, PAPER_MODELS};
+use eellm::schedule::plan::{EeOptions, Plan};
+use eellm::schedule::report::render_timeline;
+use eellm::schedule::sim::Simulator;
+use eellm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let model = args.get_or("model", "7B");
+    let pp = args.usize_or("pp", 4);
+    let m = args.usize_or("microbatches", 6);
+    let dims = PAPER_MODELS
+        .iter()
+        .find(|d| d.name == model)
+        .unwrap_or(&PAPER_MODELS[1]);
+    let cm = CostModel::a100(dims, pp, 1);
+    let sim = Simulator::new(&cm);
+
+    let mut mid_exits = vec![0usize; pp];
+    for e in mid_exits.iter_mut().take(pp - 1).skip(1) {
+        *e = 1;
+    }
+
+    let scenarios: Vec<(&str, Plan)> = vec![
+        (
+            "Figure 3(a): standard 1F1B, no early exits",
+            Plan::one_f_one_b(pp, m, EeOptions::none(pp)),
+        ),
+        (
+            "Figure 3(b): early exits on middle stages (eager exit forward)",
+            Plan::one_f_one_b(
+                pp,
+                m,
+                EeOptions::with_exits(mid_exits.clone(), false),
+            ),
+        ),
+        (
+            "Figure 3(c): + Optimization 1 (exit forward deferred to backward)",
+            Plan::one_f_one_b(
+                pp,
+                m,
+                EeOptions::with_exits(mid_exits.clone(), true),
+            ),
+        ),
+        ("GPipe baseline (all forwards, then all backwards)", {
+            Plan::gpipe(pp, m, EeOptions::none(pp))
+        }),
+        ("Figure 4: 1F1B with bubble filling (Appendix C.2)", {
+            let mut p = Plan::one_f_one_b(pp, m, EeOptions::none(pp));
+            let k = Plan::max_fill(pp, 2.0);
+            p.add_bubble_fill(k, k, 2.0);
+            p
+        }),
+    ];
+
+    println!(
+        "model {model}, pp={pp}, M={m} microbatches (digits = fwd mb, letters = bwd mb, f/b = fills)\n"
+    );
+    for (title, plan) in scenarios {
+        let r = sim.run(&plan);
+        println!("=== {title}");
+        println!("{}", render_timeline(&r, 96));
+        let alpha = cm.alpha;
+        let peak = r.peak_memory_overall(alpha) / (1u64 << 30) as f64;
+        println!(
+            "peak memory {:.1} GiB (bottleneck stage {})\n",
+            peak,
+            r.bottleneck_stage(alpha)
+        );
+    }
+}

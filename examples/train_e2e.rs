@@ -1,0 +1,147 @@
+//! End-to-end validation run (EXPERIMENTS.md §E2E): pipeline-parallel
+//! pre-training of the ee-e2e early-exit transformer (~11M params, P=4,
+//! exits at 1/4 and 1/2 depth — the paper's Section 5.1 layout scaled to
+//! this CPU testbed) on the synthetic corpus, logging the per-exit loss
+//! curve (Figure 6 analogue) and saving a checkpoint that the inference
+//! benches (Figures 8/10, Tables 3/4) consume.
+//!
+//!     cargo run --release --example train_e2e -- \
+//!         --config ee-e2e --steps 300 --microbatches 8
+//!
+//! Flags: --config --steps --microbatches --lr --seed --corpus-bytes
+//!        --loss-weight-schedule --bubble-fill --out-dir
+
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{Corpus, CorpusSpec};
+use eellm::metrics::CurveWriter;
+use eellm::runtime::artifacts::Manifest;
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+use eellm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let config = args.get_or("config", "ee-e2e");
+    let steps = args.usize_or("steps", 300);
+    let microbatches = args.usize_or("microbatches", 8);
+    let lr = args.f64_or("lr", 1e-3);
+    let seed = args.usize_or("seed", 42) as u64;
+    let corpus_bytes = args.usize_or("corpus-bytes", 4 << 20);
+    let bubble_fill = args.usize_or("bubble-fill", 0);
+    let out_dir = PathBuf::from(args.get_or("out-dir", "artifacts/runs"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let man = Manifest::load_config(&PathBuf::from("artifacts"), &config)?;
+    println!(
+        "[e2e] {} | ~{} params | P={} | exits {:?} | {} steps x {} mb x {} tok",
+        man.name,
+        man.approx_param_count,
+        man.model.pipeline_stages,
+        man.exit_order(),
+        steps,
+        microbatches,
+        man.model.seq * man.model.microbatch,
+    );
+
+    let corpus = Corpus::build(&CorpusSpec {
+        seed,
+        n_entities: 24,
+        target_bytes: corpus_bytes,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, seed);
+    println!(
+        "[e2e] corpus {} docs -> {} training examples",
+        corpus.docs.len(),
+        ds.n_examples()
+    );
+
+    let schedule = LossWeightSchedule::parse(
+        &args.get_or("loss-weight-schedule", "constant"),
+        steps,
+    );
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed,
+            lr: LrSchedule::cosine(lr, steps / 20 + 1, steps),
+            grad_clip: 1.0,
+            loss_weights: schedule,
+            total_steps: steps,
+            bubble_fill,
+            bf_ratio: 2.0,
+        },
+    )?;
+
+    let names = trainer.exit_names();
+    let mut hdr = vec!["step".to_string(), "lr".to_string(), "seconds".to_string()];
+    hdr.extend(names.iter().cloned());
+    let curve_path = out_dir.join(format!("{config}_loss_curve.csv"));
+    let mut curve = CurveWriter::new(
+        &curve_path,
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let val = ds.validation_batches(4);
+    let t0 = std::time::Instant::now();
+    let mut tokens_seen = 0usize;
+    for step in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..microbatches).map(|_| ds.next_microbatch()).collect();
+        let fills: Vec<TrainBatch> =
+            (0..bubble_fill).map(|_| ds.next_microbatch()).collect();
+        let stats = trainer.train_step(&batches, &fills)?;
+        tokens_seen += microbatches * man.model.seq * man.model.microbatch;
+        let mut row = vec![stats.step as f64, stats.lr, stats.wall_seconds];
+        row.extend(stats.losses.iter());
+        curve.push(row);
+        if step % 10 == 0 || step + 1 == steps {
+            let ls: Vec<String> = names
+                .iter()
+                .zip(&stats.losses)
+                .map(|(n, l)| format!("{n}={l:.4}"))
+                .collect();
+            println!(
+                "step {:>4}/{steps} | {} | {:.2}s/it | {:.0} tok/s",
+                stats.step,
+                ls.join(" "),
+                stats.wall_seconds,
+                tokens_seen as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+        if (step + 1) % 50 == 0 {
+            let v = trainer.validate(&val)?;
+            let ls: Vec<String> = names
+                .iter()
+                .zip(&v)
+                .map(|(n, l)| format!("{n}={l:.4}"))
+                .collect();
+            println!("  [val] {}", ls.join(" "));
+            curve.flush()?;
+        }
+    }
+    curve.flush()?;
+
+    let ckpt = out_dir.join(format!("{config}.eckpt"));
+    trainer.save_checkpoint(&ckpt)?;
+
+    // Profile data for EXPERIMENTS.md §Perf.
+    println!("\n[e2e] executable profile (per stage):");
+    for (s, name, calls, ms) in trainer.profile()? {
+        if calls > 0 {
+            println!(
+                "  stage {s} {name:<12} {calls:>6} calls  {:>10.1}ms total  {:>8.2}ms/call",
+                ms,
+                ms / calls as f64
+            );
+        }
+    }
+    trainer.shutdown();
+
+    println!("\n[e2e] done in {:.1}s", t0.elapsed().as_secs_f64());
+    println!("[e2e] loss curve: {}", curve_path.display());
+    println!("[e2e] checkpoint: {}", ckpt.display());
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python for the EE-LLM reproduction.
+
+This package runs ONCE (``make artifacts``) to AOT-lower the model to HLO
+text; it is never imported on the Rust request path.
+"""

@@ -1,0 +1,228 @@
+"""AOT bridge: lower every per-stage function to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config the artifact set is, for each pipeline stage s:
+
+  s{s}_fwd         (params, x|tokens)                    -> (x_out,)
+  s{s}_bwd         (params, x|tokens, targets[, weights], g_out)
+                   -> (losses?, g_in?, *param_grads)     [Eq. 2 executable]
+  s{s}_eval        (params, x|tokens, targets)           -> (x_out[, losses])
+  s{s}_adam        (step, lr, scale, *p, *g, *m, *v)     -> (*p', *m', *v')
+  s{s}_sqsum       (*grads)                              -> (sq_sum,)
+  s{s}_decode_w{W} (params, x|tokens, cache, pos0)       -> (x_out, cache')
+  s{s}_head{L}     (head_params, x)                      -> (logits,)
+
+plus, for configs with emit_reference, a monolithic `full_loss_grads` /
+`full_eval` pair used by the Rust integration tests to verify that
+pipeline-parallel execution reproduces single-model losses and gradients
+exactly (Proposition 3.1).
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import decode, model, optim
+from .configs import param_count, presets
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def lower_to_hlo_text(fn, *specs):
+    # keep_unused=True: the Rust runtime relies on a static calling
+    # convention (manifest arity == HLO entry arity), so even arguments a
+    # particular stage happens not to use must stay in the signature.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(specs):
+    return [_spec(sp.shape) for sp in specs]
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.files = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, *specs):
+        t0 = time.time()
+        text = lower_to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        self.files[name] = {"file": fname, "sha": digest,
+                            "bytes": len(text)}
+        print(f"  {name:28s} {len(text):>9d}B  {time.time()-t0:5.1f}s",
+              flush=True)
+        return fname
+
+
+def build_config(cfg, out_root):
+    print(f"[{cfg.name}] ~{param_count(cfg):,} params, "
+          f"P={cfg.pipeline_stages}", flush=True)
+    out_dir = os.path.join(out_root, cfg.name)
+    w = ArtifactWriter(out_dir)
+
+    b, s_len, h = cfg.microbatch, cfg.seq, cfg.hidden
+    x_spec = _spec((b, s_len, h))
+    tok_spec = _spec((b, s_len), I32)
+    tgt_spec = _spec((b, s_len), I32)
+
+    stages_meta = []
+    for s in range(cfg.pipeline_stages):
+        specs = model.stage_param_specs(cfg, s)
+        pspecs = _param_specs(specs)
+        exits = model.stage_exits(cfg, s)
+        n_exits = len(exits)
+        in_spec = tok_spec if s == 0 else x_spec
+        per_stage_layers = cfg.n_layers // cfg.pipeline_stages
+        cache_shape = (per_stage_layers, 2, cfg.max_seq, cfg.n_heads,
+                       cfg.head_dim)
+
+        execs = {}
+        execs["fwd"] = w.emit(
+            f"s{s}_fwd",
+            lambda p, x, _s=s: (model.stage_fwd(cfg, _s, p, x),),
+            pspecs, in_spec)
+
+        bwd = model.stage_aux_grads(cfg, s)
+        wspec = _spec((n_exits,))
+        if n_exits > 0:
+            execs["bwd"] = w.emit(f"s{s}_bwd", bwd, pspecs, in_spec,
+                                  tgt_spec, wspec, x_spec)
+        else:
+            # No exits on this stage: weights input would be zero-sized;
+            # lower a wrapper without it (and without the losses output).
+            def bwd_noexit(p, x, t, g, _bwd=bwd):
+                out = _bwd(p, x, t, jnp.zeros((0,), F32), g)
+                return out[1:]  # drop empty losses
+            execs["bwd"] = w.emit(f"s{s}_bwd", bwd_noexit, pspecs, in_spec,
+                                  tgt_spec, x_spec)
+
+        ev = model.stage_eval_losses(cfg, s)
+        if n_exits > 0:
+            execs["eval"] = w.emit(f"s{s}_eval", ev, pspecs, in_spec,
+                                   tgt_spec)
+        else:
+            execs["eval"] = w.emit(
+                f"s{s}_eval", lambda p, x, t, _ev=ev: (_ev(p, x, t)[0],),
+                pspecs, in_spec, tgt_spec)
+
+        n_p = len(specs)
+        execs["adam"] = w.emit(
+            f"s{s}_adam", optim.adam_step_fn(n_p),
+            _spec(()), _spec(()), _spec(()),
+            *(pspecs * 4))
+        execs["sqsum"] = w.emit(f"s{s}_sqsum", optim.grad_sqsum_fn(n_p),
+                                *pspecs)
+
+        cache_spec = _spec(cache_shape)
+        for width in sorted(set(cfg.decode_widths + [cfg.prefill_width])):
+            dec = decode.stage_decode_fn(cfg, s)
+            din = _spec((width,), I32) if s == 0 else _spec((width, h))
+            execs[f"decode_w{width}"] = w.emit(
+                f"s{s}_decode_w{width}", dec, pspecs, din, cache_spec,
+                _spec((), I32))
+
+        exit_meta = []
+        first_layer = cfg.layers_of_stage(s)[0]
+        for layer, kind, weight in exits:
+            head_fn, idx = decode.head_decode_fn(cfg, s, layer, kind)
+            hname = f"head{layer}"
+            execs[hname] = w.emit(
+                f"s{s}_head{layer}", head_fn,
+                [_spec(specs[i].shape) for i in idx], _spec((h,)))
+            exit_meta.append({
+                "layer": layer,
+                "head": kind,
+                "weight": weight,
+                "final": layer == cfg.n_layers,
+                "entry": layer == first_layer - 1,
+                "head_param_idx": idx,
+            })
+
+        stages_meta.append({
+            "index": s,
+            "n_params": n_p,
+            "n_exits": n_exits,
+            "params": [sp.to_json() for sp in specs],
+            "exits": exit_meta,
+            "cache_shape": list(cache_shape),
+            "executables": execs,
+        })
+
+    reference = None
+    if cfg.emit_reference:
+        full_specs = model.full_param_specs(cfg)
+        n_exits_total = sum(len(model.stage_exits(cfg, s))
+                            for s in range(cfg.pipeline_stages))
+        wspec = _spec((n_exits_total,))
+        ref_lg = w.emit("full_loss_grads", model.full_loss_grads_fn(cfg),
+                        _param_specs(full_specs), tok_spec, tgt_spec, wspec)
+        ref_ev = w.emit("full_eval", model.full_loss_fn(cfg),
+                        _param_specs(full_specs), tok_spec, tgt_spec, wspec)
+        reference = {"loss_grads": ref_lg, "eval": ref_ev,
+                     "n_params": len(full_specs)}
+
+    manifest = {
+        "name": cfg.name,
+        "model": cfg.to_json(),
+        "approx_param_count": param_count(cfg),
+        "decode_widths": sorted(set(cfg.decode_widths + [cfg.prefill_width])),
+        "prefill_width": cfg.prefill_width,
+        "stages": stages_meta,
+        "reference": reference,
+        "files": w.files,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{cfg.name}] manifest written ({len(w.files)} executables)",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="all",
+                    help="comma-separated preset names, or 'all'")
+    args = ap.parse_args()
+
+    all_cfgs = presets()
+    names = (list(all_cfgs) if args.configs == "all"
+             else args.configs.split(","))
+    for n in names:
+        if n not in all_cfgs:
+            sys.exit(f"unknown config {n!r}; have {list(all_cfgs)}")
+    t0 = time.time()
+    for n in names:
+        build_config(all_cfgs[n], args.out_dir)
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Model / pipeline configurations for EE-LLM artifact generation.
+
+A config fully determines the set of AOT artifacts: per-stage forward,
+auxiliary-loss backward (the paper's Eq. 2 contract), windowed decode with
+KV cache, Adam update, and (for small configs) a monolithic full-model
+reference used by the Rust integration tests.
+
+Exit placement follows the paper's Optimization 2 (Appendix A.2): an early
+exit "after layer L" is normalised to the *beginning* of the stage that owns
+layer L+1, so every exit head reads the stage's input hidden state. An exit
+at layer 0 sits on the embedding output (first stage), as in the paper's
+third exit of Section 5.1.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# Byte-level tokenizer: 256 raw bytes + PAD/BOS/EOS, padded to a multiple of
+# 64 for friendly GEMM tiling in the fused exit-loss kernel.
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+VOCAB_SIZE = 320
+
+HEAD_KINDS = ("bare", "norm", "mlp")
+
+
+@dataclass
+class ExitSpec:
+    """An early (or final) exit head.
+
+    layer: backbone layer index the exit is attached *after* (0 = on the
+        embedding output, n_layers = the final exit).
+    head: one of HEAD_KINDS; the final exit is always "norm" (LN + unembed),
+        matching GPT's final LayerNorm.
+    weight: default training loss weight (runtime-overridable input).
+    """
+
+    layer: int
+    head: str = "bare"
+    weight: float = 1.0
+
+    def __post_init__(self):
+        assert self.head in HEAD_KINDS, self.head
+
+
+@dataclass
+class ModelConfig:
+    name: str
+    hidden: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    seq: int = 64              # training sequence length
+    max_seq: int = 64          # KV-cache capacity for decoding
+    vocab: int = VOCAB_SIZE
+    microbatch: int = 2        # training microbatch size
+    pipeline_stages: int = 2
+    early_exits: list = field(default_factory=list)  # list[ExitSpec]
+    tie_embeddings: bool = False
+    use_pallas: bool = True
+    decode_widths: list = field(default_factory=lambda: [1, 4])
+    prefill_width: int = 16
+    # Emit the monolithic full-model reference executables (tests only;
+    # too large for big configs).
+    emit_reference: bool = True
+
+    @property
+    def head_dim(self):
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    @property
+    def ffn(self):
+        return 4 * self.hidden
+
+    def layers_of_stage(self, s):
+        """Backbone layer indices (1-based) owned by stage s (0-based)."""
+        assert self.n_layers % self.pipeline_stages == 0, (
+            "layers must divide evenly across stages (Megatron convention)")
+        per = self.n_layers // self.pipeline_stages
+        return list(range(s * per + 1, (s + 1) * per + 1))
+
+    def stage_of_exit(self, exit_spec):
+        """Stage owning an exit, after Optimization-2 normalisation.
+
+        Exit after layer L reads the hidden state *entering* layer L+1, so it
+        lives at the beginning of the stage owning layer L+1. The final exit
+        (layer == n_layers) lives at the end of the last stage.
+        """
+        if exit_spec.layer >= self.n_layers:
+            return self.pipeline_stages - 1
+        per = self.n_layers // self.pipeline_stages
+        return exit_spec.layer // per
+
+    def exits_of_stage(self, s):
+        return [e for e in self.early_exits if self.stage_of_exit(e) == s]
+
+    def validate(self):
+        assert self.n_layers % self.pipeline_stages == 0
+        assert self.hidden % self.n_heads == 0
+        assert self.seq <= self.max_seq
+        seen = set()
+        for e in self.early_exits:
+            assert 0 <= e.layer < self.n_layers, e
+            assert e.layer not in seen, f"duplicate exit at layer {e.layer}"
+            seen.add(e.layer)
+        for w in self.decode_widths:
+            assert w >= 1 and w <= self.max_seq
+        assert 1 in self.decode_widths, "width-1 decode is required"
+        return self
+
+    def to_json(self):
+        d = asdict(self)
+        d["early_exits"] = [asdict(e) for e in self.early_exits]
+        d["head_dim"] = self.head_dim
+        d["ffn"] = self.ffn
+        return d
+
+
+def _mk(name, **kw):
+    return ModelConfig(name=name, **kw).validate()
+
+
+def presets():
+    """All configs that `python -m compile.aot --all` materialises."""
+    cfgs = [
+        # Tiny config: drives the Rust unit/integration tests (fast to
+        # compile and execute; reference executables emitted).
+        _mk(
+            "ee-tiny",
+            hidden=64, n_layers=4, n_heads=4, seq=32, max_seq=256,
+            microbatch=2, pipeline_stages=2,
+            early_exits=[ExitSpec(layer=2, head="bare", weight=0.5)],
+            decode_widths=[1, 2, 4, 8], prefill_width=8,
+        ),
+        # Tied variant: input embedding shared with every exit head
+        # (paper Section 2, option 3). Exercises the cross-stage tied
+        # gradient all-reduce path in the Rust trainer.
+        _mk(
+            "ee-tiny-tied",
+            hidden=64, n_layers=4, n_heads=4, seq=32, max_seq=256,
+            microbatch=2, pipeline_stages=2,
+            early_exits=[ExitSpec(layer=0, head="bare", weight=0.25),
+                         ExitSpec(layer=2, head="norm", weight=0.5)],
+            tie_embeddings=True,
+            decode_widths=[1, 2, 4, 8], prefill_width=8,
+        ),
+        # Small config: 4 pipeline stages, the paper's canonical layout
+        # (exits at 1/4 and 1/2 depth, weights 0.25 / 0.5 — Section 5.1).
+        _mk(
+            "ee-small",
+            hidden=128, n_layers=8, n_heads=4, seq=64, max_seq=256,
+            microbatch=2, pipeline_stages=4,
+            early_exits=[ExitSpec(layer=2, head="bare", weight=0.25),
+                         ExitSpec(layer=4, head="bare", weight=0.5)],
+            decode_widths=[1, 2, 4, 8], prefill_width=16,
+        ),
+        # MLP-head variant of ee-small (paper Appendix B.3 first model).
+        _mk(
+            "ee-small-mlp",
+            hidden=128, n_layers=8, n_heads=4, seq=64, max_seq=256,
+            microbatch=2, pipeline_stages=4,
+            early_exits=[ExitSpec(layer=2, head="mlp", weight=0.25),
+                         ExitSpec(layer=4, head="mlp", weight=0.5)],
+            decode_widths=[1, 2, 4, 8], prefill_width=16,
+            emit_reference=False,
+        ),
+        # E2E config: the end-to-end training example (examples/train_e2e.rs).
+        # ~11M parameters; exits at 1/4 and 1/2 depth like the paper's 1.3B.
+        _mk(
+            "ee-e2e",
+            hidden=384, n_layers=8, n_heads=6, seq=128, max_seq=320,
+            microbatch=2, pipeline_stages=4,
+            early_exits=[ExitSpec(layer=2, head="norm", weight=0.25),
+                         ExitSpec(layer=4, head="norm", weight=0.5)],
+            decode_widths=[1, 2, 4, 8], prefill_width=32,
+            emit_reference=False,
+        ),
+    ]
+    return {c.name: c for c in cfgs}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Physical parameter count (tied heads store per-stage replicas, as in
+    Megatron's tied input/output embeddings — replicas are counted)."""
+    h, V, S, L = cfg.hidden, cfg.vocab, cfg.max_seq, cfg.n_layers
+    n = V * h + S * h                       # embeddings
+    n += L * (12 * h * h + 13 * h)          # blocks (qkv, proj, mlp, lns)
+    n += 2 * h + h * V                      # final exit: ln + unembed
+    for e in cfg.early_exits:
+        n += h * V
+        if e.head in ("norm", "mlp"):
+            n += 2 * h
+        if e.head == "mlp":
+            n += 8 * h * h + 5 * h
+    return n

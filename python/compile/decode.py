@@ -1,0 +1,112 @@
+"""Autoregressive decode functions with KV caching, per pipeline stage.
+
+Every decode executable processes a *window* of W consecutive tokens at
+positions [pos0, pos0+W) against a static-capacity KV cache:
+
+  - W = 1            : ordinary single-token decoding,
+  - W = prefill_width: chunked prompt prefill,
+  - W = recompute widths: the KV-recomputation inference method (Section 4 /
+    Appendix D.3) — deficit tokens ride in the same window as the current
+    token so their missing deep-layer KV entries are recomputed in one pass
+    (the "batching effect" the paper leans on).
+
+The cache layout per stage is (n_stage_layers, 2, max_seq, n_heads,
+head_dim) f32. The window's K/V are scattered into the cache first; the
+attention mask then admits key position kp for query position qp=pos0+j iff
+kp <= qp, so stale/zero cache entries beyond the frontier are never read.
+
+Early-exit heads are separate executables over a single hidden vector (the
+current token), applied by the Rust engine at stage entries (Optimization-2
+placement); see model.head_logits for the head maths.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .kernels import ref
+
+
+def _block_decode(cfg, pd, l, x, kc, vc, pos0):
+    """One block over a W-token window. x: (W, H); kc/vc: (S, nh, hd)."""
+    w = x.shape[0]
+    nh, hd = cfg.n_heads, cfg.head_dim
+    p = f"layer{l}"
+    up = cfg.use_pallas
+
+    a = model._ln(x, pd[f"{p}.ln1.g"], pd[f"{p}.ln1.b"], up)
+    qkv = a @ pd[f"{p}.attn.wqkv"] + pd[f"{p}.attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(w, nh, hd)
+    k = k.reshape(w, nh, hd)
+    v = v.reshape(w, nh, hd)
+
+    kc = jax.lax.dynamic_update_slice(kc, k, (pos0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (pos0, 0, 0))
+
+    s = kc.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    scores = jnp.einsum("whd,shd->hws", q, kc) * scale     # (nh, W, S)
+    qpos = pos0 + jnp.arange(w)
+    kpos = jnp.arange(s)
+    mask = kpos[None, :] <= qpos[:, None]                   # (W, S)
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("hws,shd->whd", probs, vc).reshape(w, -1)
+    x = x + o @ pd[f"{p}.attn.wo"] + pd[f"{p}.attn.bo"]
+
+    m = model._ln(x, pd[f"{p}.ln2.g"], pd[f"{p}.ln2.b"], up)
+    m = jax.nn.gelu(m @ pd[f"{p}.mlp.w1"] + pd[f"{p}.mlp.b1"])
+    x = x + m @ pd[f"{p}.mlp.w2"] + pd[f"{p}.mlp.b2"]
+    return x, kc, vc
+
+
+def stage_decode_fn(cfg, s):
+    """fn(params, x_or_tokens, cache, pos0) -> (x_out, new_cache).
+
+    Stage 0 takes tokens (W,) int32 and embeds them (token + positional at
+    pos0..pos0+W-1); later stages take x (W, H). cache:
+    (n_stage_layers, 2, max_seq, n_heads, head_dim).
+    """
+    specs = model.stage_param_specs(cfg, s)
+    layers = cfg.layers_of_stage(s)
+
+    def fn(params, x_or_tokens, cache, pos0):
+        pd = model.params_as_dict(specs, params)
+        if s == 0:
+            pos = jax.lax.dynamic_slice(
+                pd["embed.pos"], (pos0, 0),
+                (x_or_tokens.shape[0], cfg.hidden))
+            x = pd["embed.tok"][x_or_tokens] + pos
+        else:
+            x = x_or_tokens
+        new_cache = []
+        for i, l in enumerate(layers):
+            x, kc, vc = _block_decode(cfg, pd, l, x, cache[i, 0], cache[i, 1],
+                                      pos0)
+            new_cache.append(jnp.stack([kc, vc]))
+        return (x, jnp.stack(new_cache))
+
+    return fn
+
+
+def head_decode_fn(cfg, s, layer, kind):
+    """fn(head_params, x (H,)) -> logits (V,) for the exit after `layer`."""
+    all_specs = model.stage_param_specs(cfg, s)
+    prefix = f"exit{layer}."
+    idx = [i for i, sp in enumerate(all_specs) if sp.name.startswith(prefix)]
+    sub_specs = [all_specs[i] for i in idx]
+
+    def fn(head_params, x):
+        pd = {sp.name: p for sp, p in zip(sub_specs, head_params)}
+        logits = model.head_logits(cfg, pd, layer, kind, x[None, :])[0]
+        return (logits,)
+
+    return fn, idx
+
+
+def head_param_indices(cfg, s, layer):
+    """Stage-param indices feeding the exit head after `layer`."""
+    all_specs = model.stage_param_specs(cfg, s)
+    prefix = f"exit{layer}."
+    return [i for i, sp in enumerate(all_specs) if sp.name.startswith(prefix)]

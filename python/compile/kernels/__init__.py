@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the EE-LLM hot spots, plus pure-jnp oracles.
+
+- ``attention.flash_attention`` — causal flash attention (training fwd/bwd).
+- ``exit_loss.exit_loss_mean`` — fused unembed + streaming-LSE cross-entropy,
+  the early-exit layer hot spot (never materialises the s*b*V logits).
+- ``norm.layer_norm`` — fused row-wise LayerNorm.
+- ``ref`` — the correctness oracles every kernel is validated against.
+"""
+
+from . import attention, exit_loss, norm, ref  # noqa: F401

@@ -1,0 +1,162 @@
+"""Causal flash attention as a Pallas kernel (training hot path).
+
+Forward: classic online-softmax streaming over key blocks — the TPU
+re-thinking of the CUDA flash-attention schedule. The HBM<->VMEM movement a
+GPU kernel expresses with threadblocks + shared memory is expressed here
+with the grid + BlockSpec index maps: grid = (batch*heads, q_blocks,
+k_blocks) with the key axis innermost, so each (bq, d) query tile stays
+VMEM-resident while (bk, d) key/value tiles stream past it. Running max and
+normaliser live in revisited output refs (VMEM accumulators).
+
+Backward: one (batch*head) slice per grid step, recomputing probabilities
+from the saved log-sum-exp (no s*s attention matrix is ever written to HBM
+in either direction). For the sequence lengths in this repo (<= 256) a full
+(s, s) tile fits VMEM comfortably (256^2 f32 = 256 KiB); DESIGN.md sketches
+the k-block split for longer sequences.
+
+Validated against kernels.ref.causal_attention (values and grads) by
+python/tests/test_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import INTERPRET, NEG_INF, pick_block
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, l_ref, *, scale, bq, bk,
+                nk):
+    jk = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        lse_ref[...] = jnp.full_like(lse_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                     # (bq, d)
+    k = k_ref[0]                     # (bk, d)
+    v = v_ref[0]                     # (bk, d)
+    s = jnp.dot(q, k.T) * scale      # (bq, bk)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = lse_ref[0]              # (bq,) running max (lse at the end)
+    l_prev = l_ref[0]
+    o_prev = o_ref[0]
+
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_cur = alpha * l_prev + p.sum(axis=-1)
+    o_cur = alpha[:, None] * o_prev + jnp.dot(p, v)
+
+    o_ref[0] = o_cur
+    lse_ref[0] = m_cur
+    l_ref[0] = l_cur
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        o_ref[0] = o_cur / l_cur[:, None]
+        lse_ref[0] = m_cur + jnp.log(l_cur)
+
+
+def _fwd(q, k, v):
+    """q, k, v: (BH, S, D) -> (o, lse) with o: (BH, S, D), lse: (BH, S)."""
+    bh, s, d = q.shape
+    bq = pick_block(s, 128)
+    bk = pick_block(s, 128)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_fwd_kernel, scale=scale, bq=bq, bk=bk, nk=nk)
+    o, lse, _ = pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v)
+    return o, lse
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref, dq_ref, dk_ref,
+                dv_ref, *, scale, s):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    o = o_ref[0]
+    lse = lse_ref[0]
+    do = do_ref[0]
+
+    logits = jnp.dot(q, k.T) * scale               # (s, s)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    mask = kpos <= qpos
+    p = jnp.where(mask, jnp.exp(logits - lse[:, None]), 0.0)
+
+    dv_ref[0] = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    delta = (do * o).sum(axis=-1)                  # (s,)
+    ds = p * (dp - delta[:, None]) * scale
+    dq_ref[0] = jnp.dot(ds, k)
+    dk_ref[0] = jnp.dot(ds.T, q)
+
+
+def _bwd(res, do):
+    q, k, v, o, lse = res
+    bh, s, d = q.shape
+    kern = functools.partial(_bwd_kernel, scale=1.0 / (d ** 0.5), s=s)
+    spec3 = pl.BlockSpec((1, s, d), lambda b: (b, 0, 0))
+    spec2 = pl.BlockSpec((1, s), lambda b: (b, 0))
+    dq, dk, dv = pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[spec3, spec3, spec3, spec3, spec2, spec3],
+        out_specs=[spec3, spec3, spec3],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, d), q.dtype)] * 3,
+        interpret=INTERPRET,
+    )(q, k, v, o, lse, do)
+    return dq, dk, dv
+
+
+@jax.custom_vjp
+def _flash_bhsd(q, k, v):
+    return _fwd(q, k, v)[0]
+
+
+def _flash_fwd_rule(q, k, v):
+    o, lse = _fwd(q, k, v)
+    return o, (q, k, v, o, lse)
+
+
+_flash_bhsd.defvjp(_flash_fwd_rule, _bwd)
+
+
+def flash_attention(q, k, v):
+    """Causal flash attention. q, k, v: (B, S, H, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+
+    def to_bhsd(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    o = _flash_bhsd(to_bhsd(q), to_bhsd(k), to_bhsd(v))
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,197 @@
+"""Fused exit-layer loss: unembed GEMM + softmax cross-entropy, in Pallas.
+
+This is the paper's compute/memory hot-spot (Section 3.2 / Appendix E): each
+early-exit layer is dominated by an (N, H) x (H, V) unembedding whose output
+logits — s*b*V floats per microbatch — dominate activation memory. Megatron
+fuses the vocab-parallel cross-entropy in CUDA; the TPU re-thinking here
+tiles the vocabulary axis with the Pallas grid and keeps a streaming
+log-sum-exp in VMEM-resident accumulator refs, so the full logits tensor is
+**never materialised** in HBM — only (bn, bv) tiles live at any time.
+
+    forward  grid (N/bn, V/bv), vocab innermost:
+        m, l, c accumulate running max / normaliser / correct-logit
+        loss_t = (m + log l - c) * valid_t         (emitted at last tile)
+    backward (two kernels, mirroring the forward tiling):
+        dX  grid (N/bn, V/bv): dX  += ((p - 1{t}) * dloss) @ W_tile^T
+        dW  grid (V/bv, N/bn): dW_tile += X_blk^T @ ((p - 1{t}) * dloss)
+    with p recomputed per-tile from the saved per-token LSE.
+
+VMEM per grid step (f32): bn*h + h*bv + bn*bv. At the DESIGN.md reference
+point (bn, bv) = (128, 512), h = 1024 this is ~2.9 MiB — well inside a 16
+MiB VMEM budget, with 128-multiple MXU-aligned GEMM tiles.
+
+Validated against kernels.ref.exit_loss (loss and grads) by
+python/tests/test_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .util import INTERPRET, NEG_INF, pick_block
+
+
+def _fwd_kernel(x_ref, w_ref, t_ref, valid_ref, loss_ref, lse_ref, m_ref,
+                l_ref, c_ref, *, bv, nv):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = x_ref[...]                       # (bn, h)
+    w = w_ref[...]                       # (h, bv)
+    logits = jnp.dot(x, w)               # (bn, bv)
+
+    bn = logits.shape[0]
+    vpos = j * bv + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 1)
+    hit = (vpos == t_ref[...][:, None]).astype(logits.dtype)
+
+    m_prev, l_prev, c_prev = m_ref[...], l_ref[...], c_ref[...]
+    m_cur = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = alpha * l_prev + jnp.exp(logits - m_cur[:, None]).sum(axis=-1)
+    c_cur = c_prev + (logits * hit).sum(axis=-1)
+
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+    c_ref[...] = c_cur
+
+    @pl.when(j == nv - 1)
+    def _finalize():
+        lse = m_cur + jnp.log(l_cur)
+        lse_ref[...] = lse
+        loss_ref[...] = (lse - c_cur) * valid_ref[...]
+
+
+def _fwd(x, w, targets, valid):
+    """x: (N, H), w: (H, V) -> (per_token_loss (N,), lse (N,))."""
+    n, h = x.shape
+    v = w.shape[1]
+    bn = pick_block(n, 128)
+    bv = pick_block(v, 512)
+    nn, nv = n // bn, v // bv
+    kern = functools.partial(_fwd_kernel, bv=bv, nv=nv)
+    row = pl.BlockSpec((bn,), lambda i, j: (i,))
+    loss, lse, _, _, _ = pl.pallas_call(
+        kern,
+        grid=(nn, nv),
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, bv), lambda i, j: (0, j)),
+            row, row,
+        ],
+        out_specs=[row, row, row, row, row],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 5,
+        interpret=INTERPRET,
+    )(x, w, targets, valid)
+    return loss, lse
+
+
+def _dx_kernel(x_ref, w_ref, t_ref, lse_ref, dl_ref, dx_ref, *, bv):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    x, w = x_ref[...], w_ref[...]
+    logits = jnp.dot(x, w)
+    bn = logits.shape[0]
+    vpos = j * bv + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 1)
+    hit = (vpos == t_ref[...][:, None]).astype(logits.dtype)
+    p = jnp.exp(logits - lse_ref[...][:, None])
+    g = (p - hit) * dl_ref[...][:, None]
+    dx_ref[...] += jnp.dot(g, w.T)
+
+
+def _dw_kernel(x_ref, w_ref, t_ref, lse_ref, dl_ref, dw_ref, *, bv):
+    i = pl.program_id(1)  # token-block index (innermost)
+    j = pl.program_id(0)  # vocab-block index
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    x, w = x_ref[...], w_ref[...]
+    logits = jnp.dot(x, w)
+    bn = logits.shape[0]
+    vpos = j * bv + jax.lax.broadcasted_iota(jnp.int32, (bn, bv), 1)
+    hit = (vpos == t_ref[...][:, None]).astype(logits.dtype)
+    p = jnp.exp(logits - lse_ref[...][:, None])
+    g = (p - hit) * dl_ref[...][:, None]
+    dw_ref[...] += jnp.dot(x.T, g)
+
+
+def _bwd(x, w, targets, lse, dloss):
+    """dloss: (N,) cotangent of per-token loss -> (dx, dw)."""
+    n, h = x.shape
+    v = w.shape[1]
+    bn = pick_block(n, 128)
+    bv = pick_block(v, 512)
+    nn, nv = n // bn, v // bv
+    row = pl.BlockSpec((bn,), lambda i, j: (i,))
+    dx = pl.pallas_call(
+        functools.partial(_dx_kernel, bv=bv),
+        grid=(nn, nv),
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, bv), lambda i, j: (0, j)),
+            row, row, row,
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, targets, lse, dloss)
+    rown = pl.BlockSpec((bn,), lambda j, i: (i,))
+    dw = pl.pallas_call(
+        functools.partial(_dw_kernel, bv=bv),
+        grid=(nv, nn),
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda j, i: (i, 0)),
+            pl.BlockSpec((h, bv), lambda j, i: (0, j)),
+            rown, rown, rown,
+        ],
+        out_specs=pl.BlockSpec((h, bv), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, v), w.dtype),
+        interpret=INTERPRET,
+    )(x, w, targets, lse, dloss)
+    return dx, dw
+
+
+@jax.custom_vjp
+def exit_loss_mean(x, w, targets, valid):
+    """Mean cross-entropy over valid tokens, fused unembed, no logits in HBM.
+
+    x: (N, H); w: (H, V); targets: (N,) int32; valid: (N,) f32 mask.
+    """
+    loss, _ = _fwd(x, w, targets, valid)
+    return loss.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def _mean_fwd(x, w, targets, valid):
+    loss, lse = _fwd(x, w, targets, valid)
+    denom = jnp.maximum(valid.sum(), 1.0)
+    return loss.sum() / denom, (x, w, targets, valid, lse, denom)
+
+
+def _mean_bwd(res, dmean):
+    x, w, targets, valid, lse, denom = res
+    dloss = (dmean / denom) * valid       # (N,)
+    dx, dw = _bwd(x, w, targets, lse, dloss)
+    dt = np.zeros(targets.shape, dtype=jax.dtypes.float0)
+    return dx, dw, dt, jnp.zeros_like(valid)
+
+
+exit_loss_mean.defvjp(_mean_fwd, _mean_bwd)
+
+
+def exit_loss_per_token(x, w, targets, valid):
+    """Per-token CE losses (no grad path) — used for validation/perplexity."""
+    loss, _ = _fwd(x, w, targets, valid)
+    return loss

@@ -1,0 +1,79 @@
+"""Row-wise fused LayerNorm as a Pallas kernel.
+
+One grid step normalises a (bn, H) tile entirely in VMEM (single read of x,
+single write of y — the fusion a GPU implementation gets from a warp-level
+reduction). The backward pass uses the closed-form LayerNorm VJP in plain
+jnp: it is a pair of row reductions XLA fuses well on every backend, and
+keeping it out of Pallas keeps the kernel surface minimal (see DESIGN.md
+§Perf for the measured non-impact).
+
+Validated against kernels.ref.layer_norm by python/tests/test_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import INTERPRET, pick_block
+
+EPS = 1e-5
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, y_ref, *, eps):
+    x = x_ref[...]
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    y_ref[...] = xhat * g_ref[...] + b_ref[...]
+
+
+def _ln_fwd_2d(x, gamma, beta):
+    n, h = x.shape
+    bn = pick_block(n, 256)
+    y = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=EPS),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), x.dtype),
+        interpret=INTERPRET,
+    )(x, gamma, beta)
+    return y
+
+
+@jax.custom_vjp
+def layer_norm(x, gamma, beta):
+    """Fused LayerNorm over the last axis. x: (..., H)."""
+    shape = x.shape
+    y = _ln_fwd_2d(x.reshape(-1, shape[-1]), gamma, beta)
+    return y.reshape(shape)
+
+
+def _fwd_rule(x, gamma, beta):
+    return layer_norm(x, gamma, beta), (x, gamma, beta)
+
+
+def _bwd_rule(res, dy):
+    x, gamma, beta = res
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mean) * rstd
+    dyg = dy * gamma
+    h = x.shape[-1]
+    dx = rstd * (dyg - dyg.mean(axis=-1, keepdims=True)
+                 - xhat * (dyg * xhat).mean(axis=-1, keepdims=True))
+    axes = tuple(range(x.ndim - 1))
+    dgamma = (dy * xhat).sum(axis=axes)
+    dbeta = dy.sum(axis=axes)
+    del h
+    return dx, dgamma, dbeta
+
+
+layer_norm.defvjp(_fwd_rule, _bwd_rule)

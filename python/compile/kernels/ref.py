@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package is validated against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes) — this is the
+core L1 correctness signal. The references are also the fallback compute
+path when a config sets ``use_pallas=False``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention(q, k, v):
+    """Reference multi-head causal attention.
+
+    q, k, v: (B, S, H, D) — batch, sequence, heads, head_dim.
+    Returns (B, S, H, D).
+    """
+    _, s, _, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def exit_loss(x, w_out, targets, valid):
+    """Reference fused unembed + softmax cross-entropy.
+
+    x: (N, H) token hidden states; w_out: (H, V); targets: (N,) int32;
+    valid: (N,) float32 {0,1} mask (PAD positions contribute 0).
+    Returns (mean_loss, per_token_loss) where mean is over valid tokens.
+    """
+    logits = x @ w_out
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    correct = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    per_token = (lse - correct) * valid
+    denom = jnp.maximum(valid.sum(), 1.0)
+    return per_token.sum() / denom, per_token
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    """Reference LayerNorm over the last axis. x: (..., H)."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xhat * gamma + beta

@@ -1,0 +1,27 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode (which lowers to plain HLO) is the
+correctness-and-interchange path. Real-TPU efficiency is assessed
+structurally (VMEM footprint / MXU tiling of the BlockSpecs) in DESIGN.md.
+"""
+
+INTERPRET = True
+
+# Finite stand-in for -inf: keeps running-max recurrences NaN-free when an
+# entire block is causally masked (exp(-1e30 - m) underflows to 0 exactly).
+NEG_INF = -1e30
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Largest power-of-two divisor of ``n`` that is <= ``preferred``.
+
+    Falls back to ``n`` itself when ``n`` has no power-of-two factor below
+    the preference (shapes here are multiples of 8, so this is rare).
+    MXU-friendly tiles are 128-multiples; on small test shapes we simply
+    take the whole axis.
+    """
+    b = 1
+    while b * 2 <= min(n, preferred) and n % (b * 2) == 0:
+        b *= 2
+    return b if n % b == 0 else n

@@ -1,0 +1,379 @@
+"""L2: the early-exit GPT model in JAX, organised per pipeline stage.
+
+The model is *never* instantiated as a monolith at run time: Rust owns the
+pipeline, and each stage is a set of AOT-lowered pure functions defined
+here. Parameters are flat, ordered, named lists (see ``stage_param_specs``)
+so the Rust side can allocate/initialise/update them without Python.
+
+The pipeline contract (paper Section 3.1, Eq. 2) is implemented by
+``stage_aux_grads``: stage i's backward executable differentiates
+
+    L_i^aux = sum_e w_e * CE_e(theta_i, x_in)  +  <g_out, x_out>
+
+where ``g_out`` is an ordinary (constant) input tensor received from stage
+i+1. Proposition 3.1 then guarantees d(L_i^aux)/dz = dL/dz for every tensor
+z on the stage — validated numerically by python/tests/test_stages.py and
+again end-to-end from Rust.
+
+Exit placement follows Optimization 2: an exit "after layer L" reads the
+hidden state entering layer L+1. Mid-stage exits are supported for
+training; the decode path (inference) requires exits at stage entries,
+which all presets satisfy (and which is the paper's own rule of thumb).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import PAD_ID
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.exit_loss import exit_loss_mean, exit_loss_per_token
+from .kernels.norm import layer_norm as pallas_layer_norm
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+class ParamSpec:
+    """Name + shape + init recipe for one parameter tensor."""
+
+    def __init__(self, name, shape, init, std=0.0, tie_group=None):
+        self.name = name
+        self.shape = tuple(shape)
+        self.init = init            # "normal" | "zeros" | "ones"
+        self.std = std
+        self.tie_group = tie_group
+
+    def to_json(self):
+        d = {"name": self.name, "shape": list(self.shape), "init": self.init}
+        if self.init == "normal":
+            d["std"] = self.std
+        if self.tie_group:
+            d["tie_group"] = self.tie_group
+        return d
+
+
+def _block_specs(cfg, l):
+    h, f = cfg.hidden, cfg.ffn
+    std = 0.02
+    # GPT-2-style scaled init for residual-writing projections.
+    res_std = 0.02 / (2 * cfg.n_layers) ** 0.5
+    p = f"layer{l}"
+    return [
+        ParamSpec(f"{p}.ln1.g", (h,), "ones"),
+        ParamSpec(f"{p}.ln1.b", (h,), "zeros"),
+        ParamSpec(f"{p}.attn.wqkv", (h, 3 * h), "normal", std),
+        ParamSpec(f"{p}.attn.bqkv", (3 * h,), "zeros"),
+        ParamSpec(f"{p}.attn.wo", (h, h), "normal", res_std),
+        ParamSpec(f"{p}.attn.bo", (h,), "zeros"),
+        ParamSpec(f"{p}.ln2.g", (h,), "ones"),
+        ParamSpec(f"{p}.ln2.b", (h,), "zeros"),
+        ParamSpec(f"{p}.mlp.w1", (h, f), "normal", std),
+        ParamSpec(f"{p}.mlp.b1", (f,), "zeros"),
+        ParamSpec(f"{p}.mlp.w2", (f, h), "normal", res_std),
+        ParamSpec(f"{p}.mlp.b2", (h,), "zeros"),
+    ]
+
+
+def _head_specs(cfg, layer, kind):
+    """Exit head after backbone `layer` (layer == n_layers: final exit)."""
+    h, v = cfg.hidden, cfg.vocab
+    p = f"exit{layer}"
+    specs = []
+    if kind in ("norm", "mlp"):
+        specs += [ParamSpec(f"{p}.ln.g", (h,), "ones"),
+                  ParamSpec(f"{p}.ln.b", (h,), "zeros")]
+    if kind == "mlp":
+        specs += [
+            ParamSpec(f"{p}.mlp.w1", (h, cfg.ffn), "normal", 0.02),
+            ParamSpec(f"{p}.mlp.b1", (cfg.ffn,), "zeros"),
+            ParamSpec(f"{p}.mlp.w2", (cfg.ffn, h), "normal", 0.02),
+            ParamSpec(f"{p}.mlp.b2", (h,), "zeros"),
+        ]
+    if cfg.tie_embeddings:
+        # Tied: the head owns a (V, h) replica of the input embedding; the
+        # Rust trainer all-reduces gradients across the tie group.
+        specs.append(ParamSpec(f"{p}.wout", (v, h), "normal", 0.02,
+                               tie_group="unembed"))
+    else:
+        specs.append(ParamSpec(f"{p}.wout", (h, v), "normal", 0.02))
+    return specs
+
+
+def stage_exits(cfg, s):
+    """[(layer, head_kind, default_weight)] for stage s, final exit last."""
+    out = [(e.layer, e.head, e.weight) for e in cfg.exits_of_stage(s)]
+    out.sort()
+    if s == cfg.pipeline_stages - 1:
+        out.append((cfg.n_layers, "norm", 1.0))
+    return out
+
+
+def stage_param_specs(cfg, s):
+    specs = []
+    if s == 0:
+        tie = "unembed" if cfg.tie_embeddings else None
+        specs.append(ParamSpec("embed.tok", (cfg.vocab, cfg.hidden),
+                               "normal", 0.02, tie_group=tie))
+        specs.append(ParamSpec("embed.pos", (cfg.max_seq, cfg.hidden),
+                               "normal", 0.01))
+    for l in cfg.layers_of_stage(s):
+        specs += _block_specs(cfg, l)
+    for layer, kind, _ in stage_exits(cfg, s):
+        specs += _head_specs(cfg, layer, kind)
+    return specs
+
+
+def params_as_dict(specs, params):
+    assert len(specs) == len(params), (len(specs), len(params))
+    return {sp.name: p for sp, p in zip(specs, params)}
+
+
+# ---------------------------------------------------------------------------
+# Forward components
+# ---------------------------------------------------------------------------
+
+def _ln(x, g, b, use_pallas):
+    return pallas_layer_norm(x, g, b) if use_pallas else ref.layer_norm(x, g, b)
+
+
+def _attention(q, k, v, use_pallas):
+    return flash_attention(q, k, v) if use_pallas else ref.causal_attention(q, k, v)
+
+
+def block_fwd(cfg, pd, l, x):
+    """One pre-LN transformer block. x: (B, S, H)."""
+    b, s, h = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    p = f"layer{l}"
+    up = cfg.use_pallas
+
+    a = _ln(x, pd[f"{p}.ln1.g"], pd[f"{p}.ln1.b"], up)
+    qkv = a @ pd[f"{p}.attn.wqkv"] + pd[f"{p}.attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nh, hd)
+    v = v.reshape(b, s, nh, hd)
+    o = _attention(q, k, v, up).reshape(b, s, h)
+    x = x + o @ pd[f"{p}.attn.wo"] + pd[f"{p}.attn.bo"]
+
+    m = _ln(x, pd[f"{p}.ln2.g"], pd[f"{p}.ln2.b"], up)
+    m = jax.nn.gelu(m @ pd[f"{p}.mlp.w1"] + pd[f"{p}.mlp.b1"])
+    x = x + m @ pd[f"{p}.mlp.w2"] + pd[f"{p}.mlp.b2"]
+    return x
+
+
+def embed_fwd(cfg, pd, tokens):
+    """tokens: (B, S) int32 -> (B, S, H)."""
+    s = tokens.shape[1]
+    return pd["embed.tok"][tokens] + pd["embed.pos"][:s][None]
+
+
+def head_logits(cfg, pd, layer, kind, x):
+    """Exit head after `layer`. x: (..., H) -> logits (..., V)."""
+    p = f"exit{layer}"
+    up = cfg.use_pallas
+    if kind in ("norm", "mlp"):
+        x = _ln(x, pd[f"{p}.ln.g"], pd[f"{p}.ln.b"], up)
+    if kind == "mlp":
+        m = jax.nn.gelu(x @ pd[f"{p}.mlp.w1"] + pd[f"{p}.mlp.b1"])
+        x = x + m @ pd[f"{p}.mlp.w2"] + pd[f"{p}.mlp.b2"]
+    w = pd[f"{p}.wout"]
+    if cfg.tie_embeddings:
+        w = w.T
+    return x @ w
+
+
+def _head_pre_unembed(cfg, pd, layer, kind, x):
+    """The head transform *before* the unembedding matmul (for fused CE)."""
+    p = f"exit{layer}"
+    up = cfg.use_pallas
+    if kind in ("norm", "mlp"):
+        x = _ln(x, pd[f"{p}.ln.g"], pd[f"{p}.ln.b"], up)
+    if kind == "mlp":
+        m = jax.nn.gelu(x @ pd[f"{p}.mlp.w1"] + pd[f"{p}.mlp.b1"])
+        x = x + m @ pd[f"{p}.mlp.w2"] + pd[f"{p}.mlp.b2"]
+    return x
+
+
+def exit_ce(cfg, pd, layer, kind, hidden, targets):
+    """Mean CE at one exit. hidden: (B, S, H); targets: (B, S) int32."""
+    h = cfg.hidden
+    x2 = _head_pre_unembed(cfg, pd, layer, kind, hidden).reshape(-1, h)
+    t = targets.reshape(-1)
+    valid = (t != PAD_ID).astype(jnp.float32)
+    w = pd[f"exit{layer}.wout"]
+    if cfg.tie_embeddings:
+        w = w.T
+    if cfg.use_pallas:
+        return exit_loss_mean(x2, w, t, valid)
+    return ref.exit_loss(x2, w, t, valid)[0]
+
+
+def exit_ce_per_token(cfg, pd, layer, kind, hidden, targets):
+    """Per-token CE at one exit (validation/perplexity; no grad path)."""
+    h = cfg.hidden
+    x2 = _head_pre_unembed(cfg, pd, layer, kind, hidden).reshape(-1, h)
+    t = targets.reshape(-1)
+    valid = (t != PAD_ID).astype(jnp.float32)
+    w = pd[f"exit{layer}.wout"]
+    if cfg.tie_embeddings:
+        w = w.T
+    if cfg.use_pallas:
+        return exit_loss_per_token(x2, w, t, valid)
+    return ref.exit_loss(x2, w, t, valid)[1]
+
+
+# ---------------------------------------------------------------------------
+# Stage-level training functions (the AOT surface)
+# ---------------------------------------------------------------------------
+
+def stage_hiddens(cfg, s, pd, x):
+    """Run the stage backbone; return (x_out, {layer: hidden_after_layer}).
+
+    ``x`` is the stage input: embedding output for stage 0, the previous
+    stage's x_out otherwise. The entry hidden is recorded under the index of
+    the last layer of the previous stage (0 for stage 0), which is exactly
+    where Optimization-2-normalised exits read from.
+    """
+    layers = cfg.layers_of_stage(s)
+    hiddens = {layers[0] - 1: x}
+    for l in layers:
+        x = block_fwd(cfg, pd, l, x)
+        hiddens[l] = x
+    return x, hiddens
+
+
+def stage_fwd(cfg, s, params, x_or_tokens):
+    """Forward step: stage input -> stage output hidden states."""
+    specs = stage_param_specs(cfg, s)
+    pd = params_as_dict(specs, params)
+    x = embed_fwd(cfg, pd, x_or_tokens) if s == 0 else x_or_tokens
+    x_out, _ = stage_hiddens(cfg, s, pd, x)
+    return x_out
+
+
+def _stage_losses(cfg, s, pd, x, targets):
+    """All exit losses owned by stage s, on pre-computed stage input x."""
+    x_out, hiddens = stage_hiddens(cfg, s, pd, x)
+    losses = []
+    for layer, kind, _ in stage_exits(cfg, s):
+        hid = x_out if layer == cfg.n_layers else hiddens[layer]
+        losses.append(exit_ce(cfg, pd, layer, kind, hid, targets))
+    return x_out, losses
+
+
+def stage_aux_grads(cfg, s):
+    """Build the backward function for stage s (the Eq. 2 executable).
+
+    Returns fn(params, x_in_or_tokens, targets, weights, g_out) ->
+        (losses (E,), g_in (B,S,H) [absent for stage 0], *param_grads)
+
+    ``weights`` is a length-E runtime input (E = exits on this stage,
+    final exit included for the last stage) so loss-weight schedules
+    (warm-up / cool-down, Appendix C.1) need no re-lowering. ``g_out`` is
+    the gradient tensor received from stage s+1 (all-zeros for the last
+    stage). The auxiliary term <g_out, x_out> implements Eq. (2b).
+    """
+    specs = stage_param_specs(cfg, s)
+
+    def aux(params, x_or_tokens, targets, weights, g_out):
+        pd = params_as_dict(specs, params)
+        x = embed_fwd(cfg, pd, x_or_tokens) if s == 0 else x_or_tokens
+        x_out, losses = _stage_losses(cfg, s, pd, x, targets)
+        total = sum((w * l for w, l in zip(weights, losses)), jnp.float32(0))
+        total = total + (g_out * x_out).sum()
+        stacked = jnp.stack(losses) if losses else jnp.zeros((0,), jnp.float32)
+        return total, stacked
+
+    if s == 0:
+        grad_fn = jax.grad(aux, argnums=(0,), has_aux=True)
+
+        def bwd(params, tokens, targets, weights, g_out):
+            (gparams,), losses = grad_fn(params, tokens, targets, weights,
+                                         g_out)
+            return (losses, *gparams)
+    else:
+        grad_fn = jax.grad(aux, argnums=(0, 1), has_aux=True)
+
+        def bwd(params, x_in, targets, weights, g_out):
+            (gparams, gx), losses = grad_fn(params, x_in, targets, weights,
+                                            g_out)
+            return (losses, gx, *gparams)
+
+    return bwd
+
+
+def stage_eval_losses(cfg, s):
+    """fn(params, x_in_or_tokens, targets) -> (x_out, losses) — validation."""
+    specs = stage_param_specs(cfg, s)
+
+    def fwd(params, x_or_tokens, targets):
+        pd = params_as_dict(specs, params)
+        x = embed_fwd(cfg, pd, x_or_tokens) if s == 0 else x_or_tokens
+        x_out, losses = _stage_losses(cfg, s, pd, x, targets)
+        stacked = jnp.stack(losses) if losses else jnp.zeros((0,), jnp.float32)
+        return (x_out, stacked)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Monolithic reference (tests + equivalence checks only)
+# ---------------------------------------------------------------------------
+
+def full_param_specs(cfg):
+    """Concatenated per-stage specs — the ordering Rust uses as well."""
+    specs = []
+    for s in range(cfg.pipeline_stages):
+        for sp in stage_param_specs(cfg, s):
+            specs.append(ParamSpec(f"s{s}.{sp.name}", sp.shape, sp.init,
+                                   sp.std, sp.tie_group))
+    return specs
+
+
+def full_loss_fn(cfg):
+    """fn(all_params, tokens, targets, weights) -> (total, losses).
+
+    weights has one entry per exit, ordered stage-major (same order the
+    per-stage weights concatenate to). Used by Rust integration tests to
+    check that pipeline-parallel training computes the exact same losses
+    and gradients as a single-device model (Proposition 3.1).
+    """
+    P = cfg.pipeline_stages
+    counts = [len(stage_exits(cfg, s)) for s in range(P)]
+    bounds = [sum(counts[:s]) for s in range(P)]
+    sizes = [len(stage_param_specs(cfg, s)) for s in range(P)]
+    offs = [sum(sizes[:s]) for s in range(P)]
+
+    def fn(params, tokens, targets, weights):
+        x = tokens
+        all_losses = []
+        total = 0.0
+        for s in range(P):
+            sp = params[offs[s]:offs[s] + sizes[s]]
+            specs = stage_param_specs(cfg, s)
+            pd = params_as_dict(specs, sp)
+            if s == 0:
+                x = embed_fwd(cfg, pd, x)
+            x_next, losses = _stage_losses(cfg, s, pd, x, targets)
+            for i, l in enumerate(losses):
+                total = total + weights[bounds[s] + i] * l
+            all_losses += losses
+            x = x_next
+        return total, jnp.stack(all_losses)
+
+    return fn
+
+
+def full_loss_grads_fn(cfg):
+    """fn(all_params, tokens, targets, weights) -> (losses, *grads)."""
+    loss_fn = full_loss_fn(cfg)
+    grad_fn = jax.grad(loss_fn, argnums=0, has_aux=True)
+
+    def fn(params, tokens, targets, weights):
+        grads, losses = grad_fn(params, tokens, targets, weights)
+        return (losses, *grads)
+
+    return fn

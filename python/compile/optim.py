@@ -1,0 +1,63 @@
+"""Adam optimizer and distributed gradient clipping, as AOT executables.
+
+The paper trains with Adam (beta1=0.9, beta2=0.95, eps=1e-8) and Megatron's
+global-gradient-norm clipping. With pipeline parallelism the global norm
+spans stages, so clipping is split Megatron-style:
+
+  1. each stage runs ``grad_sqsum`` over its local gradients,
+  2. the Rust coordinator all-reduces the scalars and computes
+     scale = min(1, clip / global_norm),
+  3. each stage runs ``adam_step`` with that scale as an input.
+
+Hyperparameters (lr, scale) are runtime inputs so schedules (cosine LR,
+Appendix C.1 loss-weight schedules) live entirely in Rust.
+"""
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.95
+EPS = 1e-8
+
+
+def adam_step_fn(n_params):
+    """fn(step, lr, scale, *params, *grads, *m, *v) -> (*p', *m', *v').
+
+    ``step`` is the 1-based iteration count as f32 (bias correction);
+    ``scale`` multiplies gradients (gradient clipping / microbatch
+    normalisation).
+    """
+
+    def fn(step, lr, scale, *tensors):
+        assert len(tensors) == 4 * n_params
+        params = tensors[:n_params]
+        grads = tensors[n_params:2 * n_params]
+        ms = tensors[2 * n_params:3 * n_params]
+        vs = tensors[3 * n_params:]
+        bc1 = 1.0 - BETA1 ** step
+        bc2 = 1.0 - BETA2 ** step
+        out_p, out_m, out_v = [], [], []
+        for p, g, m, v in zip(params, grads, ms, vs):
+            g = g * scale
+            m2 = BETA1 * m + (1.0 - BETA1) * g
+            v2 = BETA2 * v + (1.0 - BETA2) * g * g
+            update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + EPS)
+            out_p.append(p - lr * update)
+            out_m.append(m2)
+            out_v.append(v2)
+        return (*out_p, *out_m, *out_v)
+
+    return fn
+
+
+def grad_sqsum_fn(n_params):
+    """fn(*grads) -> (sum of squared entries,) — local half of global norm."""
+
+    def fn(*grads):
+        assert len(grads) == n_params
+        total = jnp.float32(0.0)
+        for g in grads:
+            total = total + (g.astype(jnp.float32) ** 2).sum()
+        return (total,)
+
+    return fn

@@ -1,0 +1,33 @@
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest runs from python/ or the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def init_params(rng, specs):
+    """Initialise a param list per its specs (mirrors the Rust initialiser)."""
+    import jax.numpy as jnp
+    out = []
+    for sp in specs:
+        if sp.init == "normal":
+            a = rng.normal(0.0, sp.std, sp.shape)
+        elif sp.init == "ones":
+            a = np.ones(sp.shape)
+        elif sp.init == "zeros":
+            a = np.zeros(sp.shape)
+        else:
+            raise ValueError(sp.init)
+        out.append(jnp.asarray(a, jnp.float32))
+    return out

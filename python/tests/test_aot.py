@@ -1,0 +1,112 @@
+"""AOT bridge sanity: manifests are complete and HLO text is loadable.
+
+Checks the contract the Rust runtime relies on: every executable referenced
+by a manifest exists, parses as HLO text, and declares the parameter/output
+arity the manifest promises.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import configs, model, optim
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(ART), reason="run `make artifacts` first")
+
+
+def _manifests():
+    out = {}
+    for name in os.listdir(ART):
+        mf = os.path.join(ART, name, "manifest.json")
+        if os.path.isfile(mf):
+            with open(mf) as f:
+                out[name] = json.load(f)
+    return out
+
+
+def test_all_presets_have_manifests():
+    have = set(_manifests())
+    want = set(configs.presets())
+    assert want <= have, want - have
+
+
+@pytest.mark.parametrize("name", list(configs.presets()))
+def test_manifest_files_exist_and_parse(name):
+    mans = _manifests()
+    if name not in mans:
+        pytest.skip("artifacts not built for this preset")
+    man = mans[name]
+    for st in man["stages"]:
+        for ename, fname in st["executables"].items():
+            path = os.path.join(ART, name, fname)
+            assert os.path.isfile(path), (ename, fname)
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), (ename, head[:40])
+    if man["reference"]:
+        for key in ("loss_grads", "eval"):
+            path = os.path.join(ART, name, man["reference"][key])
+            assert os.path.isfile(path)
+
+
+def _count_hlo_params(path):
+    """Count parameter instructions of the ENTRY computation."""
+    text = open(path).read()
+    m = re.search(r"^ENTRY \S+ \{(.*?)^\}", text, re.M | re.S)
+    assert m, path
+    return len(re.findall(r"= \S+ parameter\(\d+\)", m.group(1)))
+
+
+def test_bwd_arity_matches_manifest():
+    mans = _manifests()
+    man = mans.get("ee-tiny")
+    if man is None:
+        pytest.skip("ee-tiny artifacts missing")
+    for st in man["stages"]:
+        n_p = st["n_params"]
+        n_e = st["n_exits"]
+        path = os.path.join(ART, "ee-tiny", st["executables"]["bwd"])
+        got = _count_hlo_params(path)
+        # params + x_in + targets + (weights if exits) + g_out
+        want = n_p + 2 + (1 if n_e > 0 else 0) + 1
+        assert got == want, (st["index"], got, want)
+
+
+def test_adam_arity():
+    mans = _manifests()
+    man = mans.get("ee-tiny")
+    if man is None:
+        pytest.skip("ee-tiny artifacts missing")
+    for st in man["stages"]:
+        path = os.path.join(ART, "ee-tiny", st["executables"]["adam"])
+        assert _count_hlo_params(path) == 3 + 4 * st["n_params"]
+
+
+def test_param_specs_match_manifest():
+    mans = _manifests()
+    for name, cfg in configs.presets().items():
+        if name not in mans:
+            continue
+        man = mans[name]
+        for s in range(cfg.pipeline_stages):
+            specs = model.stage_param_specs(cfg, s)
+            got = man["stages"][s]["params"]
+            assert [g["name"] for g in got] == [sp.name for sp in specs]
+            assert [tuple(g["shape"]) for g in got] == \
+                [sp.shape for sp in specs]
+
+
+def test_exit_metadata_entry_flags():
+    """All preset exits must be entry-normalised (Optimization 2) so the
+    decode engines can evaluate heads at stage boundaries."""
+    mans = _manifests()
+    for name in configs.presets():
+        if name not in mans:
+            continue
+        for st in mans[name]["stages"]:
+            for e in st["exits"]:
+                assert e["final"] or e["entry"], (name, e)

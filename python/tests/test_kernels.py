@@ -1,0 +1,217 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes; assert_allclose against ref.py. This is the CORE
+correctness signal for the compute layer — everything the Rust runtime
+executes lowers through these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention, exit_loss, norm, ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]),
+    s=st.sampled_from([8, 16, 32, 64, 128]),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_fwd(b, s, h, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (_rand(kk, (b, s, h, d)) for kk in ks)
+    got = attention.flash_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_grads(s, d, seed):
+    b, h = 2, 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q, k, v = (_rand(kk, (b, s, h, d)) for kk in ks[:3])
+    ct = _rand(ks[3], (b, s, h, d))
+
+    def loss_pallas(q, k, v):
+        return (attention.flash_attention(q, k, v) * ct).sum()
+
+    def loss_ref(q, k, v):
+        return (ref.causal_attention(q, k, v) * ct).sum()
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-5, rtol=5e-4)
+
+
+def test_flash_attention_is_causal():
+    """Future tokens must not influence earlier outputs."""
+    b, s, h, d = 1, 16, 2, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q, k, v = (_rand(kk, (b, s, h, d)) for kk in ks)
+    o1 = attention.flash_attention(q, k, v)
+    # Perturb the last token's k/v: outputs at positions < s-1 unchanged.
+    k2 = k.at[:, -1].set(k[:, -1] + 100.0)
+    v2 = v.at[:, -1].set(v[:, -1] - 50.0)
+    o2 = attention.flash_attention(q, k2, v2)
+    assert_allclose(np.asarray(o1[:, :-1]), np.asarray(o2[:, :-1]),
+                    atol=1e-6)
+    assert not np.allclose(np.asarray(o1[:, -1]), np.asarray(o2[:, -1]))
+
+
+# ---------------------------------------------------------------------------
+# Fused exit loss (unembed + streaming-LSE cross-entropy)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 32, 64, 128, 256]),
+    h=st.sampled_from([16, 64, 128]),
+    v=st.sampled_from([64, 320, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exit_loss_fwd(n, h, v, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (n, h))
+    w = _rand(ks[1], (h, v), scale=0.05)
+    t = jax.random.randint(ks[2], (n,), 0, v)
+    valid = (jax.random.uniform(ks[3], (n,)) > 0.25).astype(jnp.float32)
+    got = exit_loss.exit_loss_mean(x, w, t, valid)
+    want = ref.exit_loss(x, w, t, valid)[0]
+    assert_allclose(float(got), float(want), atol=1e-5, rtol=1e-5)
+    per = exit_loss.exit_loss_per_token(x, w, t, valid)
+    per_ref = ref.exit_loss(x, w, t, valid)[1]
+    assert_allclose(np.asarray(per), np.asarray(per_ref), atol=1e-5,
+                    rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 64]),
+    h=st.sampled_from([16, 64]),
+    v=st.sampled_from([64, 320]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exit_loss_grads(n, h, v, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (n, h))
+    w = _rand(ks[1], (h, v), scale=0.05)
+    t = jax.random.randint(ks[2], (n,), 0, v)
+    valid = jnp.ones((n,), jnp.float32)
+    g1 = jax.grad(exit_loss.exit_loss_mean, argnums=(0, 1))(x, w, t, valid)
+    g2 = jax.grad(lambda *a: ref.exit_loss(*a)[0], argnums=(0, 1))(
+        x, w, t, valid)
+    for a, b_ in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5, rtol=1e-4)
+
+
+def test_exit_loss_pad_positions_contribute_zero():
+    n, h, v = 32, 16, 64
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    x = _rand(ks[0], (n, h))
+    w = _rand(ks[1], (h, v), scale=0.1)
+    t = jax.random.randint(ks[2], (n,), 0, v)
+    valid = jnp.zeros((n,), jnp.float32).at[: n // 2].set(1.0)
+    # Mean over first half only == masked mean over all.
+    m1 = exit_loss.exit_loss_mean(x[: n // 2], w, t[: n // 2],
+                                  jnp.ones((n // 2,)))
+    m2 = exit_loss.exit_loss_mean(x, w, t, valid)
+    assert_allclose(float(m1), float(m2), atol=1e-6)
+    # Gradient w.r.t. masked-out rows of x must be exactly zero.
+    gx = jax.grad(exit_loss.exit_loss_mean)(x, w, t, valid)
+    assert np.abs(np.asarray(gx[n // 2:])).max() == 0.0
+
+
+def test_exit_loss_all_pad_is_finite():
+    n, h, v = 8, 16, 64
+    x = jnp.ones((n, h))
+    w = jnp.ones((h, v)) * 0.1
+    t = jnp.zeros((n,), jnp.int32)
+    valid = jnp.zeros((n,), jnp.float32)
+    m = exit_loss.exit_loss_mean(x, w, t, valid)
+    assert float(m) == 0.0
+    gx, gw = jax.grad(exit_loss.exit_loss_mean, argnums=(0, 1))(
+        x, w, t, valid)
+    assert np.isfinite(np.asarray(gx)).all()
+    assert np.isfinite(np.asarray(gw)).all()
+
+
+def test_exit_loss_matches_known_value():
+    """Uniform logits -> loss == log(V) exactly."""
+    n, h, v = 8, 4, 64
+    x = jnp.zeros((n, h))
+    w = jnp.zeros((h, v))
+    t = jnp.arange(n, dtype=jnp.int32)
+    valid = jnp.ones((n,))
+    m = exit_loss.exit_loss_mean(x, w, t, valid)
+    assert_allclose(float(m), float(np.log(v)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 8, 64, 256]),
+    h=st.sampled_from([8, 64, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layer_norm_fwd(rows, h, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(ks[0], (rows, h), scale=3.0)
+    g = _rand(ks[1], (h,)) + 1.0
+    b = _rand(ks[2], (h,))
+    got = norm.layer_norm(x, g, b)
+    want = ref.layer_norm(x, g, b)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_layer_norm_grads(seed):
+    rows, h = 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (rows, h), scale=2.0)
+    g = _rand(ks[1], (h,)) + 1.0
+    b = _rand(ks[2], (h,))
+    ct = _rand(ks[3], (rows, h))
+
+    def f(fn):
+        return lambda x, g, b: (fn(x, g, b) * ct).sum()
+
+    g1 = jax.grad(f(norm.layer_norm), argnums=(0, 1, 2))(x, g, b)
+    g2 = jax.grad(f(ref.layer_norm), argnums=(0, 1, 2))(x, g, b)
+    for a, b_ in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5, rtol=1e-4)
+
+
+def test_layer_norm_3d_batch():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+    g, b = jnp.ones(16), jnp.zeros(16)
+    got = norm.layer_norm(x, g, b)
+    want = ref.layer_norm(x, g, b)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)

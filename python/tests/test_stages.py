@@ -1,0 +1,203 @@
+"""L2 pipeline-stage semantics: the paper's Proposition 3.1 in numbers.
+
+Checks that chaining per-stage forward + auxiliary-loss backward executables
+(the functions that get AOT-lowered) reproduces the monolithic model's
+losses and gradients exactly, for every preset config — including tied
+embeddings and mid-stage exits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, model
+from compile.configs import ExitSpec, PAD_ID
+from .conftest import init_params
+
+
+def _data(rng, cfg):
+    tokens = jnp.asarray(rng.integers(0, 256, (cfg.microbatch, cfg.seq)),
+                         jnp.int32)
+    targets = jnp.asarray(rng.integers(0, 256, (cfg.microbatch, cfg.seq)),
+                          jnp.int32)
+    return tokens, targets
+
+
+def _pipeline_loss_grads(cfg, stage_params, tokens, targets, weights):
+    """Run the fwd chain then the aux-loss bwd chain (Eq. 2)."""
+    P = cfg.pipeline_stages
+    xs = [None] * P  # stage inputs
+    cur = tokens
+    for s in range(P):
+        xs[s] = cur
+        cur = model.stage_fwd(cfg, s, stage_params[s], cur)
+    x_out_last = cur
+
+    g = jnp.zeros_like(x_out_last)
+    all_losses = [None] * P
+    all_grads = [None] * P
+    wpos = len(weights)
+    for s in reversed(range(P)):
+        n_exits = len(model.stage_exits(cfg, s))
+        w_s = jnp.asarray(weights[wpos - n_exits:wpos], jnp.float32)
+        wpos -= n_exits
+        bwd = model.stage_aux_grads(cfg, s)
+        out = bwd(stage_params[s], xs[s], targets, w_s, g)
+        losses = out[0]
+        if s == 0:
+            grads = out[1:]
+            g = None
+        else:
+            g = out[1]
+            grads = out[2:]
+        all_losses[s] = losses
+        all_grads[s] = list(grads)
+    flat_losses = jnp.concatenate(all_losses)
+    flat_grads = [t for gs in all_grads for t in gs]
+    return flat_losses, flat_grads
+
+
+def _check_config(cfg, rng, atol=5e-5):
+    P = cfg.pipeline_stages
+    stage_params = [init_params(rng, model.stage_param_specs(cfg, s))
+                    for s in range(P)]
+    all_params = [p for sp in stage_params for p in sp]
+    tokens, targets = _data(rng, cfg)
+    weights = [w for s in range(P)
+               for (_, _, w) in model.stage_exits(cfg, s)]
+
+    full = model.full_loss_grads_fn(cfg)
+    out = full(all_params, tokens, targets, jnp.asarray(weights))
+    losses_ref, grads_ref = out[0], out[1:]
+
+    losses_pipe, grads_pipe = _pipeline_loss_grads(
+        cfg, stage_params, tokens, targets, weights)
+
+    assert_allclose(np.asarray(losses_pipe), np.asarray(losses_ref),
+                    atol=1e-5, rtol=1e-5)
+    assert len(grads_pipe) == len(grads_ref)
+    for a, b in zip(grads_pipe, grads_ref):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["ee-tiny", "ee-tiny-tied", "ee-small"])
+def test_pipeline_equals_full_model(name, rng):
+    _check_config(configs.presets()[name], rng)
+
+
+def test_pipeline_equals_full_model_midstage_exit(rng):
+    """An exit in the middle of a stage (not Optimization-2 normalised)."""
+    cfg = configs.ModelConfig(
+        name="midstage", hidden=32, n_layers=4, n_heads=2, seq=16,
+        max_seq=16, microbatch=2, pipeline_stages=2,
+        early_exits=[configs.ExitSpec(layer=1, head="norm", weight=0.3),
+                     configs.ExitSpec(layer=3, head="mlp", weight=0.7)],
+    ).validate()
+    _check_config(cfg, rng)
+
+
+def test_pipeline_equals_full_model_no_pallas(rng):
+    cfg = configs.ModelConfig(
+        name="nopallas", hidden=32, n_layers=4, n_heads=2, seq=16,
+        max_seq=16, microbatch=2, pipeline_stages=4,
+        early_exits=[configs.ExitSpec(layer=1, head="bare", weight=0.5)],
+        use_pallas=False,
+    ).validate()
+    _check_config(cfg, rng)
+
+
+def test_gradient_vs_finite_difference(rng):
+    """Spot-check the whole stack against central differences."""
+    cfg = configs.ModelConfig(
+        name="fd", hidden=16, n_layers=2, n_heads=2, seq=8, max_seq=8,
+        microbatch=1, pipeline_stages=2,
+        early_exits=[configs.ExitSpec(layer=1, head="bare", weight=0.5)],
+    ).validate()
+    stage_params = [init_params(rng, model.stage_param_specs(cfg, s))
+                    for s in range(2)]
+    all_params = [p for sp in stage_params for p in sp]
+    tokens, targets = _data(rng, cfg)
+    w = jnp.asarray([0.5, 1.0])
+
+    loss_fn = model.full_loss_fn(cfg)
+    grads = model.full_loss_grads_fn(cfg)(all_params, tokens, targets, w)[1:]
+
+    # Perturb a few entries of the first attention matrix (param idx 4).
+    idx = 4
+    eps = 1e-3
+    flat = np.asarray(all_params[idx]).ravel()
+    g_flat = np.asarray(grads[idx]).ravel()
+    for k in [0, 7, len(flat) // 2]:
+        pp, pm = flat.copy(), flat.copy()
+        pp[k] += eps
+        pm[k] -= eps
+        ap = list(all_params)
+        ap[idx] = jnp.asarray(pp.reshape(all_params[idx].shape))
+        lp = float(loss_fn(ap, tokens, targets, w)[0])
+        ap[idx] = jnp.asarray(pm.reshape(all_params[idx].shape))
+        lm = float(loss_fn(ap, tokens, targets, w)[0])
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - g_flat[k]) < 5e-3, (k, fd, g_flat[k])
+
+
+def test_pad_targets_are_masked(rng):
+    cfg = configs.presets()["ee-tiny"]
+    stage_params = [init_params(rng, model.stage_param_specs(cfg, s))
+                    for s in range(2)]
+    all_params = [p for sp in stage_params for p in sp]
+    tokens, targets = _data(rng, cfg)
+    w = jnp.asarray([0.5, 1.0])
+    full = model.full_loss_fn(cfg)
+    l_all = np.asarray(full(all_params, tokens, targets, w)[1])
+    # Mask the second half of every row: loss changes (different mean),
+    # but remains finite; fully padded targets give zero loss.
+    t2 = targets.at[:, cfg.seq // 2:].set(PAD_ID)
+    l_half = np.asarray(full(all_params, tokens, t2, w)[1])
+    assert np.isfinite(l_half).all() and not np.allclose(l_all, l_half)
+    t3 = jnp.full_like(targets, PAD_ID)
+    l_none = np.asarray(full(all_params, tokens, t3, w)[1])
+    assert_allclose(l_none, 0.0, atol=1e-6)
+
+
+def test_weight_zero_kills_exit_gradient(rng):
+    """With w_early = 0 the early head receives no gradient."""
+    cfg = configs.presets()["ee-tiny"]
+    stage_params = [init_params(rng, model.stage_param_specs(cfg, s))
+                    for s in range(2)]
+    tokens, targets = _data(rng, cfg)
+    losses, grads = _pipeline_loss_grads(cfg, stage_params, tokens, targets,
+                                         [0.0, 1.0])
+    specs = (model.full_param_specs(cfg))
+    for sp, g in zip(specs, grads):
+        if "exit2" in sp.name:
+            assert np.abs(np.asarray(g)).max() == 0.0, sp.name
+        if "exit4" in sp.name:  # final head must still learn
+            assert np.abs(np.asarray(g)).max() > 0.0, sp.name
+
+
+def test_exit_order_is_stage_major_sorted(rng):
+    cfg = configs.presets()["ee-small"]
+    order = [(s, l) for s in range(cfg.pipeline_stages)
+             for (l, _, _) in model.stage_exits(cfg, s)]
+    layers = [l for _, l in order]
+    assert layers == sorted(layers)
+    assert layers[-1] == cfg.n_layers  # final exit last
+
+
+def test_stage_param_partition_is_exhaustive():
+    for name, cfg in configs.presets().items():
+        full = model.full_param_specs(cfg)
+        per_stage = sum((model.stage_param_specs(cfg, s)
+                         for s in range(cfg.pipeline_stages)), [])
+        assert len(full) == len(per_stage)
+        got = sorted(sp.name for sp in per_stage)
+        assert len(set(got)) == len(got), f"{name}: duplicate param name"
+
+
+def test_param_count_formula_matches_specs():
+    for name, cfg in configs.presets().items():
+        n = sum(int(np.prod(sp.shape))
+                for sp in model.full_param_specs(cfg))
+        assert n == configs.param_count(cfg), name

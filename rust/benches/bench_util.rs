@@ -1,0 +1,92 @@
+//! Shared helpers for the offline bench harness (criterion is unavailable
+//! offline; each bench is a `harness = false` binary that prints the
+//! paper-table analogue via `util::table` and exits non-zero on failure).
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{Corpus, CorpusSpec};
+use eellm::inference::ModelState;
+use eellm::runtime::artifacts::Manifest;
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+pub fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn manifest(name: &str) -> Option<Manifest> {
+    let root = artifacts_root();
+    if !root.join(name).join("manifest.json").is_file() {
+        eprintln!("SKIP: artifacts for {name} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load_config(&root, name).expect("manifest"))
+}
+
+/// Benches that need a trained model share one cached checkpoint per
+/// config; train it on first use (deterministic).
+pub fn trained_state(config: &str, steps: usize) -> Option<ModelState> {
+    let man = manifest(config)?;
+    let dir = artifacts_root().join("runs");
+    let _ = std::fs::create_dir_all(&dir);
+    let ckpt = dir.join(format!("{config}-bench-{steps}.eckpt"));
+    if ckpt.is_file() {
+        if let Ok(s) = ModelState::from_checkpoint(man.clone(), &ckpt) {
+            eprintln!("[bench] reusing checkpoint {}", ckpt.display());
+            return Some(s);
+        }
+    }
+    eprintln!("[bench] training {config} for {steps} steps (cached after)...");
+    let corpus = corpus();
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, steps / 10 + 1, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .expect("trainer");
+    for i in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..4).map(|_| ds.next_microbatch()).collect();
+        let st = trainer.train_step(&batches, &[]).expect("step");
+        if i % 25 == 0 {
+            eprintln!(
+                "[bench]   step {i}: final loss {:.3}",
+                st.losses.last().unwrap()
+            );
+        }
+    }
+    trainer.save_checkpoint(&ckpt).expect("save");
+    let params = trainer.params().expect("params");
+    trainer.shutdown();
+    Some(ModelState { man, stage_params: params })
+}
+
+/// The corpus every model-based bench trains/evaluates on.
+pub fn corpus() -> Corpus {
+    Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 12,
+        target_bytes: 300_000,
+    })
+}
+
+/// Reduced iteration counts when BENCH_FAST is set (CI smoke).
+pub fn fast() -> bool {
+    std::env::var("BENCH_FAST").is_ok()
+}
+
+pub fn gib(bytes: f64) -> String {
+    format!("{:.2}", bytes / (1u64 << 30) as f64)
+}

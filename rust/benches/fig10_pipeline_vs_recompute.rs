@@ -1,0 +1,90 @@
+//! Figure 10 / Appendix B.1 reproduction: inference latency of the
+//! pipeline-based method vs KV recomputation, across confidence
+//! thresholds, on summarisation-style prompts (the paper's XSUM/CNN-DM
+//! setting).
+//!
+//! Expected shape: both methods produce identical outputs; each
+//! accelerates as the threshold decreases. (Relative standing depends on
+//! the substrate: on the paper's A100s recomputation's batching is nearly
+//! free, while our thread-per-stage pipeline pays P2P hops in thread
+//! wakeups — the crossover is reported, not assumed.)
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use eellm::data::tasks;
+use eellm::inference::{PipelinedEngine, SequentialEngine};
+use eellm::util::table::Table;
+
+fn main() {
+    let steps = if bench_util::fast() { 60 } else { 400 };
+    let Some(state) = bench_util::trained_state("ee-tiny", steps) else {
+        return;
+    };
+    let corpus = bench_util::corpus();
+    let n = if bench_util::fast() { 3 } else { 8 };
+    let mut task = tasks::summary(&corpus, n, 9);
+    let max_new = 32;
+    let cap = state.man.model.max_seq;
+    task.examples.retain(|e| e.prompt.len() + max_new + 4 < cap);
+    assert!(!task.examples.is_empty(), "no summary examples fit cap {cap}");
+
+    let thresholds = [1.0f32, 0.8, 0.5, 0.3, 0.2];
+    let mut table = Table::new(
+        "Figure 10: latency, pipeline-based vs KV recomputation",
+        &[
+            "threshold",
+            "recompute ms/seq",
+            "pipelined ms/seq",
+            "outputs equal",
+        ],
+    );
+
+    let mut pipe = PipelinedEngine::new(state.clone(), 1.0).expect("pipe");
+    let mut rec_best = f64::INFINITY;
+    let mut rec_base = 0.0f64;
+    for &tau in &thresholds {
+        let mut seq = SequentialEngine::new(state.clone(), tau).expect("seq");
+        pipe.set_threshold(tau);
+        let mut t_rec = 0.0;
+        let mut t_pipe = 0.0;
+        let mut equal = true;
+        let mut forced = 0usize;
+        for ex in &task.examples {
+            let a = seq.generate_text(&ex.prompt, max_new).expect("rec");
+            let b = pipe.generate_text(&ex.prompt, max_new).expect("pipe");
+            t_rec += a.seconds;
+            t_pipe += b.seconds;
+            equal &= a.tokens == b.tokens;
+            forced += a.stats.forced_full;
+        }
+        let n = task.examples.len() as f64;
+        if tau >= 1.0 {
+            rec_base = t_rec / n;
+        }
+        rec_best = rec_best.min(t_rec / n);
+        table.row(vec![
+            format!("{tau}"),
+            format!("{:.1}", t_rec / n * 1e3),
+            format!("{:.1}", t_pipe / n * 1e3),
+            format!("{equal} (forced {forced})"),
+        ]);
+        // The App. B.1 equality claim holds whenever the recompute
+        // engine's deficit cap never binds: a forced full-model pass
+        // suppresses an exit the pipelined engine (which needs no cap)
+        // would take. Assert equality only in the cap-free regime.
+        assert!(
+            equal || forced > 0,
+            "engines diverged at tau={tau} without any forced full pass"
+        );
+    }
+    table.emit("fig10");
+
+    // Shape: early exiting accelerates the recompute engine.
+    assert!(
+        rec_best < rec_base,
+        "no acceleration: best {rec_best} vs base {rec_base}"
+    );
+    println!("fig10 shape checks OK");
+    pipe.shutdown();
+}

@@ -1,0 +1,119 @@
+//! Figure 7 reproduction: training time per iteration and peak GPU memory
+//! vs the number of added early exits (0-3), across model sizes and
+//! (TP, PP) layouts — via the calibrated discrete-event schedule simulator.
+//!
+//! Exits are added in the paper's order: (1) 1/4 depth, (2) 1/2 depth,
+//! (3) on the embedding output (always stage 0). The expected shape:
+//! with PP enabled, time grows by ~k*(f_EE+b_EE) (slow) and memory is flat
+//! until exit 3 lands on stage 0; without PP, both grow with every exit.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use eellm::schedule::costs::{CostModel, PAPER_MODELS};
+use eellm::schedule::plan::{EeOptions, Plan};
+use eellm::schedule::sim::Simulator;
+use eellm::util::table::Table;
+
+/// Stage layout of the first k paper exits for a P-stage pipeline.
+fn exits_for(k: usize, pp: usize) -> Vec<usize> {
+    let mut e = vec![0usize; pp];
+    // 1/4 depth -> beginning of stage P/4; 1/2 depth -> stage P/2
+    // (Optimization 2 placement); third exit -> embedding output, stage 0.
+    let places = [pp / 4, pp / 2, 0];
+    for &p in places.iter().take(k) {
+        e[p.min(pp - 1)] += 1;
+    }
+    e
+}
+
+fn main() {
+    let layouts: &[(&str, usize, usize)] = &[
+        ("1.3B", 1, 4),
+        ("1.3B", 4, 1), // no pipeline parallelism
+        ("7B", 1, 4),
+        ("7B", 2, 4),
+        ("13B", 4, 4),
+        ("30B", 8, 4),
+        ("30B", 4, 8),
+    ];
+    let mut table = Table::new(
+        "Figure 7: time/iteration and peak memory vs #early exits",
+        &[
+            "model", "tp", "pp", "exits", "time/iter", "d_time", "peak mem GiB",
+            "d_mem",
+        ],
+    );
+    for &(name, tp, pp, ) in layouts {
+        let dims = PAPER_MODELS.iter().find(|d| d.name == name).unwrap();
+        let cm = CostModel::a100(dims, pp, tp);
+        let m = 2 * pp.max(2);
+        let sim = Simulator::new(&cm);
+        let mut base: Option<(f64, f64)> = None;
+        for k in 0..=3usize {
+            let exits = exits_for(k, pp);
+            let plan = Plan::one_f_one_b(
+                pp,
+                m,
+                EeOptions::with_exits(exits.clone(), true),
+            );
+            let r = sim.run(&plan);
+            let t = r.iteration_time;
+            let mem = r.peak_memory_overall(cm.alpha);
+            let (t0, m0) = *base.get_or_insert((t, mem));
+            table.row(vec![
+                name.into(),
+                tp.to_string(),
+                pp.to_string(),
+                k.to_string(),
+                format!("{:.0}ms", t * 1e3),
+                format!("{:+.1}%", 100.0 * (t / t0 - 1.0)),
+                bench_util::gib(mem),
+                format!("{:+.1}%", 100.0 * (mem / m0 - 1.0)),
+            ]);
+        }
+    }
+    table.emit("fig7");
+
+    // Shape assertions (the paper's qualitative claims).
+    let dims = &PAPER_MODELS[1]; // 7B
+    let cm = CostModel::a100(dims, 4, 1);
+    let sim = Simulator::new(&cm);
+    let t = |k: usize| {
+        sim.run(&Plan::one_f_one_b(
+            4,
+            8,
+            EeOptions::with_exits(exits_for(k, 4), true),
+        ))
+    };
+    let r0 = t(0);
+    let r2 = t(2);
+    let r3 = t(3);
+    // With PP: adding 2 middle exits costs exactly 2*(f_EE+b_EE)...
+    let want = 2.0 * (cm.f_ee + cm.b_ee);
+    assert!(
+        ((r2.iteration_time - r0.iteration_time) - want).abs() / want < 0.05,
+        "middle-exit overhead mismatch"
+    );
+    // ...and leaves peak memory unchanged; exit 3 (stage 0) raises it.
+    assert_eq!(
+        r0.peak_memory_overall(cm.alpha),
+        r2.peak_memory_overall(cm.alpha)
+    );
+    assert!(
+        r3.peak_memory_overall(cm.alpha) > r2.peak_memory_overall(cm.alpha)
+    );
+    // Without PP, memory grows with every exit.
+    let cm1 = CostModel::a100(dims, 1, 4);
+    let sim1 = Simulator::new(&cm1);
+    let m1 = |k: usize| {
+        sim1.run(&Plan::one_f_one_b(
+            1,
+            2,
+            EeOptions::with_exits(vec![k], true),
+        ))
+        .peak_memory_overall(cm1.alpha)
+    };
+    assert!(m1(1) > m1(0) && m1(2) > m1(1));
+    println!("fig7 shape checks OK");
+}

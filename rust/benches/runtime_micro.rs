@@ -1,0 +1,120 @@
+//! Runtime microbenchmarks: the L3 hot-path costs that the perf pass
+//! optimises — literal construction, executable invocation overhead, stage
+//! forward/decode throughput, and channel round-trips.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use eellm::metrics::bench_loop;
+use eellm::runtime::client::StageRuntime;
+use eellm::runtime::params;
+use eellm::runtime::tensor::{HostTensor, IntTensor};
+use eellm::training::channel::{tagged_channel, Tag};
+use eellm::util::table::Table;
+
+fn main() {
+    let Some(man) = bench_util::manifest("ee-tiny") else { return };
+    let m = &man.model;
+    let iters = if bench_util::fast() { 20 } else { 200 };
+
+    let mut table = Table::new(
+        "Runtime microbenchmarks (ee-tiny)",
+        &["op", "mean", "p-ish max", "per-unit"],
+    );
+
+    // Literal conversion bandwidth.
+    let big = HostTensor::zeros(&[1024, 1024]);
+    let s = bench_loop(3, iters, || {
+        let _ = big.to_literal().unwrap();
+    });
+    table.row(vec![
+        "HostTensor->Literal 4MiB".into(),
+        format!("{:.3}ms", s.mean() * 1e3),
+        format!("{:.3}ms", s.max * 1e3),
+        format!("{:.2} GiB/s", 4.0 / 1024.0 / s.mean()),
+    ]);
+
+    // Stage-0 training forward.
+    let st = &man.stages[0];
+    let mut rt = StageRuntime::cpu().unwrap();
+    rt.load_stage_training(&man, st).unwrap();
+    rt.load_stage_inference(&man, st).unwrap();
+    let ps = params::init_stage(1, &man, 0);
+    let plits: Vec<xla::Literal> =
+        ps.iter().map(|p| p.to_literal().unwrap()).collect();
+    let tokens = IntTensor::new(
+        vec![m.microbatch, m.seq],
+        vec![65; m.microbatch * m.seq],
+    );
+
+    let s = bench_loop(3, iters, || {
+        let t = tokens.to_literal().unwrap();
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&t);
+        let _ = rt.get("fwd").unwrap().run(&args).unwrap();
+    });
+    let toks = (m.microbatch * m.seq) as f64;
+    table.row(vec![
+        "stage0 fwd (train)".into(),
+        format!("{:.3}ms", s.mean() * 1e3),
+        format!("{:.3}ms", s.max * 1e3),
+        format!("{:.0} tok/s", toks / s.mean()),
+    ]);
+
+    // Width-1 decode step.
+    let cache = HostTensor::zeros(&st.cache_shape);
+    let s = bench_loop(3, iters, || {
+        let tok = IntTensor::new(vec![1], vec![66]).to_literal().unwrap();
+        let c = cache.to_literal().unwrap();
+        let pos = IntTensor::scalar(0).to_literal().unwrap();
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&tok);
+        args.push(&c);
+        args.push(&pos);
+        let _ = rt.get("decode_w1").unwrap().run(&args).unwrap();
+    });
+    table.row(vec![
+        "stage0 decode_w1 (incl cache copy)".into(),
+        format!("{:.3}ms", s.mean() * 1e3),
+        format!("{:.3}ms", s.max * 1e3),
+        format!("{:.0} steps/s", 1.0 / s.mean()),
+    ]);
+
+    // Decode without re-converting the cache each call (device-resident
+    // pattern candidate for the perf pass).
+    let c_lit = cache.to_literal().unwrap();
+    let s = bench_loop(3, iters, || {
+        let tok = IntTensor::new(vec![1], vec![66]).to_literal().unwrap();
+        let pos = IntTensor::scalar(0).to_literal().unwrap();
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&tok);
+        args.push(&c_lit);
+        args.push(&pos);
+        let _ = rt.get("decode_w1").unwrap().run(&args).unwrap();
+    });
+    table.row(vec![
+        "stage0 decode_w1 (cached cache literal)".into(),
+        format!("{:.3}ms", s.mean() * 1e3),
+        format!("{:.3}ms", s.max * 1e3),
+        format!("{:.0} steps/s", 1.0 / s.mean()),
+    ]);
+
+    // Channel round-trip with a seq-size hidden tensor.
+    let (tx, mut rx) = tagged_channel();
+    let hidden = HostTensor::zeros(&[m.microbatch, m.seq, m.hidden]);
+    let s = bench_loop(10, iters * 10, || {
+        tx.send(Tag::Fwd(0), hidden.clone());
+        let _ = rx.recv(Tag::Fwd(0));
+    });
+    table.row(vec![
+        "P2P channel round-trip (hidden tensor)".into(),
+        format!("{:.1}us", s.mean() * 1e6),
+        format!("{:.1}us", s.max * 1e6),
+        format!(
+            "{:.2} GiB/s",
+            hidden.bytes() as f64 / (1u64 << 30) as f64 / s.mean()
+        ),
+    ]);
+
+    table.emit("runtime_micro");
+}

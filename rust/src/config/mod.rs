@@ -1,0 +1,118 @@
+//! Run configuration: everything the launcher needs beyond the model
+//! manifest — training hyperparameters (schedules included), inference
+//! settings, and paths. Built from CLI args (util::cli); the model
+//! architecture itself comes from `artifacts/<config>/manifest.json`.
+
+use std::path::PathBuf;
+
+use crate::util::cli::Args;
+
+pub mod schedules;
+
+pub use schedules::{LossWeightSchedule, LrSchedule};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact config name (e.g. "ee-tiny", "ee-e2e").
+    pub config: String,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+    pub steps: usize,
+    /// Microbatches per global batch (M in the paper's 1F1B notation).
+    pub microbatches: usize,
+    pub lr: LrSchedule,
+    /// Global gradient-norm clip (0 disables).
+    pub grad_clip: f64,
+    /// Early-exit loss weight schedule (Appendix C.1).
+    pub loss_weights: LossWeightSchedule,
+    /// Fill explicit pipeline bubbles with partial microbatches
+    /// (Appendix C.2). The value is K, the number of truncated-backward
+    /// microbatches per iteration (0 disables).
+    pub bubble_fill: usize,
+    /// Estimated backward/forward time ratio used by the bubble-fill
+    /// planner (the paper exposes the same knob).
+    pub bf_ratio: f64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub resume: Option<PathBuf>,
+    /// Emit loss curves as CSV here.
+    pub curve_out: Option<PathBuf>,
+}
+
+impl TrainConfig {
+    pub fn from_args(a: &Args) -> TrainConfig {
+        TrainConfig {
+            config: a.get_or("config", "ee-tiny"),
+            artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
+            seed: a.usize_or("seed", 42) as u64,
+            steps: a.usize_or("steps", 100),
+            microbatches: a.usize_or("microbatches", 8),
+            lr: LrSchedule::cosine(
+                a.f64_or("lr", 3e-4),
+                a.usize_or("warmup", 20),
+                a.usize_or("steps", 100),
+            ),
+            grad_clip: a.f64_or("grad-clip", 1.0),
+            loss_weights: LossWeightSchedule::parse(
+                &a.get_or("loss-weight-schedule", "constant"),
+                a.usize_or("steps", 100),
+            ),
+            bubble_fill: a.usize_or("bubble-fill", 0),
+            bf_ratio: a.f64_or("bf-ratio", 2.0),
+            log_every: a.usize_or("log-every", 10),
+            eval_every: a.usize_or("eval-every", 0),
+            checkpoint: a.get("checkpoint").map(PathBuf::from),
+            resume: a.get("resume").map(PathBuf::from),
+            curve_out: a.get("curve-out").map(PathBuf::from),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InferenceConfig {
+    pub config: String,
+    pub artifacts_dir: PathBuf,
+    /// Confidence threshold for early exiting; 1.0 disables early exits
+    /// (full-model baseline, as in the paper's speedup denominator).
+    pub threshold: f32,
+    pub max_new_tokens: usize,
+    /// KV-recomputation deficit cap (forces a full pass when reached).
+    pub recompute_cap: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub seed: u64,
+}
+
+impl InferenceConfig {
+    pub fn from_args(a: &Args) -> InferenceConfig {
+        InferenceConfig {
+            config: a.get_or("config", "ee-tiny"),
+            artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
+            threshold: a.f64_or("threshold", 0.8) as f32,
+            max_new_tokens: a.usize_or("max-new-tokens", 32),
+            recompute_cap: a.usize_or("recompute-cap", 4),
+            checkpoint: a.get("checkpoint").map(PathBuf::from),
+            seed: a.usize_or("seed", 42) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn train_config_defaults_and_overrides() {
+        let argv: Vec<String> =
+            ["--config", "ee-small", "--steps", "7", "--lr", "0.01"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = Args::parse(&argv, &[]);
+        let c = TrainConfig::from_args(&a);
+        assert_eq!(c.config, "ee-small");
+        assert_eq!(c.steps, 7);
+        assert!(c.grad_clip > 0.0);
+    }
+}

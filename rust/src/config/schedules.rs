@@ -1,0 +1,162 @@
+//! Hyperparameter schedules.
+//!
+//! - [`LrSchedule`]: linear warm-up + cosine decay, the paper's Section 5.1
+//!   setting (max 3e-4).
+//! - [`LossWeightSchedule`]: the paper's Appendix C.1 *non-constant
+//!   early-exit loss weights* — `warmup` ramps early-exit weights from 0 to
+//!   their configured values (learn the backbone first), `cooldown` decays
+//!   them (deep supervision as pure regularisation). The final exit's
+//!   weight is always held at its configured value.
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub max_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn cosine(max_lr: f64, warmup: usize, total: usize) -> LrSchedule {
+        LrSchedule {
+            max_lr,
+            warmup_steps: warmup,
+            total_steps: total.max(1),
+            min_lr_frac: 0.1,
+        }
+    }
+
+    pub fn constant(lr: f64) -> LrSchedule {
+        LrSchedule { max_lr: lr, warmup_steps: 0, total_steps: 1, min_lr_frac: 1.0 }
+    }
+
+    /// Learning rate at 0-based step `t`.
+    pub fn at(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return self.max_lr * (t + 1) as f64 / self.warmup_steps as f64;
+        }
+        let span = self.total_steps.saturating_sub(self.warmup_steps).max(1);
+        let p = ((t - self.warmup_steps.min(t)) as f64 / span as f64).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+        let lo = self.max_lr * self.min_lr_frac;
+        lo + (self.max_lr - lo) * cos
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LossWeightSchedule {
+    Constant,
+    /// Ramp early-exit weights 0 -> configured over the first `ramp` steps.
+    Warmup { ramp: usize },
+    /// Decay early-exit weights configured -> `floor_frac`*configured over
+    /// the whole run.
+    Cooldown { floor_frac: f64 },
+}
+
+impl LossWeightSchedule {
+    pub fn parse(s: &str, total_steps: usize) -> LossWeightSchedule {
+        match s {
+            "constant" => LossWeightSchedule::Constant,
+            "warmup" => LossWeightSchedule::Warmup {
+                ramp: (total_steps / 4).max(1),
+            },
+            "cooldown" => LossWeightSchedule::Cooldown { floor_frac: 0.1 },
+            other => {
+                if let Some(r) = other.strip_prefix("warmup:") {
+                    LossWeightSchedule::Warmup {
+                        ramp: r.parse().expect("warmup:<steps>"),
+                    }
+                } else if let Some(f) = other.strip_prefix("cooldown:") {
+                    LossWeightSchedule::Cooldown {
+                        floor_frac: f.parse().expect("cooldown:<frac>"),
+                    }
+                } else {
+                    panic!("unknown loss-weight schedule {other:?}")
+                }
+            }
+        }
+    }
+
+    /// Multiplier applied to *early* exit weights at step `t` (the final
+    /// exit always keeps multiplier 1).
+    pub fn multiplier(&self, t: usize, total_steps: usize) -> f32 {
+        match self {
+            LossWeightSchedule::Constant => 1.0,
+            LossWeightSchedule::Warmup { ramp } => {
+                ((t as f64 + 1.0) / *ramp as f64).min(1.0) as f32
+            }
+            LossWeightSchedule::Cooldown { floor_frac } => {
+                let p = (t as f64 / total_steps.max(1) as f64).min(1.0);
+                (1.0 - (1.0 - floor_frac) * p) as f32
+            }
+        }
+    }
+
+    /// Effective weights at step `t` given configured defaults; entry i is
+    /// marked final via `is_final[i]`.
+    pub fn weights_at(
+        &self,
+        t: usize,
+        total_steps: usize,
+        defaults: &[f32],
+        is_final: &[bool],
+    ) -> Vec<f32> {
+        let m = self.multiplier(t, total_steps);
+        defaults
+            .iter()
+            .zip(is_final)
+            .map(|(&w, &f)| if f { w } else { w * m })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_warms_up_then_decays() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(9) - 1.0).abs() < 1e-9);
+        assert!(s.at(50) < s.at(10));
+        assert!(s.at(99) >= s.max_lr * s.min_lr_frac - 1e-9);
+    }
+
+    #[test]
+    fn lr_is_monotone_decreasing_after_warmup() {
+        let s = LrSchedule::cosine(3e-4, 5, 50);
+        for t in 5..49 {
+            assert!(s.at(t + 1) <= s.at(t) + 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn warmup_schedule_ramps_early_exits_only() {
+        let sch = LossWeightSchedule::Warmup { ramp: 10 };
+        let w0 = sch.weights_at(0, 100, &[0.5, 1.0], &[false, true]);
+        assert!(w0[0] < 0.06 && (w0[1] - 1.0).abs() < 1e-6);
+        let w10 = sch.weights_at(9, 100, &[0.5, 1.0], &[false, true]);
+        assert!((w10[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cooldown_decays_to_floor() {
+        let sch = LossWeightSchedule::Cooldown { floor_frac: 0.1 };
+        let w = sch.weights_at(100, 100, &[0.5, 1.0], &[false, true]);
+        assert!((w[0] - 0.05).abs() < 1e-6);
+        assert!((w[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(
+            LossWeightSchedule::parse("warmup:7", 100),
+            LossWeightSchedule::Warmup { ramp: 7 }
+        );
+        assert_eq!(
+            LossWeightSchedule::parse("constant", 10),
+            LossWeightSchedule::Constant
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Data substrates: byte-level tokenizer, synthetic corpus generators, the
+//! training dataset/batcher, and downstream eval task generators.
+//!
+//! The paper pre-trains on a Data-Juicer corpus and evaluates with HELM;
+//! neither is available offline, so we substitute a deterministic synthetic
+//! corpus with controlled difficulty structure (see [`synth`]) and a task
+//! suite scored with the same metric family (EM / token-F1 / ROUGE-L, see
+//! [`tasks`] and [`crate::eval`]). DESIGN.md documents why this preserves
+//! the behaviours under study (loss-convergence shape; confidence-threshold
+//! speed/quality trade-off).
+
+pub mod dataset;
+pub mod synth;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use dataset::{Dataset, TrainBatch};
+pub use synth::{Corpus, CorpusSpec};
+pub use tokenizer::{ByteTokenizer, BOS_ID, EOS_ID, PAD_ID, VOCAB_SIZE};

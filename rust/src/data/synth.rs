@@ -1,0 +1,240 @@
+//! Synthetic pre-training corpus with controlled difficulty structure.
+//!
+//! Early-exit behaviour depends on the *mix* of easy and hard tokens: the
+//! paper's Table 4 shows exits firing confidently on predictable
+//! continuations ("ij"/"ing" of "Beijing") and deferring on content words.
+//! The generators below reproduce that structure deterministically:
+//!
+//! - **Fact KB** — a fixed world of entities with attributes, verbalised
+//!   through a handful of templates. Relation words and template glue are
+//!   *easy* (high-confidence at shallow exits once learned); attribute
+//!   values are *hard* (require the full model / memorisation).
+//! - **QA pairs** — the same KB in question-answer format; teaches the
+//!   format the eval harness probes (HELM closed-book QA analogue).
+//! - **Patterns** — periodic sequences and alphabet/count runs: maximally
+//!   easy tokens, the head of the difficulty distribution.
+//! - **Arithmetic** — single/double-digit addition: format tokens easy,
+//!   result digits hard-ish.
+//! - **Copy** — `copy: <text> | <text>` lines; after the separator every
+//!   token is predictable from context (easy given attention).
+//! - **Summary** — multi-fact paragraphs followed by `summary:` and the
+//!   lead fact (the XSUM/CNN-DM analogue used for ROUGE-L scoring).
+
+use crate::util::rng::Rng;
+
+const SYLLABLES: [&str; 20] = [
+    "ba", "ce", "di", "fo", "gu", "ha", "ki", "lo", "mu", "na", "po", "qu",
+    "ri", "sa", "tu", "ve", "wi", "xa", "yo", "zu",
+];
+
+const RELATIONS: [(&str, &[&str]); 4] = [
+    ("capital", &["zarbon", "melka", "tirin", "ovask", "julep", "narok"]),
+    ("color", &["red", "blue", "green", "amber", "violet", "teal"]),
+    ("animal", &["lynx", "heron", "otter", "ibex", "finch", "viper"]),
+    ("food", &["bread", "olives", "rice", "honey", "figs", "dates"]),
+];
+
+#[derive(Debug, Clone)]
+pub struct Fact {
+    pub entity: String,
+    pub relation: &'static str,
+    pub value: &'static str,
+}
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub seed: u64,
+    pub n_entities: usize,
+    /// Approximate corpus size in bytes.
+    pub target_bytes: usize,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec { seed: 7, n_entities: 24, target_bytes: 1 << 20 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub facts: Vec<Fact>,
+    /// Documents (one logical text each); packed by `dataset`.
+    pub docs: Vec<String>,
+}
+
+pub fn entity_name(rng: &mut Rng) -> String {
+    let n = 2 + rng.below(2);
+    (0..n).map(|_| SYLLABLES[rng.below(SYLLABLES.len())]).collect()
+}
+
+pub fn build_world(rng: &mut Rng, n_entities: usize) -> Vec<Fact> {
+    let mut facts = Vec::new();
+    let mut names = std::collections::BTreeSet::new();
+    while names.len() < n_entities {
+        names.insert(entity_name(rng));
+    }
+    for entity in names {
+        for (relation, values) in RELATIONS {
+            facts.push(Fact {
+                entity: entity.clone(),
+                relation,
+                value: values[rng.below(values.len())],
+            });
+        }
+    }
+    facts
+}
+
+pub fn fact_sentence(f: &Fact, template: usize) -> String {
+    match template % 3 {
+        0 => format!("the {} of {} is {}.", f.relation, f.entity, f.value),
+        1 => format!("{} has {} as its {}.", f.entity, f.value, f.relation),
+        _ => format!("in {}, the {} is {}.", f.entity, f.relation, f.value),
+    }
+}
+
+pub fn qa_pair(f: &Fact) -> (String, String) {
+    (
+        format!("question: what is the {} of {}? answer:", f.relation, f.entity),
+        format!(" {}", f.value),
+    )
+}
+
+fn pattern_doc(rng: &mut Rng) -> String {
+    match rng.below(3) {
+        0 => {
+            // Periodic letter pattern, e.g. "xy zq xy zq ...".
+            let a = SYLLABLES[rng.below(SYLLABLES.len())];
+            let b = SYLLABLES[rng.below(SYLLABLES.len())];
+            let unit = format!("{a} {b} ");
+            unit.repeat(6 + rng.below(6)).trim_end().to_string()
+        }
+        1 => {
+            let start = rng.below(20);
+            let run: Vec<String> =
+                (start..start + 10 + rng.below(10)).map(|i| i.to_string()).collect();
+            format!("count: {}", run.join(" "))
+        }
+        _ => {
+            let start = rng.below(16);
+            let letters: String = (0..10)
+                .map(|i| (b'a' + ((start + i) % 26) as u8) as char)
+                .flat_map(|c| [c, ' '])
+                .collect();
+            format!("abc: {}", letters.trim_end())
+        }
+    }
+}
+
+fn arithmetic_doc(rng: &mut Rng) -> String {
+    let mut lines = Vec::new();
+    for _ in 0..4 + rng.below(5) {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        lines.push(format!("{a}+{b}={}.", a + b));
+    }
+    lines.join(" ")
+}
+
+fn copy_doc(rng: &mut Rng, facts: &[Fact]) -> String {
+    let f = &facts[rng.below(facts.len())];
+    let text = fact_sentence(f, rng.below(3));
+    format!("copy: {text} | {text}")
+}
+
+fn summary_doc(rng: &mut Rng, facts: &[Fact]) -> String {
+    // Pick one entity; list its facts; summary = the lead (capital) fact.
+    let e = &facts[rng.below(facts.len())].entity.clone();
+    let ef: Vec<&Fact> = facts.iter().filter(|f| &f.entity == e).collect();
+    let body: Vec<String> =
+        ef.iter().enumerate().map(|(i, f)| fact_sentence(f, i)).collect();
+    format!("{} summary: {}", body.join(" "), fact_sentence(ef[0], 0))
+}
+
+impl Corpus {
+    pub fn build(spec: &CorpusSpec) -> Corpus {
+        let mut rng = Rng::new(spec.seed);
+        let facts = build_world(&mut rng, spec.n_entities);
+        let mut docs = Vec::new();
+        let mut bytes = 0usize;
+        // Mixture weights: facts 30%, QA 20%, patterns 20%, arithmetic 10%,
+        // copy 10%, summary 10%.
+        let weights = [0.30, 0.20, 0.20, 0.10, 0.10, 0.10];
+        while bytes < spec.target_bytes {
+            let doc = match rng.weighted(&weights) {
+                0 => {
+                    let f = &facts[rng.below(facts.len())];
+                    fact_sentence(f, rng.below(3))
+                }
+                1 => {
+                    let f = &facts[rng.below(facts.len())];
+                    let (q, a) = qa_pair(f);
+                    format!("{q}{a}")
+                }
+                2 => pattern_doc(&mut rng),
+                3 => arithmetic_doc(&mut rng),
+                4 => copy_doc(&mut rng, &facts),
+                _ => summary_doc(&mut rng, &facts),
+            };
+            bytes += doc.len() + 1;
+            docs.push(doc);
+        }
+        Corpus { facts, docs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let spec = CorpusSpec { seed: 3, n_entities: 8, target_bytes: 10_000 };
+        let a = Corpus::build(&spec);
+        let b = Corpus::build(&spec);
+        assert_eq!(a.docs, b.docs);
+        assert_eq!(a.facts.len(), 8 * RELATIONS.len());
+    }
+
+    #[test]
+    fn corpus_reaches_target_size() {
+        let spec = CorpusSpec { seed: 1, n_entities: 8, target_bytes: 50_000 };
+        let c = Corpus::build(&spec);
+        // Target counts one separator byte per document.
+        let total: usize = c.docs.iter().map(|d| d.len() + 1).sum();
+        assert!(total >= 50_000);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Corpus::build(&CorpusSpec { seed: 1, n_entities: 8, target_bytes: 5_000 });
+        let b = Corpus::build(&CorpusSpec { seed: 2, n_entities: 8, target_bytes: 5_000 });
+        assert_ne!(a.docs, b.docs);
+    }
+
+    #[test]
+    fn facts_have_consistent_values() {
+        let c = Corpus::build(&CorpusSpec::default());
+        // Every (entity, relation) pair appears exactly once in the KB.
+        let mut seen = std::collections::BTreeSet::new();
+        for f in &c.facts {
+            assert!(seen.insert((f.entity.clone(), f.relation)));
+        }
+    }
+
+    #[test]
+    fn qa_format_is_stable() {
+        let f = Fact { entity: "bace".into(), relation: "capital", value: "zarbon" };
+        let (q, a) = qa_pair(&f);
+        assert_eq!(q, "question: what is the capital of bace? answer:");
+        assert_eq!(a, " zarbon");
+    }
+
+    #[test]
+    fn docs_are_ascii() {
+        let c = Corpus::build(&CorpusSpec { seed: 5, n_entities: 6, target_bytes: 20_000 });
+        for d in &c.docs {
+            assert!(d.is_ascii());
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Downstream evaluation tasks — the HELM-analogue suite for Figure 8.
+//!
+//! Six tasks mirroring the paper's benchmark mix (four QA-style scored with
+//! EM or token-F1, two summarisation-style scored with ROUGE-L), generated
+//! from the same synthetic world the model was pre-trained on:
+//!
+//! | paper task          | analogue here        | metric  |
+//! |---------------------|----------------------|---------|
+//! | BoolQ               | `fact_bool`          | EM      |
+//! | TruthfulQA          | `arithmetic`         | EM      |
+//! | NaturalQuestions-cb | `fact_qa`            | F1      |
+//! | NaturalQuestions-ob | `fact_qa_openbook`   | F1      |
+//! | XSUM                | `summary`            | ROUGE-L |
+//! | CNN/DailyMail       | `copy_summary`       | ROUGE-L |
+
+use crate::util::rng::Rng;
+
+use super::synth::{fact_sentence, qa_pair, Corpus, Fact};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    ExactMatch,
+    TokenF1,
+    RougeL,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalExample {
+    pub prompt: String,
+    pub reference: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalTask {
+    pub name: &'static str,
+    pub metric: Metric,
+    pub examples: Vec<EvalExample>,
+    /// Generation budget per example.
+    pub max_new_tokens: usize,
+}
+
+fn pick<'a>(rng: &mut Rng, facts: &'a [Fact]) -> &'a Fact {
+    &facts[rng.below(facts.len())]
+}
+
+pub fn fact_qa(corpus: &Corpus, n: usize, seed: u64) -> EvalTask {
+    let mut rng = Rng::new(seed);
+    let examples = (0..n)
+        .map(|_| {
+            let f = pick(&mut rng, &corpus.facts);
+            let (q, a) = qa_pair(f);
+            EvalExample { prompt: q, reference: a.trim().to_string() }
+        })
+        .collect();
+    EvalTask {
+        name: "fact_qa",
+        metric: Metric::TokenF1,
+        examples,
+        max_new_tokens: 12,
+    }
+}
+
+pub fn fact_qa_openbook(corpus: &Corpus, n: usize, seed: u64) -> EvalTask {
+    let mut rng = Rng::new(seed ^ 0xB00C);
+    let examples = (0..n)
+        .map(|_| {
+            let f = pick(&mut rng, &corpus.facts);
+            let (q, a) = qa_pair(f);
+            // Open-book: the supporting fact precedes the question.
+            EvalExample {
+                prompt: format!("{} {}", fact_sentence(f, 0), q),
+                reference: a.trim().to_string(),
+            }
+        })
+        .collect();
+    EvalTask {
+        name: "fact_qa_openbook",
+        metric: Metric::TokenF1,
+        examples,
+        max_new_tokens: 12,
+    }
+}
+
+pub fn fact_bool(corpus: &Corpus, n: usize, seed: u64) -> EvalTask {
+    let mut rng = Rng::new(seed ^ 0xB001);
+    let examples = (0..n)
+        .map(|_| {
+            let f = pick(&mut rng, &corpus.facts);
+            let truthy = rng.below(2) == 0;
+            let value = if truthy {
+                f.value.to_string()
+            } else {
+                // A wrong value of the same relation.
+                let mut other = f.value;
+                for g in &corpus.facts {
+                    if g.relation == f.relation && g.value != f.value {
+                        other = g.value;
+                        break;
+                    }
+                }
+                other.to_string()
+            };
+            EvalExample {
+                prompt: format!(
+                    "question: is the {} of {} {}? answer:",
+                    f.relation, f.entity, value
+                ),
+                reference: (if truthy { "yes" } else { "no" }).to_string(),
+            }
+        })
+        .collect();
+    EvalTask {
+        name: "fact_bool",
+        metric: Metric::ExactMatch,
+        examples,
+        max_new_tokens: 4,
+    }
+}
+
+pub fn arithmetic(n: usize, seed: u64) -> EvalTask {
+    let mut rng = Rng::new(seed ^ 0xA417);
+    let examples = (0..n)
+        .map(|_| {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            EvalExample {
+                prompt: format!("{a}+{b}="),
+                reference: format!("{}", a + b),
+            }
+        })
+        .collect();
+    EvalTask {
+        name: "arithmetic",
+        metric: Metric::ExactMatch,
+        examples,
+        max_new_tokens: 4,
+    }
+}
+
+pub fn summary(corpus: &Corpus, n: usize, seed: u64) -> EvalTask {
+    let mut rng = Rng::new(seed ^ 0x5E44);
+    let entities: Vec<String> = {
+        let mut v: Vec<String> =
+            corpus.facts.iter().map(|f| f.entity.clone()).collect();
+        v.dedup();
+        v
+    };
+    let examples = (0..n)
+        .map(|_| {
+            let e = &entities[rng.below(entities.len())];
+            let ef: Vec<&Fact> =
+                corpus.facts.iter().filter(|f| &f.entity == e).collect();
+            let body: Vec<String> = ef
+                .iter()
+                .enumerate()
+                .map(|(i, f)| fact_sentence(f, i))
+                .collect();
+            EvalExample {
+                prompt: format!("{} summary:", body.join(" ")),
+                reference: fact_sentence(ef[0], 0),
+            }
+        })
+        .collect();
+    EvalTask {
+        name: "summary",
+        metric: Metric::RougeL,
+        examples,
+        max_new_tokens: 48,
+    }
+}
+
+pub fn copy_summary(corpus: &Corpus, n: usize, seed: u64) -> EvalTask {
+    let mut rng = Rng::new(seed ^ 0xC0B1);
+    let examples = (0..n)
+        .map(|_| {
+            let f = pick(&mut rng, &corpus.facts);
+            let text = fact_sentence(f, rng.below(3));
+            EvalExample {
+                prompt: format!("copy: {text} |"),
+                reference: text,
+            }
+        })
+        .collect();
+    EvalTask {
+        name: "copy_summary",
+        metric: Metric::RougeL,
+        examples,
+        max_new_tokens: 64,
+    }
+}
+
+/// The full Figure-8 suite.
+pub fn all_tasks(corpus: &Corpus, n_per_task: usize, seed: u64) -> Vec<EvalTask> {
+    vec![
+        fact_bool(corpus, n_per_task, seed),
+        arithmetic(n_per_task, seed),
+        fact_qa(corpus, n_per_task, seed),
+        fact_qa_openbook(corpus, n_per_task, seed),
+        summary(corpus, n_per_task, seed),
+        copy_summary(corpus, n_per_task, seed),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::CorpusSpec;
+
+    fn corpus() -> Corpus {
+        Corpus::build(&CorpusSpec { seed: 2, n_entities: 8, target_bytes: 10_000 })
+    }
+
+    #[test]
+    fn suite_has_six_tasks() {
+        let c = corpus();
+        let tasks = all_tasks(&c, 5, 1);
+        assert_eq!(tasks.len(), 6);
+        for t in &tasks {
+            assert_eq!(t.examples.len(), 5, "{}", t.name);
+            for e in &t.examples {
+                assert!(!e.prompt.is_empty() && !e.reference.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn fact_qa_references_are_kb_values() {
+        let c = corpus();
+        let t = fact_qa(&c, 20, 3);
+        for e in &t.examples {
+            assert!(
+                c.facts.iter().any(|f| f.value == e.reference),
+                "{e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bool_task_is_balancedish() {
+        let c = corpus();
+        let t = fact_bool(&c, 100, 5);
+        let yes = t.examples.iter().filter(|e| e.reference == "yes").count();
+        assert!(yes > 25 && yes < 75, "yes={yes}");
+    }
+
+    #[test]
+    fn tasks_are_deterministic() {
+        let c = corpus();
+        let a = summary(&c, 4, 9);
+        let b = summary(&c, 4, 9);
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Byte-level tokenizer with PAD/BOS/EOS specials.
+//!
+//! Token ids 0..255 are raw bytes; ids must match `python/compile/configs.py`
+//! (PAD=256, BOS=257, EOS=258; vocab padded to 320 for GEMM-friendly tiling
+//! in the fused exit-loss kernel).
+
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+pub const VOCAB_SIZE: usize = 320;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(BOS_ID);
+        v.extend(text.bytes().map(|b| b as i32));
+        v
+    }
+
+    /// Decode, skipping specials; invalid UTF-8 is replaced.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        !(0..256).contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello, world!");
+        assert_eq!(t.decode(&ids), "hello, world!");
+        assert!(ids.iter().all(|&i| i < 256));
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo → wörld";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_are_skipped_on_decode() {
+        let t = ByteTokenizer;
+        let mut ids = t.encode_with_bos("ab");
+        ids.push(EOS_ID);
+        ids.push(PAD_ID);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn vocab_ids_in_range() {
+        assert!(PAD_ID < VOCAB_SIZE as i32);
+        assert!(BOS_ID < VOCAB_SIZE as i32);
+        assert!(EOS_ID < VOCAB_SIZE as i32);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: the metric implementations HELM uses for the
+//! paper's Figure-8 tasks (EM, token-F1, ROUGE-L), plus the driver that
+//! scores a generation engine over a task suite.
+
+pub mod harness;
+pub mod scorers;
+
+pub use harness::{evaluate_task, TaskScore};
+pub use scorers::{exact_match, rouge_l, token_f1};

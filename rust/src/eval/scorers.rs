@@ -1,0 +1,168 @@
+//! Metric implementations: exact match, token-level F1 (SQuAD-style), and
+//! ROUGE-L (LCS F-measure) — the metrics the paper reports via HELM.
+
+fn normalize(s: &str) -> String {
+    s.to_lowercase()
+        .chars()
+        .map(|c| if c.is_ascii_punctuation() { ' ' } else { c })
+        .collect::<String>()
+        .split_whitespace()
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn tokens(s: &str) -> Vec<String> {
+    normalize(s).split_whitespace().map(String::from).collect()
+}
+
+/// 1.0 iff the normalised prediction equals the normalised reference.
+pub fn exact_match(pred: &str, reference: &str) -> f64 {
+    (normalize(pred) == normalize(reference)) as u8 as f64
+}
+
+/// SQuAD-style token F1 (bag-of-tokens overlap).
+pub fn token_f1(pred: &str, reference: &str) -> f64 {
+    let p = tokens(pred);
+    let r = tokens(reference);
+    if p.is_empty() || r.is_empty() {
+        return (p.is_empty() && r.is_empty()) as u8 as f64;
+    }
+    let mut counts = std::collections::BTreeMap::new();
+    for t in &r {
+        *counts.entry(t.clone()).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for t in &p {
+        if let Some(c) = counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / p.len() as f64;
+    let recall = overlap as f64 / r.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    let n = b.len();
+    let mut prev = vec![0usize; n + 1];
+    let mut cur = vec![0usize; n + 1];
+    for x in a {
+        for (j, y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n]
+}
+
+/// ROUGE-L F-measure over normalised tokens.
+pub fn rouge_l(pred: &str, reference: &str) -> f64 {
+    let p = tokens(pred);
+    let r = tokens(reference);
+    if p.is_empty() || r.is_empty() {
+        return (p.is_empty() && r.is_empty()) as u8 as f64;
+    }
+    let lcs = lcs_len(&p, &r) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let precision = lcs / p.len() as f64;
+    let recall = lcs / r.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn em_ignores_case_and_punct() {
+        assert_eq!(exact_match("Zarbon.", "zarbon"), 1.0);
+        assert_eq!(exact_match("zarbon", "melka"), 0.0);
+        assert_eq!(exact_match("the  answer", "The answer!"), 1.0);
+    }
+
+    #[test]
+    fn f1_known_values() {
+        assert_eq!(token_f1("a b c", "a b c"), 1.0);
+        assert_eq!(token_f1("a b", "c d"), 0.0);
+        // overlap 1, |p| = 1, |r| = 2 -> p=1, r=0.5, f1 = 2/3.
+        assert!((token_f1("a", "a b") - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_respects_multiplicity() {
+        // pred has one "a", ref has two: overlap = 1.
+        let f = token_f1("a", "a a");
+        assert!((f - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_l_known_values() {
+        assert_eq!(rouge_l("the cat sat", "the cat sat"), 1.0);
+        assert_eq!(rouge_l("x y z", "a b c"), 0.0);
+        // LCS("a c", "a b c") = 2; p = 2/2, r = 2/3 -> F = 0.8.
+        assert!((rouge_l("a c", "a b c") - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_l_is_order_sensitive_where_f1_is_not() {
+        let f1 = token_f1("c b a", "a b c");
+        let rl = rouge_l("c b a", "a b c");
+        assert_eq!(f1, 1.0);
+        assert!(rl < 1.0);
+    }
+
+    fn rand_text(rng: &mut Rng) -> String {
+        let n = rng.below(8);
+        (0..n)
+            .map(|_| ["a", "b", "cat", "dog", "x"][rng.below(5)])
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    #[test]
+    fn metric_properties() {
+        check("metrics in [0,1], identity == 1", 200, |rng| {
+            let a = rand_text(rng);
+            let b = rand_text(rng);
+            for (name, m) in [
+                ("em", exact_match(&a, &b)),
+                ("f1", token_f1(&a, &b)),
+                ("rouge", rouge_l(&a, &b)),
+            ] {
+                if !(0.0..=1.0).contains(&m) {
+                    return Err(format!("{name} out of range: {m}"));
+                }
+            }
+            if !a.is_empty() {
+                for (name, m) in [
+                    ("em", exact_match(&a, &a)),
+                    ("f1", token_f1(&a, &a)),
+                    ("rouge", rouge_l(&a, &a)),
+                ] {
+                    if (m - 1.0).abs() > 1e-12 {
+                        return Err(format!("{name}(x,x) != 1: {m}"));
+                    }
+                }
+            }
+            // Symmetry of F1.
+            if (token_f1(&a, &b) - token_f1(&b, &a)).abs() > 1e-12 {
+                return Err("f1 not symmetric".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,167 @@
+//! Shared inference machinery: model state (params from checkpoint or
+//! seed), exit metadata, confidence rule, width selection, statistics.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::tokenizer::{ByteTokenizer, BOS_ID, EOS_ID};
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::params;
+use crate::runtime::tensor::{argmax_prob, softmax, HostTensor};
+
+/// Parameters + manifest for an inference engine (host-resident; each
+/// engine converts to literals/buffers as it sees fit).
+#[derive(Clone)]
+pub struct ModelState {
+    pub man: Manifest,
+    pub stage_params: Vec<Vec<HostTensor>>,
+}
+
+impl ModelState {
+    /// Random-initialised params (tests / untrained demos).
+    pub fn init(man: Manifest, seed: u64) -> ModelState {
+        let stage_params = (0..man.stages.len())
+            .map(|s| params::init_stage(seed, &man, s))
+            .collect();
+        ModelState { man, stage_params }
+    }
+
+    /// Params from a trainer checkpoint.
+    pub fn from_checkpoint(man: Manifest, path: &Path) -> Result<ModelState> {
+        let stage_params = params::load_stage_params(path, &man)?;
+        Ok(ModelState { man, stage_params })
+    }
+
+    /// Entry exits (layer > 0) of stage s, i.e. those the decode engines
+    /// evaluate on the stage's input hidden state. Exits on the embedding
+    /// output (layer 0) are training-time features (Figure 7's third
+    /// exit); their confidence carries no signal and the paper does not
+    /// use them for inference either.
+    pub fn entry_exits(&self, s: usize) -> Vec<&crate::runtime::artifacts::ExitMeta> {
+        self.man.stages[s]
+            .exits
+            .iter()
+            .filter(|e| !e.is_final && e.entry && e.layer > 0)
+            .collect()
+    }
+
+    pub fn final_exit(&self) -> &crate::runtime::artifacts::ExitMeta {
+        self.man.stages.last().unwrap().exits.last().unwrap()
+    }
+}
+
+/// The paper's exit rule: exit iff max softmax probability >= threshold.
+/// Returns (token, confidence).
+pub fn confidence_decision(logits: &[f32]) -> (i32, f32) {
+    let probs = softmax(logits);
+    let (idx, p) = argmax_prob(&probs);
+    (idx as i32, p)
+}
+
+/// Smallest available decode width >= `need` that fits before `pos + 1`
+/// (windows end at the current position and extend left over healed
+/// territory). None if no width fits.
+pub fn pick_width(widths: &[usize], need: usize, pos: usize) -> Option<usize> {
+    widths
+        .iter()
+        .copied()
+        .filter(|&w| w >= need && w <= pos + 1)
+        .min()
+}
+
+/// Per-exit usage statistics of one generation run.
+#[derive(Debug, Clone, Default)]
+pub struct ExitStats {
+    /// (exit layer, tokens emitted there). The final exit uses layer ==
+    /// n_layers.
+    pub counts: Vec<(usize, usize)>,
+    /// Full-model passes forced by the deficit cap (sequential engine).
+    pub forced_full: usize,
+}
+
+impl ExitStats {
+    pub fn record(&mut self, layer: usize) {
+        for c in &mut self.counts {
+            if c.0 == layer {
+                c.1 += 1;
+                return;
+            }
+        }
+        self.counts.push((layer, 1));
+        self.counts.sort();
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|c| c.1).sum()
+    }
+
+    /// Fraction of tokens emitted at early exits.
+    pub fn early_fraction(&self, n_layers: usize) -> f64 {
+        let total = self.total().max(1);
+        let early: usize = self
+            .counts
+            .iter()
+            .filter(|c| c.0 < n_layers)
+            .map(|c| c.1)
+            .sum();
+        early as f64 / total as f64
+    }
+}
+
+/// One generation result.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub seconds: f64,
+    pub stats: ExitStats,
+}
+
+/// Shared stopping rule: stop on EOS/BOS or after max_new tokens.
+pub fn is_stop_token(t: i32) -> bool {
+    t == EOS_ID || t == BOS_ID
+}
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    ByteTokenizer.decode(tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confidence_decision_peaks() {
+        let mut logits = vec![0.0f32; 10];
+        logits[3] = 8.0;
+        let (tok, conf) = confidence_decision(&logits);
+        assert_eq!(tok, 3);
+        assert!(conf > 0.99);
+        let flat = vec![0.0f32; 10];
+        let (_, conf) = confidence_decision(&flat);
+        assert!((conf - 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pick_width_policies() {
+        let widths = [1usize, 2, 4, 8];
+        assert_eq!(pick_width(&widths, 1, 0), Some(1));
+        assert_eq!(pick_width(&widths, 2, 5), Some(2));
+        assert_eq!(pick_width(&widths, 3, 5), Some(4));
+        // Window of 4 does not fit before position 2.
+        assert_eq!(pick_width(&widths, 3, 2), None);
+        assert_eq!(pick_width(&widths, 9, 100), None);
+    }
+
+    #[test]
+    fn exit_stats_accumulate() {
+        let mut s = ExitStats::default();
+        s.record(2);
+        s.record(4);
+        s.record(2);
+        assert_eq!(s.counts, vec![(2, 2), (4, 1)]);
+        assert_eq!(s.total(), 3);
+        assert!((s.early_fraction(4) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,31 @@
+//! Early-exit inference engines — the paper's Section 4 contribution (C3).
+//!
+//! Both engines are compatible with KV caching, resolving the conflict the
+//! paper identifies (a token generated at an early exit leaves its deep-
+//! layer KV entries missing):
+//!
+//! - [`sequential`] — single-threaded stage walk with **KV recomputation**
+//!   (Appendix D.3 / Bae et al. variant): deficit tokens ride in the next
+//!   decode window so their missing KV entries are recomputed; a full-model
+//!   pass is forced when the deficit hits its cap. With threshold = 1.0
+//!   this is the full-model baseline the paper's speedups are measured
+//!   against.
+//! - [`pipelined`] — the paper's novel **pipeline-based** method: one
+//!   thread per stage; when an exit fires at stage s, the token is sent
+//!   back to the first stage immediately and generation of the next token
+//!   overlaps with the KV back-fill of the current token at stages >= s.
+//!
+//! Exit decisions use the paper's confidence rule (max softmax probability
+//! >= threshold) at stage-entry exits (Optimization-2 placement).
+//!
+//! [`probe`] reproduces Table 4: per-exit predictions + confidences for
+//! every generated token.
+
+pub mod common;
+pub mod pipelined;
+pub mod probe;
+pub mod sequential;
+
+pub use common::{ExitStats, GenOutput, ModelState};
+pub use pipelined::PipelinedEngine;
+pub use sequential::SequentialEngine;

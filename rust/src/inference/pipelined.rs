@@ -1,0 +1,413 @@
+//! Pipeline-based early-exit inference — the paper's novel Section 4
+//! method, as a real thread-per-stage pipeline.
+//!
+//! When stage s's entry exit fires for the current token, two things happen
+//! *in parallel* (Figure 5):
+//!
+//!  1. the token is reported to the leader, which immediately starts the
+//!     next token's forward pass at stage 0;
+//!  2. the current token's forward pass **continues** through stages
+//!     s..P-1 (flagged `exited`), filling its KV caches in all deeper
+//!     layers — so no KV entry is ever missing and no recomputation is
+//!     needed.
+//!
+//! Each stage processes its FIFO inbox in arrival order, which serialises
+//! the KV back-fill of token t before the forward of token t+1 on the same
+//! stage — exactly the constraint the paper's latency analysis assumes.
+//! The generation latency of a token emitted at stage s is therefore the
+//! forward time of stages 0..s (plus queueing), not of the full model.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tokenizer::BOS_ID;
+use crate::eval::harness::Generator;
+use crate::runtime::client::StageRuntime;
+use crate::runtime::tensor::{HostTensor, IntTensor};
+
+use super::common::{
+    confidence_decision, detokenize, is_stop_token, ExitStats, GenOutput,
+    ModelState,
+};
+
+/// Work flowing down the stage chain.
+enum Work {
+    /// Decode a window of tokens at [pos0, pos0+width).
+    /// `payload` is tokens for stage 0, hidden states beyond.
+    Window {
+        width: usize,
+        pos0: usize,
+        tokens: Vec<i32>,
+        hidden: Option<HostTensor>,
+        /// Token already emitted at an earlier stage (KV back-fill only) —
+        /// or prefill, where no token is wanted either.
+        exited: bool,
+        /// Exit checks enabled (generation steps, not prefill).
+        check_exits: bool,
+    },
+    /// Clear KV caches, then propagate; last stage acks the leader.
+    Reset,
+    Shutdown,
+}
+
+enum ToLeader {
+    Token { token: i32, exit_layer: usize },
+    ResetDone,
+}
+
+struct StageThread {
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+pub struct PipelinedEngine {
+    pub state: ModelState,
+    pub threshold: f32,
+    to_first: Sender<Work>,
+    from_last: Receiver<ToLeader>,
+    threads: Vec<StageThread>,
+    /// Shared threshold cell read by stage threads (set before each run).
+    threshold_tx: Vec<Sender<f32>>,
+}
+
+struct StageWorker {
+    s: usize,
+    p: usize,
+    man: crate::runtime::artifacts::Manifest,
+    rt: StageRuntime,
+    plits: Vec<xla::Literal>,
+    cache: xla::Literal,
+    threshold: f32,
+    inbox: Receiver<Work>,
+    next: Option<Sender<Work>>,
+    leader: Sender<ToLeader>,
+    threshold_rx: Receiver<f32>,
+    entry_exit_layers: Vec<usize>,
+    final_layer: usize,
+}
+
+impl StageWorker {
+    fn head_logits(&self, layer: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let st = &self.man.stages[self.s];
+        let e = st
+            .exits
+            .iter()
+            .find(|e| e.layer == layer)
+            .context("exit not on stage")?;
+        let xlit = HostTensor::new(vec![x.len()], x.to_vec()).to_literal()?;
+        let mut args: Vec<&xla::Literal> = e
+            .head_param_idx
+            .iter()
+            .map(|&i| &self.plits[i])
+            .collect();
+        args.push(&xlit);
+        let out = self.rt.get(&format!("head{layer}"))?.run(&args)?;
+        Ok(HostTensor::from_literal(&out[0])?.data)
+    }
+
+    fn run(&mut self) -> Result<()> {
+        let h = self.man.model.hidden;
+        loop {
+            match self.inbox.recv() {
+                Err(_) | Ok(Work::Shutdown) => return Ok(()),
+                Ok(Work::Reset) => {
+                    while let Ok(t) = self.threshold_rx.try_recv() {
+                        self.threshold = t;
+                    }
+                    self.cache = HostTensor::zeros(
+                        &self.man.stages[self.s].cache_shape,
+                    )
+                    .to_literal()?;
+                    match &self.next {
+                        Some(n) => n.send(Work::Reset).ok().context("next")?,
+                        None => {
+                            self.leader.send(ToLeader::ResetDone).ok();
+                        }
+                    }
+                }
+                Ok(Work::Window {
+                    width,
+                    pos0,
+                    tokens,
+                    hidden,
+                    mut exited,
+                    check_exits,
+                }) => {
+                    // Entry-exit decision on the last window position.
+                    if self.s > 0 && !exited && check_exits {
+                        let xh = hidden.as_ref().unwrap();
+                        let last = &xh.data[(width - 1) * h..];
+                        for &layer in &self.entry_exit_layers.clone() {
+                            let logits = self.head_logits(layer, last)?;
+                            let (tok, conf) = confidence_decision(&logits);
+                            if conf >= self.threshold {
+                                self.leader
+                                    .send(ToLeader::Token {
+                                        token: tok,
+                                        exit_layer: layer,
+                                    })
+                                    .ok();
+                                exited = true;
+                                break;
+                            }
+                        }
+                    }
+
+                    // Stage decode (KV fill), always.
+                    let in_lit: xla::Literal = if self.s == 0 {
+                        IntTensor::new(vec![width], tokens.clone())
+                            .to_literal()?
+                    } else {
+                        hidden.as_ref().unwrap().to_literal()?
+                    };
+                    // Perf pass §L3-2: cache stays an xla::Literal.
+                    let pos_lit = IntTensor::scalar(pos0 as i32).to_literal()?;
+                    let mut args: Vec<&xla::Literal> =
+                        self.plits.iter().collect();
+                    args.push(&in_lit);
+                    args.push(&self.cache);
+                    args.push(&pos_lit);
+                    let out = self
+                        .rt
+                        .get(&format!("decode_w{width}"))?
+                        .run(&args)?;
+                    let mut it = out.into_iter();
+                    let x_out = HostTensor::from_literal(&it.next().unwrap())?;
+                    self.cache = it.next().unwrap();
+
+                    if self.s + 1 < self.p {
+                        self.next
+                            .as_ref()
+                            .unwrap()
+                            .send(Work::Window {
+                                width,
+                                pos0,
+                                tokens,
+                                hidden: Some(x_out),
+                                exited,
+                                check_exits,
+                            })
+                            .ok()
+                            .context("next stage gone")?;
+                    } else if !exited && check_exits {
+                        let last = &x_out.data[(width - 1) * h..];
+                        let logits =
+                            self.head_logits(self.final_layer, last)?;
+                        let (tok, _conf) = confidence_decision(&logits);
+                        self.leader
+                            .send(ToLeader::Token {
+                                token: tok,
+                                exit_layer: self.final_layer,
+                            })
+                            .ok();
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl PipelinedEngine {
+    pub fn new(state: ModelState, threshold: f32) -> Result<PipelinedEngine> {
+        let p = state.man.stages.len();
+        let (leader_tx, from_last) = channel::<ToLeader>();
+
+        // Build the chain back to front.
+        let mut next_tx: Option<Sender<Work>> = None;
+        let mut first_tx: Option<Sender<Work>> = None;
+        let mut threads = Vec::new();
+        let mut threshold_tx = Vec::new();
+        for s in (0..p).rev() {
+            let (tx, rx) = channel::<Work>();
+            let (ttx, trx) = channel::<f32>();
+            threshold_tx.push(ttx);
+            let man = state.man.clone();
+            let params = state.stage_params[s].clone();
+            let next = next_tx.take();
+            let leader = leader_tx.clone();
+            let thr = threshold;
+            let join = std::thread::Builder::new()
+                .name(format!("infer-{s}"))
+                .spawn(move || -> Result<()> {
+                    let mut rt = StageRuntime::cpu()?;
+                    rt.load_stage_inference(&man, &man.stages[s])?;
+                    let plits = params
+                        .iter()
+                        .map(|t| t.to_literal())
+                        .collect::<Result<Vec<_>>>()?;
+                    let entry_exit_layers: Vec<usize> = man.stages[s]
+                        .exits
+                        .iter()
+                        .filter(|e| !e.is_final && e.entry && e.layer > 0)
+                        .map(|e| e.layer)
+                        .collect();
+                    let final_layer = man.model.n_layers;
+                    let mut w = StageWorker {
+                        s,
+                        p,
+                        cache: HostTensor::zeros(&man.stages[s].cache_shape)
+                            .to_literal()?,
+                        man,
+                        rt,
+                        plits,
+                        threshold: thr,
+                        inbox: rx,
+                        next,
+                        leader,
+                        threshold_rx: trx,
+                        entry_exit_layers,
+                        final_layer,
+                    };
+                    w.run()
+                })
+                .expect("spawn inference stage");
+            threads.push(StageThread { join: Some(join) });
+            next_tx = Some(tx.clone());
+            first_tx = Some(tx);
+        }
+        threshold_tx.reverse();
+
+        Ok(PipelinedEngine {
+            state,
+            threshold,
+            to_first: first_tx.unwrap(),
+            from_last,
+            threads,
+            threshold_tx,
+        })
+    }
+
+    pub fn set_threshold(&mut self, t: f32) {
+        self.threshold = t;
+        for tx in &self.threshold_tx {
+            tx.send(t).ok();
+        }
+    }
+
+    fn reset(&self) -> Result<()> {
+        self.to_first.send(Work::Reset).ok().context("chain gone")?;
+        loop {
+            match self.from_last.recv().context("reset ack")? {
+                ToLeader::ResetDone => return Ok(()),
+                // Drain stale tokens from an aborted previous run.
+                ToLeader::Token { .. } => continue,
+            }
+        }
+    }
+
+    pub fn generate_tokens(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        // Thresholds are picked up at Reset; send first.
+        self.reset()?;
+        let t0 = Instant::now();
+        let man = &self.state.man;
+        let max_seq = man.model.max_seq;
+        let widths = man.decode_widths.clone();
+
+        let mut tokens = Vec::with_capacity(prompt.len() + max_new + 1);
+        tokens.push(BOS_ID);
+        tokens.extend_from_slice(prompt);
+        if tokens.len() + max_new + 1 > max_seq {
+            bail!("sequence exceeds cache capacity {max_seq}");
+        }
+
+        // Prefill positions [0, L-1) in greedy chunks, no exit checks.
+        let l = tokens.len();
+        let mut pos = 0usize;
+        while pos + 1 < l {
+            let remaining = l - 1 - pos;
+            let w = widths
+                .iter()
+                .copied()
+                .filter(|&w| w <= remaining)
+                .max()
+                .unwrap_or(1);
+            self.to_first
+                .send(Work::Window {
+                    width: w,
+                    pos0: pos,
+                    tokens: tokens[pos..pos + w].to_vec(),
+                    hidden: None,
+                    exited: true, // no emission
+                    check_exits: false,
+                })
+                .ok()
+                .context("chain gone")?;
+            pos += w;
+        }
+
+        // Generation: send the current last token, await the emitted next.
+        let mut stats = ExitStats::default();
+        let mut generated = Vec::new();
+        for _ in 0..max_new {
+            let n = tokens.len() - 1;
+            if n + 1 >= max_seq {
+                break;
+            }
+            self.to_first
+                .send(Work::Window {
+                    width: 1,
+                    pos0: n,
+                    tokens: vec![tokens[n]],
+                    hidden: None,
+                    exited: false,
+                    check_exits: true,
+                })
+                .ok()
+                .context("chain gone")?;
+            match self.from_last.recv().context("token")? {
+                ToLeader::Token { token, exit_layer } => {
+                    stats.record(exit_layer);
+                    tokens.push(token);
+                    generated.push(token);
+                    if is_stop_token(token) {
+                        break;
+                    }
+                }
+                ToLeader::ResetDone => bail!("unexpected reset ack"),
+            }
+        }
+
+        Ok(GenOutput {
+            text: detokenize(&generated),
+            tokens: generated,
+            seconds: t0.elapsed().as_secs_f64(),
+            stats,
+        })
+    }
+
+    pub fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        let ids = crate::data::tokenizer::ByteTokenizer.encode(prompt);
+        self.generate_tokens(&ids, max_new)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.to_first.send(Work::Shutdown);
+        // Dropping to_first closes the chain; workers exit on channel close.
+        for t in &mut self.threads {
+            if let Some(j) = t.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Generator for PipelinedEngine {
+    fn generate(&mut self, prompt: &str, max_new: usize) -> (String, f64) {
+        match self.generate_text(prompt, max_new) {
+            Ok(out) => (out.text, out.seconds),
+            Err(e) => {
+                eprintln!("generation error: {e:#}");
+                (String::new(), 0.0)
+            }
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Exit-confidence probing — the paper's Table 4.
+//!
+//! Runs generation with full-model passes while recording every exit's
+//! prediction and confidence for each token, so one can see which tokens
+//! are "easy" (all exits agree with high confidence) and which require the
+//! full model.
+
+use anyhow::Result;
+
+use crate::data::tokenizer::ByteTokenizer;
+use crate::util::table::Table;
+
+use super::common::ModelState;
+use super::sequential::{SequentialEngine, TokenProbe};
+
+pub struct ProbeReport {
+    pub probes: Vec<TokenProbe>,
+    pub generated: String,
+    /// Exit layers, shallow to deep (final last).
+    pub exit_layers: Vec<usize>,
+}
+
+/// Generate with the full model while probing every exit per token.
+pub fn probe_generation(
+    state: ModelState,
+    prompt: &str,
+    max_new: usize,
+) -> Result<ProbeReport> {
+    let mut exit_layers: Vec<usize> = state
+        .man
+        .exit_order()
+        .iter()
+        .map(|&(_, l, _)| l)
+        .filter(|&l| l > 0)
+        .collect();
+    exit_layers.sort();
+    // Threshold 1.0: never exit early, so every exit is probed for every
+    // token (the Table 4 setting).
+    let mut eng = SequentialEngine::new(state, 1.0)?;
+    eng.probe = true;
+    let out = eng.generate_text(prompt, max_new)?;
+    Ok(ProbeReport {
+        probes: eng.probes.clone(),
+        generated: out.text,
+        exit_layers,
+    })
+}
+
+impl ProbeReport {
+    /// Render as the paper's Table 4: one row per token, one column pair
+    /// per exit.
+    pub fn to_table(&self) -> Table {
+        let tok = ByteTokenizer;
+        let mut headers: Vec<String> = vec!["token".into()];
+        for l in &self.exit_layers {
+            headers.push(format!("layer {l}"));
+            headers.push(format!("conf@{l}"));
+        }
+        let mut t = Table::new(
+            "Table 4 analogue: per-exit prediction and confidence",
+            &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for p in &self.probes {
+            let mut row = Vec::with_capacity(headers.len());
+            // The emitted token is the final exit's prediction.
+            let emitted = p.exits.last().map(|e| e.1).unwrap_or(-1);
+            row.push(printable(&tok, emitted));
+            for l in &self.exit_layers {
+                match p.exits.iter().find(|e| e.0 == *l) {
+                    Some(&(_, tk, conf)) => {
+                        row.push(printable(&tok, tk));
+                        row.push(format!("{conf:.3}"));
+                    }
+                    None => {
+                        row.push("-".into());
+                        row.push("-".into());
+                    }
+                }
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Fraction of tokens where all exits agree on the prediction and the
+    /// shallowest exit is confident above `tau` — the paper's observation
+    /// that high-confidence tokens agree across exits.
+    pub fn agreement_at(&self, tau: f32) -> f64 {
+        let mut confident = 0usize;
+        let mut agree = 0usize;
+        for p in &self.probes {
+            if let Some(first) = p.exits.first() {
+                if first.2 >= tau {
+                    confident += 1;
+                    if p.exits.iter().all(|e| e.1 == first.1) {
+                        agree += 1;
+                    }
+                }
+            }
+        }
+        if confident == 0 {
+            1.0
+        } else {
+            agree as f64 / confident as f64
+        }
+    }
+}
+
+fn printable(tok: &ByteTokenizer, id: i32) -> String {
+    if id < 0 {
+        return "?".into();
+    }
+    let s = tok.decode(&[id]);
+    if s.is_empty() {
+        format!("<{id}>")
+    } else if s.chars().all(|c| c.is_ascii_graphic()) {
+        s
+    } else {
+        format!("{:?}", s)
+    }
+}

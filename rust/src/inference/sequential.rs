@@ -1,0 +1,302 @@
+//! Single-process early-exit inference with **KV recomputation**
+//! (Section 4 / Appendix D.3), and the full-model baseline (threshold=1).
+//!
+//! State per generation: one KV cache per stage plus the *deficit* — the
+//! trailing run of positions whose deep-layer KV entries are missing
+//! because their tokens were emitted at an early exit. Every decode pass
+//! processes a window that covers the deficit and the current position, so
+//! the stages it does run recompute (heal) the missing entries; passes that
+//! run all stages clear the deficit entirely. When the deficit approaches
+//! the widest available decode window, early exiting is suspended for one
+//! pass (the paper's forced full-model pass).
+//!
+//! Windows wider than the deficit are padded on the left with
+//! already-healed positions: recomputation is idempotent (validated in
+//! python/tests/test_decode.py), so this only costs compute — the batching
+//! effect the paper relies on.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tokenizer::BOS_ID;
+use crate::eval::harness::Generator;
+use crate::runtime::client::StageRuntime;
+use crate::runtime::tensor::{HostTensor, IntTensor};
+
+use super::common::{
+    confidence_decision, detokenize, is_stop_token, pick_width, ExitStats,
+    GenOutput, ModelState,
+};
+
+/// Per-token probe record (Table 4): predictions + confidences at every
+/// early exit and the final exit.
+#[derive(Debug, Clone)]
+pub struct TokenProbe {
+    pub position: usize,
+    /// (exit layer, predicted token, confidence), shallow to deep;
+    /// the final exit is the last entry.
+    pub exits: Vec<(usize, i32, f32)>,
+}
+
+pub struct SequentialEngine {
+    pub state: ModelState,
+    rt: StageRuntime,
+    /// Per-stage parameter literals (cached; params are immutable here).
+    plits: Vec<Vec<xla::Literal>>,
+    pub threshold: f32,
+    widths: Vec<usize>,
+    /// Collect per-exit probes for every generated token (Table 4 mode).
+    pub probe: bool,
+    pub probes: Vec<TokenProbe>,
+}
+
+impl SequentialEngine {
+    pub fn new(state: ModelState, threshold: f32) -> Result<SequentialEngine> {
+        let mut rt = StageRuntime::cpu()?;
+        for st in &state.man.stages {
+            for w in &state.man.decode_widths {
+                let key = format!("decode_w{w}");
+                rt.load(
+                    &format!("s{}:{key}", st.index),
+                    &state.man.exec_path(st.exec(&key)?),
+                )?;
+            }
+            for e in &st.exits {
+                let key = format!("head{}", e.layer);
+                rt.load(
+                    &format!("s{}:{key}", st.index),
+                    &state.man.exec_path(st.exec(&key)?),
+                )?;
+            }
+        }
+        let plits = state
+            .stage_params
+            .iter()
+            .map(|ps| ps.iter().map(|p| p.to_literal()).collect())
+            .collect::<Result<Vec<Vec<_>>>>()?;
+        let widths = state.man.decode_widths.clone();
+        Ok(SequentialEngine {
+            state,
+            rt,
+            plits,
+            threshold,
+            widths,
+
+            probe: false,
+            probes: Vec::new(),
+        })
+    }
+
+    fn head_logits(&self, s: usize, layer: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let st = &self.state.man.stages[s];
+        let e = st
+            .exits
+            .iter()
+            .find(|e| e.layer == layer)
+            .context("exit not on stage")?;
+        let xlit = HostTensor::new(vec![x.len()], x.to_vec()).to_literal()?;
+        let mut args: Vec<&xla::Literal> = e
+            .head_param_idx
+            .iter()
+            .map(|&i| &self.plits[s][i])
+            .collect();
+        args.push(&xlit);
+        let out = self
+            .rt
+            .get(&format!("s{s}:head{layer}"))?
+            .run(&args)?;
+        Ok(HostTensor::from_literal(&out[0])?.data)
+    }
+
+    /// Run one decode window pass.
+    ///
+    /// Returns (emitted token, exit layer, stages_run). Exit checks are
+    /// skipped when `allow_exit` is false (prefill / forced-full passes).
+    /// When `emit` is false (pure prefill) the pass always runs all stages
+    /// and returns token = -1.
+    #[allow(clippy::too_many_arguments)]
+    fn window_pass(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        caches: &mut [xla::Literal],
+        allow_exit: bool,
+        emit: bool,
+    ) -> Result<(i32, usize, usize)> {
+        let p = self.state.man.stages.len();
+        let h = self.state.man.model.hidden;
+        let window = &tokens[pos0..pos0 + width];
+        let pos_lit = IntTensor::scalar(pos0 as i32).to_literal()?;
+        let mut x: Option<HostTensor> = None;
+        let mut probe = TokenProbe {
+            position: pos0 + width - 1,
+            exits: Vec::new(),
+        };
+
+        for s in 0..p {
+            // Entry exits (paper: Optimization-2 placement).
+            if let Some(xh) = &x {
+                let last = &xh.data[(width - 1) * h..];
+                for e in self.state.entry_exits(s) {
+                    let layer = e.layer;
+                    let logits = self.head_logits(s, layer, last)?;
+                    let (tok, conf) = confidence_decision(&logits);
+                    if self.probe && emit {
+                        probe.exits.push((layer, tok, conf));
+                    }
+                    if allow_exit && emit && conf >= self.threshold {
+                        if self.probe {
+                            self.probes.push(probe);
+                        }
+                        return Ok((tok, layer, s));
+                    }
+                }
+            }
+            // Stage decode.
+            let in_lit: xla::Literal = if s == 0 {
+                IntTensor::new(vec![width], window.to_vec()).to_literal()?
+            } else {
+                x.as_ref().unwrap().to_literal()?
+            };
+            // Perf pass §L3-2: the KV cache stays an xla::Literal across
+            // steps — no host round-trip of ~0.5-2 MiB per stage per token.
+            let mut args: Vec<&xla::Literal> = self.plits[s].iter().collect();
+            args.push(&in_lit);
+            args.push(&caches[s]);
+            args.push(&pos_lit);
+            let out = self
+                .rt
+                .get(&format!("s{s}:decode_w{width}"))?
+                .run(&args)?;
+            let mut it = out.into_iter();
+            x = Some(HostTensor::from_literal(&it.next().unwrap())?);
+            caches[s] = it.next().unwrap();
+        }
+
+        if !emit {
+            return Ok((-1, 0, p));
+        }
+        let xh = x.unwrap();
+        let last = &xh.data[(width - 1) * h..];
+        let fin = self.state.final_exit();
+        let logits = self.head_logits(p - 1, fin.layer, last)?;
+        let (tok, conf) = confidence_decision(&logits);
+        if self.probe {
+            probe.exits.push((fin.layer, tok, conf));
+            self.probes.push(probe);
+        }
+        Ok((tok, fin.layer, p))
+    }
+
+    /// Generate up to `max_new` tokens after `prompt` (token ids, BOS
+    /// prepended automatically).
+    pub fn generate_tokens(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        let t0 = Instant::now();
+        let man = self.state.man.clone();
+        let p = man.stages.len();
+        let n_layers = man.model.n_layers;
+        let max_seq = man.model.max_seq;
+
+        let mut tokens = Vec::with_capacity(prompt.len() + max_new + 1);
+        tokens.push(BOS_ID);
+        tokens.extend_from_slice(prompt);
+        if tokens.len() + max_new + 1 > max_seq {
+            bail!(
+                "sequence too long: {} + {max_new} exceeds cache capacity {max_seq}",
+                tokens.len()
+            );
+        }
+
+        let mut caches: Vec<xla::Literal> = man
+            .stages
+            .iter()
+            .map(|st| HostTensor::zeros(&st.cache_shape).to_literal())
+            .collect::<Result<_>>()?;
+
+        // Prefill positions [0, L-1): chunk greedily by available width.
+        let l = tokens.len();
+        let mut pos = 0usize;
+        while pos + 1 < l {
+            let remaining = l - 1 - pos;
+            let w = self
+                .widths
+                .iter()
+                .copied()
+                .filter(|&w| w <= remaining)
+                .max()
+                .unwrap_or(1);
+            self.window_pass(&tokens, pos, w, &mut caches, false, false)?;
+            pos += w;
+        }
+
+        // Autoregressive loop with KV recomputation.
+        let mut stats = ExitStats::default();
+        let mut deficit = 0usize; // trailing positions healed < P stages
+        let mut generated = Vec::new();
+        for _ in 0..max_new {
+            let n = tokens.len() - 1; // current position (has a token)
+            if n + 1 >= max_seq {
+                break;
+            }
+            let need = deficit + 1;
+            let width = match pick_width(&self.widths, need, n) {
+                Some(w) => w,
+                None => bail!("no decode width fits need {need} at pos {n}"),
+            };
+            // Exit eligibility: after exiting the deficit becomes `need`,
+            // so the *next* pass needs a window of need+1 — suspend early
+            // exits when that would not fit (forced full-model pass).
+            let eligible = self.threshold < 1.0
+                && pick_width(&self.widths, need + 1, n + 1).is_some();
+            if !eligible && self.threshold < 1.0 {
+                stats.forced_full += 1;
+            }
+            let pos0 = n + 1 - width;
+            let (tok, exit_layer, stages_run) = self.window_pass(
+                &tokens, pos0, width, &mut caches, eligible, true,
+            )?;
+            deficit = if stages_run == p { 0 } else { need };
+            stats.record(exit_layer);
+            let _ = n_layers;
+            tokens.push(tok);
+            generated.push(tok);
+            if is_stop_token(tok) {
+                break;
+            }
+        }
+
+        Ok(GenOutput {
+            text: detokenize(&generated),
+            tokens: generated,
+            seconds: t0.elapsed().as_secs_f64(),
+            stats,
+        })
+    }
+
+    pub fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        let ids = crate::data::tokenizer::ByteTokenizer.encode(prompt);
+        self.generate_tokens(&ids, max_new)
+    }
+}
+
+impl Generator for SequentialEngine {
+    fn generate(&mut self, prompt: &str, max_new: usize) -> (String, f64) {
+        match self.generate_text(prompt, max_new) {
+            Ok(out) => (out.text, out.seconds),
+            Err(e) => {
+                eprintln!("generation error: {e:#}");
+                (String::new(), 0.0)
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # EE-LLM (reproduction)
+//!
+//! Large-scale training and inference of early-exit LLMs with pipeline
+//! parallelism — a full-system reproduction of Chen et al., ICML 2024,
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: pipeline-parallel 1F1B training
+//!   with the paper's auxiliary-loss backpropagation (Eq. 2), two
+//!   KV-cache-compatible early-exit inference engines (KV recomputation and
+//!   pipeline-based), a discrete-event pipeline-schedule simulator, and all
+//!   supporting substrates (tokenizer, data pipeline, eval harness,
+//!   metrics, CLI).
+//! - **L2 (python/compile)** — the early-exit GPT model in JAX, AOT-lowered
+//!   per pipeline stage to HLO text (`make artifacts`).
+//! - **L1 (python/compile/kernels)** — Pallas kernels for the hot spots
+//!   (fused exit-loss, flash attention), lowered inside the L2 functions.
+//!
+//! Python never runs at request time: the runtime loads `artifacts/` and is
+//! otherwise self-contained.
+
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod inference;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod training;
+pub mod util;

@@ -1,0 +1,324 @@
+//! `ee-llm` — launcher for the EE-LLM reproduction.
+//!
+//! Subcommands:
+//!   train      pipeline-parallel 1F1B training with early-exit losses
+//!   generate   early-exit text generation (recompute | pipelined | full)
+//!   eval       run the Figure-8 task suite against a checkpoint
+//!   simulate   pipeline-schedule simulation (Figure 3/7/9, Table 1)
+//!   probe      per-exit confidence table for a prompt (Table 4)
+//!
+//! Run `ee-llm help` for flags.
+
+use anyhow::{bail, Context, Result};
+
+use eellm::config::{InferenceConfig, TrainConfig};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{Corpus, CorpusSpec};
+use eellm::data::tasks;
+use eellm::eval::harness::evaluate_task;
+use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
+use eellm::metrics::CurveWriter;
+use eellm::runtime::artifacts::Manifest;
+use eellm::schedule::costs::{CostModel, PAPER_MODELS};
+use eellm::schedule::plan::{EeOptions, Plan};
+use eellm::schedule::report::render_timeline;
+use eellm::schedule::sim::Simulator;
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+use eellm::util::cli::Args;
+use eellm::util::table::Table;
+
+const USAGE: &str = "\
+ee-llm: large-scale training and inference of early-exit LLMs (reproduction)
+
+USAGE: ee-llm <train|generate|eval|simulate|probe> [--flags]
+
+COMMON FLAGS
+  --config <name>        artifact config (default ee-tiny)
+  --artifacts <dir>      artifacts root (default artifacts)
+  --seed <n>             RNG seed (default 42)
+
+train:     --steps N --microbatches M --lr F --grad-clip F
+           --loss-weight-schedule constant|warmup[:N]|cooldown[:F]
+           --bubble-fill K --bf-ratio F --checkpoint PATH --resume PATH
+           --curve-out PATH --log-every N --eval-every N
+generate:  --prompt STR --engine recompute|pipelined|full --threshold F
+           --max-new-tokens N --checkpoint PATH
+eval:      --threshold F --checkpoint PATH --examples-per-task N
+simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
+           --exits s0,s1,... --no-defer --gpipe --fill K
+probe:     --prompt STR --checkpoint PATH --max-new-tokens N
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..], &["no-defer", "gpipe", "verbose"]);
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "eval" => cmd_eval(&args),
+        "simulate" => cmd_simulate(&args),
+        "probe" => cmd_probe(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_manifest(cfg_name: &str, artifacts: &std::path::Path) -> Result<Manifest> {
+    Manifest::load_config(artifacts, cfg_name).with_context(|| {
+        format!(
+            "loading {cfg_name:?} from {} (run `make artifacts`)",
+            artifacts.display()
+        )
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args);
+    let man = load_manifest(&cfg.config, &cfg.artifacts_dir)?;
+    println!(
+        "[train] {} (~{} params, P={}), {} steps x {} microbatches",
+        man.name,
+        man.approx_param_count,
+        man.model.pipeline_stages,
+        cfg.steps,
+        cfg.microbatches
+    );
+
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: cfg.seed,
+        n_entities: 24,
+        target_bytes: 1 << 21,
+    });
+    let mut ds = Dataset::from_corpus(
+        &corpus,
+        man.model.seq,
+        man.model.microbatch,
+        cfg.seed,
+    );
+    println!("[train] corpus: {} examples of seq {}", ds.n_examples(), ds.seq);
+
+    let mut trainer = PipelineTrainer::new(
+        man,
+        TrainerOptions {
+            seed: cfg.seed,
+            lr: cfg.lr.clone(),
+            grad_clip: cfg.grad_clip,
+            loss_weights: cfg.loss_weights.clone(),
+            total_steps: cfg.steps,
+            bubble_fill: cfg.bubble_fill,
+            bf_ratio: cfg.bf_ratio,
+        },
+    )?;
+    if let Some(resume) = &cfg.resume {
+        trainer.load_checkpoint(resume)?;
+        println!("[train] resumed from {}", resume.display());
+    }
+
+    let names = trainer.exit_names();
+    let mut curve = cfg.curve_out.as_ref().map(|p| {
+        let mut hdr = vec!["step".to_string(), "lr".to_string()];
+        hdr.extend(names.iter().cloned());
+        CurveWriter::new(p, &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    });
+
+    let val = ds.validation_batches(4);
+    for step in 0..cfg.steps {
+        let batches: Vec<TrainBatch> =
+            (0..cfg.microbatches).map(|_| ds.next_microbatch()).collect();
+        let fills: Vec<TrainBatch> =
+            (0..cfg.bubble_fill).map(|_| ds.next_microbatch()).collect();
+        let stats = trainer.train_step(&batches, &fills)?;
+        if let Some(c) = &mut curve {
+            let mut row = vec![stats.step as f64, stats.lr];
+            row.extend(stats.losses.iter());
+            c.push(row);
+        }
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            let ls: Vec<String> = names
+                .iter()
+                .zip(&stats.losses)
+                .map(|(n, l)| format!("{n}={l:.4}"))
+                .collect();
+            println!(
+                "step {:>5} | {} | gnorm {:.3} | lr {:.2e} | {:.2}s",
+                stats.step,
+                ls.join(" "),
+                stats.grad_norm,
+                stats.lr,
+                stats.wall_seconds
+            );
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let v = trainer.validate(&val)?;
+            let ls: Vec<String> = names
+                .iter()
+                .zip(&v)
+                .map(|(n, l)| format!("{n}={l:.4}"))
+                .collect();
+            println!("  [val] {}", ls.join(" "));
+        }
+    }
+    if let Some(c) = &curve {
+        c.flush()?;
+        println!("[train] loss curve written to {:?}", cfg.curve_out);
+    }
+    if let Some(ckpt) = &cfg.checkpoint {
+        trainer.save_checkpoint(ckpt)?;
+        println!("[train] checkpoint saved to {}", ckpt.display());
+    }
+    trainer.shutdown();
+    Ok(())
+}
+
+fn model_state(args: &Args) -> Result<ModelState> {
+    let icfg = InferenceConfig::from_args(args);
+    let man = load_manifest(&icfg.config, &icfg.artifacts_dir)?;
+    match &icfg.checkpoint {
+        Some(p) => ModelState::from_checkpoint(man, p),
+        None => {
+            eprintln!(
+                "[warn] no --checkpoint given; using random weights (seed {})",
+                icfg.seed
+            );
+            Ok(ModelState::init(man, icfg.seed))
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let icfg = InferenceConfig::from_args(args);
+    let prompt = args.get_or("prompt", "the capital of ");
+    let engine = args.get_or("engine", "recompute");
+    let state = model_state(args)?;
+    let n_layers = state.man.model.n_layers;
+    let out = match engine.as_str() {
+        "recompute" | "full" => {
+            let thr = if engine == "full" { 1.0 } else { icfg.threshold };
+            let mut eng = SequentialEngine::new(state, thr)?;
+            eng.generate_text(&prompt, icfg.max_new_tokens)?
+        }
+        "pipelined" => {
+            let mut eng = PipelinedEngine::new(state, icfg.threshold)?;
+            let out = eng.generate_text(&prompt, icfg.max_new_tokens)?;
+            eng.shutdown();
+            out
+        }
+        other => bail!("unknown engine {other:?}"),
+    };
+    println!("prompt:    {prompt:?}");
+    println!("generated: {:?}", out.text);
+    println!(
+        "tokens: {} | {:.3}s | {:.1} tok/s | early-exit fraction {:.1}%",
+        out.tokens.len(),
+        out.seconds,
+        out.tokens.len() as f64 / out.seconds.max(1e-9),
+        100.0 * out.stats.early_fraction(n_layers)
+    );
+    println!("exit histogram: {:?}", out.stats.counts);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let icfg = InferenceConfig::from_args(args);
+    let n_per = args.usize_or("examples-per-task", 20);
+    let state = model_state(args)?;
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: icfg.seed,
+        n_entities: 24,
+        target_bytes: 1 << 21,
+    });
+    let suite = tasks::all_tasks(&corpus, n_per, icfg.seed);
+    let mut eng = SequentialEngine::new(state, icfg.threshold)?;
+    let mut table = Table::new(
+        &format!("Task scores at threshold {}", icfg.threshold),
+        &["task", "metric", "score", "mean latency"],
+    );
+    for task in &suite {
+        let score = evaluate_task(task, &mut eng);
+        table.row(vec![
+            score.task.to_string(),
+            format!("{:?}", score.metric),
+            format!("{:.3}", score.score),
+            format!("{:.1}ms", score.mean_seconds * 1e3),
+        ]);
+    }
+    table.emit("eval");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "7B");
+    let dims = PAPER_MODELS
+        .iter()
+        .find(|d| d.name == model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let pp = args.usize_or("pp", 4);
+    let tp = args.usize_or("tp", 1);
+    let m = args.usize_or("microbatches", 2 * pp);
+    let exits: Vec<usize> = match args.get("exits") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.parse().context("bad --exits"))
+            .collect::<Result<_>>()?,
+        None => vec![0; pp],
+    };
+    if exits.len() != pp {
+        bail!("--exits must list {pp} stage counts");
+    }
+    let cm = CostModel::a100(dims, pp, tp);
+    let opts = EeOptions::with_exits(exits.clone(), !args.flag("no-defer"));
+    let mut plan = if args.flag("gpipe") {
+        Plan::gpipe(pp, m, opts)
+    } else {
+        Plan::one_f_one_b(pp, m, opts)
+    };
+    let fill = args.usize_or("fill", 0);
+    if fill > 0 {
+        plan.add_bubble_fill(fill, fill, 2.0);
+    }
+    let r = Simulator::new(&cm).run(&plan);
+    println!(
+        "{model} pp={pp} tp={tp} M={m} exits={exits:?} defer={} gpipe={}",
+        !args.flag("no-defer"),
+        args.flag("gpipe")
+    );
+    println!("{}", render_timeline(&r, 100));
+    for (s, tl) in r.timelines.iter().enumerate() {
+        println!(
+            "stage {s}: busy {:8.1}ms  peak mem {:7.2} GiB (act {:.2} GiB)",
+            tl.busy * 1e3,
+            r.peak_memory(cm.alpha, s) / (1u64 << 30) as f64,
+            tl.peak_activation_bytes / (1u64 << 30) as f64,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<()> {
+    let icfg = InferenceConfig::from_args(args);
+    let prompt = args.get_or("prompt", "the capital of ");
+    let state = model_state(args)?;
+    let report = eellm::inference::probe::probe_generation(
+        state,
+        &prompt,
+        icfg.max_new_tokens,
+    )?;
+    println!("generated: {:?}", report.generated);
+    println!("{}", report.to_table().to_markdown());
+    println!(
+        "cross-exit agreement on confident (>=0.8) tokens: {:.1}%",
+        100.0 * report.agreement_at(0.8)
+    );
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Metrics: wall-clock timers, streaming statistics, and run reporting.
+
+use std::time::Instant;
+
+/// Streaming summary statistics (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// A scoped timer that records into a `Stats` on drop.
+pub struct ScopedTimer<'a> {
+    start: Instant,
+    sink: &'a mut Stats,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(sink: &'a mut Stats) -> ScopedTimer<'a> {
+        ScopedTimer { start: Instant::now(), sink }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.sink.push(self.start.elapsed().as_secs_f64());
+    }
+}
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure with warmup and return per-iteration seconds — the
+/// measurement core of the offline bench harness.
+pub fn bench_loop(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    stats
+}
+
+/// Simple CSV loss-curve writer (step, series...) used by training.
+pub struct CurveWriter {
+    path: std::path::PathBuf,
+    header: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl CurveWriter {
+    pub fn new(path: &std::path::Path, header: &[&str]) -> CurveWriter {
+        CurveWriter {
+            path: path.to_path_buf(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    pub fn flush(&self) -> std::io::Result<()> {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(
+                &r.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        std::fs::write(&self.path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_match_closed_form() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut n = 0;
+        let stats = bench_loop(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.n, 5);
+    }
+
+    #[test]
+    fn scoped_timer_records() {
+        let mut s = Stats::new();
+        {
+            let _t = ScopedTimer::new(&mut s);
+        }
+        assert_eq!(s.n, 1);
+    }
+}

@@ -1,0 +1,369 @@
+//! Artifact manifest schema (`artifacts/<config>/manifest.json`).
+//!
+//! The manifest is the L2 -> L3 contract: parameter names/shapes/inits per
+//! stage, exit metadata (layer, head kind, default loss weight, tie group),
+//! executable filenames, and KV-cache shapes. It is produced by
+//! `python/compile/aot.py` and parsed here with the in-repo JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Normal { std: f32 },
+    Zeros,
+    Ones,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    pub tie_group: Option<String>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<ParamSpec> {
+        let name = v.field("name")?.as_str().context("param name")?.into();
+        let shape = v.field("shape")?.usize_arr()?;
+        let init = match v.field("init")?.as_str().context("init kind")? {
+            "normal" => Init::Normal {
+                std: v.field("std")?.as_f64().context("std")? as f32,
+            },
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            other => bail!("unknown init {other:?}"),
+        };
+        let tie_group =
+            v.get("tie_group").and_then(|t| t.as_str()).map(String::from);
+        Ok(ParamSpec { name, shape, init, tie_group })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExitMeta {
+    /// Backbone layer the exit is attached after (n_layers = final exit).
+    pub layer: usize,
+    pub head: String,
+    /// Default training loss weight (runtime-overridable).
+    pub weight: f32,
+    pub is_final: bool,
+    /// True iff the exit reads the stage's input hidden state
+    /// (Optimization-2 placement; required by the decode engines).
+    pub entry: bool,
+    /// Indices into the stage param list that feed this exit's head.
+    pub head_param_idx: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageMeta {
+    pub index: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub exits: Vec<ExitMeta>,
+    /// (layers_per_stage, 2, max_seq, n_heads, head_dim)
+    pub cache_shape: Vec<usize>,
+    pub executables: BTreeMap<String, String>,
+}
+
+impl StageMeta {
+    pub fn exec(&self, name: &str) -> Result<&str> {
+        self.executables
+            .get(name)
+            .map(|s| s.as_str())
+            .with_context(|| format!("stage {} lacks executable {name:?}", self.index))
+    }
+
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.numel() * 4).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ReferenceMeta {
+    pub loss_grads: String,
+    pub eval: String,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub seq: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub microbatch: usize,
+    pub pipeline_stages: usize,
+    pub tie_embeddings: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub approx_param_count: usize,
+    pub decode_widths: Vec<usize>,
+    pub prefill_width: usize,
+    pub stages: Vec<StageMeta>,
+    pub reference: Option<ReferenceMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j, dir)
+    }
+
+    /// Load a named config from an artifacts root directory.
+    pub fn load_config(artifacts_root: &Path, name: &str) -> Result<Manifest> {
+        Manifest::load(&artifacts_root.join(name))
+    }
+
+    fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let m = j.field("model")?;
+        let model = ModelMeta {
+            hidden: m.field("hidden")?.as_usize().context("hidden")?,
+            n_layers: m.field("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: m.field("n_heads")?.as_usize().context("n_heads")?,
+            head_dim: m.field("head_dim")?.as_usize().context("head_dim")?,
+            seq: m.field("seq")?.as_usize().context("seq")?,
+            max_seq: m.field("max_seq")?.as_usize().context("max_seq")?,
+            vocab: m.field("vocab")?.as_usize().context("vocab")?,
+            microbatch: m
+                .field("microbatch")?
+                .as_usize()
+                .context("microbatch")?,
+            pipeline_stages: m
+                .field("pipeline_stages")?
+                .as_usize()
+                .context("pipeline_stages")?,
+            tie_embeddings: m
+                .field("tie_embeddings")?
+                .as_bool()
+                .context("tie_embeddings")?,
+        };
+
+        let mut stages = Vec::new();
+        for sj in j.field("stages")?.as_arr().context("stages")? {
+            let params = sj
+                .field("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(ParamSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let exits = sj
+                .field("exits")?
+                .as_arr()
+                .context("exits")?
+                .iter()
+                .map(|e| {
+                    Ok(ExitMeta {
+                        layer: e.field("layer")?.as_usize().context("layer")?,
+                        head: e
+                            .field("head")?
+                            .as_str()
+                            .context("head")?
+                            .into(),
+                        weight: e.field("weight")?.as_f64().context("weight")?
+                            as f32,
+                        is_final: e
+                            .field("final")?
+                            .as_bool()
+                            .context("final")?,
+                        entry: e.field("entry")?.as_bool().context("entry")?,
+                        head_param_idx: e
+                            .field("head_param_idx")?
+                            .usize_arr()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let executables = sj
+                .field("executables")?
+                .as_obj()
+                .context("executables")?
+                .iter()
+                .map(|(k, v)| {
+                    Ok((k.clone(), v.as_str().context("exec path")?.to_string()))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            stages.push(StageMeta {
+                index: sj.field("index")?.as_usize().context("index")?,
+                n_params: sj
+                    .field("n_params")?
+                    .as_usize()
+                    .context("n_params")?,
+                params,
+                exits,
+                cache_shape: sj.field("cache_shape")?.usize_arr()?,
+                executables,
+            });
+        }
+
+        let reference = match j.field("reference")? {
+            Json::Null => None,
+            r => Some(ReferenceMeta {
+                loss_grads: r
+                    .field("loss_grads")?
+                    .as_str()
+                    .context("loss_grads")?
+                    .into(),
+                eval: r.field("eval")?.as_str().context("eval")?.into(),
+                n_params: r
+                    .field("n_params")?
+                    .as_usize()
+                    .context("ref n_params")?,
+            }),
+        };
+
+        let man = Manifest {
+            name: j.field("name")?.as_str().context("name")?.into(),
+            dir: dir.to_path_buf(),
+            model,
+            approx_param_count: j
+                .field("approx_param_count")?
+                .as_usize()
+                .context("approx_param_count")?,
+            decode_widths: j.field("decode_widths")?.usize_arr()?,
+            prefill_width: j
+                .field("prefill_width")?
+                .as_usize()
+                .context("prefill_width")?,
+            stages,
+            reference,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.stages.len() != self.model.pipeline_stages {
+            bail!("manifest stage count mismatch");
+        }
+        for (i, st) in self.stages.iter().enumerate() {
+            if st.index != i {
+                bail!("stage index mismatch at {i}");
+            }
+            if st.params.len() != st.n_params {
+                bail!("stage {i}: n_params mismatch");
+            }
+            for e in &st.exits {
+                for &pi in &e.head_param_idx {
+                    if pi >= st.params.len() {
+                        bail!("stage {i}: head param idx out of range");
+                    }
+                }
+            }
+        }
+        // The final exit must be the last exit of the last stage.
+        let last = self.stages.last().unwrap();
+        match last.exits.last() {
+            Some(e) if e.is_final => {}
+            _ => bail!("last stage lacks final exit"),
+        }
+        if !self.decode_widths.contains(&1) {
+            bail!("width-1 decode missing");
+        }
+        Ok(())
+    }
+
+    pub fn exec_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// All exits in stage-major order, as (stage, layer, default_weight).
+    pub fn exit_order(&self) -> Vec<(usize, usize, f32)> {
+        let mut out = Vec::new();
+        for st in &self.stages {
+            for e in &st.exits {
+                out.push((st.index, e.layer, e.weight));
+            }
+        }
+        out
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.stages
+            .iter()
+            .flat_map(|s| s.params.iter())
+            .map(|p| p.numel())
+            .sum()
+    }
+
+    /// Map tie-group name -> [(stage, param index)] of its members.
+    pub fn tie_groups(&self) -> BTreeMap<String, Vec<(usize, usize)>> {
+        let mut out: BTreeMap<String, Vec<(usize, usize)>> = BTreeMap::new();
+        for st in &self.stages {
+            for (pi, p) in st.params.iter().enumerate() {
+                if let Some(g) = &p.tie_group {
+                    out.entry(g.clone()).or_default().push((st.index, pi));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_ee_tiny_manifest() {
+        let root = artifacts_root();
+        if !root.join("ee-tiny").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let man = Manifest::load_config(&root, "ee-tiny").unwrap();
+        assert_eq!(man.model.pipeline_stages, 2);
+        assert_eq!(man.stages.len(), 2);
+        assert_eq!(man.total_params(), man.approx_param_count);
+        assert!(man.reference.is_some());
+        // ee-tiny: one early exit (layer 2) + final exit (layer 4).
+        assert_eq!(man.exit_order().len(), 2);
+        assert!(man.stages[1].exits.last().unwrap().is_final);
+    }
+
+    #[test]
+    fn tie_groups_cover_tied_config() {
+        let root = artifacts_root();
+        if !root.join("ee-tiny-tied").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let man = Manifest::load_config(&root, "ee-tiny-tied").unwrap();
+        let groups = man.tie_groups();
+        let g = groups.get("unembed").expect("unembed group");
+        // embed.tok + one head per exit (2 early + final) = 4 members.
+        assert_eq!(g.len(), 4);
+        // All members share a shape.
+        let shapes: Vec<_> = g
+            .iter()
+            .map(|&(s, p)| man.stages[s].params[p].shape.clone())
+            .collect();
+        assert!(shapes.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,143 @@
+//! PJRT client wrapper and the per-stage executable registry.
+//!
+//! The `xla` crate's types are `Rc`-based and thus `!Send`: every pipeline
+//! stage worker thread builds its own [`StageRuntime`] (own PJRT CPU
+//! client, own compiled executables) — which also mirrors the paper's
+//! topology of one device per pipeline stage. Only [`HostTensor`]s cross
+//! thread boundaries.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Manifest, StageMeta};
+use super::tensor::HostTensor;
+
+/// A compiled HLO module plus basic invocation metrics.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub calls: RefCell<u64>,
+    pub total_ms: RefCell<f64>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let bufs = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let out = lit.to_tuple().context("decomposing output tuple")?;
+        *self.calls.borrow_mut() += 1;
+        *self.total_ms.borrow_mut() += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(out)
+    }
+
+    /// Execute and convert every output to a host tensor.
+    pub fn run_host<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<HostTensor>> {
+        self.run(args)?
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    }
+}
+
+/// One thread's view of the runtime: a PJRT client plus the compiled
+/// executables of a single pipeline stage (or of the monolithic reference).
+pub struct StageRuntime {
+    pub client: xla::PjRtClient,
+    execs: BTreeMap<String, Executable>,
+}
+
+impl StageRuntime {
+    pub fn cpu() -> Result<StageRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT client")?;
+        Ok(StageRuntime { client, execs: BTreeMap::new() })
+    }
+
+    /// Compile one HLO text file under a logical name.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let _ = t0;
+        self.execs.insert(
+            name.to_string(),
+            Executable {
+                name: name.to_string(),
+                exe,
+                calls: RefCell::new(0),
+                total_ms: RefCell::new(0.0),
+            },
+        );
+        Ok(())
+    }
+
+    /// Compile every executable a training worker for `stage` needs.
+    pub fn load_stage_training(
+        &mut self,
+        man: &Manifest,
+        stage: &StageMeta,
+    ) -> Result<()> {
+        for key in ["fwd", "bwd", "eval", "adam", "sqsum"] {
+            self.load(key, &man.exec_path(stage.exec(key)?))?;
+        }
+        Ok(())
+    }
+
+    /// Compile every executable an inference worker for `stage` needs.
+    pub fn load_stage_inference(
+        &mut self,
+        man: &Manifest,
+        stage: &StageMeta,
+    ) -> Result<()> {
+        for w in &man.decode_widths {
+            let key = format!("decode_w{w}");
+            self.load(&key, &man.exec_path(stage.exec(&key)?))?;
+        }
+        for e in &stage.exits {
+            let key = format!("head{}", e.layer);
+            self.load(&key, &man.exec_path(stage.exec(&key)?))?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.execs
+            .get(name)
+            .with_context(|| format!("executable {name:?} not loaded"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    /// (name, calls, total_ms) for every loaded executable — profile data.
+    pub fn profile(&self) -> Vec<(String, u64, f64)> {
+        self.execs
+            .values()
+            .map(|e| (e.name.clone(), *e.calls.borrow(), *e.total_ms.borrow()))
+            .collect()
+    }
+}

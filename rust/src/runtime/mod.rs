@@ -1,0 +1,22 @@
+//! L3 runtime: loading AOT artifacts and executing them on PJRT.
+//!
+//! - [`tensor`] — host tensors (plain `Vec<f32>` / `Vec<i32>` + shape) and
+//!   conversion to/from `xla::Literal`. These are what flows across the
+//!   pipeline's P2P channels.
+//! - [`artifacts`] — the `manifest.json` schema emitted by
+//!   `python/compile/aot.py`.
+//! - [`client`] — PJRT CPU client wrapper + compiled-executable registry.
+//!   `xla` types are `Rc`-based (!Send), so each pipeline-stage worker
+//!   thread constructs its own [`client::StageRuntime`]; only host tensors
+//!   cross threads.
+//! - [`params`] — deterministic parameter initialisation from manifest
+//!   specs, plus binary checkpoint save/load.
+
+pub mod artifacts;
+pub mod client;
+pub mod params;
+pub mod tensor;
+
+pub use artifacts::{ExitMeta, Manifest, ParamSpec, StageMeta};
+pub use client::{Executable, StageRuntime};
+pub use tensor::{HostTensor, IntTensor};

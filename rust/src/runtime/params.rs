@@ -1,0 +1,246 @@
+//! Parameter initialisation and checkpointing.
+//!
+//! Parameters are initialised in Rust from the manifest's init specs (the
+//! L2 python code never holds weights). Initialisation is deterministic in
+//! (seed, parameter name): each tensor gets an RNG stream forked from a
+//! hash of its fully-qualified name, so the same seed yields identical
+//! weights regardless of stage layout — this is what lets the integration
+//! tests compare pipeline-parallel execution against the monolithic
+//! reference executable parameter-for-parameter. Tied parameters (same
+//! `tie_group`, e.g. the shared unembedding of the paper's Section 2
+//! option) receive identical replicas by construction because they are
+//! seeded by group name.
+//!
+//! Checkpoint format (`.eckpt`): magic, then per tensor
+//! `name_len u32 | name | rank u32 | dims u64... | f32 data`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Init, Manifest, ParamSpec};
+use super::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"EELLMCK1";
+
+fn name_tag(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Initialise one tensor. `scope` disambiguates stages ("s0", "s1", ...).
+/// Tied parameters are seeded by their group name so replicas agree.
+pub fn init_param(seed: u64, scope: &str, spec: &ParamSpec) -> HostTensor {
+    let key = match &spec.tie_group {
+        Some(g) => format!("tie.{g}"),
+        None => format!("{scope}.{}", spec.name),
+    };
+    let n = spec.numel();
+    let data = match spec.init {
+        Init::Zeros => vec![0.0; n],
+        Init::Ones => vec![1.0; n],
+        Init::Normal { std } => {
+            let mut rng = Rng::new(seed).fork(name_tag(&key));
+            rng.normal_vec(n, std)
+        }
+    };
+    HostTensor::new(spec.shape.clone(), data)
+}
+
+/// Initialise all parameters of one stage.
+pub fn init_stage(seed: u64, man: &Manifest, stage: usize) -> Vec<HostTensor> {
+    man.stages[stage]
+        .params
+        .iter()
+        .map(|sp| init_param(seed, &format!("s{stage}"), sp))
+        .collect()
+}
+
+/// Initialise the full (stage-concatenated) parameter list — the ordering
+/// the monolithic reference executable expects.
+pub fn init_full(seed: u64, man: &Manifest) -> Vec<HostTensor> {
+    (0..man.stages.len())
+        .flat_map(|s| init_stage(seed, man, s))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoints
+// ---------------------------------------------------------------------------
+
+pub fn save_checkpoint(
+    path: &Path,
+    named: &[(String, &HostTensor)],
+) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(named.len() as u32).to_le_bytes())?;
+    for (name, t) in named {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<Vec<(String, HostTensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an EE-LLM checkpoint", path.display());
+    }
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let nlen = u32::from_le_bytes(u32b) as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("checkpoint name utf8")?;
+        f.read_exact(&mut u32b)?;
+        let rank = u32::from_le_bytes(u32b) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            f.read_exact(&mut u64b)?;
+            shape.push(u64::from_le_bytes(u64b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        out.push((name, HostTensor::new(shape, data)));
+    }
+    Ok(out)
+}
+
+/// Save per-stage params under `s{stage}.{param_name}` keys.
+pub fn save_stage_params(
+    path: &Path,
+    man: &Manifest,
+    stage_params: &[Vec<HostTensor>],
+) -> Result<()> {
+    let mut named = Vec::new();
+    for (s, params) in stage_params.iter().enumerate() {
+        for (sp, t) in man.stages[s].params.iter().zip(params) {
+            named.push((format!("s{s}.{}", sp.name), t));
+        }
+    }
+    save_checkpoint(path, &named)
+}
+
+/// Load per-stage params saved by [`save_stage_params`].
+pub fn load_stage_params(
+    path: &Path,
+    man: &Manifest,
+) -> Result<Vec<Vec<HostTensor>>> {
+    let flat = load_checkpoint(path)?;
+    let map: std::collections::BTreeMap<String, HostTensor> =
+        flat.into_iter().collect();
+    let mut out = Vec::new();
+    for (s, st) in man.stages.iter().enumerate() {
+        let mut params = Vec::with_capacity(st.params.len());
+        for sp in &st.params {
+            let key = format!("s{s}.{}", sp.name);
+            let t = map
+                .get(&key)
+                .with_context(|| format!("checkpoint missing {key}"))?;
+            if t.shape != sp.shape {
+                bail!("checkpoint {key}: shape {:?} != {:?}", t.shape, sp.shape);
+            }
+            params.push(t.clone());
+        }
+        out.push(params);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Init;
+
+    fn spec(name: &str, shape: &[usize], init: Init) -> ParamSpec {
+        ParamSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            init,
+            tie_group: None,
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_name_dependent() {
+        let a = init_param(1, "s0", &spec("w", &[8, 8], Init::Normal { std: 0.02 }));
+        let b = init_param(1, "s0", &spec("w", &[8, 8], Init::Normal { std: 0.02 }));
+        let c = init_param(1, "s0", &spec("w2", &[8, 8], Init::Normal { std: 0.02 }));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let d = init_param(2, "s0", &spec("w", &[8, 8], Init::Normal { std: 0.02 }));
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn tied_params_get_identical_replicas() {
+        let mut sp1 = spec("exit0.wout", &[16, 4], Init::Normal { std: 0.02 });
+        sp1.tie_group = Some("unembed".into());
+        let mut sp2 = spec("exit4.wout", &[16, 4], Init::Normal { std: 0.02 });
+        sp2.tie_group = Some("unembed".into());
+        let a = init_param(7, "s0", &sp1);
+        let b = init_param(7, "s3", &sp2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("eellm_test_ckpt");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("rt.eckpt");
+        let t1 = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t2 = HostTensor::scalar(7.5);
+        save_checkpoint(&path, &[("a".into(), &t1), ("b.x".into(), &t2)])
+            .unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "a");
+        assert_eq!(back[0].1, t1);
+        assert_eq!(back[1].1, t2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("eellm_test_ckpt");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("bad.eckpt");
+        std::fs::write(&path, b"NOTMAGIC____").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

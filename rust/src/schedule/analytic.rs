@@ -1,0 +1,167 @@
+//! Appendix A.3 closed forms: iteration-time upper bound and per-stage
+//! peak-memory estimate, in the paper's exact notation. Tests pin the
+//! discrete-event simulator to these formulas.
+
+use super::costs::CostModel;
+
+/// Appendix A.3.1: upper bound on time per iteration for a 1F1B schedule
+/// with `exits[i]` early exits on stage i and M microbatches.
+pub fn time_upper_bound(c: &CostModel, exits: &[usize], m: usize) -> f64 {
+    let p = c.stages;
+    assert_eq!(exits.len(), p);
+    // Parts 1 & 3: f_IN + b_IN + (P-1)(f_BB + b_BB) + sum_{i<P-1} N_i (f_EE+b_EE)
+    let mut t = c.f_in + c.b_in + (p as f64 - 1.0) * (c.f_bb + c.b_bb);
+    for (i, &n) in exits.iter().enumerate() {
+        if i < p - 1 {
+            t += n as f64 * (c.f_ee + c.b_ee);
+        }
+    }
+    // Part 2: M * max_i { stage fwd+bwd incl. IN/FE/EE terms }.
+    let mut worst: f64 = 0.0;
+    for (i, &n) in exits.iter().enumerate() {
+        let mut s = c.f_bb + c.b_bb + n as f64 * (c.f_ee + c.b_ee);
+        if i == 0 {
+            s += c.f_in + c.b_in;
+        }
+        if i == p - 1 {
+            s += c.f_fe + c.b_fe;
+        }
+        worst = worst.max(s);
+    }
+    t + m as f64 * worst
+}
+
+/// Appendix A.3.2 (Eq. 4-6): estimated peak memory of stage i (0-based),
+/// with Optimization 1 applied (exit activations counted once).
+pub fn stage_memory(c: &CostModel, exits: &[usize], i: usize) -> f64 {
+    let p = c.stages;
+    let n_i = exits[i] as f64;
+    let first = (i == 0) as u8 as f64;
+    let last = (i == p - 1) as u8 as f64;
+    let params = c.m_bb + first * c.m_in + last * c.m_fe + n_i * c.m_ee;
+    let acts = (p - i) as f64 * c.a_bb
+        + first * p as f64 * c.a_in
+        + last * c.a_fe
+        + n_i * c.a_ee;
+    c.alpha * params + acts
+}
+
+/// Peak over stages.
+pub fn peak_memory(c: &CostModel, exits: &[usize]) -> f64 {
+    (0..c.stages)
+        .map(|i| stage_memory(c, exits, i))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::costs::{CostModel, PAPER_MODELS};
+    use crate::schedule::plan::{EeOptions, Plan};
+    use crate::schedule::sim::Simulator;
+    use crate::util::proptest::check;
+
+    fn sim_time(c: &CostModel, exits: Vec<usize>, m: usize) -> f64 {
+        let plan =
+            Plan::one_f_one_b(c.stages, m, EeOptions::with_exits(exits, true));
+        Simulator::new(c).run(&plan).iteration_time
+    }
+
+    #[test]
+    fn analytic_time_bound_holds_and_is_tight_for_paper_models() {
+        for dims in &PAPER_MODELS {
+            for pp in [2usize, 4, 8] {
+                let c = CostModel::a100(dims, pp, 1);
+                for exits in [vec![0; pp], {
+                    let mut e = vec![0; pp];
+                    if pp > 2 {
+                        e[1] = 1;
+                    }
+                    e
+                }] {
+                    let m = 2 * pp;
+                    let bound = time_upper_bound(&c, &exits, m);
+                    let sim = sim_time(&c, exits.clone(), m);
+                    assert!(
+                        sim <= bound * (1.0 + 1e-9),
+                        "{} pp={pp}: sim {sim} > bound {bound}",
+                        dims.name
+                    );
+                    // For these (last-stage-bottleneck) settings the bound
+                    // is exact.
+                    assert!(
+                        (sim - bound).abs() / bound < 1e-9,
+                        "{} pp={pp}: sim {sim} != bound {bound}",
+                        dims.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_time_bound_property() {
+        // Random cost models + exit layouts: simulator never exceeds the
+        // Appendix A.3 bound.
+        check("sim <= analytic bound", 64, |rng| {
+            let p = 2 + rng.below(5);
+            let m = p + rng.below(8);
+            let mut c = CostModel::a100(&PAPER_MODELS[0], 4, 1);
+            // Perturb costs to break the f_IN < f_FE regularities.
+            c.stages = p;
+            c.f_in = rng.uniform() * 0.01;
+            c.b_in = rng.uniform() * 0.02;
+            c.f_bb = 0.01 + rng.uniform() * 0.05;
+            c.b_bb = 2.0 * c.f_bb;
+            c.f_ee = rng.uniform() * 0.02;
+            c.b_ee = 2.0 * c.f_ee;
+            c.f_fe = rng.uniform() * 0.02;
+            c.b_fe = 2.0 * c.f_fe;
+            let exits: Vec<usize> = (0..p).map(|_| rng.below(3)).collect();
+            let bound = time_upper_bound(&c, &exits, m);
+            let sim = sim_time(&c, exits.clone(), m);
+            if sim > bound * (1.0 + 1e-9) {
+                return Err(format!(
+                    "sim {sim} > bound {bound} (p={p}, m={m}, exits={exits:?})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn analytic_memory_matches_simulator() {
+        let c = CostModel::a100(&PAPER_MODELS[1], 4, 1);
+        for exits in [vec![0, 0, 0, 0], vec![0, 1, 1, 0], vec![1, 2, 0, 1]] {
+            let plan = Plan::one_f_one_b(
+                4,
+                8,
+                EeOptions::with_exits(exits.clone(), true),
+            );
+            let r = Simulator::new(&c).run(&plan);
+            for i in 0..4 {
+                let want = stage_memory(&c, &exits, i);
+                let got = r.peak_memory(c.alpha, i);
+                assert!(
+                    (got - want).abs() / want < 1e-9,
+                    "stage {i} exits {exits:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_condition_of_section_3_2() {
+        // Peak memory is unchanged by a middle exit as long as s*b*V <
+        // activation memory of all backbone layers in one stage (paper's
+        // mild condition) and no exit sits on stage 0.
+        let c = CostModel::a100(&PAPER_MODELS[1], 4, 1);
+        assert!(c.a_ee < c.a_bb, "condition violated for 7B/4pp");
+        let base = peak_memory(&c, &[0, 0, 0, 0]);
+        let mid = peak_memory(&c, &[0, 1, 0, 0]);
+        assert_eq!(base, mid);
+        // An exit on stage 0 *does* move the peak.
+        let first = peak_memory(&c, &[1, 0, 0, 0]);
+        assert!(first > base);
+    }
+}

@@ -1,0 +1,146 @@
+//! Bubble-fill planning and the Proposition C.2 statistics.
+//!
+//! Planning: how many partial microbatches fit in the warm-up (Part 1) and
+//! cool-down (Part 2) bubbles without delaying the iteration, and how deep
+//! each truncated backward reaches — the Appendix C.2 formulas, used both
+//! by the simulator ablation (figc bench) and the real training runtime.
+//!
+//! Statistics: the paper proves the extra truncated-backward gradients
+//! leave the estimator unbiased (after a B/(B+1) rescale) with variance
+//! reduced by var(a)/(N(N+1)) + 2cov(a,b)/(N(N+1)) (Prop. C.2). We expose
+//! the closed form and verify it by Monte-Carlo in the tests.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FillPlan {
+    /// Microbatches inserted into the warm-up bubble (Part 1).
+    pub k1: usize,
+    /// Microbatches inserted into the cool-down bubble (Part 2).
+    pub k2: usize,
+    /// backward/forward time ratio the plan assumed.
+    pub bf_ratio: f64,
+}
+
+impl FillPlan {
+    /// The Appendix C.2 capacity: floor((P-1)*b/(f+b)) per bubble part.
+    pub fn plan(stages: usize, bf_ratio: f64, requested: usize) -> FillPlan {
+        let cap = (((stages.saturating_sub(1)) as f64)
+            / (1.0 / bf_ratio + 1.0))
+            .floor() as usize;
+        FillPlan { k1: requested.min(cap), k2: requested.min(cap), bf_ratio }
+    }
+
+    /// Backward depth (stages) of the j-th (0-based) Part-2 microbatch.
+    pub fn part2_bwd_depth(&self, stages: usize, j: usize) -> usize {
+        let d = stages as f64 - (j as f64 + 1.0) * (1.0 / self.bf_ratio + 1.0);
+        d.floor().max(0.0) as usize
+    }
+
+    /// The gradient rescale restoring unbiasedness when `extra` additional
+    /// microbatches contribute to a parameter group that normally sees
+    /// `base` microbatches: scale = base / (base + extra) applied on top of
+    /// the usual 1/base averaging (Appendix C.2.2).
+    pub fn unbias_scale(base: usize, extra: usize) -> f64 {
+        base as f64 / (base + extra) as f64
+    }
+}
+
+/// Closed-form variance reduction of Proposition C.2:
+/// var(e_hat) - var(e_hat_plus) = var(a)/(N(N+1)) + 2 cov(a,b)/(N(N+1)).
+pub fn prop_c2_variance_reduction(var_a: f64, cov_ab: f64, n: usize) -> f64 {
+    let nn = (n * (n + 1)) as f64;
+    var_a / nn + 2.0 * cov_ab / nn
+}
+
+/// Monte-Carlo estimate of (var(e_hat), var(e_hat_plus)) for correlated
+/// Gaussian (a, b) pairs — used to validate the closed form and to power
+/// the figc bench.
+pub fn monte_carlo_variance_reduction(
+    rng: &mut Rng,
+    n: usize,
+    rho: f64,
+    trials: usize,
+) -> (f64, f64) {
+    let mut e = Vec::with_capacity(trials);
+    let mut ep = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let mut asum = 0.0;
+        let mut bsum = 0.0;
+        for _ in 0..n {
+            let (a, b) = corr_pair(rng, rho);
+            asum += a;
+            bsum += b;
+        }
+        let (a_extra, _) = corr_pair(rng, rho);
+        e.push(asum / n as f64 + bsum / n as f64);
+        ep.push((asum + a_extra) / (n + 1) as f64 + bsum / n as f64);
+    }
+    (variance(&e), variance(&ep))
+}
+
+fn corr_pair(rng: &mut Rng, rho: f64) -> (f64, f64) {
+    let x = rng.normal();
+    let y = rng.normal();
+    (x, rho * x + (1.0 - rho * rho).sqrt() * y)
+}
+
+fn variance(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_respects_capacity() {
+        // P=4, b/f = 2 -> cap = floor(3/1.5) = 2.
+        let p = FillPlan::plan(4, 2.0, 10);
+        assert_eq!((p.k1, p.k2), (2, 2));
+        let p = FillPlan::plan(4, 2.0, 1);
+        assert_eq!((p.k1, p.k2), (1, 1));
+        let p = FillPlan::plan(1, 2.0, 5);
+        assert_eq!((p.k1, p.k2), (0, 0));
+    }
+
+    #[test]
+    fn part2_depths_match_paper_example() {
+        let p = FillPlan::plan(4, 2.0, 2);
+        // floor(4 - 1*1.5) = 2; floor(4 - 2*1.5) = 1.
+        assert_eq!(p.part2_bwd_depth(4, 0), 2);
+        assert_eq!(p.part2_bwd_depth(4, 1), 1);
+    }
+
+    #[test]
+    fn unbias_scale() {
+        assert!((FillPlan::unbias_scale(8, 1) - 8.0 / 9.0).abs() < 1e-12);
+        assert_eq!(FillPlan::unbias_scale(8, 0), 1.0);
+    }
+
+    #[test]
+    fn prop_c2_closed_form_matches_monte_carlo() {
+        let mut rng = Rng::new(11);
+        let n = 8;
+        for rho in [0.0, 0.5, -0.3] {
+            let (v, vp) =
+                monte_carlo_variance_reduction(&mut rng, n, rho, 200_000);
+            let got = v - vp;
+            // var(a)=1, cov(a,b)=rho for standardised pairs.
+            let want = prop_c2_variance_reduction(1.0, rho, n);
+            assert!(
+                (got - want).abs() < 0.02,
+                "rho={rho}: mc {got} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_increases_only_under_strong_negative_correlation() {
+        // The paper's caveat: reduction is negative iff cov < -var(a)/2.
+        assert!(prop_c2_variance_reduction(1.0, -0.6, 4) < 0.0);
+        assert!(prop_c2_variance_reduction(1.0, -0.4, 4) > 0.0);
+    }
+}

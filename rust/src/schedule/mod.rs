@@ -1,0 +1,29 @@
+//! Pipeline-schedule analysis: the quantitative half of the paper's
+//! training-efficiency claims (Section 3.2, Appendix A, Figures 3/7/9,
+//! Table 1), as a discrete-event simulator over explicit per-stage op
+//! lists plus the closed-form formulas of Appendix A.3.
+//!
+//! - [`costs`] — per-op cost model (Table 2 notation: f/b/m/m-dagger for
+//!   IN, BB, EE, FE) derived from GPT dimensions, with the paper's model
+//!   sizes (1.3B/7B/13B/30B) as presets.
+//! - [`plan`] — op-list builders: 1F1B (PipeDream-Flush) and GPipe, with
+//!   the early-exit options under study: exit placement (Optimization 2),
+//!   deferred exit-forward (Optimization 1), bubble filling (Appendix C.2).
+//! - [`sim`] — the discrete-event executor: computes per-stage timelines,
+//!   iteration time, bubble fractions, and peak-memory profiles.
+//! - [`analytic`] — Appendix A.3 closed forms; property tests pin the
+//!   simulator to them.
+//! - [`fill`] — bubble-fill planning (how many extra microbatches fit) and
+//!   the Proposition C.2 variance analysis.
+//! - [`report`] — ASCII timeline rendering (Figure 3-style).
+
+pub mod analytic;
+pub mod costs;
+pub mod fill;
+pub mod plan;
+pub mod report;
+pub mod sim;
+
+pub use costs::{CostModel, GptDims, PAPER_MODELS};
+pub use plan::{EeOptions, Plan, Schedule};
+pub use sim::{SimResult, Simulator};

@@ -1,0 +1,308 @@
+//! Schedule plans: explicit per-stage op lists for 1F1B and GPipe, with the
+//! paper's early-exit options.
+//!
+//! A [`Plan`] is, per stage, an in-order *main* op queue (the classical
+//! schedule) plus an optional *fill* queue (Appendix C.2 partial
+//! microbatches) that the simulator runs opportunistically inside bubbles.
+
+use super::costs::ExitLayout;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    OneFOneB,
+    GPipe,
+}
+
+/// Early-exit scheduling options under study (Table 1 ablation).
+#[derive(Debug, Clone)]
+pub struct EeOptions {
+    pub exits: ExitLayout,
+    /// Optimization 1 (Appendix A.2): run exit-layer forwards inside the
+    /// backward step, so exit logits never persist across in-flight
+    /// microbatches.
+    pub defer_exit_fwd: bool,
+}
+
+impl EeOptions {
+    pub fn none(stages: usize) -> EeOptions {
+        EeOptions { exits: ExitLayout::none(stages), defer_exit_fwd: true }
+    }
+
+    pub fn with_exits(exits_per_stage: Vec<usize>, defer: bool) -> EeOptions {
+        EeOptions {
+            exits: ExitLayout { exits_per_stage },
+            defer_exit_fwd: defer,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Forward of microbatch m.
+    Fwd(usize),
+    /// Backward of microbatch m.
+    Bwd(usize),
+    /// Bubble-fill forward of fill-microbatch j (Appendix C.2).
+    FillFwd(usize),
+    /// Bubble-fill (possibly truncated) backward of fill-microbatch j.
+    FillBwd(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+}
+
+/// A fill microbatch's stage coverage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FillSpec {
+    /// Forward runs on stages [0, fwd_stages).
+    pub fwd_stages: usize,
+    /// Backward runs on stages [fwd_stages - bwd_stages, fwd_stages).
+    pub bwd_stages: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub schedule: Schedule,
+    pub stages: usize,
+    pub microbatches: usize,
+    pub opts: EeOptions,
+    /// Main (classical) op queue per stage, in execution order.
+    pub main: Vec<Vec<Op>>,
+    /// Opportunistic fill queue per stage, in execution order.
+    pub fill: Vec<Vec<Op>>,
+    /// Stage coverage of each fill microbatch.
+    pub fill_specs: Vec<FillSpec>,
+}
+
+impl Plan {
+    /// The classical 1F1B (PipeDream-Flush) plan: stage s performs
+    /// `min(M, P-1-s)` warm-up forwards, a steady 1F1B phase, and a
+    /// cool-down of trailing backwards (paper Figure 3).
+    pub fn one_f_one_b(stages: usize, microbatches: usize, opts: EeOptions) -> Plan {
+        assert!(stages >= 1 && microbatches >= 1);
+        assert!(
+            microbatches >= stages,
+            "1F1B requires M >= P for a steady phase (paper setting)"
+        );
+        let mut main = Vec::with_capacity(stages);
+        for s in 0..stages {
+            let warmup = (stages - 1 - s).min(microbatches);
+            let mut ops = Vec::new();
+            for m in 0..warmup {
+                ops.push(Op { kind: OpKind::Fwd(m) });
+            }
+            let mut next_f = warmup;
+            let mut next_b = 0;
+            while next_b < microbatches {
+                if next_f < microbatches {
+                    ops.push(Op { kind: OpKind::Fwd(next_f) });
+                    next_f += 1;
+                }
+                ops.push(Op { kind: OpKind::Bwd(next_b) });
+                next_b += 1;
+            }
+            main.push(ops);
+        }
+        Plan {
+            schedule: Schedule::OneFOneB,
+            stages,
+            microbatches,
+            opts,
+            main,
+            fill: vec![Vec::new(); stages],
+            fill_specs: Vec::new(),
+        }
+    }
+
+    /// GPipe baseline: all forwards, then all backwards.
+    pub fn gpipe(stages: usize, microbatches: usize, opts: EeOptions) -> Plan {
+        let mut main = Vec::with_capacity(stages);
+        for _ in 0..stages {
+            let mut ops = Vec::new();
+            for m in 0..microbatches {
+                ops.push(Op { kind: OpKind::Fwd(m) });
+            }
+            for m in 0..microbatches {
+                ops.push(Op { kind: OpKind::Bwd(m) });
+            }
+            main.push(ops);
+        }
+        Plan {
+            schedule: Schedule::GPipe,
+            stages,
+            microbatches,
+            opts,
+            main,
+            fill: vec![Vec::new(); stages],
+            fill_specs: Vec::new(),
+        }
+    }
+
+    /// Add Appendix C.2 bubble-fill microbatches.
+    ///
+    /// Part 1 (warm-up bubble): `k1` microbatches; the j-th (0-based) runs
+    /// forward through the first `k1 - j` stages, then backward through
+    /// them (early-exit losses only).
+    /// Part 2 (cool-down bubble): `k2` microbatches; each runs the full
+    /// forward, then a truncated backward over the last
+    /// `floor(P - (j+1)*(fb_ratio+1))` stages.
+    pub fn add_bubble_fill(&mut self, k1: usize, k2: usize, fb_ratio: f64) {
+        let p = self.stages;
+        for j in 0..k1 {
+            let cover = p.min(k1 - j);
+            if cover == 0 {
+                continue;
+            }
+            let id = self.fill_specs.len();
+            self.fill_specs.push(FillSpec { fwd_stages: cover, bwd_stages: cover });
+            for s in 0..cover {
+                self.fill[s].push(Op { kind: OpKind::FillFwd(id) });
+            }
+            for s in (0..cover).rev() {
+                self.fill[s].push(Op { kind: OpKind::FillBwd(id) });
+            }
+        }
+        for j in 0..k2 {
+            let depth_f = p as f64 - (j as f64 + 1.0) * (1.0 / fb_ratio + 1.0);
+            let bwd = depth_f.floor().max(0.0) as usize;
+            let id = self.fill_specs.len();
+            self.fill_specs.push(FillSpec { fwd_stages: p, bwd_stages: bwd });
+            for s in 0..p {
+                self.fill[s].push(Op { kind: OpKind::FillFwd(id) });
+            }
+            for s in (p - bwd..p).rev() {
+                self.fill[s].push(Op { kind: OpKind::FillBwd(id) });
+            }
+        }
+    }
+
+    /// Maximum fill microbatches per bubble part without delaying the
+    /// iteration: floor((P-1) / (f/b + 1)) — Appendix C.2.
+    pub fn max_fill(stages: usize, fb_ratio: f64) -> usize {
+        // fb_ratio = b/f; the paper states (p-1)*b / (f+b) = (p-1)/(f/b+1).
+        (((stages - 1) as f64) / (1.0 / fb_ratio + 1.0)).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count(ops: &[Op], pred: impl Fn(&OpKind) -> bool) -> usize {
+        ops.iter().filter(|o| pred(&o.kind)).count()
+    }
+
+    #[test]
+    fn one_f_one_b_structure() {
+        let p = Plan::one_f_one_b(4, 6, EeOptions::none(4));
+        for s in 0..4 {
+            assert_eq!(count(&p.main[s], |k| matches!(k, OpKind::Fwd(_))), 6);
+            assert_eq!(count(&p.main[s], |k| matches!(k, OpKind::Bwd(_))), 6);
+        }
+        // Stage 0 warm-up is P-1 = 3 forwards.
+        let heads: Vec<_> = p.main[0][..3].iter().map(|o| o.kind).collect();
+        assert_eq!(
+            heads,
+            vec![OpKind::Fwd(0), OpKind::Fwd(1), OpKind::Fwd(2)]
+        );
+        // Last stage alternates F,B from the start.
+        assert_eq!(p.main[3][0].kind, OpKind::Fwd(0));
+        assert_eq!(p.main[3][1].kind, OpKind::Bwd(0));
+    }
+
+    #[test]
+    fn one_f_one_b_in_flight_bound() {
+        // At any prefix of stage s's op list, (#fwd - #bwd) <= P - s:
+        // the 1F1B memory bound (P - i + 1 in-flight, 1-based).
+        let stages = 4;
+        let p = Plan::one_f_one_b(stages, 8, EeOptions::none(stages));
+        for s in 0..stages {
+            let mut inflight: i64 = 0;
+            for op in &p.main[s] {
+                match op.kind {
+                    OpKind::Fwd(_) => inflight += 1,
+                    OpKind::Bwd(_) => inflight -= 1,
+                    _ => {}
+                }
+                assert!(inflight <= (stages - s) as i64, "stage {s}");
+                assert!(inflight >= 0);
+            }
+            assert_eq!(inflight, 0);
+        }
+    }
+
+    #[test]
+    fn bwd_follows_fwd_per_microbatch() {
+        let p = Plan::one_f_one_b(3, 5, EeOptions::none(3));
+        for s in 0..3 {
+            for m in 0..5 {
+                let fi = p.main[s]
+                    .iter()
+                    .position(|o| o.kind == OpKind::Fwd(m))
+                    .unwrap();
+                let bi = p.main[s]
+                    .iter()
+                    .position(|o| o.kind == OpKind::Bwd(m))
+                    .unwrap();
+                assert!(fi < bi);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "M >= P")]
+    fn rejects_too_few_microbatches() {
+        Plan::one_f_one_b(4, 2, EeOptions::none(4));
+    }
+
+    #[test]
+    fn gpipe_runs_all_fwds_first() {
+        let p = Plan::gpipe(2, 3, EeOptions::none(2));
+        let kinds: Vec<_> = p.main[0].iter().map(|o| o.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                OpKind::Fwd(0),
+                OpKind::Fwd(1),
+                OpKind::Fwd(2),
+                OpKind::Bwd(0),
+                OpKind::Bwd(1),
+                OpKind::Bwd(2)
+            ]
+        );
+    }
+
+    #[test]
+    fn fill_part1_covers_decreasing_prefixes() {
+        let mut p = Plan::one_f_one_b(4, 6, EeOptions::none(4));
+        p.add_bubble_fill(2, 0, 2.0);
+        assert_eq!(p.fill_specs.len(), 2);
+        assert_eq!(p.fill_specs[0].fwd_stages, 2);
+        assert_eq!(p.fill_specs[1].fwd_stages, 1);
+        // Stage 0 sees both fills; stage 2 sees none.
+        assert_eq!(p.fill[0].len(), 4); // 2 fwd + 2 bwd
+        assert_eq!(p.fill[2].len(), 0);
+    }
+
+    #[test]
+    fn fill_part2_truncates_backward() {
+        let mut p = Plan::one_f_one_b(4, 6, EeOptions::none(4));
+        p.add_bubble_fill(0, 1, 2.0);
+        let spec = p.fill_specs[0];
+        assert_eq!(spec.fwd_stages, 4);
+        // floor(4 - 1*(0.5+1)) = floor(2.5) = 2 backward stages.
+        assert_eq!(spec.bwd_stages, 2);
+        assert_eq!(p.fill[0].len(), 1); // fwd only
+        assert_eq!(p.fill[3].len(), 2); // fwd + bwd
+    }
+
+    #[test]
+    fn max_fill_matches_paper_formula() {
+        // P=4, f/b = 0.5 -> floor(3 / 1.5) = 2.
+        assert_eq!(Plan::max_fill(4, 2.0), 2);
+        assert_eq!(Plan::max_fill(8, 2.0), 4);
+        assert_eq!(Plan::max_fill(2, 2.0), 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! ASCII rendering of simulated schedules — the Figure 3 visualisation.
+//!
+//! Each stage becomes one row; time is discretised into character cells.
+//! Forward blocks render as the microbatch digit, backward blocks as
+//! letters (A = microbatch 0); fills render as 'f'/'b'.
+
+use super::plan::OpKind;
+use super::sim::SimResult;
+
+/// Render the timeline with roughly `width` character columns.
+pub fn render_timeline(result: &SimResult, width: usize) -> String {
+    let t_end = result.iteration_time.max(1e-12);
+    let scale = width as f64 / t_end;
+    let mut out = String::new();
+    for (s, tl) in result.timelines.iter().enumerate() {
+        let mut row = vec![' '; width + 1];
+        for p in &tl.ops {
+            let a = (p.start * scale).round() as usize;
+            let b = ((p.end * scale).round() as usize).max(a + 1);
+            let ch = match p.op.kind {
+                OpKind::Fwd(m) => (b'0' + (m % 10) as u8) as char,
+                OpKind::Bwd(m) => (b'A' + (m % 26) as u8) as char,
+                OpKind::FillFwd(_) => 'f',
+                OpKind::FillBwd(_) => 'b',
+            };
+            for cell in row.iter_mut().take(b.min(width)).skip(a) {
+                *cell = ch;
+            }
+        }
+        out.push_str(&format!("stage {s} |"));
+        out.push_str(&row.into_iter().collect::<String>());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!(
+        "iteration = {:.3}ms, bubble fraction = {:.1}%\n",
+        result.iteration_time * 1e3,
+        result.bubble_fraction() * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::schedule::costs::{CostModel, PAPER_MODELS};
+    use crate::schedule::plan::{EeOptions, Plan};
+    use crate::schedule::sim::Simulator;
+
+    #[test]
+    fn renders_all_stages() {
+        let c = CostModel::a100(&PAPER_MODELS[0], 4, 1);
+        let plan = Plan::one_f_one_b(4, 6, EeOptions::none(4));
+        let r = Simulator::new(&c).run(&plan);
+        let txt = super::render_timeline(&r, 80);
+        assert_eq!(txt.matches("stage ").count(), 4);
+        assert!(txt.contains("bubble fraction"));
+        // Forward microbatch 0 appears on every stage.
+        for line in txt.lines().take(4) {
+            assert!(line.contains('0'), "{line}");
+        }
+    }
+
+    #[test]
+    fn fills_render_distinctly() {
+        let c = CostModel::a100(&PAPER_MODELS[0], 4, 1);
+        let mut plan = Plan::one_f_one_b(4, 8, EeOptions::none(4));
+        plan.add_bubble_fill(2, 2, 2.0);
+        let r = Simulator::new(&c).run(&plan);
+        let txt = super::render_timeline(&r, 100);
+        assert!(txt.contains('f'), "{txt}");
+    }
+}

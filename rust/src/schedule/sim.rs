@@ -1,0 +1,491 @@
+//! Discrete-event execution of a [`Plan`] under a [`CostModel`].
+//!
+//! Each stage executes its main op queue strictly in order; fill ops run
+//! opportunistically *only when provably harmless*: a fill op starts iff
+//! its dependencies are met and it finishes before the stage's next main
+//! op could start anyway (the Appendix C.2 guarantee of "no time
+//! overhead"). Dependencies are the pipeline's P2P edges:
+//!
+//!   Fwd(m)@s  needs Fwd(m)@s-1;   Bwd(m)@s needs Bwd(m)@s+1
+//!   (last stage's Bwd(m) needs its own Fwd(m))
+//!
+//! The simulator also tracks per-stage activation memory through time
+//! (stash on forward, release on backward, transient exit logits per
+//! Optimization 1) and reports peaks — the Figure 7/9/Table 1 quantities.
+
+use std::collections::BTreeMap;
+
+use super::costs::CostModel;
+use super::plan::{Op, OpKind, Plan};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placed {
+    pub op: Op,
+    pub start: f64,
+    pub end: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageTimeline {
+    pub ops: Vec<Placed>,
+    pub busy: f64,
+    pub peak_activation_bytes: f64,
+    pub param_bytes: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Wall-clock of one training iteration (max op end).
+    pub iteration_time: f64,
+    pub timelines: Vec<StageTimeline>,
+}
+
+impl SimResult {
+    pub fn bubble_fraction(&self) -> f64 {
+        let total_busy: f64 = self.timelines.iter().map(|t| t.busy).sum();
+        let capacity = self.iteration_time * self.timelines.len() as f64;
+        1.0 - total_busy / capacity
+    }
+
+    /// Peak memory of stage s: optimizer-scaled params + activations.
+    pub fn peak_memory(&self, alpha: f64, s: usize) -> f64 {
+        let t = &self.timelines[s];
+        alpha * t.param_bytes + t.peak_activation_bytes
+    }
+
+    pub fn peak_memory_overall(&self, alpha: f64) -> f64 {
+        (0..self.timelines.len())
+            .map(|s| self.peak_memory(alpha, s))
+            .fold(0.0, f64::max)
+    }
+
+    pub fn bottleneck_stage(&self, alpha: f64) -> usize {
+        (0..self.timelines.len())
+            .max_by(|&a, &b| {
+                self.peak_memory(alpha, a)
+                    .partial_cmp(&self.peak_memory(alpha, b))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+}
+
+pub struct Simulator<'a> {
+    pub cost: &'a CostModel,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+enum Key {
+    Fwd(usize, usize),     // (stage, microbatch)
+    Bwd(usize, usize),
+    FillFwd(usize, usize), // (stage, fill id)
+    FillBwd(usize, usize),
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cost: &'a CostModel) -> Simulator<'a> {
+        Simulator { cost }
+    }
+
+    fn duration(&self, plan: &Plan, s: usize, kind: OpKind) -> f64 {
+        let exits = plan.opts.exits.exits_per_stage[s];
+        let (eager, deferred) = if plan.opts.defer_exit_fwd {
+            (0, exits)
+        } else {
+            (exits, 0)
+        };
+        match kind {
+            OpKind::Fwd(_) => self.cost.stage_fwd(s, eager),
+            OpKind::Bwd(_) => self.cost.stage_bwd(s, exits, deferred),
+            // Fill forwards run the backbone (+ eager exits) like a normal
+            // forward but skip the final-exit head unless they reach the
+            // last stage with a backward planned there.
+            OpKind::FillFwd(_) => self.cost.stage_fwd(s, eager),
+            OpKind::FillBwd(_) => self.cost.stage_bwd(s, exits, deferred),
+        }
+    }
+
+    fn deps(plan: &Plan, s: usize, kind: OpKind) -> Vec<Key> {
+        let last = plan.stages - 1;
+        match kind {
+            OpKind::Fwd(m) => {
+                if s == 0 {
+                    vec![]
+                } else {
+                    vec![Key::Fwd(s - 1, m)]
+                }
+            }
+            OpKind::Bwd(m) => {
+                if s == last {
+                    vec![Key::Fwd(s, m)]
+                } else {
+                    vec![Key::Bwd(s + 1, m), Key::Fwd(s, m)]
+                }
+            }
+            OpKind::FillFwd(j) => {
+                if s == 0 {
+                    vec![]
+                } else {
+                    vec![Key::FillFwd(s - 1, j)]
+                }
+            }
+            OpKind::FillBwd(j) => {
+                let spec = plan.fill_specs[j];
+                let turnaround = spec.fwd_stages - 1;
+                if s == turnaround {
+                    vec![Key::FillFwd(s, j)]
+                } else {
+                    vec![Key::FillBwd(s + 1, j), Key::FillFwd(s, j)]
+                }
+            }
+        }
+    }
+
+    fn key(s: usize, kind: OpKind) -> Key {
+        match kind {
+            OpKind::Fwd(m) => Key::Fwd(s, m),
+            OpKind::Bwd(m) => Key::Bwd(s, m),
+            OpKind::FillFwd(j) => Key::FillFwd(s, j),
+            OpKind::FillBwd(j) => Key::FillBwd(s, j),
+        }
+    }
+
+    /// Run the plan; panics on a malformed (deadlocking) plan.
+    pub fn run(&self, plan: &Plan) -> SimResult {
+        // With fill ops present, first simulate the main schedule alone to
+        // obtain the iteration deadline fills must respect (Appendix C.2's
+        // "no overhead" contract).
+        let deadline = if plan.fill_specs.is_empty() {
+            f64::INFINITY
+        } else {
+            let mut bare = plan.clone();
+            bare.fill = vec![Vec::new(); plan.stages];
+            bare.fill_specs.clear();
+            self.run(&bare).iteration_time
+        };
+        self.run_with_deadline(plan, deadline)
+    }
+
+    fn run_with_deadline(&self, plan: &Plan, deadline: f64) -> SimResult {
+        let p = plan.stages;
+        let mut done: BTreeMap<Key, f64> = BTreeMap::new();
+        let mut main_idx = vec![0usize; p];
+        let mut fill_idx = vec![0usize; p];
+        let mut free_at = vec![0f64; p];
+        let mut placed: Vec<Vec<Placed>> = vec![Vec::new(); p];
+
+        let ready = |done: &BTreeMap<Key, f64>, plan: &Plan, s: usize, kind: OpKind| -> Option<f64> {
+            let mut t: f64 = 0.0;
+            for d in Self::deps(plan, s, kind) {
+                // Same-stage dependencies carry no P2P latency.
+                let same_stage = matches!(
+                    (d, kind),
+                    (Key::Fwd(ds, _), OpKind::Bwd(_)) if ds == s
+                ) || matches!(
+                    (d, kind),
+                    (Key::FillFwd(ds, _), OpKind::FillBwd(_)) if ds == s
+                );
+                let lat = if same_stage { 0.0 } else { self.cost.p2p };
+                match done.get(&d) {
+                    Some(&e) => t = t.max(e + lat),
+                    None => return None,
+                }
+            }
+            Some(t)
+        };
+
+        loop {
+            let mut progressed = false;
+            let mut all_done = true;
+            for s in 0..p {
+                let main_op = plan.main[s].get(main_idx[s]).copied();
+                let fill_op = plan.fill[s].get(fill_idx[s]).copied();
+                if main_op.is_some() || fill_op.is_some() {
+                    all_done = false;
+                }
+
+                // Candidate start of the next main op (None if deps unknown).
+                let main_ready =
+                    main_op.and_then(|op| ready(&done, plan, s, op.kind));
+
+                // Try a harmless fill first.
+                if let (Some(fop), Some(fready)) = (
+                    fill_op,
+                    fill_op.and_then(|op| ready(&done, plan, s, op.kind)),
+                ) {
+                    let fstart = free_at[s].max(fready);
+                    let fend = fstart + self.duration(plan, s, fop.kind);
+                    let harmless = fend <= deadline * (1.0 + 1e-12)
+                        && match (main_op, main_ready) {
+                            (None, _) => true,
+                            (Some(_), Some(mr)) => fend <= free_at[s].max(mr),
+                            (Some(_), None) => false,
+                        };
+                    if harmless {
+                        done.insert(Self::key(s, fop.kind), fend);
+                        placed[s].push(Placed { op: fop, start: fstart, end: fend });
+                        free_at[s] = fend;
+                        fill_idx[s] += 1;
+                        progressed = true;
+                        continue;
+                    }
+                }
+
+                if let (Some(mop), Some(mready)) = (main_op, main_ready) {
+                    let start = free_at[s].max(mready);
+                    let end = start + self.duration(plan, s, mop.kind);
+                    done.insert(Self::key(s, mop.kind), end);
+                    placed[s].push(Placed { op: mop, start, end });
+                    free_at[s] = end;
+                    main_idx[s] += 1;
+                    progressed = true;
+                }
+            }
+            if all_done {
+                break;
+            }
+            if !progressed {
+                // Remaining fill ops that can never run harmlessly are
+                // dropped (the planner over-provisioned) unless main ops
+                // remain, which would be a real deadlock.
+                let mains_left: usize =
+                    (0..p).map(|s| plan.main[s].len() - main_idx[s]).sum();
+                if mains_left > 0 {
+                    panic!("schedule deadlock: {mains_left} main ops stuck");
+                }
+                break;
+            }
+        }
+
+        // Memory replay: walk each stage's placed ops in time order.
+        let mut timelines = Vec::with_capacity(p);
+        for s in 0..p {
+            let exits = plan.opts.exits.exits_per_stage[s];
+            let c = self.cost;
+            let mut cur = 0.0f64;
+            let mut peak = 0.0f64;
+            let mut busy = 0.0;
+            for pl in &placed[s] {
+                busy += pl.end - pl.start;
+                match pl.op.kind {
+                    OpKind::Fwd(_) | OpKind::FillFwd(_) => {
+                        cur += c.a_bb;
+                        if s == 0 {
+                            cur += c.a_in;
+                        }
+                        if s == p - 1 {
+                            cur += c.a_fe;
+                        }
+                        if !plan.opts.defer_exit_fwd {
+                            // Eager exit logits persist until backward.
+                            cur += exits as f64 * c.a_ee;
+                        }
+                        peak = peak.max(cur);
+                    }
+                    OpKind::Bwd(_) | OpKind::FillBwd(_) => {
+                        if plan.opts.defer_exit_fwd {
+                            // Transient logits live only inside the
+                            // backward step (Optimization 1).
+                            peak = peak.max(cur + exits as f64 * c.a_ee);
+                        }
+                        cur -= c.a_bb;
+                        if s == 0 {
+                            cur -= c.a_in;
+                        }
+                        if s == p - 1 {
+                            cur -= c.a_fe;
+                        }
+                        if !plan.opts.defer_exit_fwd {
+                            cur -= exits as f64 * c.a_ee;
+                        }
+                        cur = cur.max(0.0);
+                    }
+                }
+            }
+            timelines.push(StageTimeline {
+                ops: placed[s].clone(),
+                busy,
+                peak_activation_bytes: peak,
+                param_bytes: c.stage_param_bytes(s, exits),
+            });
+        }
+
+        let iteration_time = timelines
+            .iter()
+            .flat_map(|t| t.ops.iter())
+            // Fill ops by construction never extend the iteration; still
+            // include them (they are <= the last main op's end).
+            .map(|o| o.end)
+            .fold(0.0, f64::max);
+
+        SimResult { iteration_time, timelines }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::costs::{CostModel, PAPER_MODELS};
+    use crate::schedule::plan::{EeOptions, Plan};
+
+    fn cm(pp: usize) -> CostModel {
+        CostModel::a100(&PAPER_MODELS[1], pp, 1)
+    }
+
+    #[test]
+    fn simple_1f1b_matches_closed_form_without_heads() {
+        // With uniform per-stage cost f, b and no IN/FE/EE terms, the 1F1B
+        // iteration time is (P-1+M)*(f+b).
+        let mut c = cm(4);
+        c.f_in = 0.0;
+        c.b_in = 0.0;
+        c.f_fe = 0.0;
+        c.b_fe = 0.0;
+        let plan = Plan::one_f_one_b(4, 6, EeOptions::none(4));
+        let r = Simulator::new(&c).run(&plan);
+        let want = (4.0 - 1.0 + 6.0) * (c.f_bb + c.b_bb);
+        assert!(
+            (r.iteration_time - want).abs() / want < 1e-9,
+            "{} vs {want}",
+            r.iteration_time
+        );
+    }
+
+    #[test]
+    fn gpipe_is_slower_or_equal_to_1f1b_in_time_and_memory() {
+        let c = cm(4);
+        let p1 = Plan::one_f_one_b(4, 8, EeOptions::none(4));
+        let pg = Plan::gpipe(4, 8, EeOptions::none(4));
+        let s = Simulator::new(&c);
+        let r1 = s.run(&p1);
+        let rg = s.run(&pg);
+        // Same compute: iteration times equal under no contention...
+        assert!(rg.iteration_time >= r1.iteration_time - 1e-9);
+        // ...but GPipe stashes all M microbatches -> strictly more memory.
+        assert!(
+            rg.timelines[0].peak_activation_bytes
+                > r1.timelines[0].peak_activation_bytes * 1.5
+        );
+    }
+
+    #[test]
+    fn middle_exits_cost_exactly_k_times_fee_plus_bee() {
+        // The Section 3.2 claim: k middle-stage exits increase iteration
+        // time by exactly k*(f_EE + b_EE) when implicit bubbles absorb the
+        // steady-phase work.
+        let c = cm(4);
+        let s = Simulator::new(&c);
+        let base = s
+            .run(&Plan::one_f_one_b(4, 8, EeOptions::none(4)))
+            .iteration_time;
+        for k in 1..=2usize {
+            let mut exits = vec![0; 4];
+            for i in 0..k {
+                exits[1 + i] = 1; // middle stages
+            }
+            let t = s
+                .run(&Plan::one_f_one_b(4, 8, EeOptions::with_exits(exits, true)))
+                .iteration_time;
+            let want = base + k as f64 * (c.f_ee + c.b_ee);
+            assert!(
+                (t - want).abs() / want < 1e-9,
+                "k={k}: {t} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn first_stage_is_memory_bottleneck() {
+        let c = cm(4);
+        let plan = Plan::one_f_one_b(4, 8, EeOptions::none(4));
+        let r = Simulator::new(&c).run(&plan);
+        assert_eq!(r.bottleneck_stage(c.alpha), 0);
+    }
+
+    #[test]
+    fn deferral_shrinks_exit_logit_memory() {
+        let c = cm(4);
+        let s = Simulator::new(&c);
+        let eager = s.run(&Plan::one_f_one_b(
+            4,
+            8,
+            EeOptions::with_exits(vec![0, 1, 0, 0], false),
+        ));
+        let deferred = s.run(&Plan::one_f_one_b(
+            4,
+            8,
+            EeOptions::with_exits(vec![0, 1, 0, 0], true),
+        ));
+        // Stage 1 holds P-1 = 3 in-flight microbatches: eager stashes
+        // 3 copies of the exit logits, deferral keeps only 1 (transient).
+        let diff = eager.timelines[1].peak_activation_bytes
+            - deferred.timelines[1].peak_activation_bytes;
+        assert!(
+            (diff - 2.0 * c.a_ee).abs() / c.a_ee < 1e-9,
+            "diff {diff}, a_ee {}",
+            c.a_ee
+        );
+    }
+
+    #[test]
+    fn deferred_middle_exit_keeps_peak_memory_unchanged() {
+        // The headline memory claim (Section 3.2): with deferral and a
+        // middle-stage exit, the *overall* peak (stage 0) is unchanged.
+        let c = cm(4);
+        let s = Simulator::new(&c);
+        let base = s.run(&Plan::one_f_one_b(4, 8, EeOptions::none(4)));
+        let ee = s.run(&Plan::one_f_one_b(
+            4,
+            8,
+            EeOptions::with_exits(vec![0, 1, 1, 0], true),
+        ));
+        assert_eq!(base.bottleneck_stage(c.alpha), 0);
+        assert_eq!(ee.bottleneck_stage(c.alpha), 0);
+        assert!(
+            (base.peak_memory_overall(c.alpha)
+                - ee.peak_memory_overall(c.alpha))
+            .abs()
+                < 1.0
+        );
+    }
+
+    #[test]
+    fn bubble_fill_adds_no_iteration_time() {
+        let c = cm(4);
+        let s = Simulator::new(&c);
+        let base = s
+            .run(&Plan::one_f_one_b(4, 8, EeOptions::none(4)))
+            .iteration_time;
+        let mut plan = Plan::one_f_one_b(4, 8, EeOptions::none(4));
+        let k = Plan::max_fill(4, 2.0);
+        plan.add_bubble_fill(k, k, 2.0);
+        let r = s.run(&plan);
+        assert!(
+            r.iteration_time <= base + 1e-9,
+            "{} vs {base}",
+            r.iteration_time
+        );
+        // And fill ops actually ran somewhere.
+        let fills: usize = r
+            .timelines
+            .iter()
+            .flat_map(|t| t.ops.iter())
+            .filter(|p| {
+                matches!(
+                    p.op.kind,
+                    super::OpKind::FillFwd(_) | super::OpKind::FillBwd(_)
+                )
+            })
+            .count();
+        assert!(fills > 0, "no fill ops were scheduled");
+    }
+
+    #[test]
+    fn bubble_fraction_decreases_with_more_microbatches() {
+        let c = cm(4);
+        let s = Simulator::new(&c);
+        let r8 = s.run(&Plan::one_f_one_b(4, 8, EeOptions::none(4)));
+        let r32 = s.run(&Plan::one_f_one_b(4, 32, EeOptions::none(4)));
+        assert!(r32.bubble_fraction() < r8.bubble_fraction());
+    }
+}

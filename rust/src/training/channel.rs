@@ -1,0 +1,134 @@
+//! Tagged P2P channels between pipeline stages.
+//!
+//! Stages execute their op lists in their own order (bubble filling makes
+//! the order stage-dependent), so the receiver buffers out-of-order
+//! messages and callers ask for a specific tag — messages never block each
+//! other.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use crate::runtime::tensor::HostTensor;
+
+/// Message tags on the forward/backward P2P wires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tag {
+    /// Forward activation of main microbatch m.
+    Fwd(usize),
+    /// Backward gradient of main microbatch m.
+    Bwd(usize),
+    /// Forward activation of fill microbatch j.
+    FillFwd(usize),
+    /// Backward gradient of fill microbatch j.
+    FillBwd(usize),
+}
+
+#[derive(Clone)]
+pub struct TaggedSender {
+    tx: Sender<(Tag, HostTensor)>,
+}
+
+impl TaggedSender {
+    pub fn send(&self, tag: Tag, t: HostTensor) {
+        // A send failure means the peer worker panicked; propagate.
+        self.tx.send((tag, t)).expect("peer stage worker is gone");
+    }
+}
+
+pub struct TaggedReceiver {
+    rx: Receiver<(Tag, HostTensor)>,
+    pending: HashMap<Tag, HostTensor>,
+}
+
+impl TaggedReceiver {
+    /// Blocking receive of a specific tag.
+    pub fn recv(&mut self, tag: Tag) -> HostTensor {
+        if let Some(t) = self.pending.remove(&tag) {
+            return t;
+        }
+        loop {
+            let (got, t) =
+                self.rx.recv().expect("peer stage worker is gone");
+            if got == tag {
+                return t;
+            }
+            self.pending.insert(got, t);
+        }
+    }
+
+    /// Non-blocking probe: true iff `tag` is available right now.
+    pub fn ready(&mut self, tag: Tag) -> bool {
+        self.drain();
+        self.pending.contains_key(&tag)
+    }
+
+    /// Pull everything currently queued into the pending buffer.
+    pub fn drain(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok((tag, t)) => {
+                    self.pending.insert(tag, t);
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Block until *some* message arrives (used while waiting with fill
+    /// work unavailable), buffering it.
+    pub fn recv_any(&mut self) {
+        if let Ok((tag, t)) = self.rx.recv() {
+            self.pending.insert(tag, t);
+        }
+    }
+}
+
+pub fn tagged_channel() -> (TaggedSender, TaggedReceiver) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    (TaggedSender { tx }, TaggedReceiver { rx, pending: HashMap::new() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> HostTensor {
+        HostTensor::scalar(v)
+    }
+
+    #[test]
+    fn out_of_order_delivery() {
+        let (tx, mut rx) = tagged_channel();
+        tx.send(Tag::Fwd(1), t(1.0));
+        tx.send(Tag::Fwd(0), t(0.0));
+        tx.send(Tag::Bwd(0), t(9.0));
+        assert_eq!(rx.recv(Tag::Fwd(0)).data[0], 0.0);
+        assert_eq!(rx.recv(Tag::Bwd(0)).data[0], 9.0);
+        assert_eq!(rx.recv(Tag::Fwd(1)).data[0], 1.0);
+    }
+
+    #[test]
+    fn ready_probe() {
+        let (tx, mut rx) = tagged_channel();
+        assert!(!rx.ready(Tag::FillFwd(0)));
+        tx.send(Tag::FillFwd(0), t(2.0));
+        assert!(rx.ready(Tag::FillFwd(0)));
+        assert_eq!(rx.recv(Tag::FillFwd(0)).data[0], 2.0);
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (tx, mut rx) = tagged_channel();
+        let h = std::thread::spawn(move || {
+            for i in (0..10).rev() {
+                tx.send(Tag::Fwd(i), t(i as f32));
+            }
+        });
+        for i in 0..10 {
+            assert_eq!(rx.recv(Tag::Fwd(i)).data[0], i as f32);
+        }
+        h.join().unwrap();
+    }
+}

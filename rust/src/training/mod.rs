@@ -1,0 +1,30 @@
+//! Pipeline-parallel training runtime — the paper's core contribution (C1)
+//! as a real multi-threaded system.
+//!
+//! Topology: one OS thread per pipeline stage (its own PJRT client and
+//! compiled executables — the `xla` types are thread-local by design), with
+//! point-to-point channels carrying hidden states forward and gradient
+//! tensors backward, exactly the communication pattern of Megatron pipeline
+//! parallelism. The leader thread only dispatches iterations and performs
+//! the scalar reductions (global grad-norm clip, tied-embedding gradient
+//! all-reduce, loss aggregation).
+//!
+//! Each stage executes the classical 1F1B op order; the backward executable
+//! is the AOT-lowered auxiliary-loss function of Eq. (2):
+//!
+//! ```text
+//! (losses, g_in, grads) = d/d(theta_i, x_i-1) [ sum_e w_e CE_e + <g_out, x_out> ]
+//! ```
+//!
+//! so the wire protocol is identical to standard pipeline training — only
+//! the local backward objective differs, which is precisely the paper's
+//! claim. Bubble filling (Appendix C.2) runs partial microbatches
+//! opportunistically while a worker would otherwise block on its P2P
+//! receive.
+
+pub mod channel;
+pub mod reference;
+pub mod trainer;
+pub mod worker;
+
+pub use trainer::{PipelineTrainer, StepStats, TrainerOptions};

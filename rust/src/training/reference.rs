@@ -1,0 +1,98 @@
+//! The monolithic (single-executable) reference model: loss + gradients of
+//! the whole early-exit LLM in one AOT module.
+//!
+//! This is the ground truth the integration tests compare the
+//! pipeline-parallel trainer against (Proposition 3.1: they must agree
+//! exactly), and the workhorse for small-scale experiments that don't need
+//! the multi-thread pipeline.
+
+use anyhow::{Context, Result};
+
+use crate::data::dataset::TrainBatch;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::StageRuntime;
+use crate::runtime::params;
+use crate::runtime::tensor::HostTensor;
+
+pub struct ReferenceModel {
+    pub man: Manifest,
+    rt: StageRuntime,
+    pub params: Vec<HostTensor>,
+}
+
+impl ReferenceModel {
+    pub fn new(man: Manifest, seed: u64) -> Result<ReferenceModel> {
+        let reference = man
+            .reference
+            .clone()
+            .context("manifest has no reference executables (emit_reference=False)")?;
+        let mut rt = StageRuntime::cpu()?;
+        rt.load("loss_grads", &man.exec_path(&reference.loss_grads))?;
+        rt.load("eval", &man.exec_path(&reference.eval))?;
+        let params = params::init_full(seed, &man);
+        Ok(ReferenceModel { man, rt, params })
+    }
+
+    fn arg_literals(
+        &self,
+        batch: &TrainBatch,
+        weights: &[f32],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(self.params.len() + 3);
+        for p in &self.params {
+            lits.push(p.to_literal()?);
+        }
+        lits.push(batch.tokens.to_literal()?);
+        lits.push(batch.targets.to_literal()?);
+        lits.push(
+            HostTensor::new(vec![weights.len()], weights.to_vec())
+                .to_literal()?,
+        );
+        Ok(lits)
+    }
+
+    /// (per-exit losses, gradients in full param order).
+    pub fn loss_grads(
+        &self,
+        batch: &TrainBatch,
+        weights: &[f32],
+    ) -> Result<(Vec<f64>, Vec<HostTensor>)> {
+        let lits = self.arg_literals(batch, weights)?;
+        let out = self.rt.get("loss_grads")?.run(
+            &lits.iter().collect::<Vec<_>>(),
+        )?;
+        let losses = HostTensor::from_literal(&out[0])?
+            .data
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        let grads = out[1..]
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((losses, grads))
+    }
+
+    /// (weighted total loss, per-exit losses).
+    pub fn eval(
+        &self,
+        batch: &TrainBatch,
+        weights: &[f32],
+    ) -> Result<(f64, Vec<f64>)> {
+        let lits = self.arg_literals(batch, weights)?;
+        let out =
+            self.rt.get("eval")?.run(&lits.iter().collect::<Vec<_>>())?;
+        let total = HostTensor::from_literal(&out[0])?.data[0] as f64;
+        let losses = HostTensor::from_literal(&out[1])?
+            .data
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        Ok((total, losses))
+    }
+
+    /// Default exit weights from the manifest (stage-major).
+    pub fn default_weights(&self) -> Vec<f32> {
+        self.man.exit_order().iter().map(|&(_, _, w)| w).collect()
+    }
+}

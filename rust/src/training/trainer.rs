@@ -1,0 +1,395 @@
+//! The pipeline-training leader: spawns stage workers, dispatches
+//! iterations, and performs the cross-stage scalar reductions (global
+//! gradient-norm clipping, tied-embedding gradient all-reduce, loss
+//! aggregation) plus checkpointing and loss-weight/LR schedules.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{LossWeightSchedule, LrSchedule};
+use crate::data::dataset::TrainBatch;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::params as ckpt;
+use crate::runtime::tensor::HostTensor;
+use crate::schedule::fill::FillPlan;
+
+use super::channel::tagged_channel;
+use super::worker::{
+    Cmd, FillSpec, IterationCmd, MicrobatchData, Reply, Worker, WorkerConfig,
+};
+
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    pub seed: u64,
+    pub lr: LrSchedule,
+    pub grad_clip: f64,
+    pub loss_weights: LossWeightSchedule,
+    pub total_steps: usize,
+    /// Requested bubble-fill microbatches per iteration (Appendix C.2
+    /// Part 2; capped by the schedule capacity).
+    pub bubble_fill: usize,
+    pub bf_ratio: f64,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-4, 10, 100),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: 100,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    /// Mean loss per exit, stage-major order (final exit last).
+    pub losses: Vec<f64>,
+    pub grad_norm: f64,
+    pub lr: f64,
+    pub wall_seconds: f64,
+    /// Fill microbatches that contributed gradients this step.
+    pub fill_contributions: usize,
+}
+
+struct WorkerHandle {
+    cmds: Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+pub struct PipelineTrainer {
+    pub man: Manifest,
+    opts: TrainerOptions,
+    workers: Vec<WorkerHandle>,
+    replies: Receiver<Reply>,
+    /// Default exit weights (stage-major) and finality flags.
+    weight_defaults: Vec<f32>,
+    weight_final: Vec<bool>,
+    exits_per_stage: Vec<usize>,
+    step: usize,
+}
+
+impl PipelineTrainer {
+    pub fn new(man: Manifest, opts: TrainerOptions) -> Result<PipelineTrainer> {
+        let p = man.model.pipeline_stages;
+        let (reply_tx, replies) = channel::<Reply>();
+
+        // P2P wiring: worker s's inbox receives from s-1 (forward tags)
+        // and s+1 (backward tags); TaggedSender is Clone so both
+        // neighbours hold a handle to the same inbox.
+        let mut txs = Vec::with_capacity(p);
+        let mut rxs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = tagged_channel();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+
+        let mut workers = Vec::with_capacity(p);
+        for (s, rx) in rxs.iter_mut().enumerate() {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let to_prev = (s > 0).then(|| txs[s - 1].clone());
+            let to_next = (s + 1 < p).then(|| txs[s + 1].clone());
+            let join = Worker::spawn(
+                man.clone(),
+                WorkerConfig { stage: s, stages: p, seed: opts.seed },
+                rx.take().unwrap(),
+                to_prev,
+                to_next,
+                cmd_rx,
+                reply_tx.clone(),
+            );
+            workers.push(WorkerHandle { cmds: cmd_tx, join: Some(join) });
+        }
+        drop(txs);
+
+        let mut weight_defaults = Vec::new();
+        let mut weight_final = Vec::new();
+        let mut exits_per_stage = Vec::new();
+        for st in &man.stages {
+            exits_per_stage.push(st.exits.len());
+            for e in &st.exits {
+                weight_defaults.push(e.weight);
+                weight_final.push(e.is_final);
+            }
+        }
+
+        Ok(PipelineTrainer {
+            man,
+            opts,
+            workers,
+            replies,
+            weight_defaults,
+            weight_final,
+            exits_per_stage,
+            step: 0,
+        })
+    }
+
+    pub fn exit_names(&self) -> Vec<String> {
+        self.man
+            .exit_order()
+            .iter()
+            .map(|(s, l, _)| format!("exit{l}@s{s}"))
+            .collect()
+    }
+
+    /// Current schedule-adjusted loss weights (all exits, stage-major).
+    pub fn current_weights(&self) -> Vec<f32> {
+        self.opts.loss_weights.weights_at(
+            self.step,
+            self.opts.total_steps,
+            &self.weight_defaults,
+            &self.weight_final,
+        )
+    }
+
+    /// One training step over `microbatches` (+ optional bubble fills).
+    pub fn train_step(
+        &mut self,
+        microbatches: &[TrainBatch],
+        fill_batches: &[TrainBatch],
+    ) -> Result<StepStats> {
+        let t0 = Instant::now();
+        let p = self.man.model.pipeline_stages;
+        let m = microbatches.len();
+        let weights = self.current_weights();
+        let lr = self.opts.lr.at(self.step) as f32;
+        self.step += 1;
+
+        // Fill plan (Part 2 of Appendix C.2): full forward + truncated
+        // backward over the last `depth_j` stages.
+        let plan = FillPlan::plan(p, self.opts.bf_ratio, self.opts.bubble_fill);
+        let fills: Vec<(FillSpec, MicrobatchData)> = fill_batches
+            .iter()
+            .take(plan.k2)
+            .enumerate()
+            .map(|(j, b)| {
+                (
+                    FillSpec {
+                        fwd_stages: p,
+                        bwd_stages: plan.part2_bwd_depth(p, j).max(1),
+                    },
+                    MicrobatchData {
+                        tokens: b.tokens.clone(),
+                        targets: b.targets.clone(),
+                    },
+                )
+            })
+            .collect();
+
+        // Dispatch the iteration to every worker.
+        let mut woff = 0usize;
+        for (s, w) in self.workers.iter().enumerate() {
+            let n_e = self.exits_per_stage[s];
+            let cmd = IterationCmd {
+                step: self.step,
+                lr,
+                weights: weights[woff..woff + n_e].to_vec(),
+                microbatches: microbatches
+                    .iter()
+                    .map(|b| MicrobatchData {
+                        tokens: b.tokens.clone(),
+                        targets: b.targets.clone(),
+                    })
+                    .collect(),
+                fills: fills.clone(),
+            };
+            woff += n_e;
+            w.cmds.send(Cmd::Iteration(cmd)).context("worker send")?;
+        }
+
+        // Collect IterDone from all stages.
+        let mut loss_sums = vec![0f64; self.weight_defaults.len()];
+        let mut sq_sum = 0f64;
+        let mut tied: std::collections::BTreeMap<String, HostTensor> =
+            Default::default();
+        let mut contributions = vec![0usize; p];
+        for _ in 0..p {
+            match self.replies.recv().context("worker reply")? {
+                Reply::IterDone {
+                    stage,
+                    loss_sums: ls,
+                    grad_sqsum,
+                    tied_grads,
+                    contributions: c,
+                } => {
+                    let off: usize =
+                        self.exits_per_stage[..stage].iter().sum();
+                    for (i, l) in ls.iter().enumerate() {
+                        loss_sums[off + i] += l;
+                    }
+                    sq_sum += grad_sqsum;
+                    contributions[stage] = c;
+                    for (g, t) in tied_grads {
+                        tied.entry(g)
+                            .and_modify(|acc| acc.axpy(1.0, &t))
+                            .or_insert(t);
+                    }
+                }
+                other => anyhow::bail!("unexpected reply {other:?}"),
+            }
+        }
+
+        // Gradients are sums over contributions; normalise per stage and
+        // clip by the global norm of the *averaged* gradient.
+        // Note: stages may have different contribution counts when fills
+        // are active; we use each stage's own average (the Appendix C.2
+        // B/(B+K) rescale falls out of this normalisation).
+        let grad_norm = (sq_sum).sqrt() / m as f64;
+        let clip_scale = if self.opts.grad_clip > 0.0 && grad_norm > self.opts.grad_clip {
+            self.opts.grad_clip / grad_norm
+        } else {
+            1.0
+        };
+
+        // Optimize phase.
+        for (s, w) in self.workers.iter().enumerate() {
+            let scale = clip_scale as f32 / contributions[s] as f32;
+            let tied_vec: Vec<(String, HostTensor)> =
+                tied.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+            w.cmds
+                .send(Cmd::Optimize {
+                    step: self.step,
+                    lr,
+                    scale,
+                    tied: tied_vec,
+                })
+                .context("optimize send")?;
+        }
+        for _ in 0..p {
+            match self.replies.recv().context("optimize reply")? {
+                Reply::Ack => {}
+                other => anyhow::bail!("unexpected reply {other:?}"),
+            }
+        }
+
+        Ok(StepStats {
+            step: self.step,
+            losses: loss_sums.iter().map(|l| l / m as f64).collect(),
+            grad_norm,
+            lr: lr as f64,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            fill_contributions: fills.len(),
+        })
+    }
+
+    /// Validation: mean per-exit losses over the given batches.
+    pub fn validate(&mut self, batches: &[TrainBatch]) -> Result<Vec<f64>> {
+        let p = self.man.model.pipeline_stages;
+        let mut sums = vec![0f64; self.weight_defaults.len()];
+        for b in batches {
+            for w in &self.workers {
+                w.cmds
+                    .send(Cmd::Eval(MicrobatchData {
+                        tokens: b.tokens.clone(),
+                        targets: b.targets.clone(),
+                    }))
+                    .context("eval send")?;
+            }
+            for _ in 0..p {
+                match self.replies.recv().context("eval reply")? {
+                    Reply::EvalDone { stage, losses } => {
+                        let off: usize =
+                            self.exits_per_stage[..stage].iter().sum();
+                        for (i, l) in losses.iter().enumerate() {
+                            sums[off + i] += l;
+                        }
+                    }
+                    other => anyhow::bail!("unexpected reply {other:?}"),
+                }
+            }
+        }
+        let n = batches.len().max(1) as f64;
+        Ok(sums.iter().map(|s| s / n).collect())
+    }
+
+    /// Fetch all parameters (stage-major).
+    pub fn params(&mut self) -> Result<Vec<Vec<HostTensor>>> {
+        let p = self.man.model.pipeline_stages;
+        for w in &self.workers {
+            w.cmds.send(Cmd::GetParams).context("params send")?;
+        }
+        let mut out: Vec<Option<Vec<HostTensor>>> = vec![None; p];
+        for _ in 0..p {
+            match self.replies.recv().context("params reply")? {
+                Reply::Params { stage, params } => out[stage] = Some(params),
+                other => anyhow::bail!("unexpected reply {other:?}"),
+            }
+        }
+        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    pub fn set_params(&mut self, params: Vec<Vec<HostTensor>>) -> Result<()> {
+        for (w, ps) in self.workers.iter().zip(params) {
+            w.cmds.send(Cmd::SetParams(ps)).context("set params")?;
+        }
+        for _ in 0..self.workers.len() {
+            match self.replies.recv().context("ack")? {
+                Reply::Ack => {}
+                other => anyhow::bail!("unexpected reply {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let params = self.params()?;
+        ckpt::save_stage_params(path, &self.man, &params)
+    }
+
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let params = ckpt::load_stage_params(path, &self.man)?;
+        self.set_params(params)
+    }
+
+    /// Per-stage executable profile: (stage, exec name, calls, total ms).
+    pub fn profile(&mut self) -> Result<Vec<(usize, String, u64, f64)>> {
+        let mut out = Vec::new();
+        for w in &self.workers {
+            w.cmds.send(Cmd::Profile).context("profile send")?;
+        }
+        for _ in 0..self.workers.len() {
+            match self.replies.recv().context("profile reply")? {
+                Reply::ProfileData { stage, rows } => {
+                    for (name, calls, ms) in rows {
+                        out.push((stage, name, calls, ms));
+                    }
+                }
+                other => anyhow::bail!("unexpected reply {other:?}"),
+            }
+        }
+        out.sort_by(|a, b| (a.0, a.1.clone()).cmp(&(b.0, b.1.clone())));
+        Ok(out)
+    }
+
+    pub fn shutdown(mut self) {
+        for w in &self.workers {
+            let _ = w.cmds.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                match j.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => eprintln!("worker error: {e:#}"),
+                    Err(_) => eprintln!("worker panicked"),
+                }
+            }
+        }
+    }
+}
+
+impl Drop for PipelineTrainer {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmds.send(Cmd::Shutdown);
+        }
+    }
+}

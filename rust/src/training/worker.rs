@@ -1,0 +1,625 @@
+//! The per-stage training worker thread.
+//!
+//! Owns its PJRT client, compiled executables, parameters and optimizer
+//! state; executes the 1F1B op order with the auxiliary-loss backward
+//! (Eq. 2), accumulates gradients across microbatches, and participates in
+//! the two-phase optimize step (local sq-sum -> leader reduce -> Adam with
+//! the leader's scale). Fill microbatches (Appendix C.2) run
+//! opportunistically while the worker would otherwise block on a P2P
+//! receive.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::Result;
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::StageRuntime;
+use crate::runtime::params;
+use crate::runtime::tensor::{HostTensor, IntTensor};
+
+use super::channel::{Tag, TaggedReceiver, TaggedSender};
+
+#[derive(Debug, Clone)]
+pub struct MicrobatchData {
+    /// Input tokens — consumed by stage 0 only.
+    pub tokens: IntTensor,
+    /// Next-token targets — needed by every stage that owns exits.
+    pub targets: IntTensor,
+}
+
+/// Stage coverage of one fill microbatch (Appendix C.2): forward through
+/// stages [0, fwd_stages), backward through the last `bwd_stages` of those.
+#[derive(Debug, Clone, Copy)]
+pub struct FillSpec {
+    pub fwd_stages: usize,
+    pub bwd_stages: usize,
+}
+
+impl FillSpec {
+    pub fn turnaround(&self) -> usize {
+        self.fwd_stages - 1
+    }
+
+    pub fn bwd_covers(&self, stage: usize) -> bool {
+        stage < self.fwd_stages
+            && stage + self.bwd_stages >= self.fwd_stages
+    }
+
+    pub fn fwd_covers(&self, stage: usize) -> bool {
+        stage < self.fwd_stages
+    }
+}
+
+#[derive(Debug)]
+pub struct IterationCmd {
+    /// 1-based optimizer step (Adam bias correction).
+    pub step: usize,
+    pub lr: f32,
+    /// This stage's exit loss weights (schedule-adjusted).
+    pub weights: Vec<f32>,
+    pub microbatches: Vec<MicrobatchData>,
+    pub fills: Vec<(FillSpec, MicrobatchData)>,
+}
+
+#[derive(Debug)]
+pub enum Cmd {
+    Iteration(IterationCmd),
+    /// Second phase of a step: apply Adam with the leader-computed scale;
+    /// tied-group gradients (summed across stages) override local ones.
+    Optimize {
+        step: usize,
+        lr: f32,
+        scale: f32,
+        tied: Vec<(String, HostTensor)>,
+    },
+    /// Forward one batch through eval executables (validation losses).
+    Eval(MicrobatchData),
+    GetParams,
+    SetParams(Vec<HostTensor>),
+    Profile,
+    Shutdown,
+}
+
+#[derive(Debug)]
+pub enum Reply {
+    IterDone {
+        stage: usize,
+        /// Per-exit loss sums over main microbatches.
+        loss_sums: Vec<f64>,
+        grad_sqsum: f64,
+        /// (group name, local gradient sum) for each tied group member set
+        /// on this stage.
+        tied_grads: Vec<(String, HostTensor)>,
+        /// Microbatch contributions to this stage's gradient (main + fill).
+        contributions: usize,
+    },
+    EvalDone { stage: usize, losses: Vec<f64> },
+    Params { stage: usize, params: Vec<HostTensor> },
+    ProfileData { stage: usize, rows: Vec<(String, u64, f64)> },
+    Ack,
+}
+
+pub struct WorkerConfig {
+    pub stage: usize,
+    pub stages: usize,
+    pub seed: u64,
+}
+
+enum Stash {
+    Tokens(IntTensor),
+    Hidden(HostTensor),
+}
+
+pub struct Worker {
+    cfg: WorkerConfig,
+    man: Manifest,
+    rt: StageRuntime,
+    params: Vec<HostTensor>,
+    adam_m: Vec<HostTensor>,
+    adam_v: Vec<HostTensor>,
+    grads: Vec<HostTensor>,
+    inbox: TaggedReceiver,
+    to_prev: Option<TaggedSender>,
+    to_next: Option<TaggedSender>,
+    cmds: Receiver<Cmd>,
+    replies: Sender<Reply>,
+    n_exits: usize,
+    has_losses_output: bool,
+}
+
+impl Worker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        man: Manifest,
+        cfg: WorkerConfig,
+        inbox: TaggedReceiver,
+        to_prev: Option<TaggedSender>,
+        to_next: Option<TaggedSender>,
+        cmds: Receiver<Cmd>,
+        replies: Sender<Reply>,
+    ) -> std::thread::JoinHandle<Result<()>> {
+        std::thread::Builder::new()
+            .name(format!("stage-{}", cfg.stage))
+            .spawn(move || {
+                let mut w = Worker::new(
+                    man, cfg, inbox, to_prev, to_next, cmds, replies,
+                )?;
+                w.run()
+            })
+            .expect("spawning stage worker")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        man: Manifest,
+        cfg: WorkerConfig,
+        inbox: TaggedReceiver,
+        to_prev: Option<TaggedSender>,
+        to_next: Option<TaggedSender>,
+        cmds: Receiver<Cmd>,
+        replies: Sender<Reply>,
+    ) -> Result<Worker> {
+        let s = cfg.stage;
+        let mut rt = StageRuntime::cpu()?;
+        rt.load_stage_training(&man, &man.stages[s])?;
+        let params = params::init_stage(cfg.seed, &man, s);
+        let zeros: Vec<HostTensor> = man.stages[s]
+            .params
+            .iter()
+            .map(|p| HostTensor::zeros(&p.shape))
+            .collect();
+        let n_exits = man.stages[s].exits.len();
+        Ok(Worker {
+            cfg,
+            rt,
+            params,
+            adam_m: zeros.clone(),
+            adam_v: zeros.clone(),
+            grads: zeros,
+            inbox,
+            to_prev,
+            to_next,
+            cmds,
+            replies,
+            n_exits,
+            has_losses_output: n_exits > 0,
+            man,
+        })
+    }
+
+    fn stage(&self) -> usize {
+        self.cfg.stage
+    }
+
+    fn is_first(&self) -> bool {
+        self.cfg.stage == 0
+    }
+
+    fn is_last(&self) -> bool {
+        self.cfg.stage == self.cfg.stages - 1
+    }
+
+    fn run(&mut self) -> Result<()> {
+        loop {
+            match self.cmds.recv() {
+                Ok(Cmd::Iteration(cmd)) => self.iteration(cmd)?,
+                Ok(Cmd::Optimize { step, lr, scale, tied }) => {
+                    self.optimize(step, lr, scale, tied)?;
+                    self.replies.send(Reply::Ack).ok();
+                }
+                Ok(Cmd::Eval(mb)) => self.eval(mb)?,
+                Ok(Cmd::GetParams) => {
+                    self.replies
+                        .send(Reply::Params {
+                            stage: self.stage(),
+                            params: self.params.clone(),
+                        })
+                        .ok();
+                }
+                Ok(Cmd::SetParams(p)) => {
+                    assert_eq!(p.len(), self.params.len());
+                    self.params = p;
+                    self.replies.send(Reply::Ack).ok();
+                }
+                Ok(Cmd::Profile) => {
+                    self.replies
+                        .send(Reply::ProfileData {
+                            stage: self.stage(),
+                            rows: self.rt.profile(),
+                        })
+                        .ok();
+                }
+                Ok(Cmd::Shutdown) | Err(_) => return Ok(()),
+            }
+        }
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params.iter().map(|p| p.to_literal()).collect()
+    }
+
+    /// Forward one input through the stage; returns x_out and sends it on.
+    fn exec_fwd(
+        &self,
+        plits: &[xla::Literal],
+        stash: &Stash,
+        tag: Tag,
+    ) -> Result<HostTensor> {
+        let in_lit = match stash {
+            Stash::Tokens(t) => t.to_literal()?,
+            Stash::Hidden(h) => h.to_literal()?,
+        };
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&in_lit);
+        let out = self.rt.get("fwd")?.run(&args)?;
+        let x_out = HostTensor::from_literal(&out[0])?;
+        if let Some(next) = &self.to_next {
+            next.send(tag, x_out.clone());
+        }
+        Ok(x_out)
+    }
+
+    /// Backward with the auxiliary loss; accumulates grads, returns
+    /// per-exit losses, and sends g_in to the previous stage (when asked).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_bwd(
+        &mut self,
+        plits: &[xla::Literal],
+        stash: Stash,
+        targets: &IntTensor,
+        weights: &[f32],
+        g_out: &HostTensor,
+        send_down: bool,
+        tag: Tag,
+    ) -> Result<Vec<f64>> {
+        let in_lit = match &stash {
+            Stash::Tokens(t) => t.to_literal()?,
+            Stash::Hidden(h) => h.to_literal()?,
+        };
+        let t_lit = targets.to_literal()?;
+        let w_lit = HostTensor::new(vec![weights.len()], weights.to_vec())
+            .to_literal()?;
+        let g_lit = g_out.to_literal()?;
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&in_lit);
+        args.push(&t_lit);
+        if self.has_losses_output {
+            args.push(&w_lit);
+        }
+        args.push(&g_lit);
+        let out = self.rt.get("bwd")?.run(&args)?;
+
+        // Output layout: (losses?, g_in?, *param_grads).
+        let mut idx = 0;
+        let losses = if self.has_losses_output {
+            let l = HostTensor::from_literal(&out[idx])?;
+            idx += 1;
+            l.data.iter().map(|&x| x as f64).collect()
+        } else {
+            Vec::new()
+        };
+        if !self.is_first() {
+            let g_in = HostTensor::from_literal(&out[idx])?;
+            idx += 1;
+            if send_down {
+                if let Some(prev) = &self.to_prev {
+                    prev.send(tag, g_in);
+                }
+            }
+        }
+        for (i, g) in out[idx..].iter().enumerate() {
+            let gt = HostTensor::from_literal(g)?;
+            self.grads[i].axpy(1.0, &gt);
+        }
+        Ok(losses)
+    }
+
+    /// Try to run one pending fill op; returns true if progress was made.
+    fn try_fill(
+        &mut self,
+        plits: &[xla::Literal],
+        cmd: &IterationCmd,
+        fill_stage: &mut FillState,
+    ) -> Result<bool> {
+        let s = self.stage();
+        // Next fill forward.
+        if let Some(j) = fill_stage.next_fwd(cmd, s) {
+            let ready = self.is_first() || self.inbox.ready(Tag::FillFwd(j));
+            if ready {
+                let stash = if self.is_first() {
+                    Stash::Tokens(cmd.fills[j].1.tokens.clone())
+                } else {
+                    Stash::Hidden(self.inbox.recv(Tag::FillFwd(j)))
+                };
+                let spec = cmd.fills[j].0;
+                if s < spec.turnaround() {
+                    // Forward and send on.
+                    let in_lit = match &stash {
+                        Stash::Tokens(t) => t.to_literal()?,
+                        Stash::Hidden(h) => h.to_literal()?,
+                    };
+                    let mut args: Vec<&xla::Literal> = plits.iter().collect();
+                    args.push(&in_lit);
+                    let out = self.rt.get("fwd")?.run(&args)?;
+                    let x_out = HostTensor::from_literal(&out[0])?;
+                    if let Some(next) = &self.to_next {
+                        next.send(Tag::FillFwd(j), x_out);
+                    }
+                } // Turnaround stage: its backward recomputes the forward.
+                fill_stage.stash.push((j, stash));
+                fill_stage.fwd_done += 1;
+                return Ok(true);
+            }
+        }
+        // Next fill backward.
+        if let Some(j) = fill_stage.next_bwd(cmd, s) {
+            let spec = cmd.fills[j].0;
+            let at_turnaround = s == spec.turnaround();
+            let ready = at_turnaround || self.inbox.ready(Tag::FillBwd(j));
+            if ready {
+                let pos = fill_stage
+                    .stash
+                    .iter()
+                    .position(|(id, _)| *id == j)
+                    .expect("fill backward before forward");
+                let (_, stash) = fill_stage.stash.remove(pos);
+                let g_out = if at_turnaround {
+                    let tsh = &cmd.fills[j].1.targets.shape;
+                    HostTensor::zeros(&[
+                        tsh[0],
+                        tsh[1],
+                        self.man.model.hidden,
+                    ])
+                } else {
+                    self.inbox.recv(Tag::FillBwd(j))
+                };
+                // Send further down only while the next-lower stage is
+                // still inside the backward cover.
+                let send_down = !self.is_first()
+                    && spec.bwd_covers(s - 1);
+                self.exec_bwd(
+                    plits,
+                    stash,
+                    &cmd.fills[j].1.targets,
+                    &cmd.weights,
+                    &g_out,
+                    send_down,
+                    Tag::FillBwd(j),
+                )?;
+                fill_stage.bwd_done += 1;
+                fill_stage.contributions += 1;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn iteration(&mut self, cmd: IterationCmd) -> Result<()> {
+        let s = self.stage();
+        let p = self.cfg.stages;
+        let m = cmd.microbatches.len();
+        assert!(m >= p, "1F1B requires microbatches >= stages");
+        let plits = self.param_literals()?;
+
+        // Reset accumulators.
+        for g in &mut self.grads {
+            g.data.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let mut loss_sums = vec![0f64; self.n_exits];
+        let mut stash: Vec<Option<Stash>> = (0..m).map(|_| None).collect();
+        let mut fill_state = FillState::default();
+
+        // 1F1B main op order for this stage.
+        let warmup = (p - 1 - s).min(m);
+        let mut ops: Vec<(bool, usize)> = Vec::new(); // (is_fwd, mb)
+        for mb in 0..warmup {
+            ops.push((true, mb));
+        }
+        let mut next_f = warmup;
+        let mut next_b = 0;
+        while next_b < m {
+            if next_f < m {
+                ops.push((true, next_f));
+                next_f += 1;
+            }
+            ops.push((false, next_b));
+            next_b += 1;
+        }
+
+        for (is_fwd, mb) in ops {
+            if is_fwd {
+                let input = if self.is_first() {
+                    Stash::Tokens(cmd.microbatches[mb].tokens.clone())
+                } else {
+                    // Opportunistic bubble filling: run fill work while the
+                    // forward activation has not arrived yet.
+                    while !self.inbox.ready(Tag::Fwd(mb)) {
+                        if !self.try_fill(&plits, &cmd, &mut fill_state)? {
+                            self.inbox.recv_any();
+                        }
+                    }
+                    Stash::Hidden(self.inbox.recv(Tag::Fwd(mb)))
+                };
+                // The last stage has no consumer for x_out, and its
+                // backward recomputes the stage forward from x_in anyway:
+                // skip the redundant forward execution entirely.
+                if !self.is_last() {
+                    self.exec_fwd(&plits, &input, Tag::Fwd(mb))?;
+                }
+                stash[mb] = Some(input);
+            } else {
+                let g_out = if self.is_last() {
+                    let b = cmd.microbatches[mb].targets.shape[0];
+                    let seq = cmd.microbatches[mb].targets.shape[1];
+                    HostTensor::zeros(&[b, seq, self.man.model.hidden])
+                } else {
+                    while !self.inbox.ready(Tag::Bwd(mb)) {
+                        if !self.try_fill(&plits, &cmd, &mut fill_state)? {
+                            self.inbox.recv_any();
+                        }
+                    }
+                    self.inbox.recv(Tag::Bwd(mb))
+                };
+                let input = stash[mb].take().expect("bwd before fwd");
+                let losses = self.exec_bwd(
+                    &plits,
+                    input,
+                    &cmd.microbatches[mb].targets,
+                    &cmd.weights,
+                    &g_out,
+                    true,
+                    Tag::Bwd(mb),
+                )?;
+                for (i, l) in losses.iter().enumerate() {
+                    loss_sums[i] += l;
+                }
+            }
+        }
+
+        // Finish remaining fill work (blocking).
+        while !fill_state.finished(&cmd, s) {
+            if !self.try_fill(&plits, &cmd, &mut fill_state)? {
+                self.inbox.recv_any();
+            }
+        }
+
+        // Local reductions for the leader.
+        let grad_sqsum: f64 = self.grads.iter().map(|g| g.sq_sum()).sum();
+        let mut tied_grads = Vec::new();
+        for (i, sp) in self.man.stages[s].params.iter().enumerate() {
+            if let Some(g) = &sp.tie_group {
+                tied_grads.push((g.clone(), self.grads[i].clone()));
+            }
+        }
+        self.replies
+            .send(Reply::IterDone {
+                stage: s,
+                loss_sums,
+                grad_sqsum,
+                tied_grads,
+                contributions: m + fill_state.contributions,
+            })
+            .ok();
+        Ok(())
+    }
+
+    fn optimize(
+        &mut self,
+        step: usize,
+        lr: f32,
+        scale: f32,
+        tied: Vec<(String, HostTensor)>,
+    ) -> Result<()> {
+        // Tied-group all-reduce: overwrite local grads with the global sum.
+        let s = self.stage();
+        for (i, sp) in self.man.stages[s].params.iter().enumerate() {
+            if let Some(g) = &sp.tie_group {
+                if let Some((_, sum)) = tied.iter().find(|(n, _)| n == g) {
+                    self.grads[i] = sum.clone();
+                }
+            }
+        }
+        let exe = self.rt.get("adam")?;
+        let step = HostTensor::scalar(step as f32).to_literal()?;
+        let lr = HostTensor::scalar(lr).to_literal()?;
+        let sc = HostTensor::scalar(scale).to_literal()?;
+        let mut lits: Vec<xla::Literal> = Vec::new();
+        for t in self.params.iter().chain(&self.grads).chain(&self.adam_m).chain(&self.adam_v) {
+            lits.push(t.to_literal()?);
+        }
+        let mut args: Vec<&xla::Literal> = vec![&step, &lr, &sc];
+        args.extend(lits.iter());
+        let out = exe.run(&args)?;
+        let n = self.params.len();
+        for i in 0..n {
+            self.params[i] = HostTensor::from_literal(&out[i])?;
+            self.adam_m[i] = HostTensor::from_literal(&out[n + i])?;
+            self.adam_v[i] = HostTensor::from_literal(&out[2 * n + i])?;
+        }
+        Ok(())
+    }
+
+    fn eval(&mut self, mb: MicrobatchData) -> Result<()> {
+        let plits = self.param_literals()?;
+        let in_lit = if self.is_first() {
+            mb.tokens.to_literal()?
+        } else {
+            self.inbox.recv(Tag::Fwd(usize::MAX - 1)).to_literal()?
+        };
+        let t_lit = mb.targets.to_literal()?;
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&in_lit);
+        args.push(&t_lit);
+        let out = self.rt.get("eval")?.run(&args)?;
+        let x_out = HostTensor::from_literal(&out[0])?;
+        if let Some(next) = &self.to_next {
+            next.send(Tag::Fwd(usize::MAX - 1), x_out);
+        }
+        let losses = if self.has_losses_output {
+            HostTensor::from_literal(&out[1])?
+                .data
+                .iter()
+                .map(|&x| x as f64)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.replies
+            .send(Reply::EvalDone { stage: self.stage(), losses })
+            .ok();
+        Ok(())
+    }
+}
+
+/// Tracking for fill-microbatch progress within one iteration.
+#[derive(Default)]
+struct FillState {
+    fwd_done: usize,
+    bwd_done: usize,
+    contributions: usize,
+    stash: Vec<(usize, Stash)>,
+}
+
+impl FillState {
+    /// Index of the next fill microbatch whose forward this stage still
+    /// owes, in order.
+    fn next_fwd(&self, cmd: &IterationCmd, s: usize) -> Option<usize> {
+        cmd.fills
+            .iter()
+            .enumerate()
+            .filter(|(_, (spec, _))| spec.fwd_covers(s))
+            .map(|(j, _)| j)
+            .nth(self.fwd_done)
+    }
+
+    fn next_bwd(&self, cmd: &IterationCmd, s: usize) -> Option<usize> {
+        // Backward only for fills whose forward is already done locally.
+        let candidate = cmd
+            .fills
+            .iter()
+            .enumerate()
+            .filter(|(_, (spec, _))| spec.bwd_covers(s))
+            .map(|(j, _)| j)
+            .nth(self.bwd_done)?;
+        if self.stash.iter().any(|(id, _)| *id == candidate) {
+            Some(candidate)
+        } else {
+            None
+        }
+    }
+
+    fn finished(&self, cmd: &IterationCmd, s: usize) -> bool {
+        let fwds = cmd
+            .fills
+            .iter()
+            .filter(|(spec, _)| spec.fwd_covers(s))
+            .count();
+        let bwds = cmd
+            .fills
+            .iter()
+            .filter(|(spec, _)| spec.bwd_covers(s))
+            .count();
+        self.fwd_done == fwds && self.bwd_done == bwds && self.stash.len()
+            == fwds - bwds
+    }
+}

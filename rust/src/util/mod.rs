@@ -1,0 +1,9 @@
+//! Self-contained utility substrates (the build is fully offline, so JSON
+//! parsing, RNG, CLI parsing, property testing, and table rendering are all
+//! implemented here rather than pulled from crates.io).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;

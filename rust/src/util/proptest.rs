@@ -1,0 +1,50 @@
+//! Minimal property-testing harness (offline stand-in for `proptest`).
+//!
+//! Runs a property against many seeded-random cases; on failure it reports
+//! the failing case number and seed so the case can be replayed by
+//! constructing the same `Rng`.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Check `prop(rng)` for `cases` random cases. `prop` returns
+/// `Err(description)` to signal a counterexample.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base_seed: u64 = 0xEE11E;
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 parity", 32, |rng| {
+            let x = rng.next_u64();
+            if x % 2 == 0 || x % 2 == 1 {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn reports_counterexample() {
+        check("always false", 4, |_| Err("nope".into()));
+    }
+}

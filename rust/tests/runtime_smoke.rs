@@ -1,0 +1,82 @@
+//! Smoke: load + compile + execute every ee-tiny artifact on PJRT CPU.
+
+use std::path::PathBuf;
+
+use eellm::runtime::artifacts::Manifest;
+use eellm::runtime::client::StageRuntime;
+use eellm::runtime::params;
+use eellm::runtime::tensor::{HostTensor, IntTensor};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn compile_and_run_every_ee_tiny_executable() {
+    let root = artifacts_root();
+    if !root.join("ee-tiny").is_dir() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = Manifest::load_config(&root, "ee-tiny").unwrap();
+    let m = &man.model;
+    for st in &man.stages {
+        let mut rt = StageRuntime::cpu().unwrap();
+        rt.load_stage_training(&man, st).unwrap();
+        rt.load_stage_inference(&man, st).unwrap();
+
+        let params = params::init_stage(1, &man, st.index);
+        let plits: Vec<xla::Literal> =
+            params.iter().map(|p| p.to_literal().unwrap()).collect();
+
+        // fwd
+        let input: xla::Literal = if st.index == 0 {
+            IntTensor::new(
+                vec![m.microbatch, m.seq],
+                vec![65; m.microbatch * m.seq],
+            )
+            .to_literal()
+            .unwrap()
+        } else {
+            HostTensor::zeros(&[m.microbatch, m.seq, m.hidden])
+                .to_literal()
+                .unwrap()
+        };
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&input);
+        let out = rt.get("fwd").unwrap().run(&args).unwrap();
+        let x = HostTensor::from_literal(&out[0]).unwrap();
+        assert_eq!(x.shape, vec![m.microbatch, m.seq, m.hidden]);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+
+        // decode w1
+        let cache = HostTensor::zeros(&st.cache_shape).to_literal().unwrap();
+        let din: xla::Literal = if st.index == 0 {
+            IntTensor::new(vec![1], vec![66]).to_literal().unwrap()
+        } else {
+            HostTensor::zeros(&[1, m.hidden]).to_literal().unwrap()
+        };
+        let pos = IntTensor::scalar(0).to_literal().unwrap();
+        let mut args: Vec<&xla::Literal> = plits.iter().collect();
+        args.push(&din);
+        args.push(&cache);
+        args.push(&pos);
+        let out = rt.get("decode_w1").unwrap().run(&args).unwrap();
+        assert_eq!(out.len(), 2);
+        let x = HostTensor::from_literal(&out[0]).unwrap();
+        assert_eq!(x.shape, vec![1, m.hidden]);
+
+        // heads
+        for e in &st.exits {
+            let h = HostTensor::zeros(&[m.hidden]).to_literal().unwrap();
+            let hp: Vec<&xla::Literal> =
+                e.head_param_idx.iter().map(|&i| &plits[i]).collect();
+            let mut args = hp;
+            args.push(&h);
+            let out =
+                rt.get(&format!("head{}", e.layer)).unwrap().run(&args).unwrap();
+            let logits = HostTensor::from_literal(&out[0]).unwrap();
+            assert_eq!(logits.shape, vec![m.vocab]);
+        }
+    }
+}
