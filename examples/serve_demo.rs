@@ -1,0 +1,81 @@
+//! Multi-request serving demo: a pool of early-exit engines multiplexing
+//! a mixed request set with per-request thresholds.
+//!
+//!     cargo run --release --example serve_demo -- \
+//!         --config ee-tiny --checkpoint artifacts/runs/ee-e2e.eckpt \
+//!         --workers 2 --policy spf --engine recompute
+
+use std::path::PathBuf;
+
+use eellm::inference::ModelState;
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    EngineKind, EnginePool, Policy, PoolConfig, ServeRequest,
+};
+use eellm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let config = args.get_or("config", "ee-tiny");
+    let workers = args.usize_or("workers", 2);
+    let policy = Policy::parse(&args.get_or("policy", "spf"))?;
+    let kind = EngineKind::parse(&args.get_or("engine", "recompute"))?;
+    let man = Manifest::load_config(&PathBuf::from("artifacts"), &config)?;
+    let n_layers = man.model.n_layers;
+    let state = match args.get("checkpoint") {
+        Some(p) => ModelState::from_checkpoint(man, std::path::Path::new(p))?,
+        None => {
+            eprintln!("[warn] no --checkpoint; random weights");
+            ModelState::init(man, 42)
+        }
+    };
+
+    let prompts = [
+        "question: what is the capital of ",
+        "3+4=",
+        "copy: the color of melka is red. |",
+        "count: 1 2 3 4 ",
+        "question: what is the food of ",
+        "abc: a b c ",
+    ];
+    let reqs: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            // Alternate aggressive and conservative per-request
+            // thresholds to show both paths through the pool.
+            let tau = if i % 2 == 0 { 0.4 } else { 1.0 };
+            ServeRequest::new(i as u64, *p, 24).with_threshold(tau)
+        })
+        .collect();
+
+    let mut pool = EnginePool::new(
+        state,
+        PoolConfig { workers, engine: kind, threshold: 0.8, policy },
+    );
+    let (responses, metrics) = pool.run_batch(reqs)?;
+    pool.shutdown()?;
+
+    for r in &responses {
+        println!(
+            "req {} (worker {}): {:?} [{} tok, queue {:.0}ms, total {:.0}ms]",
+            r.id,
+            r.worker,
+            r.output.text,
+            r.output.tokens.len(),
+            r.queue_seconds * 1e3,
+            r.total_seconds * 1e3,
+        );
+    }
+    println!(
+        "{} requests | {:.1} tok/s | p50 {:.0}ms p95 {:.0}ms | early {:.0}% \
+         | exits {:?}",
+        metrics.requests,
+        metrics.throughput_tps(),
+        metrics.p50_latency_seconds * 1e3,
+        metrics.p95_latency_seconds * 1e3,
+        100.0 * metrics.early_fraction(n_layers),
+        metrics.exits.counts,
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Serving-layer bench: aggregate tokens/s and p50/p95 request latency
+//! vs. engine-pool size and exit threshold — the Figure 8 axes
+//! (quality/latency vs. threshold) lifted to the multi-request setting of
+//! the serving front-end.
+//!
+//! Shape checks: pool size > 1 must out-throughput pool size 1 on the
+//! same request set (that is the point of the pool), and the aggregate
+//! early-exit fraction must grow as the threshold drops.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use eellm::data::tasks;
+use eellm::serve::{
+    requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
+};
+use eellm::util::table::Table;
+
+fn main() {
+    let steps = if bench_util::fast() { 60 } else { 200 };
+    let Some(state) = bench_util::trained_state("ee-tiny", steps) else {
+        return;
+    };
+    let n_layers = state.man.model.n_layers;
+    let corpus = bench_util::corpus();
+    let n_req = if bench_util::fast() { 8 } else { 24 };
+    let suite = tasks::all_tasks(&corpus, n_req, 5);
+    let reqs = requests_from_tasks(&suite, n_req, state.man.model.max_seq);
+
+    let pool_sizes = [1usize, 2, 4];
+    let thresholds = [1.0f32, 0.6, 0.2];
+    let mut table = Table::new(
+        "Serving throughput vs pool size and exit threshold",
+        &["pool", "threshold", "tok/s", "p50 latency", "p95 latency",
+          "mean queue", "early%"],
+    );
+
+    // Mean throughput per pool size (over thresholds) for the scaling
+    // check, and early fraction per threshold at the largest pool.
+    let mut tput = vec![0f64; pool_sizes.len()];
+    let mut early = vec![0f64; thresholds.len()];
+    for (pi, &workers) in pool_sizes.iter().enumerate() {
+        for (ti, &tau) in thresholds.iter().enumerate() {
+            let mut pool = EnginePool::new(
+                state.clone(),
+                PoolConfig {
+                    workers,
+                    engine: EngineKind::Sequential,
+                    threshold: tau,
+                    policy: Policy::ShortestPromptFirst,
+                },
+            );
+            let (_resps, m) = pool.run_batch(reqs.clone()).expect("batch");
+            pool.shutdown().expect("shutdown");
+            tput[pi] += m.throughput_tps() / thresholds.len() as f64;
+            if workers == *pool_sizes.last().unwrap() {
+                early[ti] = m.early_fraction(n_layers);
+            }
+            table.row(vec![
+                format!("{workers}"),
+                format!("{tau}"),
+                format!("{:.1}", m.throughput_tps()),
+                format!("{:.0}ms", m.p50_latency_seconds * 1e3),
+                format!("{:.0}ms", m.p95_latency_seconds * 1e3),
+                format!("{:.0}ms", m.mean_queue_seconds * 1e3),
+                format!("{:.0}%", 100.0 * m.early_fraction(n_layers)),
+            ]);
+        }
+    }
+    table.emit("serving_throughput");
+
+    println!(
+        "mean tok/s by pool size {pool_sizes:?}: {:?}",
+        tput.iter().map(|t| format!("{t:.1}")).collect::<Vec<_>>()
+    );
+    let best_pooled = tput[1..].iter().cloned().fold(f64::MIN, f64::max);
+    assert!(
+        best_pooled > tput[0],
+        "pooling yields no throughput gain over a single worker: {tput:?}"
+    );
+    assert!(
+        early.last().unwrap() >= early.first().unwrap(),
+        "early-exit fraction did not grow as the threshold dropped: {early:?}"
+    );
+    println!("serving_throughput shape checks OK");
+}

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Lint gate for the Rust tier, invoked alongside tier-1
+# (`cargo build --release && cargo test -q`):
+#
+#     bash rust/lint.sh
+#
+# Formatting must be clean and clippy warnings are errors.
+set -euo pipefail
+cd "$(dirname "$0")"
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+echo "lint gate OK"

@@ -43,16 +43,41 @@ pub fn first_line(s: &str) -> &str {
 }
 
 /// Cut a completion at sensible answer boundaries for short-form tasks.
+///
+/// Stop substrings must never fire *inside* a legitimate answer: a bare
+/// `" the "` is too greedy (it mangles answers like "over the rainbow"),
+/// so a rambling follow-on fact sentence is only detected by its full
+/// `" the <word> of "` clause shape.
 pub fn short_answer(s: &str) -> String {
     let line = first_line(s);
     // Stop at the start of a follow-on sentence or a new template.
     let mut cut = line.len();
-    for stop in [". ", "? ", " question:", " copy:", " summary:", " the "] {
+    for stop in [". ", "? ", " question:", " copy:", " summary:", " answer:"]
+    {
         if let Some(i) = line.find(stop) {
             cut = cut.min(i + if stop == ". " { 1 } else { 0 });
         }
     }
+    if let Some(i) = fact_clause_start(line) {
+        cut = cut.min(i);
+    }
     line[..cut].trim().trim_end_matches('.').to_string()
+}
+
+/// Position of a rambling follow-on fact clause `" the <word> of "` (the
+/// corpus' dominant sentence template), if any. A bare `" the "` followed
+/// by anything else is part of the answer and survives.
+fn fact_clause_start(line: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(off) = line[from..].find(" the ") {
+        let i = from + off;
+        let mut words = line[i + " the ".len()..].split_whitespace();
+        if let (Some(_relation), Some("of")) = (words.next(), words.next()) {
+            return Some(i);
+        }
+        from = i + 1;
+    }
+    None
 }
 
 pub fn score_one(metric: Metric, pred: &str, reference: &str) -> f64 {
@@ -131,5 +156,19 @@ mod tests {
         assert_eq!(short_answer(" zarbon. the capital of x is y."), "zarbon");
         assert_eq!(short_answer("8. 3+4=7."), "8");
         assert_eq!(short_answer("yes question: is"), "yes");
+    }
+
+    #[test]
+    fn short_answer_keeps_stop_substrings_inside_answers() {
+        // Regression: answers containing the article " the " (or other
+        // near-stop substrings) must survive untruncated.
+        assert_eq!(short_answer("over the rainbow"), "over the rainbow");
+        assert_eq!(short_answer("the red tower"), "the red tower");
+        assert_eq!(short_answer("north of the wall"), "north of the wall");
+        // ...while a follow-on fact clause is still cut, period or not.
+        assert_eq!(short_answer("zarbon the capital of x is y"), "zarbon");
+        assert_eq!(short_answer("melka the color of ovask"), "melka");
+        // And template glue still truncates.
+        assert_eq!(short_answer("no answer: yes"), "no");
     }
 }

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::tokenizer::{ByteTokenizer, BOS_ID, EOS_ID};
 use crate::runtime::artifacts::Manifest;
@@ -70,6 +70,82 @@ pub fn pick_width(widths: &[usize], need: usize, pos: usize) -> Option<usize> {
         .min()
 }
 
+/// BOS-prefixed token buffer for a generation request, with room reserved
+/// for `reserve_new` generated tokens.
+pub fn prompt_tokens(prompt: &[i32], reserve_new: usize) -> Vec<i32> {
+    let mut tokens = Vec::with_capacity(prompt.len() + reserve_new + 1);
+    tokens.push(BOS_ID);
+    tokens.extend_from_slice(prompt);
+    tokens
+}
+
+/// Clamp `max_new` to the KV-cache capacity remaining after the prompt.
+///
+/// The generation loops already stop gracefully when the cache fills; a
+/// prompt that fits must therefore generate as many tokens as the cache
+/// allows rather than erroring up front. Errors only when the prompt
+/// itself (BOS included) does not fit.
+pub fn clamp_max_new(
+    prompt_len: usize,
+    max_new: usize,
+    max_seq: usize,
+) -> Result<usize> {
+    if prompt_len > max_seq {
+        bail!(
+            "prompt of {prompt_len} tokens (incl. BOS) exceeds KV-cache \
+             capacity {max_seq}"
+        );
+    }
+    Ok(max_new.min(max_seq - prompt_len))
+}
+
+/// Plan the prefill of positions [0, l-1) as (pos0, width) windows over
+/// the *available* decode widths, greedily widest-first.
+///
+/// When the tail is shorter than every available width (e.g. the manifest
+/// lacks a width-1 executable), the smallest window slides left over
+/// already-processed positions instead — recomputation is idempotent, so
+/// overlap only costs compute. Every returned window stays inside the
+/// token buffer (`pos0 + width <= l`). Errors when no window can fit at
+/// all.
+pub fn prefill_chunks(
+    widths: &[usize],
+    l: usize,
+) -> Result<Vec<(usize, usize)>> {
+    let mut chunks = Vec::new();
+    if l < 2 {
+        return Ok(chunks);
+    }
+    let wmin = match widths.iter().copied().min() {
+        Some(w) => w,
+        None => bail!("no decode widths available in manifest"),
+    };
+    if wmin > l {
+        bail!(
+            "no decode width fits: smallest available width {wmin} exceeds \
+             token buffer of {l} (widths {widths:?})"
+        );
+    }
+    let mut pos = 0usize;
+    while pos + 1 < l {
+        let remaining = l - 1 - pos;
+        match widths.iter().copied().filter(|&w| w <= remaining).max() {
+            Some(w) => {
+                chunks.push((pos, w));
+                pos += w;
+            }
+            None => {
+                // Tail shorter than every width: cover it with the
+                // smallest window, slid left over healed territory (it
+                // may also cover position l-1, which is harmless).
+                chunks.push((l - wmin, wmin));
+                pos = l - 1;
+            }
+        }
+    }
+    Ok(chunks)
+}
+
 /// Per-exit usage statistics of one generation run.
 #[derive(Debug, Clone, Default)]
 pub struct ExitStats {
@@ -90,6 +166,21 @@ impl ExitStats {
         }
         self.counts.push((layer, 1));
         self.counts.sort();
+    }
+
+    /// Accumulate another run's counts into this one (the serving layer
+    /// aggregates per-exit usage across requests).
+    pub fn merge(&mut self, other: &ExitStats) {
+        for &(layer, n) in &other.counts {
+            match self.counts.iter_mut().find(|c| c.0 == layer) {
+                Some(c) => c.1 += n,
+                None => {
+                    self.counts.push((layer, n));
+                    self.counts.sort();
+                }
+            }
+        }
+        self.forced_full += other.forced_full;
     }
 
     pub fn total(&self) -> usize {
@@ -152,6 +243,67 @@ mod tests {
         // Window of 4 does not fit before position 2.
         assert_eq!(pick_width(&widths, 3, 2), None);
         assert_eq!(pick_width(&widths, 9, 100), None);
+    }
+
+    #[test]
+    fn clamp_max_new_clamps_and_rejects() {
+        // Regression (over-strict capacity check): a prompt that fits is
+        // clamped to the remaining cache capacity, never an error.
+        assert_eq!(clamp_max_new(10, 5, 32).unwrap(), 5);
+        assert_eq!(clamp_max_new(30, 5, 32).unwrap(), 2);
+        assert_eq!(clamp_max_new(32, 5, 32).unwrap(), 0);
+        assert!(clamp_max_new(33, 0, 32).is_err());
+    }
+
+    #[test]
+    fn prompt_tokens_prepends_bos() {
+        let t = prompt_tokens(&[10, 20], 4);
+        assert_eq!(t, vec![crate::data::tokenizer::BOS_ID, 10, 20]);
+        assert!(t.capacity() >= 7);
+    }
+
+    #[test]
+    fn prefill_chunks_cover_prompt_greedily() {
+        // widths [1,2,4,8], l=12: positions [0,11) as 8 + 2 + 1.
+        let c = prefill_chunks(&[1, 2, 4, 8], 12).unwrap();
+        assert_eq!(c, vec![(0, 8), (8, 2), (10, 1)]);
+        // Single-token buffer: nothing to prefill.
+        assert!(prefill_chunks(&[1, 2], 1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn prefill_chunks_without_width_one() {
+        // Regression (prefill width fallback): widths lacking 1 must not
+        // fall back to a nonexistent width-1 executable; the tail slides
+        // the smallest available window left over healed positions.
+        let c = prefill_chunks(&[4, 8], 12).unwrap();
+        assert_eq!(c, vec![(0, 8), (8, 4)]);
+        for &(pos, w) in &c {
+            assert!(pos + w <= 12, "window {pos}+{w} out of bounds");
+        }
+        // Tail shorter than every width mid-prompt.
+        let c = prefill_chunks(&[4], 6).unwrap();
+        assert_eq!(c, vec![(0, 4), (2, 4)]);
+        // Prompt shorter than the smallest width: a clear error, not a
+        // confusing "exec not found" at runtime.
+        let err = prefill_chunks(&[4, 8], 3).unwrap_err().to_string();
+        assert!(err.contains("width"), "{err}");
+        assert!(prefill_chunks(&[], 5).is_err());
+    }
+
+    #[test]
+    fn exit_stats_merge_accumulates() {
+        let mut a = ExitStats::default();
+        a.record(2);
+        a.record(4);
+        let mut b = ExitStats::default();
+        b.record(2);
+        b.record(6);
+        b.forced_full = 3;
+        a.merge(&b);
+        assert_eq!(a.counts, vec![(2, 2), (4, 1), (6, 1)]);
+        assert_eq!(a.forced_full, 3);
+        assert_eq!(a.total(), 4);
     }
 
     #[test]

@@ -22,14 +22,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::tokenizer::BOS_ID;
 use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
 use super::common::{
-    confidence_decision, detokenize, is_stop_token, ExitStats, GenOutput,
-    ModelState,
+    clamp_max_new, confidence_decision, detokenize, is_stop_token,
+    prefill_chunks, prompt_tokens, ExitStats, GenOutput, ModelState,
 };
 
 /// Work flowing down the stage chain.
@@ -110,7 +109,17 @@ impl StageWorker {
         let h = self.man.model.hidden;
         loop {
             match self.inbox.recv() {
-                Err(_) | Ok(Work::Shutdown) => return Ok(()),
+                Err(_) => return Ok(()),
+                Ok(Work::Shutdown) => {
+                    // Propagate down the chain explicitly: deeper stages
+                    // must not depend on the channel-close cascade, which
+                    // never happens if a `Sender` clone outlives the
+                    // engine (the serving pool clones senders).
+                    if let Some(n) = &self.next {
+                        let _ = n.send(Work::Shutdown);
+                    }
+                    return Ok(());
+                }
                 Ok(Work::Reset) => {
                     while let Ok(t) = self.threshold_rx.try_recv() {
                         self.threshold = t;
@@ -308,24 +317,20 @@ impl PipelinedEngine {
         let max_seq = man.model.max_seq;
         let widths = man.decode_widths.clone();
 
-        let mut tokens = Vec::with_capacity(prompt.len() + max_new + 1);
-        tokens.push(BOS_ID);
-        tokens.extend_from_slice(prompt);
-        if tokens.len() + max_new + 1 > max_seq {
-            bail!("sequence exceeds cache capacity {max_seq}");
+        // Generation steps below decode one position at a time.
+        if !widths.contains(&1) {
+            bail!(
+                "pipelined engine decodes with width-1 windows, but the \
+                 manifest only lists decode widths {widths:?}"
+            );
         }
 
-        // Prefill positions [0, L-1) in greedy chunks, no exit checks.
-        let l = tokens.len();
-        let mut pos = 0usize;
-        while pos + 1 < l {
-            let remaining = l - 1 - pos;
-            let w = widths
-                .iter()
-                .copied()
-                .filter(|&w| w <= remaining)
-                .max()
-                .unwrap_or(1);
+        let mut tokens = prompt_tokens(prompt, max_new);
+        let max_new = clamp_max_new(tokens.len(), max_new, max_seq)?;
+
+        // Prefill positions [0, L-1): shared greedy chunking, no exit
+        // checks.
+        for (pos, w) in prefill_chunks(&widths, tokens.len())? {
             self.to_first
                 .send(Work::Window {
                     width: w,
@@ -337,7 +342,6 @@ impl PipelinedEngine {
                 })
                 .ok()
                 .context("chain gone")?;
-            pos += w;
         }
 
         // Generation: send the current last token, await the emitted next.
@@ -390,8 +394,10 @@ impl PipelinedEngine {
     }
 
     pub fn shutdown(mut self) {
+        // Stage 0 forwards `Shutdown` down the chain, so every stage exits
+        // on the explicit message even if a `Sender` clone keeps some
+        // stage's inbox open (channel-close is only the fallback).
         let _ = self.to_first.send(Work::Shutdown);
-        // Dropping to_first closes the chain; workers exit on channel close.
         for t in &mut self.threads {
             if let Some(j) = t.join.take() {
                 let _ = j.join();
@@ -409,5 +415,47 @@ impl Generator for PipelinedEngine {
                 (String::new(), 0.0)
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    use crate::runtime::artifacts::Manifest;
+
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Regression (shutdown propagation): `shutdown` must join every
+    /// stage thread even when a clone of the work sender outlives the
+    /// engine — stages exit on the explicit `Shutdown` message flowing
+    /// down the chain, not only on the channel-close cascade.
+    #[test]
+    fn shutdown_joins_with_live_sender_clone() {
+        if !artifacts_root().join("ee-tiny").join("manifest.json").is_file()
+        {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let man =
+            Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+        let state = ModelState::init(man, 1);
+        let eng = PipelinedEngine::new(state, 1.0).unwrap();
+        let extra: Sender<Work> = eng.to_first.clone();
+        let (done_tx, done_rx) = channel::<()>();
+        std::thread::spawn(move || {
+            eng.shutdown();
+            done_tx.send(()).ok();
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_secs(60)).is_ok(),
+            "shutdown hung with a live Sender clone"
+        );
+        drop(extra);
     }
 }

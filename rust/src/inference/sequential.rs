@@ -19,14 +19,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::tokenizer::BOS_ID;
 use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
 use super::common::{
-    confidence_decision, detokenize, is_stop_token, pick_width, ExitStats,
-    GenOutput, ModelState,
+    clamp_max_new, confidence_decision, detokenize, is_stop_token,
+    pick_width, prefill_chunks, prompt_tokens, ExitStats, GenOutput,
+    ModelState,
 };
 
 /// Per-token probe record (Table 4): predictions + confidences at every
@@ -203,15 +203,8 @@ impl SequentialEngine {
         let n_layers = man.model.n_layers;
         let max_seq = man.model.max_seq;
 
-        let mut tokens = Vec::with_capacity(prompt.len() + max_new + 1);
-        tokens.push(BOS_ID);
-        tokens.extend_from_slice(prompt);
-        if tokens.len() + max_new + 1 > max_seq {
-            bail!(
-                "sequence too long: {} + {max_new} exceeds cache capacity {max_seq}",
-                tokens.len()
-            );
-        }
+        let mut tokens = prompt_tokens(prompt, max_new);
+        let max_new = clamp_max_new(tokens.len(), max_new, max_seq)?;
 
         let mut caches: Vec<xla::Literal> = man
             .stages
@@ -219,20 +212,11 @@ impl SequentialEngine {
             .map(|st| HostTensor::zeros(&st.cache_shape).to_literal())
             .collect::<Result<_>>()?;
 
-        // Prefill positions [0, L-1): chunk greedily by available width.
-        let l = tokens.len();
-        let mut pos = 0usize;
-        while pos + 1 < l {
-            let remaining = l - 1 - pos;
-            let w = self
-                .widths
-                .iter()
-                .copied()
-                .filter(|&w| w <= remaining)
-                .max()
-                .unwrap_or(1);
+        // Prefill positions [0, L-1): shared greedy chunking over the
+        // *available* widths (falls back to the smallest one, sliding left
+        // over healed territory, when the manifest lacks small windows).
+        for (pos, w) in prefill_chunks(&self.widths, tokens.len())? {
             self.window_pass(&tokens, pos, w, &mut caches, false, false)?;
-            pos += w;
         }
 
         // Autoregressive loop with KV recomputation.

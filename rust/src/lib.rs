@@ -7,7 +7,8 @@
 //! - **L3 (this crate)** — the coordinator: pipeline-parallel 1F1B training
 //!   with the paper's auxiliary-loss backpropagation (Eq. 2), two
 //!   KV-cache-compatible early-exit inference engines (KV recomputation and
-//!   pipeline-based), a discrete-event pipeline-schedule simulator, and all
+//!   pipeline-based), a multi-request serving layer (engine pool +
+//!   scheduler), a discrete-event pipeline-schedule simulator, and all
 //!   supporting substrates (tokenizer, data pipeline, eval harness,
 //!   metrics, CLI).
 //! - **L2 (python/compile)** — the early-exit GPT model in JAX, AOT-lowered
@@ -25,5 +26,6 @@ pub mod inference;
 pub mod metrics;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod training;
 pub mod util;

@@ -1,11 +1,12 @@
 //! `ee-llm` — launcher for the EE-LLM reproduction.
 //!
 //! Subcommands:
-//!   train      pipeline-parallel 1F1B training with early-exit losses
-//!   generate   early-exit text generation (recompute | pipelined | full)
-//!   eval       run the Figure-8 task suite against a checkpoint
-//!   simulate   pipeline-schedule simulation (Figure 3/7/9, Table 1)
-//!   probe      per-exit confidence table for a prompt (Table 4)
+//!   train       pipeline-parallel 1F1B training with early-exit losses
+//!   generate    early-exit text generation (recompute | pipelined | full)
+//!   eval        run the Figure-8 task suite against a checkpoint
+//!   serve-bench multi-request serving throughput/latency vs pool size
+//!   simulate    pipeline-schedule simulation (Figure 3/7/9, Table 1)
+//!   probe       per-exit confidence table for a prompt (Table 4)
 //!
 //! Run `ee-llm help` for flags.
 
@@ -23,6 +24,9 @@ use eellm::schedule::costs::{CostModel, PAPER_MODELS};
 use eellm::schedule::plan::{EeOptions, Plan};
 use eellm::schedule::report::render_timeline;
 use eellm::schedule::sim::Simulator;
+use eellm::serve::{
+    requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
+};
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 use eellm::util::cli::Args;
 use eellm::util::table::Table;
@@ -30,7 +34,7 @@ use eellm::util::table::Table;
 const USAGE: &str = "\
 ee-llm: large-scale training and inference of early-exit LLMs (reproduction)
 
-USAGE: ee-llm <train|generate|eval|simulate|probe> [--flags]
+USAGE: ee-llm <train|generate|eval|serve-bench|simulate|probe> [--flags]
 
 COMMON FLAGS
   --config <name>        artifact config (default ee-tiny)
@@ -44,6 +48,8 @@ train:     --steps N --microbatches M --lr F --grad-clip F
 generate:  --prompt STR --engine recompute|pipelined|full --threshold F
            --max-new-tokens N --checkpoint PATH
 eval:      --threshold F --checkpoint PATH --examples-per-task N
+serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
+           --policy fifo|spf --threshold F --checkpoint PATH
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
 probe:     --prompt STR --checkpoint PATH --max-new-tokens N
@@ -61,6 +67,7 @@ fn main() {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
         "eval" => cmd_eval(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "simulate" => cmd_simulate(&args),
         "probe" => cmd_probe(&args),
         other => {
@@ -83,6 +90,16 @@ fn load_manifest(cfg_name: &str, artifacts: &std::path::Path) -> Result<Manifest
     })
 }
 
+/// The synthetic world shared by train, eval, and serve-bench — one spec
+/// so their corpora (and thus results) stay comparable.
+fn standard_corpus(seed: u64) -> Corpus {
+    Corpus::build(&CorpusSpec {
+        seed,
+        n_entities: 24,
+        target_bytes: 1 << 21,
+    })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args);
     let man = load_manifest(&cfg.config, &cfg.artifacts_dir)?;
@@ -95,11 +112,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.microbatches
     );
 
-    let corpus = Corpus::build(&CorpusSpec {
-        seed: cfg.seed,
-        n_entities: 24,
-        target_bytes: 1 << 21,
-    });
+    let corpus = standard_corpus(cfg.seed);
     let mut ds = Dataset::from_corpus(
         &corpus,
         man.model.seq,
@@ -233,11 +246,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let icfg = InferenceConfig::from_args(args);
     let n_per = args.usize_or("examples-per-task", 20);
     let state = model_state(args)?;
-    let corpus = Corpus::build(&CorpusSpec {
-        seed: icfg.seed,
-        n_entities: 24,
-        target_bytes: 1 << 21,
-    });
+    let corpus = standard_corpus(icfg.seed);
     let suite = tasks::all_tasks(&corpus, n_per, icfg.seed);
     let mut eng = SequentialEngine::new(state, icfg.threshold)?;
     let mut table = Table::new(
@@ -254,6 +263,55 @@ fn cmd_eval(args: &Args) -> Result<()> {
         ]);
     }
     table.emit("eval");
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let icfg = InferenceConfig::from_args(args);
+    let n_req = args.usize_or("requests", 16);
+    let pool_sizes: Vec<usize> = args
+        .get_or("pool-sizes", "1,2,4")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("bad --pool-sizes"))
+        .collect::<Result<_>>()?;
+    let policy = Policy::parse(&args.get_or("policy", "fifo"))?;
+    let kind = EngineKind::parse(&args.get_or("engine", "recompute"))?;
+    let state = model_state(args)?;
+    let n_layers = state.man.model.n_layers;
+    let corpus = standard_corpus(icfg.seed);
+    let suite = tasks::all_tasks(&corpus, n_req, icfg.seed);
+    let reqs = requests_from_tasks(&suite, n_req, state.man.model.max_seq);
+    println!(
+        "[serve-bench] {n_req} requests, engine {kind:?}, policy {policy:?}, \
+         threshold {}",
+        icfg.threshold
+    );
+    let mut table = Table::new(
+        &format!(
+            "Serving throughput at threshold {} ({policy:?})",
+            icfg.threshold
+        ),
+        &["pool", "requests", "tok/s", "p50 latency", "p95 latency",
+          "mean queue", "early%"],
+    );
+    for &workers in &pool_sizes {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            PoolConfig { workers, engine: kind, threshold: icfg.threshold, policy },
+        );
+        let (_responses, m) = pool.run_batch(reqs.clone())?;
+        pool.shutdown()?;
+        table.row(vec![
+            format!("{workers}"),
+            format!("{}", m.requests),
+            format!("{:.1}", m.throughput_tps()),
+            format!("{:.0}ms", m.p50_latency_seconds * 1e3),
+            format!("{:.0}ms", m.p95_latency_seconds * 1e3),
+            format!("{:.0}ms", m.mean_queue_seconds * 1e3),
+            format!("{:.0}%", 100.0 * m.early_fraction(n_layers)),
+        ]);
+    }
+    table.emit("serve-bench");
     Ok(())
 }
 

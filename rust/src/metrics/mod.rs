@@ -68,6 +68,18 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// Nearest-rank percentile of `samples` (`q` in [0, 1]); 0.0 when empty.
+/// Used by the serving layer for p50/p95 request latency.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
 /// Repeat a closure with warmup and return per-iteration seconds — the
 /// measurement core of the offline bench harness.
 pub fn bench_loop(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
@@ -132,6 +144,15 @@ mod tests {
         assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 0.5), 2.0);
+        assert_eq!(percentile(&v, 0.95), 4.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
     }
 
     #[test]

@@ -279,8 +279,11 @@ impl Manifest {
             Some(e) if e.is_final => {}
             _ => bail!("last stage lacks final exit"),
         }
-        if !self.decode_widths.contains(&1) {
-            bail!("width-1 decode missing");
+        // Any non-empty width set is servable: the sequential engine's
+        // prefill/decode pick from the available widths (the pipelined
+        // engine additionally checks for width 1 at generation time).
+        if self.decode_widths.is_empty() {
+            bail!("manifest lists no decode widths");
         }
         Ok(())
     }

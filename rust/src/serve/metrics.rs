@@ -1,0 +1,106 @@
+//! Aggregate serving metrics: throughput, latency percentiles, queueing,
+//! and merged per-exit usage — the serving-side analogue of the paper's
+//! Figure 8 axes (quality/latency vs. threshold), lifted to a
+//! multi-request batch.
+
+use crate::inference::ExitStats;
+pub use crate::metrics::percentile;
+
+use super::request::ServeResponse;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    /// Generated tokens summed over all requests.
+    pub total_tokens: usize,
+    /// Wall clock of the whole batch (first submit to last completion) —
+    /// the throughput denominator.
+    pub wall_seconds: f64,
+    pub p50_latency_seconds: f64,
+    pub p95_latency_seconds: f64,
+    pub mean_queue_seconds: f64,
+    /// Per-exit usage merged across all requests.
+    pub exits: ExitStats,
+}
+
+impl ServeMetrics {
+    pub fn from_responses(
+        responses: &[ServeResponse],
+        wall_seconds: f64,
+    ) -> ServeMetrics {
+        let lats: Vec<f64> =
+            responses.iter().map(|r| r.total_seconds).collect();
+        let mut exits = ExitStats::default();
+        for r in responses {
+            exits.merge(&r.output.stats);
+        }
+        let n = responses.len().max(1) as f64;
+        ServeMetrics {
+            requests: responses.len(),
+            total_tokens: responses
+                .iter()
+                .map(|r| r.output.tokens.len())
+                .sum(),
+            wall_seconds,
+            p50_latency_seconds: percentile(&lats, 0.50),
+            p95_latency_seconds: percentile(&lats, 0.95),
+            mean_queue_seconds: responses
+                .iter()
+                .map(|r| r.queue_seconds)
+                .sum::<f64>()
+                / n,
+            exits,
+        }
+    }
+
+    /// Aggregate generated tokens per wall-clock second.
+    pub fn throughput_tps(&self) -> f64 {
+        self.total_tokens as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    /// Fraction of tokens emitted at early exits.
+    pub fn early_fraction(&self, n_layers: usize) -> f64 {
+        self.exits.early_fraction(n_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::inference::GenOutput;
+
+    use super::*;
+
+    fn resp(id: u64, n_tokens: usize, total: f64, queue: f64) -> ServeResponse {
+        let mut stats = ExitStats::default();
+        for _ in 0..n_tokens {
+            stats.record(4);
+        }
+        ServeResponse {
+            id,
+            worker: 0,
+            output: GenOutput {
+                tokens: vec![65; n_tokens],
+                text: "a".repeat(n_tokens),
+                seconds: total - queue,
+                stats,
+            },
+            queue_seconds: queue,
+            total_seconds: total,
+        }
+    }
+
+    #[test]
+    fn metrics_aggregate_responses() {
+        let rs = vec![resp(0, 4, 0.2, 0.1), resp(1, 6, 0.4, 0.0)];
+        let m = ServeMetrics::from_responses(&rs, 0.5);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.total_tokens, 10);
+        assert!((m.throughput_tps() - 20.0).abs() < 1e-9);
+        assert_eq!(m.p50_latency_seconds, 0.2);
+        assert_eq!(m.p95_latency_seconds, 0.4);
+        assert!((m.mean_queue_seconds - 0.05).abs() < 1e-12);
+        assert_eq!(m.exits.total(), 10);
+        // Layer 4 == n_layers here: nothing exited early.
+        assert_eq!(m.early_fraction(4), 0.0);
+    }
+}

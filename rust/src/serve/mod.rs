@@ -1,0 +1,34 @@
+//! Multi-request early-exit serving — a request queue + scheduler
+//! multiplexing many concurrent generation requests over a pool of
+//! inference-engine workers.
+//!
+//! The paper's Section 4 inference methods are designed to be
+//! serving-compatible (KV-cache-aware early exits); follow-up work shows
+//! the real-world speedup of early exit only materialises under a
+//! batched, multi-request front-end. This module supplies that front-end
+//! for both engines:
+//!
+//! - [`request`] — request/response types, per-request thresholds, and
+//!   request-set builders over the eval task suite.
+//! - [`scheduler`] — the shared queue with FIFO and shortest-prompt-first
+//!   policies.
+//! - [`pool`] — [`EnginePool`]: N worker threads, each owning a
+//!   [`SequentialEngine`](crate::inference::SequentialEngine) or
+//!   [`PipelinedEngine`](crate::inference::PipelinedEngine) built
+//!   in-thread (the `xla` runtime is `!Send`; only
+//!   [`ModelState`](crate::inference::ModelState) crosses threads).
+//! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
+//!   p50/p95 request latency, queueing, merged per-exit usage.
+//!
+//! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
+//! bench, and `examples/serve_demo.rs`.
+
+pub mod metrics;
+pub mod pool;
+pub mod request;
+pub mod scheduler;
+
+pub use metrics::{percentile, ServeMetrics};
+pub use pool::{EngineKind, EnginePool, PoolConfig};
+pub use request::{requests_from_tasks, ServeRequest, ServeResponse};
+pub use scheduler::{Policy, Scheduler};

@@ -1,0 +1,383 @@
+//! The engine worker pool: N workers, each owning a full inference engine
+//! built *inside* its thread from a [`ModelState`] clone — the `xla`
+//! runtime types are `Rc`-based and `!Send`, so only host-resident state
+//! crosses thread boundaries (the same topology the training workers and
+//! the pipelined engine's stage threads use).
+//!
+//! All workers pull from one [`Scheduler`] queue and report completions
+//! over an mpsc channel. The pool deliberately exposes more than the eval
+//! harness's `Generator` trait (text + seconds): serving metrics need the
+//! token counts and per-exit [`ExitStats`](crate::inference::ExitStats)
+//! carried by [`GenOutput`], so workers drive engines through the
+//! [`PoolEngine`] adapter below.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::inference::{
+    GenOutput, ModelState, PipelinedEngine, SequentialEngine,
+};
+
+use super::metrics::ServeMetrics;
+use super::request::{ServeRequest, ServeResponse};
+use super::scheduler::{Policy, Scheduler};
+
+/// Which engine each pool worker wraps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// [`SequentialEngine`] — KV recomputation ("recompute" on the CLI).
+    Sequential,
+    /// [`PipelinedEngine`] — thread-per-stage KV back-fill.
+    Pipelined,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "recompute" | "sequential" => Ok(EngineKind::Sequential),
+            "pipelined" => Ok(EngineKind::Pipelined),
+            other => {
+                bail!("unknown engine kind {other:?} (recompute|pipelined)")
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    pub workers: usize,
+    pub engine: EngineKind,
+    /// Default exit threshold; requests may override per-request.
+    pub threshold: f32,
+    pub policy: Policy,
+}
+
+/// The engine surface the pool needs beyond `Generator`: token outputs
+/// with exit stats, and per-request threshold updates.
+trait PoolEngine {
+    fn apply_threshold(&mut self, t: f32);
+    fn generate_out(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<GenOutput>;
+    /// Tear down engine-owned resources (threads), if any.
+    fn finish(self: Box<Self>) {}
+}
+
+impl PoolEngine for SequentialEngine {
+    fn apply_threshold(&mut self, t: f32) {
+        self.threshold = t;
+    }
+
+    fn generate_out(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        self.generate_text(prompt, max_new)
+    }
+}
+
+impl PoolEngine for PipelinedEngine {
+    fn apply_threshold(&mut self, t: f32) {
+        self.set_threshold(t);
+    }
+
+    fn generate_out(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        self.generate_text(prompt, max_new)
+    }
+
+    fn finish(self: Box<Self>) {
+        (*self).shutdown();
+    }
+}
+
+enum WorkerEvent {
+    /// Engine built and compiled; the worker is about to start serving.
+    Ready { worker: usize },
+    Done(ServeResponse),
+    /// One request failed; the worker keeps serving.
+    Failed { id: u64, worker: usize, error: String },
+    /// The worker itself died (engine construction failed).
+    Fatal { worker: usize, error: String },
+}
+
+/// A pool of engine workers multiplexing a shared request queue.
+///
+/// Every submitted request produces exactly one `Done`/`Failed` event, and
+/// [`EnginePool::run_batch`] consumes exactly one event per request it
+/// submitted — so batches never see a previous batch's responses. Direct
+/// [`EnginePool::submit`] is for fire-and-forget use only and must not be
+/// mixed with `run_batch` on the same pool.
+pub struct EnginePool {
+    cfg: PoolConfig,
+    sched: Arc<Scheduler>,
+    events: Receiver<WorkerEvent>,
+    /// Events received while waiting for something else (e.g. a `Done`
+    /// arriving during the readiness wait); consumed before `recv`.
+    stash: VecDeque<WorkerEvent>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Workers that have not reported `Fatal`.
+    alive: usize,
+    /// Every live worker has reported `Ready`.
+    ready: bool,
+}
+
+impl EnginePool {
+    /// Spawn `cfg.workers` engine workers over clones of `state`. Engine
+    /// construction (compiling the stage executables) happens inside each
+    /// worker thread; construction failures surface on the next
+    /// [`EnginePool::run_batch`].
+    pub fn new(state: ModelState, cfg: PoolConfig) -> EnginePool {
+        assert!(cfg.workers > 0, "pool needs at least one worker");
+        let sched = Arc::new(Scheduler::new(cfg.policy));
+        let (tx, events) = channel::<WorkerEvent>();
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let sched = Arc::clone(&sched);
+            let tx = tx.clone();
+            let state = state.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-{w}"))
+                .spawn(move || worker_main(w, state, cfg, sched, tx))
+                .expect("spawn serve worker");
+            workers.push(handle);
+        }
+        // Workers hold the only event senders, so `events.recv` errors
+        // out instead of hanging if every worker dies.
+        drop(tx);
+        let alive = workers.len();
+        EnginePool {
+            cfg,
+            sched,
+            events,
+            stash: VecDeque::new(),
+            workers,
+            alive,
+            ready: false,
+        }
+    }
+
+    pub fn config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    /// Enqueue one request (non-blocking). The response event stays in
+    /// the pool's channel; use `run_batch` unless you never read results.
+    pub fn submit(&self, req: ServeRequest) {
+        self.sched.push(req);
+    }
+
+    /// Next event, preferring ones stashed during the readiness wait.
+    fn next_event(&mut self) -> Result<WorkerEvent> {
+        if let Some(e) = self.stash.pop_front() {
+            return Ok(e);
+        }
+        self.events
+            .recv()
+            .ok()
+            .context("all pool workers exited unexpectedly")
+    }
+
+    /// Block until every live worker has built its engine (or died
+    /// trying), so batch wall-clocks measure serving, not compilation.
+    fn wait_ready(&mut self) -> Result<()> {
+        if self.ready {
+            return Ok(());
+        }
+        let mut pending = self.workers.len();
+        let mut last_error = String::new();
+        while pending > 0 {
+            match self.next_event()? {
+                WorkerEvent::Ready { .. } => pending -= 1,
+                WorkerEvent::Fatal { worker, error } => {
+                    pending -= 1;
+                    self.alive -= 1;
+                    eprintln!("[serve] worker {worker} died: {error}");
+                    last_error = error;
+                }
+                other => self.stash.push_back(other),
+            }
+        }
+        if self.alive == 0 {
+            bail!("every pool worker died; last error: {last_error}");
+        }
+        self.ready = true;
+        Ok(())
+    }
+
+    /// Submit a whole request set, wait for every completion, and return
+    /// the responses (sorted by request id) plus aggregate metrics. Any
+    /// failed request fails the whole batch — but only after every
+    /// request is accounted for, so the pool stays reusable.
+    pub fn run_batch(
+        &mut self,
+        reqs: Vec<ServeRequest>,
+    ) -> Result<(Vec<ServeResponse>, ServeMetrics)> {
+        self.wait_ready()?;
+        if self.alive == 0 {
+            bail!("no live pool workers");
+        }
+        let n = reqs.len();
+        let t0 = Instant::now();
+        for r in reqs {
+            self.submit(r);
+        }
+        let mut responses = Vec::with_capacity(n);
+        let mut failures = Vec::new();
+        while responses.len() + failures.len() < n {
+            match self.next_event()? {
+                WorkerEvent::Done(r) => responses.push(r),
+                WorkerEvent::Failed { id, worker, error } => {
+                    failures.push(format!(
+                        "request {id} on worker {worker}: {error}"
+                    ));
+                }
+                WorkerEvent::Fatal { worker, error } => {
+                    self.alive -= 1;
+                    if self.alive == 0 {
+                        bail!(
+                            "every pool worker died with requests \
+                             outstanding; last error (worker {worker}): \
+                             {error}"
+                        );
+                    }
+                    eprintln!("[serve] worker {worker} died: {error}");
+                }
+                WorkerEvent::Ready { .. } => {}
+            }
+        }
+        if !failures.is_empty() {
+            bail!("{} of {n} requests failed: {}", failures.len(),
+                  failures.join("; "));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        responses.sort_by_key(|r| r.id);
+        let metrics = ServeMetrics::from_responses(&responses, wall);
+        Ok((responses, metrics))
+    }
+
+    /// Close the queue, drain, and join every worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.sched.close();
+        for (i, h) in std::mem::take(&mut self.workers)
+            .into_iter()
+            .enumerate()
+        {
+            if h.join().is_err() {
+                bail!("serve worker {i} panicked");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EnginePool {
+    /// Error paths that skip [`EnginePool::shutdown`] must still release
+    /// the workers: closing the queue makes every `Scheduler::pop` return
+    /// `None`, so the (detached) threads drain and exit instead of
+    /// blocking forever on the condvar.
+    fn drop(&mut self) {
+        self.sched.close();
+    }
+}
+
+fn worker_main(
+    worker: usize,
+    state: ModelState,
+    cfg: PoolConfig,
+    sched: Arc<Scheduler>,
+    events: Sender<WorkerEvent>,
+) {
+    let mut engine: Box<dyn PoolEngine> = match build_engine(state, cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            events
+                .send(WorkerEvent::Fatal { worker, error: format!("{e:#}") })
+                .ok();
+            return;
+        }
+    };
+    events.send(WorkerEvent::Ready { worker }).ok();
+    while let Some((req, queue_seconds)) = sched.pop() {
+        engine.apply_threshold(req.threshold.unwrap_or(cfg.threshold));
+        let t0 = Instant::now();
+        // Every popped request must produce exactly one event, even if
+        // the engine panics — otherwise `run_batch` waits forever on the
+        // lost request while other workers keep the channel open.
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                engine.generate_out(&req.prompt, req.max_new)
+            }),
+        );
+        match result {
+            Ok(Ok(output)) => {
+                events
+                    .send(WorkerEvent::Done(ServeResponse {
+                        id: req.id,
+                        worker,
+                        output,
+                        queue_seconds,
+                        total_seconds: queue_seconds
+                            + t0.elapsed().as_secs_f64(),
+                    }))
+                    .ok();
+            }
+            Ok(Err(e)) => {
+                events
+                    .send(WorkerEvent::Failed {
+                        id: req.id,
+                        worker,
+                        error: format!("{e:#}"),
+                    })
+                    .ok();
+            }
+            Err(_) => {
+                events
+                    .send(WorkerEvent::Failed {
+                        id: req.id,
+                        worker,
+                        error: "worker panicked during generation".into(),
+                    })
+                    .ok();
+                // The engine may be in a corrupt state: retire the worker
+                // (dropping the engine tears its threads down via channel
+                // close) instead of serving more requests with it.
+                events
+                    .send(WorkerEvent::Fatal {
+                        worker,
+                        error: "panicked during generation; worker retired"
+                            .into(),
+                    })
+                    .ok();
+                return;
+            }
+        }
+    }
+    engine.finish();
+}
+
+fn build_engine(
+    state: ModelState,
+    cfg: PoolConfig,
+) -> Result<Box<dyn PoolEngine>> {
+    Ok(match cfg.engine {
+        EngineKind::Sequential => Box::new(
+            SequentialEngine::new(state, cfg.threshold)
+                .context("building sequential engine")?,
+        ),
+        EngineKind::Pipelined => Box::new(
+            PipelinedEngine::new(state, cfg.threshold)
+                .context("building pipelined engine")?,
+        ),
+    })
+}

@@ -1,0 +1,120 @@
+//! Serving request/response types and request-set builders.
+
+use crate::data::tasks::EvalTask;
+use crate::inference::GenOutput;
+
+/// One generation request; `id`s are caller-assigned and echoed back in
+/// the response (the pool sorts batch results by id).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    /// Per-request exit threshold; `None` uses the pool default.
+    pub threshold: Option<f32>,
+}
+
+impl ServeRequest {
+    pub fn new(
+        id: u64,
+        prompt: impl Into<String>,
+        max_new: usize,
+    ) -> ServeRequest {
+        ServeRequest { id, prompt: prompt.into(), max_new, threshold: None }
+    }
+
+    pub fn with_threshold(mut self, t: f32) -> ServeRequest {
+        self.threshold = Some(t);
+        self
+    }
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Index of the pool worker that served the request.
+    pub worker: usize,
+    pub output: GenOutput,
+    /// Time the request waited queued before a worker picked it up.
+    pub queue_seconds: f64,
+    /// Queue + service time — the latency a client observes.
+    pub total_seconds: f64,
+}
+
+/// Build an `n`-request set by cycling the task suite's prompts,
+/// round-robin across tasks (for prompt-length diversity), skipping
+/// examples whose prompt + generation budget exceed the KV-cache capacity
+/// (byte tokenizer: one token per byte, plus BOS and slack).
+///
+/// Panics if no example fits — the capacity is then too small to serve
+/// the suite at all.
+pub fn requests_from_tasks(
+    suite: &[EvalTask],
+    n: usize,
+    max_seq: usize,
+) -> Vec<ServeRequest> {
+    let per_task: Vec<Vec<(&String, usize)>> = suite
+        .iter()
+        .map(|t| {
+            t.examples
+                .iter()
+                .filter(|e| e.prompt.len() + t.max_new_tokens + 4 < max_seq)
+                .map(|e| (&e.prompt, t.max_new_tokens))
+                .collect()
+        })
+        .collect();
+    let longest = per_task.iter().map(|v| v.len()).max().unwrap_or(0);
+    let mut flat = Vec::new();
+    for i in 0..longest {
+        for tv in &per_task {
+            if let Some(&(p, m)) = tv.get(i) {
+                flat.push((p, m));
+            }
+        }
+    }
+    assert!(
+        !flat.is_empty(),
+        "no task example fits cache capacity {max_seq}"
+    );
+    (0..n)
+        .map(|i| {
+            let (prompt, max_new) = flat[i % flat.len()];
+            ServeRequest::new(i as u64, prompt.as_str(), max_new)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::synth::{Corpus, CorpusSpec};
+    use crate::data::tasks;
+
+    use super::*;
+
+    #[test]
+    fn request_set_cycles_and_fits_capacity() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 2,
+            n_entities: 8,
+            target_bytes: 20_000,
+        });
+        let suite = tasks::all_tasks(&c, 4, 1);
+        let reqs = requests_from_tasks(&suite, 10, 256);
+        assert_eq!(reqs.len(), 10);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.prompt.len() + r.max_new + 4 < 256, "{r:?}");
+            assert!(r.threshold.is_none());
+        }
+        // Round-robin across tasks: the first few requests are not all
+        // from the same task (prompts differ in shape).
+        assert_ne!(reqs[0].prompt, reqs[1].prompt);
+    }
+
+    #[test]
+    fn per_request_threshold_override() {
+        let r = ServeRequest::new(3, "hi", 8).with_threshold(0.4);
+        assert_eq!(r.threshold, Some(0.4));
+    }
+}

@@ -1,0 +1,194 @@
+//! The serving queue: submitted requests wait here until an engine worker
+//! pops them.
+//!
+//! Two policies:
+//!
+//! - **FIFO** — arrival order; fair, and the baseline any latency claim
+//!   is measured against.
+//! - **Shortest-prompt-first (SPF)** — byte-tokenised prompt length as
+//!   the service-time proxy; the classic mean-latency optimisation when
+//!   request sizes are heterogeneous (long summarisation prompts would
+//!   otherwise head-of-line-block short QA ones).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::request::ServeRequest;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    ShortestPromptFirst,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s {
+            "fifo" => Ok(Policy::Fifo),
+            "spf" | "shortest-prompt-first" => Ok(Policy::ShortestPromptFirst),
+            other => bail!("unknown scheduling policy {other:?} (fifo|spf)"),
+        }
+    }
+}
+
+struct Queued {
+    req: ServeRequest,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct State {
+    pending: VecDeque<Queued>,
+    closed: bool,
+}
+
+/// Thread-safe request queue shared between submitters and pool workers.
+pub struct Scheduler {
+    policy: Policy,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Scheduler {
+        Scheduler {
+            policy,
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Enqueue a request. Panics if the queue was already closed.
+    pub fn push(&self, req: ServeRequest) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "push after close");
+        st.pending.push_back(Queued { req, enqueued: Instant::now() });
+        self.cv.notify_one();
+    }
+
+    /// Number of queued (not yet claimed) requests.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: workers drain what is pending, then `pop` returns
+    /// `None` and they exit.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a request is available (or the queue is closed and
+    /// drained). Returns the request and its queue wait in seconds.
+    pub fn pop(&self) -> Option<(ServeRequest, f64)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(i) = self.select(&st.pending) {
+                let q = st.pending.remove(i).unwrap();
+                return Some((q.req, q.enqueued.elapsed().as_secs_f64()));
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Index of the next request under the configured policy.
+    fn select(&self, pending: &VecDeque<Queued>) -> Option<usize> {
+        if pending.is_empty() {
+            return None;
+        }
+        match self.policy {
+            Policy::Fifo => Some(0),
+            // Ties break by arrival order (stable min over index).
+            Policy::ShortestPromptFirst => (0..pending.len())
+                .min_by_key(|&i| (pending[i].req.prompt.len(), i)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::*;
+
+    fn req(id: u64, prompt: &str) -> ServeRequest {
+        ServeRequest::new(id, prompt, 8)
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order() {
+        let s = Scheduler::new(Policy::Fifo);
+        s.push(req(0, "long prompt here"));
+        s.push(req(1, "x"));
+        s.push(req(2, "mid"));
+        s.close();
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| s.pop().map(|(r, _)| r.id)).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn spf_pops_shortest_prompt_first_with_stable_ties() {
+        let s = Scheduler::new(Policy::ShortestPromptFirst);
+        s.push(req(0, "aaaa"));
+        s.push(req(1, "a"));
+        s.push(req(2, "aa"));
+        s.push(req(3, "a"));
+        s.close();
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| s.pop().map(|(r, _)| r.id)).collect();
+        assert_eq!(ids, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn close_drains_pending_then_ends() {
+        let s = Scheduler::new(Policy::Fifo);
+        s.push(req(0, "a"));
+        s.push(req(1, "b"));
+        assert_eq!(s.len(), 2);
+        s.close();
+        assert_eq!(s.pop().unwrap().0.id, 0);
+        assert_eq!(s.pop().unwrap().0.id, 1);
+        assert!(s.pop().is_none());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn pop_blocks_until_push_and_reports_queue_time() {
+        let s = Arc::new(Scheduler::new(Policy::Fifo));
+        let s2 = Arc::clone(&s);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.push(req(7, "hi"));
+            s2.close();
+        });
+        let (r, q) = s.pop().expect("request");
+        assert_eq!(r.id, 7);
+        assert!(q >= 0.0);
+        assert!(s.pop().is_none());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
+        assert_eq!(Policy::parse("spf").unwrap(), Policy::ShortestPromptFirst);
+        assert!(Policy::parse("lifo").is_err());
+    }
+}

@@ -12,6 +12,9 @@ use eellm::data::dataset::{Dataset, TrainBatch};
 use eellm::data::synth::{Corpus, CorpusSpec};
 use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
 use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    EngineKind, EnginePool, Policy, PoolConfig, ServeRequest,
+};
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
 fn artifacts_root() -> PathBuf {
@@ -145,6 +148,107 @@ fn generation_is_deterministic() {
     let mut eng2 = SequentialEngine::new(state, 0.7).unwrap();
     let c = eng2.generate_text("abc: a b", 12).unwrap();
     assert_eq!(a.tokens, c.tokens);
+}
+
+/// Cross-engine equivalence under the serving layer: at threshold 1.0, N
+/// concurrent requests through the pool must produce byte-identical
+/// outputs to the same prompts run serially through `SequentialEngine`.
+#[test]
+fn pooled_serving_matches_serial_at_threshold_one() {
+    if !artifacts_root().join("ee-tiny").join("manifest.json").is_file() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 9);
+    let prompts = [
+        "the capital of ",
+        "question: what is the ",
+        "count: 3 4 5 ",
+        "abc: a b c d ",
+        "copy: x y |",
+        "3+4=",
+    ];
+
+    // Serial baseline through one SequentialEngine.
+    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
+    let serial: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| seq.generate_text(p, 12).unwrap().tokens)
+        .collect();
+
+    for &workers in &[2usize, 4] {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            PoolConfig {
+                workers,
+                engine: EngineKind::Sequential,
+                threshold: 1.0,
+                // SPF shuffles completion order relative to submission,
+                // exercising the id-based reordering.
+                policy: Policy::ShortestPromptFirst,
+            },
+        );
+        let reqs: Vec<ServeRequest> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ServeRequest::new(i as u64, *p, 12))
+            .collect();
+        let (responses, metrics) = pool.run_batch(reqs).unwrap();
+        pool.shutdown().unwrap();
+        assert_eq!(responses.len(), prompts.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(
+                r.output.tokens, serial[i],
+                "prompt {:?} diverged under pooled serving (pool {workers})",
+                prompts[i]
+            );
+            assert!(r.total_seconds >= r.queue_seconds);
+        }
+        // Threshold 1.0: every token comes from the final exit.
+        assert_eq!(metrics.early_fraction(man.model.n_layers), 0.0);
+        assert!(metrics.total_tokens > 0);
+        assert!(metrics.throughput_tps() > 0.0);
+    }
+}
+
+/// Regression (over-strict capacity check): a prompt that fits must
+/// generate as many tokens as the KV cache allows instead of erroring
+/// when `prompt + max_new` exceeds capacity; an over-long prompt still
+/// errors.
+#[test]
+fn capacity_clamps_instead_of_erroring() {
+    if !artifacts_root().join("ee-tiny").join("manifest.json").is_file() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let max_seq = man.model.max_seq;
+    let state = ModelState::init(man.clone(), 4);
+    // Prompt of max_seq - 4 bytes => max_seq - 3 tokens with BOS, leaving
+    // room for exactly 3 generated tokens.
+    let prompt = "a".repeat(max_seq - 4);
+    let too_long = "a".repeat(max_seq + 8);
+
+    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
+    let out = seq.generate_text(&prompt, 100).unwrap();
+    assert!(
+        (1..=3).contains(&out.tokens.len()),
+        "expected 1..=3 clamped tokens, got {}",
+        out.tokens.len()
+    );
+    assert!(seq.generate_text(&too_long, 4).is_err());
+
+    let mut pipe = PipelinedEngine::new(state, 1.0).unwrap();
+    let out = pipe.generate_text(&prompt, 100).unwrap();
+    assert!(
+        (1..=3).contains(&out.tokens.len()),
+        "expected 1..=3 clamped tokens, got {}",
+        out.tokens.len()
+    );
+    assert!(pipe.generate_text(&too_long, 4).is_err());
+    pipe.shutdown();
 }
 
 #[test]
