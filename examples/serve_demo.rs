@@ -1,16 +1,24 @@
-//! Multi-request serving demo: a pool of early-exit engines multiplexing
-//! a mixed request set with per-request thresholds.
+//! Multi-request serving demo: a pool of early-exit engines continuously
+//! batching a mixed request set, streaming tokens as they are emitted,
+//! with per-request thresholds, priorities, and deadlines.
 //!
 //!     cargo run --release --example serve_demo -- \
 //!         --config ee-tiny --checkpoint artifacts/runs/ee-e2e.eckpt \
-//!         --workers 2 --policy spf --engine recompute
+//!         --workers 2 --concurrent 3 --policy priority --engine recompute
+//!
+//! The event trace printed while the batch runs shows requests
+//! interleaving on each worker (continuous batching) rather than running
+//! back-to-back.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
+use eellm::data::tokenizer::ByteTokenizer;
 use eellm::inference::ModelState;
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    EngineKind, EnginePool, Policy, PoolConfig, ServeRequest,
+    EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
 };
 use eellm::util::cli::Args;
 
@@ -18,7 +26,8 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
     let config = args.get_or("config", "ee-tiny");
     let workers = args.usize_or("workers", 2);
-    let policy = Policy::parse(&args.get_or("policy", "spf"))?;
+    let concurrent = args.usize_or("concurrent", 3);
+    let policy = Policy::parse(&args.get_or("policy", "priority"))?;
     let kind = EngineKind::parse(&args.get_or("engine", "recompute"))?;
     let man = Manifest::load_config(&PathBuf::from("artifacts"), &config)?;
     let n_layers = man.model.n_layers;
@@ -43,39 +52,83 @@ fn main() -> anyhow::Result<()> {
         .enumerate()
         .map(|(i, p)| {
             // Alternate aggressive and conservative per-request
-            // thresholds to show both paths through the pool.
+            // thresholds to show both paths through the pool; give the
+            // last request a high priority and a tight deadline so it
+            // jumps the queue under --policy priority.
             let tau = if i % 2 == 0 { 0.4 } else { 1.0 };
-            ServeRequest::new(i as u64, *p, 24).with_threshold(tau)
+            let mut r =
+                ServeRequest::new(i as u64, *p, 24).with_threshold(tau);
+            if i + 1 == prompts.len() {
+                r = r
+                    .with_priority(10)
+                    .with_deadline(Duration::from_millis(100));
+            }
+            r
         })
         .collect();
 
     let mut pool = EnginePool::new(
         state,
-        PoolConfig { workers, engine: kind, threshold: 0.8, policy },
+        PoolConfig {
+            workers,
+            engine: kind,
+            threshold: 0.8,
+            policy,
+            max_concurrent: concurrent,
+        },
     );
-    let (responses, metrics) = pool.run_batch(reqs)?;
+
+    // Stream: print each request's first token the moment it lands
+    // (the TTFT event), and the interleaved text as it grows.
+    let tok = ByteTokenizer;
+    let mut streams: HashMap<u64, String> = HashMap::new();
+    let out = pool.run_batch_streamed(reqs, |ev| match ev {
+        ServeEvent::Token { id, worker, token, .. } => {
+            let text = streams.entry(*id).or_default();
+            if text.is_empty() {
+                println!("[stream] req {id} first token on worker {worker}");
+            }
+            text.push_str(&tok.decode(&[*token]));
+        }
+        ServeEvent::Done { id } => {
+            println!(
+                "[stream] req {id} done: {:?}",
+                streams.get(id).map(String::as_str).unwrap_or("")
+            );
+        }
+        ServeEvent::Failed { id } => println!("[stream] req {id} FAILED"),
+    })?;
     pool.shutdown()?;
 
-    for r in &responses {
+    for f in &out.failures {
+        eprintln!("{f}");
+    }
+    for r in &out.responses {
         println!(
-            "req {} (worker {}): {:?} [{} tok, queue {:.0}ms, total {:.0}ms]",
+            "req {} (worker {}): {:?} [{} tok, queue {:.0}ms, TTFT {:.0}ms, \
+             total {:.0}ms]",
             r.id,
             r.worker,
             r.output.text,
             r.output.tokens.len(),
             r.queue_seconds * 1e3,
+            r.ttft_seconds * 1e3,
             r.total_seconds * 1e3,
         );
     }
+    let m = &out.metrics;
     println!(
-        "{} requests | {:.1} tok/s | p50 {:.0}ms p95 {:.0}ms | early {:.0}% \
-         | exits {:?}",
-        metrics.requests,
-        metrics.throughput_tps(),
-        metrics.p50_latency_seconds * 1e3,
-        metrics.p95_latency_seconds * 1e3,
-        100.0 * metrics.early_fraction(n_layers),
-        metrics.exits.counts,
+        "{} requests | {:.1} tok/s | p50 {:.0}ms p95 {:.0}ms | TTFT p50 \
+         {:.0}ms p95 {:.0}ms | tok gap p50 {:.1}ms | early {:.0}% | exits {:?}",
+        m.requests,
+        m.throughput_tps(),
+        m.p50_latency_seconds * 1e3,
+        m.p95_latency_seconds * 1e3,
+        m.p50_ttft_seconds * 1e3,
+        m.p95_ttft_seconds * 1e3,
+        m.p50_token_gap_seconds * 1e3,
+        100.0 * m.early_fraction(n_layers),
+        m.exits.counts,
     );
     Ok(())
 }

@@ -32,7 +32,7 @@ fn main() {
     let mut table = Table::new(
         "Serving throughput vs pool size and exit threshold",
         &["pool", "threshold", "tok/s", "p50 latency", "p95 latency",
-          "mean queue", "early%"],
+          "p50 TTFT", "p95 TTFT", "p50 tok gap", "early%"],
     );
 
     // Mean throughput per pool size (over thresholds) for the scaling
@@ -48,21 +48,32 @@ fn main() {
                     engine: EngineKind::Sequential,
                     threshold: tau,
                     policy: Policy::ShortestPromptFirst,
+                    max_concurrent: 4,
                 },
             );
-            let (_resps, m) = pool.run_batch(reqs.clone()).expect("batch");
+            let out = pool.run_batch(reqs.clone()).expect("batch");
             pool.shutdown().expect("shutdown");
+            assert!(
+                out.failures.is_empty(),
+                "requests failed: {:?}",
+                out.failures
+            );
+            let m = &out.metrics;
             tput[pi] += m.throughput_tps() / thresholds.len() as f64;
             if workers == *pool_sizes.last().unwrap() {
                 early[ti] = m.early_fraction(n_layers);
             }
+            // TTFT must be a lower bound on full-request latency.
+            assert!(m.p50_ttft_seconds <= m.p50_latency_seconds + 1e-9);
             table.row(vec![
                 format!("{workers}"),
                 format!("{tau}"),
                 format!("{:.1}", m.throughput_tps()),
                 format!("{:.0}ms", m.p50_latency_seconds * 1e3),
                 format!("{:.0}ms", m.p95_latency_seconds * 1e3),
-                format!("{:.0}ms", m.mean_queue_seconds * 1e3),
+                format!("{:.0}ms", m.p50_ttft_seconds * 1e3),
+                format!("{:.0}ms", m.p95_ttft_seconds * 1e3),
+                format!("{:.1}ms", m.p50_token_gap_seconds * 1e3),
                 format!("{:.0}%", 100.0 * m.early_fraction(n_layers)),
             ]);
         }

@@ -291,6 +291,60 @@ mod tests {
         assert!(prefill_chunks(&[], 5).is_err());
     }
 
+    /// Property: for arbitrary width sets and buffer lengths, every
+    /// prefill plan either errors (only legal when even the smallest
+    /// width cannot fit) or covers every position in [0, l-1) with
+    /// windows that stay inside the token buffer.
+    #[test]
+    fn prefill_chunks_cover_every_position_for_arbitrary_widths() {
+        use crate::util::proptest;
+
+        proptest::check("prefill_chunks coverage", 256, |rng| {
+            let n_widths = rng.range(1, 5);
+            let mut widths: Vec<usize> =
+                (0..n_widths).map(|_| rng.range(1, 17)).collect();
+            widths.sort();
+            widths.dedup();
+            let l = rng.range(0, 40);
+            let chunks = match prefill_chunks(&widths, l) {
+                Err(_) => {
+                    let wmin = *widths.iter().min().unwrap();
+                    if l >= 2 && wmin <= l {
+                        return Err(format!(
+                            "error despite a fitting width: widths \
+                             {widths:?} l {l}"
+                        ));
+                    }
+                    return Ok(());
+                }
+                Ok(c) => c,
+            };
+            let mut covered = vec![false; l.max(1)];
+            for &(pos, w) in &chunks {
+                if pos + w > l {
+                    return Err(format!(
+                        "window {pos}+{w} out of bounds (l {l}, widths \
+                         {widths:?})"
+                    ));
+                }
+                for c in covered.iter_mut().skip(pos).take(w) {
+                    *c = true;
+                }
+            }
+            if let Some(i) = covered
+                .iter()
+                .take(l.saturating_sub(1))
+                .position(|&c| !c)
+            {
+                return Err(format!(
+                    "position {i} uncovered (l {l}, widths {widths:?}, \
+                     chunks {chunks:?})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn exit_stats_merge_accumulates() {
         let mut a = ExitStats::default();

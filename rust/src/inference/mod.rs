@@ -18,6 +18,13 @@
 //! Exit decisions use the paper's confidence rule (max softmax probability
 //! >= threshold) at stage-entry exits (Optimization-2 placement).
 //!
+//! Both engines drive the same resumable decode core: a [`DecodeSession`]
+//! ([`session`]) advances one token per `step()` over a [`DecodeBackend`]
+//! (implemented by each engine), which is what lets the serving layer
+//! interleave many requests over one engine (continuous batching) and
+//! stream tokens as they are emitted. `generate_tokens` on either engine
+//! is just a session drained to completion.
+//!
 //! [`probe`] reproduces Table 4: per-exit predictions + confidences for
 //! every generated token.
 
@@ -25,7 +32,12 @@ pub mod common;
 pub mod pipelined;
 pub mod probe;
 pub mod sequential;
+pub mod session;
 
 pub use common::{ExitStats, GenOutput, ModelState};
 pub use pipelined::PipelinedEngine;
 pub use sequential::SequentialEngine;
+pub use session::{
+    DecodeBackend, DecodeSession, DoneReason, SessionCaches, StepEvent,
+    WindowOutcome,
+};

@@ -18,7 +18,6 @@
 //! forward time of stages 0..s (plus queueing), not of the full model.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -26,9 +25,9 @@ use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
-use super::common::{
-    clamp_max_new, confidence_decision, detokenize, is_stop_token,
-    prefill_chunks, prompt_tokens, ExitStats, GenOutput, ModelState,
+use super::common::{confidence_decision, GenOutput, ModelState};
+use super::session::{
+    DecodeBackend, DecodeSession, SessionCaches, WindowOutcome,
 };
 
 /// Work flowing down the stage chain.
@@ -68,6 +67,10 @@ pub struct PipelinedEngine {
     threads: Vec<StageThread>,
     /// Shared threshold cell read by stage threads (set before each run).
     threshold_tx: Vec<Sender<f32>>,
+    /// Bumped on every session start (chain reset); window passes from a
+    /// superseded session are refused instead of silently decoding
+    /// against the reset stage caches.
+    session_generation: u64,
 }
 
 struct StageWorker {
@@ -284,6 +287,7 @@ impl PipelinedEngine {
             from_last,
             threads,
             threshold_tx,
+            session_generation: 0,
         })
     }
 
@@ -305,83 +309,15 @@ impl PipelinedEngine {
         }
     }
 
+    /// Generate up to `max_new` tokens — a [`DecodeSession`] drained to
+    /// completion over the stage chain.
     pub fn generate_tokens(
         &mut self,
         prompt: &[i32],
         max_new: usize,
     ) -> Result<GenOutput> {
-        // Thresholds are picked up at Reset; send first.
-        self.reset()?;
-        let t0 = Instant::now();
-        let man = &self.state.man;
-        let max_seq = man.model.max_seq;
-        let widths = man.decode_widths.clone();
-
-        // Generation steps below decode one position at a time.
-        if !widths.contains(&1) {
-            bail!(
-                "pipelined engine decodes with width-1 windows, but the \
-                 manifest only lists decode widths {widths:?}"
-            );
-        }
-
-        let mut tokens = prompt_tokens(prompt, max_new);
-        let max_new = clamp_max_new(tokens.len(), max_new, max_seq)?;
-
-        // Prefill positions [0, L-1): shared greedy chunking, no exit
-        // checks.
-        for (pos, w) in prefill_chunks(&widths, tokens.len())? {
-            self.to_first
-                .send(Work::Window {
-                    width: w,
-                    pos0: pos,
-                    tokens: tokens[pos..pos + w].to_vec(),
-                    hidden: None,
-                    exited: true, // no emission
-                    check_exits: false,
-                })
-                .ok()
-                .context("chain gone")?;
-        }
-
-        // Generation: send the current last token, await the emitted next.
-        let mut stats = ExitStats::default();
-        let mut generated = Vec::new();
-        for _ in 0..max_new {
-            let n = tokens.len() - 1;
-            if n + 1 >= max_seq {
-                break;
-            }
-            self.to_first
-                .send(Work::Window {
-                    width: 1,
-                    pos0: n,
-                    tokens: vec![tokens[n]],
-                    hidden: None,
-                    exited: false,
-                    check_exits: true,
-                })
-                .ok()
-                .context("chain gone")?;
-            match self.from_last.recv().context("token")? {
-                ToLeader::Token { token, exit_layer } => {
-                    stats.record(exit_layer);
-                    tokens.push(token);
-                    generated.push(token);
-                    if is_stop_token(token) {
-                        break;
-                    }
-                }
-                ToLeader::ResetDone => bail!("unexpected reset ack"),
-            }
-        }
-
-        Ok(GenOutput {
-            text: detokenize(&generated),
-            tokens: generated,
-            seconds: t0.elapsed().as_secs_f64(),
-            stats,
-        })
+        let mut session = DecodeSession::new(self, prompt, max_new)?;
+        session.drain(self)
     }
 
     pub fn generate_text(
@@ -403,6 +339,99 @@ impl PipelinedEngine {
                 let _ = j.join();
             }
         }
+    }
+}
+
+impl DecodeBackend for PipelinedEngine {
+    /// Decode state lives in the stage threads, so a fresh session resets
+    /// the whole chain — and only one session may be live at a time.
+    /// Thresholds set via [`PipelinedEngine::set_threshold`] are picked up
+    /// by the stages during this reset.
+    fn fresh_caches(&mut self) -> Result<SessionCaches> {
+        let widths = &self.state.man.decode_widths;
+        // Generation steps decode one position at a time.
+        if !widths.contains(&1) {
+            bail!(
+                "pipelined engine decodes with width-1 windows, but the \
+                 manifest only lists decode widths {widths:?}"
+            );
+        }
+        self.reset()?;
+        self.session_generation += 1;
+        Ok(SessionCaches {
+            caches: Vec::new(),
+            generation: self.session_generation,
+        })
+    }
+
+    /// Prefill windows (`emit` false) are fire-and-forget KV fills; the
+    /// stage FIFOs serialise them before the first generation step.
+    /// Generation windows await the emitted token from the chain. Exit
+    /// checks ride on `emit` exactly as the monolithic loop did: the
+    /// back-fill design never suspends exits, so `allow_exit` (a
+    /// recompute-deficit concern) is ignored.
+    fn run_window(
+        &mut self,
+        caches: &mut SessionCaches,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        _allow_exit: bool,
+        emit: bool,
+    ) -> Result<WindowOutcome> {
+        if caches.generation != self.session_generation {
+            bail!(
+                "stale decode session: a newer session has reset this \
+                 pipelined engine (it supports one live session at a time)"
+            );
+        }
+        let p = self.state.man.stages.len();
+        self.to_first
+            .send(Work::Window {
+                width,
+                pos0,
+                tokens: tokens[pos0..pos0 + width].to_vec(),
+                hidden: None,
+                exited: !emit, // prefill wants no emission
+                check_exits: emit,
+            })
+            .ok()
+            .context("chain gone")?;
+        if !emit {
+            return Ok(WindowOutcome { token: -1, exit_layer: 0, stages_run: p });
+        }
+        match self.from_last.recv().context("token")? {
+            ToLeader::Token { token, exit_layer } => {
+                // KV back-fill always completes through every stage, so
+                // the session never accrues a deficit.
+                Ok(WindowOutcome { token, exit_layer, stages_run: p })
+            }
+            ToLeader::ResetDone => bail!("unexpected reset ack"),
+        }
+    }
+
+    fn decode_widths(&self) -> &[usize] {
+        &self.state.man.decode_widths
+    }
+
+    fn max_seq(&self) -> usize {
+        self.state.man.model.max_seq
+    }
+
+    fn n_stages(&self) -> usize {
+        self.state.man.stages.len()
+    }
+
+    fn exit_threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    fn tracks_deficit(&self) -> bool {
+        false
+    }
+
+    fn max_live_sessions(&self) -> usize {
+        1
     }
 }
 

@@ -15,18 +15,15 @@
 //! python/tests/test_decode.py), so this only costs compute — the batching
 //! effect the paper relies on.
 
-use std::time::Instant;
-
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
-use super::common::{
-    clamp_max_new, confidence_decision, detokenize, is_stop_token,
-    pick_width, prefill_chunks, prompt_tokens, ExitStats, GenOutput,
-    ModelState,
+use super::common::{confidence_decision, GenOutput, ModelState};
+use super::session::{
+    DecodeBackend, DecodeSession, SessionCaches, WindowOutcome,
 };
 
 /// Per-token probe record (Table 4): predictions + confidences at every
@@ -191,76 +188,15 @@ impl SequentialEngine {
     }
 
     /// Generate up to `max_new` tokens after `prompt` (token ids, BOS
-    /// prepended automatically).
+    /// prepended automatically) — a [`DecodeSession`] drained to
+    /// completion.
     pub fn generate_tokens(
         &mut self,
         prompt: &[i32],
         max_new: usize,
     ) -> Result<GenOutput> {
-        let t0 = Instant::now();
-        let man = self.state.man.clone();
-        let p = man.stages.len();
-        let n_layers = man.model.n_layers;
-        let max_seq = man.model.max_seq;
-
-        let mut tokens = prompt_tokens(prompt, max_new);
-        let max_new = clamp_max_new(tokens.len(), max_new, max_seq)?;
-
-        let mut caches: Vec<xla::Literal> = man
-            .stages
-            .iter()
-            .map(|st| HostTensor::zeros(&st.cache_shape).to_literal())
-            .collect::<Result<_>>()?;
-
-        // Prefill positions [0, L-1): shared greedy chunking over the
-        // *available* widths (falls back to the smallest one, sliding left
-        // over healed territory, when the manifest lacks small windows).
-        for (pos, w) in prefill_chunks(&self.widths, tokens.len())? {
-            self.window_pass(&tokens, pos, w, &mut caches, false, false)?;
-        }
-
-        // Autoregressive loop with KV recomputation.
-        let mut stats = ExitStats::default();
-        let mut deficit = 0usize; // trailing positions healed < P stages
-        let mut generated = Vec::new();
-        for _ in 0..max_new {
-            let n = tokens.len() - 1; // current position (has a token)
-            if n + 1 >= max_seq {
-                break;
-            }
-            let need = deficit + 1;
-            let width = match pick_width(&self.widths, need, n) {
-                Some(w) => w,
-                None => bail!("no decode width fits need {need} at pos {n}"),
-            };
-            // Exit eligibility: after exiting the deficit becomes `need`,
-            // so the *next* pass needs a window of need+1 — suspend early
-            // exits when that would not fit (forced full-model pass).
-            let eligible = self.threshold < 1.0
-                && pick_width(&self.widths, need + 1, n + 1).is_some();
-            if !eligible && self.threshold < 1.0 {
-                stats.forced_full += 1;
-            }
-            let pos0 = n + 1 - width;
-            let (tok, exit_layer, stages_run) = self.window_pass(
-                &tokens, pos0, width, &mut caches, eligible, true,
-            )?;
-            deficit = if stages_run == p { 0 } else { need };
-            stats.record(exit_layer);
-            let _ = n_layers;
-            tokens.push(tok);
-            generated.push(tok);
-            if is_stop_token(tok) {
-                break;
-            }
-        }
-
-        Ok(GenOutput {
-            text: detokenize(&generated),
-            tokens: generated,
-            seconds: t0.elapsed().as_secs_f64(),
-            stats,
-        })
+        let mut session = DecodeSession::new(self, prompt, max_new)?;
+        session.drain(self)
     }
 
     pub fn generate_text(
@@ -270,6 +206,68 @@ impl SequentialEngine {
     ) -> Result<GenOutput> {
         let ids = crate::data::tokenizer::ByteTokenizer.encode(prompt);
         self.generate_tokens(&ids, max_new)
+    }
+}
+
+impl DecodeBackend for SequentialEngine {
+    /// One zeroed KV cache per stage, owned by the session — so many
+    /// sessions can be live on one engine (continuous batching).
+    fn fresh_caches(&mut self) -> Result<SessionCaches> {
+        Ok(SessionCaches {
+            caches: self
+                .state
+                .man
+                .stages
+                .iter()
+                .map(|st| HostTensor::zeros(&st.cache_shape).to_literal())
+                .collect::<Result<Vec<_>>>()?,
+            // All decode state is session-owned; generations are moot.
+            generation: 0,
+        })
+    }
+
+    fn run_window(
+        &mut self,
+        caches: &mut SessionCaches,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        allow_exit: bool,
+        emit: bool,
+    ) -> Result<WindowOutcome> {
+        let (token, exit_layer, stages_run) = self.window_pass(
+            tokens,
+            pos0,
+            width,
+            &mut caches.caches,
+            allow_exit,
+            emit,
+        )?;
+        Ok(WindowOutcome { token, exit_layer, stages_run })
+    }
+
+    fn decode_widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    fn max_seq(&self) -> usize {
+        self.state.man.model.max_seq
+    }
+
+    fn n_stages(&self) -> usize {
+        self.state.man.stages.len()
+    }
+
+    fn exit_threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    fn tracks_deficit(&self) -> bool {
+        true
+    }
+
+    fn max_live_sessions(&self) -> usize {
+        usize::MAX
     }
 }
 

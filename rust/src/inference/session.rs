@@ -1,0 +1,330 @@
+//! Resumable per-token decode sessions — the step-based core of both
+//! inference engines and the serving layer.
+//!
+//! A [`DecodeSession`] owns everything that used to live on the stack of a
+//! monolithic `generate_tokens` loop: the token buffer, per-session KV
+//! caches, the recomputation deficit, per-exit statistics, and the
+//! stop/budget/capacity checks. It advances one token per [`step`] call,
+//! so a caller can interleave many sessions over one engine (continuous
+//! batching), stream tokens as they are emitted, or simply [`drain`] to
+//! reproduce the old blocking behaviour.
+//!
+//! The engine side of the split is [`DecodeBackend`]: the minimal surface
+//! a session needs — fresh caches, one window pass, and static model
+//! facts. `SequentialEngine` implements it with host-side per-session
+//! caches (KV recomputation, Section 4 / Appendix D.3), so arbitrarily
+//! many of its sessions can be live at once; `PipelinedEngine` keeps
+//! decode state in its stage threads and therefore reports a single live
+//! session ([`DecodeBackend::max_live_sessions`]).
+//!
+//! [`step`]: DecodeSession::step
+//! [`drain`]: DecodeSession::drain
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::common::{
+    clamp_max_new, detokenize, is_stop_token, pick_width, prefill_chunks,
+    prompt_tokens, ExitStats, GenOutput,
+};
+
+/// Per-session decode state handed out by a backend.
+pub struct SessionCaches {
+    /// Host-side per-session KV caches (the sequential engine: one
+    /// literal per stage). Backends whose decode state lives elsewhere
+    /// (the pipelined engine's stage threads) leave this empty.
+    pub caches: Vec<xla::Literal>,
+    /// Generation stamp for backends with engine-resident state: the
+    /// pipelined engine bumps its counter on every
+    /// [`DecodeBackend::fresh_caches`] (which resets the stage chain)
+    /// and refuses window passes from a stale generation — starting a
+    /// second session on such a backend invalidates the first with an
+    /// error instead of silently decoding against reset caches.
+    /// Backends with fully session-owned state ignore it.
+    pub generation: u64,
+}
+
+/// Result of one decode window pass.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowOutcome {
+    /// Emitted token (-1 for pure prefill passes).
+    pub token: i32,
+    /// Exit layer the token came from (final layer when no early exit).
+    pub exit_layer: usize,
+    /// Stages the pass ran; a pass covering all stages clears the
+    /// recomputation deficit.
+    pub stages_run: usize,
+}
+
+/// The engine surface a [`DecodeSession`] drives. Both engines implement
+/// this, which keeps every caller — `generate_tokens`, the serving pool,
+/// the eval harness — on the one audited decode path.
+pub trait DecodeBackend {
+    /// Fresh per-session caches; called once when a session is created.
+    /// Backends with engine-resident state use this to reset it.
+    fn fresh_caches(&mut self) -> Result<SessionCaches>;
+
+    /// Run one decode window over `tokens[pos0..pos0 + width]`.
+    ///
+    /// `allow_exit` gates early-exit checks (false during prefill and
+    /// forced full-model passes); `emit` is false for pure prefill
+    /// passes, which run all stages and emit no token.
+    #[allow(clippy::too_many_arguments)]
+    fn run_window(
+        &mut self,
+        caches: &mut SessionCaches,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        allow_exit: bool,
+        emit: bool,
+    ) -> Result<WindowOutcome>;
+
+    /// Decode window widths available in the manifest.
+    fn decode_widths(&self) -> &[usize];
+
+    /// KV-cache capacity in positions.
+    fn max_seq(&self) -> usize;
+
+    /// Number of pipeline stages.
+    fn n_stages(&self) -> usize;
+
+    /// Current confidence threshold for early exits.
+    fn exit_threshold(&self) -> f32;
+
+    /// Whether early-exited tokens leave deep-layer KV entries missing
+    /// that the session must track and heal (KV recomputation). Backends
+    /// that back-fill in band (the pipelined engine) return false and
+    /// always decode width-1 windows.
+    fn tracks_deficit(&self) -> bool;
+
+    /// How many sessions may be live on this backend at once.
+    fn max_live_sessions(&self) -> usize;
+}
+
+/// Why a session finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DoneReason {
+    /// A stop token (EOS/BOS) was emitted.
+    Stop,
+    /// The `max_new` token budget is exhausted.
+    Budget,
+    /// The KV cache has no room for another position.
+    CacheFull,
+}
+
+/// Result of one [`DecodeSession::step`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepEvent {
+    /// One token was emitted at `exit_layer`; `done` is set when this
+    /// token ends the session (stop token or last of the budget).
+    Token {
+        token: i32,
+        exit_layer: usize,
+        done: Option<DoneReason>,
+    },
+    /// The session ended without emitting a token this step (budget or
+    /// capacity exhausted before decoding). Also returned by every call
+    /// after the session is done.
+    Finished(DoneReason),
+}
+
+/// Resumable state of one generation request.
+///
+/// The session does not borrow its backend; every call takes it
+/// explicitly, so a pool worker can hold many sessions beside one engine
+/// and round-robin [`DecodeSession::step`] across them.
+pub struct DecodeSession {
+    tokens: Vec<i32>,
+    max_new: usize,
+    caches: SessionCaches,
+    /// Trailing positions healed by fewer than all stages (KV
+    /// recomputation backends only).
+    deficit: usize,
+    stats: ExitStats,
+    generated: Vec<i32>,
+    done: Option<DoneReason>,
+    prefilled: bool,
+    started: Instant,
+    seconds: f64,
+}
+
+impl DecodeSession {
+    /// Build a session for `prompt` (token ids; BOS prepended), clamping
+    /// `max_new` to the KV-cache capacity. Errors when the prompt itself
+    /// does not fit.
+    pub fn new(
+        backend: &mut dyn DecodeBackend,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<DecodeSession> {
+        let tokens = prompt_tokens(prompt, max_new);
+        let max_new = clamp_max_new(tokens.len(), max_new, backend.max_seq())?;
+        let caches = backend.fresh_caches()?;
+        Ok(DecodeSession {
+            tokens,
+            max_new,
+            caches,
+            deficit: 0,
+            stats: ExitStats::default(),
+            generated: Vec::new(),
+            done: if max_new == 0 { Some(DoneReason::Budget) } else { None },
+            prefilled: false,
+            started: Instant::now(),
+            seconds: 0.0,
+        })
+    }
+
+    /// [`DecodeSession::new`] over byte-tokenised text.
+    pub fn new_text(
+        backend: &mut dyn DecodeBackend,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<DecodeSession> {
+        let ids = crate::data::tokenizer::ByteTokenizer.encode(prompt);
+        DecodeSession::new(backend, &ids, max_new)
+    }
+
+    /// Prefill positions `[0, L-1)` of the prompt: shared greedy chunking
+    /// over the available widths, no exit checks. Idempotent; a no-op for
+    /// sessions that are already done (zero-budget prompts).
+    pub fn prefill(&mut self, backend: &mut dyn DecodeBackend) -> Result<()> {
+        if self.prefilled || self.done.is_some() {
+            self.prefilled = true;
+            return Ok(());
+        }
+        let chunks =
+            prefill_chunks(backend.decode_widths(), self.tokens.len())?;
+        for (pos, w) in chunks {
+            backend.run_window(
+                &mut self.caches,
+                &self.tokens,
+                pos,
+                w,
+                false,
+                false,
+            )?;
+        }
+        self.prefilled = true;
+        Ok(())
+    }
+
+    /// Decode one token. Returns [`StepEvent::Finished`] (idempotently)
+    /// once the session is done.
+    pub fn step(
+        &mut self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<StepEvent> {
+        if let Some(r) = self.done {
+            return Ok(StepEvent::Finished(r));
+        }
+        ensure!(self.prefilled, "DecodeSession::step before prefill");
+        if self.generated.len() >= self.max_new {
+            return Ok(StepEvent::Finished(self.finish(DoneReason::Budget)));
+        }
+        let n = self.tokens.len() - 1; // current position (has a token)
+        if n + 1 >= backend.max_seq() {
+            return Ok(StepEvent::Finished(self.finish(DoneReason::CacheFull)));
+        }
+
+        let p = backend.n_stages();
+        let (width, allow_exit) = if backend.tracks_deficit() {
+            let need = self.deficit + 1;
+            let width = pick_width(backend.decode_widths(), need, n)
+                .with_context(|| {
+                    format!("no decode width fits need {need} at pos {n}")
+                })?;
+            // Exit eligibility: after exiting, the deficit becomes `need`,
+            // so the *next* pass needs a window of need + 1 — suspend
+            // early exits when that would not fit (the paper's forced
+            // full-model pass).
+            let eligible = backend.exit_threshold() < 1.0
+                && pick_width(backend.decode_widths(), need + 1, n + 1)
+                    .is_some();
+            if !eligible && backend.exit_threshold() < 1.0 {
+                self.stats.forced_full += 1;
+            }
+            (width, eligible)
+        } else {
+            // In-band back-fill: no deficit, one position per pass.
+            (1, true)
+        };
+        let pos0 = n + 1 - width;
+        let out = backend.run_window(
+            &mut self.caches,
+            &self.tokens,
+            pos0,
+            width,
+            allow_exit,
+            true,
+        )?;
+        if backend.tracks_deficit() {
+            self.deficit =
+                if out.stages_run == p { 0 } else { self.deficit + 1 };
+        }
+        self.stats.record(out.exit_layer);
+        self.tokens.push(out.token);
+        self.generated.push(out.token);
+        let done = if is_stop_token(out.token) {
+            Some(self.finish(DoneReason::Stop))
+        } else if self.generated.len() >= self.max_new {
+            Some(self.finish(DoneReason::Budget))
+        } else {
+            None
+        };
+        Ok(StepEvent::Token { token: out.token, exit_layer: out.exit_layer, done })
+    }
+
+    /// Prefill, then step to completion — the serial path
+    /// `generate_tokens` collapses to.
+    pub fn drain(
+        &mut self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<GenOutput> {
+        self.prefill(backend)?;
+        while !self.is_done() {
+            self.step(backend)?;
+        }
+        Ok(self.output())
+    }
+
+    fn finish(&mut self, reason: DoneReason) -> DoneReason {
+        if self.done.is_none() {
+            self.done = Some(reason);
+            self.seconds = self.started.elapsed().as_secs_f64();
+        }
+        reason
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done.is_some()
+    }
+
+    pub fn done_reason(&self) -> Option<DoneReason> {
+        self.done
+    }
+
+    /// Tokens generated so far.
+    pub fn generated(&self) -> &[i32] {
+        &self.generated
+    }
+
+    /// Snapshot of the generation result (final once [`is_done`] is
+    /// true). `seconds` is wall time since the session was created — under
+    /// interleaved serving it includes time spent stepping other sessions.
+    ///
+    /// [`is_done`]: DecodeSession::is_done
+    pub fn output(&self) -> GenOutput {
+        GenOutput {
+            text: detokenize(&self.generated),
+            tokens: self.generated.clone(),
+            seconds: if self.done.is_some() {
+                self.seconds
+            } else {
+                self.started.elapsed().as_secs_f64()
+            },
+            stats: self.stats.clone(),
+        }
+    }
+}

@@ -49,7 +49,8 @@ generate:  --prompt STR --engine recompute|pipelined|full --threshold F
            --max-new-tokens N --checkpoint PATH
 eval:      --threshold F --checkpoint PATH --examples-per-task N
 serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
-           --policy fifo|spf --threshold F --checkpoint PATH
+           --policy fifo|spf|priority --concurrent N (live sessions per
+           worker, continuous batching) --threshold F --checkpoint PATH
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
 probe:     --prompt STR --checkpoint PATH --max-new-tokens N
@@ -276,6 +277,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let policy = Policy::parse(&args.get_or("policy", "fifo"))?;
     let kind = EngineKind::parse(&args.get_or("engine", "recompute"))?;
+    let concurrent = args.usize_or("concurrent", 4);
     let state = model_state(args)?;
     let n_layers = state.man.model.n_layers;
     let corpus = standard_corpus(icfg.seed);
@@ -283,7 +285,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let reqs = requests_from_tasks(&suite, n_req, state.man.model.max_seq);
     println!(
         "[serve-bench] {n_req} requests, engine {kind:?}, policy {policy:?}, \
-         threshold {}",
+         threshold {}, {concurrent} live sessions/worker",
         icfg.threshold
     );
     let mut table = Table::new(
@@ -292,21 +294,34 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             icfg.threshold
         ),
         &["pool", "requests", "tok/s", "p50 latency", "p95 latency",
-          "mean queue", "early%"],
+          "p50 TTFT", "p95 TTFT", "p50 tok gap", "mean queue", "early%"],
     );
     for &workers in &pool_sizes {
         let mut pool = EnginePool::new(
             state.clone(),
-            PoolConfig { workers, engine: kind, threshold: icfg.threshold, policy },
+            PoolConfig {
+                workers,
+                engine: kind,
+                threshold: icfg.threshold,
+                policy,
+                max_concurrent: concurrent,
+            },
         );
-        let (_responses, m) = pool.run_batch(reqs.clone())?;
+        let out = pool.run_batch(reqs.clone())?;
         pool.shutdown()?;
+        for f in &out.failures {
+            eprintln!("[serve-bench] {f}");
+        }
+        let m = &out.metrics;
         table.row(vec![
             format!("{workers}"),
             format!("{}", m.requests),
             format!("{:.1}", m.throughput_tps()),
             format!("{:.0}ms", m.p50_latency_seconds * 1e3),
             format!("{:.0}ms", m.p95_latency_seconds * 1e3),
+            format!("{:.0}ms", m.p50_ttft_seconds * 1e3),
+            format!("{:.0}ms", m.p95_ttft_seconds * 1e3),
+            format!("{:.1}ms", m.p50_token_gap_seconds * 1e3),
             format!("{:.0}ms", m.mean_queue_seconds * 1e3),
             format!("{:.0}%", 100.0 * m.early_fraction(n_layers)),
         ]);

@@ -1,7 +1,7 @@
 //! Aggregate serving metrics: throughput, latency percentiles, queueing,
-//! and merged per-exit usage — the serving-side analogue of the paper's
-//! Figure 8 axes (quality/latency vs. threshold), lifted to a
-//! multi-request batch.
+//! time-to-first-token, per-token latency, and merged per-exit usage —
+//! the serving-side analogue of the paper's Figure 8 axes
+//! (quality/latency vs. threshold), lifted to a multi-request batch.
 
 use crate::inference::ExitStats;
 pub use crate::metrics::percentile;
@@ -18,6 +18,16 @@ pub struct ServeMetrics {
     pub wall_seconds: f64,
     pub p50_latency_seconds: f64,
     pub p95_latency_seconds: f64,
+    /// Time-to-first-token percentiles across requests (queue + prefill +
+    /// first decode step) — the streaming responsiveness metric
+    /// continuous batching exists to improve.
+    pub p50_ttft_seconds: f64,
+    pub p95_ttft_seconds: f64,
+    /// Steady-state per-token emission-gap percentiles, pooled over every
+    /// generated token of every request *except* each request's first
+    /// (whose gap includes prefill and is already reported as TTFT).
+    pub p50_token_gap_seconds: f64,
+    pub p95_token_gap_seconds: f64,
     pub mean_queue_seconds: f64,
     /// Per-exit usage merged across all requests.
     pub exits: ExitStats,
@@ -30,6 +40,14 @@ impl ServeMetrics {
     ) -> ServeMetrics {
         let lats: Vec<f64> =
             responses.iter().map(|r| r.total_seconds).collect();
+        let ttfts: Vec<f64> =
+            responses.iter().map(|r| r.ttft_seconds).collect();
+        // Skip each request's first gap: it spans prefill and would
+        // otherwise dominate p95 with what TTFT already measures.
+        let gaps: Vec<f64> = responses
+            .iter()
+            .flat_map(|r| r.token_seconds.iter().skip(1).copied())
+            .collect();
         let mut exits = ExitStats::default();
         for r in responses {
             exits.merge(&r.output.stats);
@@ -44,6 +62,10 @@ impl ServeMetrics {
             wall_seconds,
             p50_latency_seconds: percentile(&lats, 0.50),
             p95_latency_seconds: percentile(&lats, 0.95),
+            p50_ttft_seconds: percentile(&ttfts, 0.50),
+            p95_ttft_seconds: percentile(&ttfts, 0.95),
+            p50_token_gap_seconds: percentile(&gaps, 0.50),
+            p95_token_gap_seconds: percentile(&gaps, 0.95),
             mean_queue_seconds: responses
                 .iter()
                 .map(|r| r.queue_seconds)
@@ -75,16 +97,25 @@ mod tests {
         for _ in 0..n_tokens {
             stats.record(4);
         }
+        // Synthetic but shape-consistent stream timing: the first token
+        // costs half the service time, the rest split the remainder.
+        let service = total - queue;
+        let mut token_seconds = vec![service / 2.0];
+        for _ in 1..n_tokens {
+            token_seconds.push(service / (2.0 * (n_tokens - 1) as f64));
+        }
         ServeResponse {
             id,
             worker: 0,
             output: GenOutput {
                 tokens: vec![65; n_tokens],
                 text: "a".repeat(n_tokens),
-                seconds: total - queue,
+                seconds: service,
                 stats,
             },
             queue_seconds: queue,
+            ttft_seconds: queue + service / 2.0,
+            token_seconds,
             total_seconds: total,
         }
     }
@@ -102,5 +133,29 @@ mod tests {
         assert_eq!(m.exits.total(), 10);
         // Layer 4 == n_layers here: nothing exited early.
         assert_eq!(m.early_fraction(4), 0.0);
+    }
+
+    #[test]
+    fn metrics_report_ttft_and_token_gaps() {
+        // TTFTs: 0.1 + 0.05 = 0.15 and 0.0 + 0.2 = 0.2.
+        let rs = vec![resp(0, 4, 0.2, 0.1), resp(1, 6, 0.4, 0.0)];
+        let m = ServeMetrics::from_responses(&rs, 0.5);
+        assert!((m.p50_ttft_seconds - 0.15).abs() < 1e-12);
+        assert!((m.p95_ttft_seconds - 0.2).abs() < 1e-12);
+        // The prefill-heavy first-token gaps (0.05 and 0.2) are excluded:
+        // only the 3 + 5 steady-state gaps remain, so even p95 stays at
+        // the steady-state level instead of echoing TTFT.
+        assert!(m.p50_token_gap_seconds > 0.0);
+        assert!(m.p95_token_gap_seconds >= m.p50_token_gap_seconds);
+        assert!((m.p95_token_gap_seconds - 0.04).abs() < 1e-12);
+        assert!(m.p95_token_gap_seconds < 0.05);
+    }
+
+    #[test]
+    fn metrics_default_is_empty() {
+        let m = ServeMetrics::from_responses(&[], 0.0);
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.p50_ttft_seconds, 0.0);
+        assert_eq!(m.p50_token_gap_seconds, 0.0);
     }
 }

@@ -1,24 +1,34 @@
 //! Multi-request early-exit serving — a request queue + scheduler
 //! multiplexing many concurrent generation requests over a pool of
-//! inference-engine workers.
+//! inference-engine workers, with continuous batching and streamed
+//! token responses.
 //!
 //! The paper's Section 4 inference methods are designed to be
 //! serving-compatible (KV-cache-aware early exits); follow-up work shows
 //! the real-world speedup of early exit only materialises under a
-//! batched, multi-request front-end. This module supplies that front-end
-//! for both engines:
+//! batched, multi-request front-end with iteration-level scheduling.
+//! This module supplies that front-end for both engines:
 //!
-//! - [`request`] — request/response types, per-request thresholds, and
-//!   request-set builders over the eval task suite.
-//! - [`scheduler`] — the shared queue with FIFO and shortest-prompt-first
-//!   policies.
+//! - [`request`] — request/response types (per-request thresholds,
+//!   priorities, deadlines; TTFT and per-token stream timing on
+//!   responses) and request-set builders over the eval task suite.
+//! - [`scheduler`] — the shared queue with FIFO, shortest-prompt-first,
+//!   and priority/earliest-deadline policies, plus the non-blocking
+//!   `try_pop` continuous batching admits through.
 //! - [`pool`] — [`EnginePool`]: N worker threads, each owning a
 //!   [`SequentialEngine`](crate::inference::SequentialEngine) or
 //!   [`PipelinedEngine`](crate::inference::PipelinedEngine) built
 //!   in-thread (the `xla` runtime is `!Send`; only
-//!   [`ModelState`](crate::inference::ModelState) crosses threads).
+//!   [`ModelState`](crate::inference::ModelState) crosses threads). Each
+//!   worker is a continuous-batching loop over resumable
+//!   [`DecodeSession`](crate::inference::DecodeSession)s: up to
+//!   [`PoolConfig::max_concurrent`] live sessions stepped round-robin,
+//!   new requests admitted between steps, every token streamed as a
+//!   [`ServeEvent`] the moment it is emitted. Batches return per-request
+//!   outcomes ([`BatchOutcome`]): one poisoned prompt fails alone.
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
-//!   p50/p95 request latency, queueing, merged per-exit usage.
+//!   p50/p95 request latency, p50/p95 time-to-first-token, p50/p95
+//!   per-token gaps, queueing, merged per-exit usage.
 //!
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.
@@ -29,6 +39,9 @@ pub mod request;
 pub mod scheduler;
 
 pub use metrics::{percentile, ServeMetrics};
-pub use pool::{EngineKind, EnginePool, PoolConfig};
+pub use pool::{
+    BatchOutcome, EngineKind, EnginePool, PoolConfig, RequestFailure,
+    ServeEvent,
+};
 pub use request::{requests_from_tasks, ServeRequest, ServeResponse};
 pub use scheduler::{Policy, Scheduler};

@@ -4,14 +4,21 @@
 //! crosses thread boundaries (the same topology the training workers and
 //! the pipelined engine's stage threads use).
 //!
-//! All workers pull from one [`Scheduler`] queue and report completions
-//! over an mpsc channel. The pool deliberately exposes more than the eval
-//! harness's `Generator` trait (text + seconds): serving metrics need the
-//! token counts and per-exit [`ExitStats`](crate::inference::ExitStats)
-//! carried by [`GenOutput`], so workers drive engines through the
-//! [`PoolEngine`] adapter below.
+//! Workers are **continuous-batching** loops over resumable
+//! [`DecodeSession`]s: each worker holds up to
+//! [`PoolConfig::max_concurrent`] live sessions, round-robins one decode
+//! step across them, and admits newly queued requests *between steps* —
+//! mid-flight, not at batch close. Every emitted token is streamed to the
+//! pool's event channel as it happens, so callers observe
+//! [`ServeEvent::Token`] events long before a request completes
+//! (time-to-first-token instead of whole-batch latency).
+//!
+//! All workers pull from one [`Scheduler`] queue and report per-request
+//! completions (or failures) over the same mpsc channel the token stream
+//! uses.
 
 use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,7 +26,8 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::inference::{
-    GenOutput, ModelState, PipelinedEngine, SequentialEngine,
+    DecodeBackend, DecodeSession, ModelState, PipelinedEngine,
+    SequentialEngine, StepEvent,
 };
 
 use super::metrics::ServeMetrics;
@@ -54,17 +62,19 @@ pub struct PoolConfig {
     /// Default exit threshold; requests may override per-request.
     pub threshold: f32,
     pub policy: Policy,
+    /// Live decode sessions each worker interleaves (continuous
+    /// batching). Clamped to at least 1 and to what the engine supports —
+    /// the pipelined engine keeps decode state in its stage threads and
+    /// caps this at 1; the sequential engine's sessions own their KV
+    /// caches and interleave freely.
+    pub max_concurrent: usize,
 }
 
-/// The engine surface the pool needs beyond `Generator`: token outputs
-/// with exit stats, and per-request threshold updates.
+/// The engine surface the pool needs: a threshold knob plus the
+/// [`DecodeBackend`] that decode sessions step over.
 trait PoolEngine {
     fn apply_threshold(&mut self, t: f32);
-    fn generate_out(
-        &mut self,
-        prompt: &str,
-        max_new: usize,
-    ) -> Result<GenOutput>;
+    fn backend(&mut self) -> &mut dyn DecodeBackend;
     /// Tear down engine-owned resources (threads), if any.
     fn finish(self: Box<Self>) {}
 }
@@ -74,12 +84,8 @@ impl PoolEngine for SequentialEngine {
         self.threshold = t;
     }
 
-    fn generate_out(
-        &mut self,
-        prompt: &str,
-        max_new: usize,
-    ) -> Result<GenOutput> {
-        self.generate_text(prompt, max_new)
+    fn backend(&mut self) -> &mut dyn DecodeBackend {
+        self
     }
 }
 
@@ -88,12 +94,8 @@ impl PoolEngine for PipelinedEngine {
         self.set_threshold(t);
     }
 
-    fn generate_out(
-        &mut self,
-        prompt: &str,
-        max_new: usize,
-    ) -> Result<GenOutput> {
-        self.generate_text(prompt, max_new)
+    fn backend(&mut self) -> &mut dyn DecodeBackend {
+        self
     }
 
     fn finish(self: Box<Self>) {
@@ -104,20 +106,70 @@ impl PoolEngine for PipelinedEngine {
 enum WorkerEvent {
     /// Engine built and compiled; the worker is about to start serving.
     Ready { worker: usize },
+    /// One token emitted for a live request (streamed mid-generation).
+    Token { id: u64, worker: usize, token: i32, exit_layer: usize },
     Done(ServeResponse),
     /// One request failed; the worker keeps serving.
     Failed { id: u64, worker: usize, error: String },
-    /// The worker itself died (engine construction failed).
+    /// The worker itself died (engine construction failed or it panicked).
     Fatal { worker: usize, error: String },
+}
+
+/// Streamed serving events, delivered to `run_batch_streamed` callbacks
+/// in emission order (interleaved across requests and workers).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeEvent {
+    /// Request `id` emitted one token at `exit_layer` on `worker`.
+    Token { id: u64, worker: usize, token: i32, exit_layer: usize },
+    /// Request `id` completed; its full [`ServeResponse`] is in the batch
+    /// results.
+    Done { id: u64 },
+    /// Request `id` failed; the error is in the batch failures.
+    Failed { id: u64 },
+}
+
+/// One failed request of a batch.
+#[derive(Debug, Clone)]
+pub struct RequestFailure {
+    pub id: u64,
+    /// Worker that observed the failure; `None` when the request never
+    /// reached one (e.g. rejected by a closed queue).
+    pub worker: Option<usize>,
+    pub error: String,
+}
+
+impl std::fmt::Display for RequestFailure {
+    /// One-line report shared by every CLI/demo surface.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {} failed", self.id)?;
+        if let Some(w) = self.worker {
+            write!(f, " on worker {w}")?;
+        }
+        write!(f, ": {}", self.error)
+    }
+}
+
+/// Per-request outcomes of one batch: one poisoned prompt no longer wipes
+/// out the whole batch's results — it lands in `failures` while every
+/// other response survives in `responses`.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    /// Successful responses, sorted by request id.
+    pub responses: Vec<ServeResponse>,
+    /// Failed requests, sorted by request id.
+    pub failures: Vec<RequestFailure>,
+    /// Aggregate metrics over the successful responses.
+    pub metrics: ServeMetrics,
 }
 
 /// A pool of engine workers multiplexing a shared request queue.
 ///
-/// Every submitted request produces exactly one `Done`/`Failed` event, and
-/// [`EnginePool::run_batch`] consumes exactly one event per request it
-/// submitted — so batches never see a previous batch's responses. Direct
-/// [`EnginePool::submit`] is for fire-and-forget use only and must not be
-/// mixed with `run_batch` on the same pool.
+/// Every submitted request produces exactly one `Done`/`Failed`
+/// completion event (token events stream in between), and
+/// [`EnginePool::run_batch`] consumes exactly one completion per request
+/// it submitted — so batches never see a previous batch's responses.
+/// Direct [`EnginePool::submit`] is for fire-and-forget use only and must
+/// not be mixed with `run_batch` on the same pool.
 pub struct EnginePool {
     cfg: PoolConfig,
     sched: Arc<Scheduler>,
@@ -171,10 +223,18 @@ impl EnginePool {
         self.cfg
     }
 
-    /// Enqueue one request (non-blocking). The response event stays in
-    /// the pool's channel; use `run_batch` unless you never read results.
-    pub fn submit(&self, req: ServeRequest) {
-        self.sched.push(req);
+    /// Enqueue one request (non-blocking). Returns `false` when the pool
+    /// has been shut down (the queue is closed) — the request was
+    /// rejected, not queued.
+    ///
+    /// The response events stay in the pool's channel, and since workers
+    /// now stream one `Token` event per generated token, an undrained
+    /// channel grows by ~`max_new` events per request (not one): use
+    /// `run_batch`/`run_batch_streamed` unless the pool is short-lived
+    /// and results are truly never read.
+    #[must_use]
+    pub fn submit(&self, req: ServeRequest) -> bool {
+        self.sched.push(req)
     }
 
     /// Next event, preferring ones stashed during the readiness wait.
@@ -215,32 +275,70 @@ impl EnginePool {
         Ok(())
     }
 
-    /// Submit a whole request set, wait for every completion, and return
-    /// the responses (sorted by request id) plus aggregate metrics. Any
-    /// failed request fails the whole batch — but only after every
-    /// request is accounted for, so the pool stays reusable.
+    /// Submit a whole request set and wait for every completion,
+    /// returning per-request outcomes plus aggregate metrics over the
+    /// successes.
     pub fn run_batch(
         &mut self,
         reqs: Vec<ServeRequest>,
-    ) -> Result<(Vec<ServeResponse>, ServeMetrics)> {
+    ) -> Result<BatchOutcome> {
+        self.run_batch_streamed(reqs, |_| {})
+    }
+
+    /// [`EnginePool::run_batch`] with a streaming observer: `on_event` is
+    /// called for every token/completion/failure in emission order, while
+    /// the batch is still running — this is the serving layer's streaming
+    /// response surface.
+    ///
+    /// Errors only on pool-level failures (every worker dead);
+    /// per-request errors land in [`BatchOutcome::failures`].
+    pub fn run_batch_streamed(
+        &mut self,
+        reqs: Vec<ServeRequest>,
+        mut on_event: impl FnMut(&ServeEvent),
+    ) -> Result<BatchOutcome> {
         self.wait_ready()?;
         if self.alive == 0 {
             bail!("no live pool workers");
         }
         let n = reqs.len();
         let t0 = Instant::now();
+        let mut failures: Vec<RequestFailure> = Vec::new();
         for r in reqs {
-            self.submit(r);
+            let id = r.id;
+            if !self.submit(r) {
+                // The observer must see every failure, including ones
+                // that never reached a worker.
+                on_event(&ServeEvent::Failed { id });
+                failures.push(RequestFailure {
+                    id,
+                    worker: None,
+                    error: "request rejected: pool queue is closed".into(),
+                });
+            }
         }
         let mut responses = Vec::with_capacity(n);
-        let mut failures = Vec::new();
         while responses.len() + failures.len() < n {
             match self.next_event()? {
-                WorkerEvent::Done(r) => responses.push(r),
+                WorkerEvent::Token { id, worker, token, exit_layer } => {
+                    on_event(&ServeEvent::Token {
+                        id,
+                        worker,
+                        token,
+                        exit_layer,
+                    });
+                }
+                WorkerEvent::Done(r) => {
+                    on_event(&ServeEvent::Done { id: r.id });
+                    responses.push(r);
+                }
                 WorkerEvent::Failed { id, worker, error } => {
-                    failures.push(format!(
-                        "request {id} on worker {worker}: {error}"
-                    ));
+                    on_event(&ServeEvent::Failed { id });
+                    failures.push(RequestFailure {
+                        id,
+                        worker: Some(worker),
+                        error,
+                    });
                 }
                 WorkerEvent::Fatal { worker, error } => {
                     self.alive -= 1;
@@ -256,14 +354,11 @@ impl EnginePool {
                 WorkerEvent::Ready { .. } => {}
             }
         }
-        if !failures.is_empty() {
-            bail!("{} of {n} requests failed: {}", failures.len(),
-                  failures.join("; "));
-        }
         let wall = t0.elapsed().as_secs_f64();
         responses.sort_by_key(|r| r.id);
+        failures.sort_by_key(|f| f.id);
         let metrics = ServeMetrics::from_responses(&responses, wall);
-        Ok((responses, metrics))
+        Ok(BatchOutcome { responses, failures, metrics })
     }
 
     /// Close the queue, drain, and join every worker.
@@ -291,6 +386,24 @@ impl Drop for EnginePool {
     }
 }
 
+/// One live request on a worker: its resumable session plus stream-timing
+/// state.
+struct Live {
+    id: u64,
+    threshold: f32,
+    session: DecodeSession,
+    queue_seconds: f64,
+    /// When the worker admitted (and prefilled) the request.
+    admitted: Instant,
+    /// Last token emission (admission before the first token).
+    last_event: Instant,
+    /// Per-token emission gaps; `[0]` spans admission to first token.
+    token_seconds: Vec<f64>,
+}
+
+/// The continuous-batching worker loop: admit queued requests into free
+/// session slots (blocking only when fully idle), then give every live
+/// session one decode step, streaming each token as it is emitted.
 fn worker_main(
     worker: usize,
     state: ModelState,
@@ -308,62 +421,189 @@ fn worker_main(
         }
     };
     events.send(WorkerEvent::Ready { worker }).ok();
-    while let Some((req, queue_seconds)) = sched.pop() {
-        engine.apply_threshold(req.threshold.unwrap_or(cfg.threshold));
-        let t0 = Instant::now();
-        // Every popped request must produce exactly one event, even if
-        // the engine panics — otherwise `run_batch` waits forever on the
-        // lost request while other workers keep the channel open.
-        let result = std::panic::catch_unwind(
-            std::panic::AssertUnwindSafe(|| {
-                engine.generate_out(&req.prompt, req.max_new)
-            }),
-        );
-        match result {
-            Ok(Ok(output)) => {
-                events
-                    .send(WorkerEvent::Done(ServeResponse {
-                        id: req.id,
-                        worker,
-                        output,
-                        queue_seconds,
-                        total_seconds: queue_seconds
-                            + t0.elapsed().as_secs_f64(),
-                    }))
-                    .ok();
+    let max_live =
+        cfg.max_concurrent.max(1).min(engine.backend().max_live_sessions());
+    let mut live: Vec<Live> = Vec::new();
+    // Engines read one global threshold; track it and re-apply before
+    // touching a session that wants a different one.
+    let mut current_threshold = cfg.threshold;
+    'serve: loop {
+        // Admission: fill free slots. Block only when idle; poll with
+        // `try_pop` while sessions are live, so queued requests join
+        // mid-flight between decode steps instead of at batch close.
+        while live.len() < max_live {
+            let popped = if live.is_empty() {
+                sched.pop() // fully idle: block until work or close
+            } else {
+                sched.try_pop() // mid-flight: never stall live sessions
+            };
+            let Some((req, queue_seconds)) = popped else {
+                if live.is_empty() {
+                    break 'serve; // queue closed and drained
+                }
+                break; // nothing queued right now; keep stepping
+            };
+            let t = req.threshold.unwrap_or(cfg.threshold);
+            if t != current_threshold {
+                engine.apply_threshold(t);
+                current_threshold = t;
             }
-            Ok(Err(e)) => {
-                events
-                    .send(WorkerEvent::Failed {
-                        id: req.id,
-                        worker,
-                        error: format!("{e:#}"),
-                    })
-                    .ok();
+            let admitted = Instant::now();
+            // Every popped request must produce exactly one completion
+            // event, even if the engine panics — otherwise `run_batch`
+            // waits forever on the lost request.
+            let started = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                let be = engine.backend();
+                let mut s =
+                    DecodeSession::new_text(be, &req.prompt, req.max_new)?;
+                s.prefill(be)?;
+                Ok::<_, anyhow::Error>(s)
+            }));
+            match started {
+                Ok(Ok(session)) => live.push(Live {
+                    id: req.id,
+                    threshold: t,
+                    session,
+                    queue_seconds,
+                    admitted,
+                    last_event: admitted,
+                    token_seconds: Vec::new(),
+                }),
+                Ok(Err(e)) => {
+                    events
+                        .send(WorkerEvent::Failed {
+                            id: req.id,
+                            worker,
+                            error: format!("{e:#}"),
+                        })
+                        .ok();
+                }
+                Err(_) => {
+                    retire(worker, &events, req.id, &live);
+                    return;
+                }
             }
-            Err(_) => {
-                events
-                    .send(WorkerEvent::Failed {
-                        id: req.id,
-                        worker,
-                        error: "worker panicked during generation".into(),
-                    })
-                    .ok();
-                // The engine may be in a corrupt state: retire the worker
-                // (dropping the engine tears its threads down via channel
-                // close) instead of serving more requests with it.
-                events
-                    .send(WorkerEvent::Fatal {
-                        worker,
-                        error: "panicked during generation; worker retired"
-                            .into(),
-                    })
-                    .ok();
-                return;
+        }
+        if live.is_empty() {
+            // Every admission this round failed; go back to waiting.
+            continue;
+        }
+        // One decode step per live session, round-robin. Sessions that
+        // finish free their slot for the next admission pass.
+        let mut i = 0;
+        while i < live.len() {
+            let t = live[i].threshold;
+            if t != current_threshold {
+                engine.apply_threshold(t);
+                current_threshold = t;
+            }
+            let stepped = {
+                let l = &mut live[i];
+                let be = engine.backend();
+                std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    l.session.step(be)
+                }))
+            };
+            match stepped {
+                Err(_) => {
+                    // The engine may be in a corrupt state: fail the
+                    // stepped request and every other live one, then
+                    // retire the worker.
+                    let id = live.remove(i).id;
+                    retire(worker, &events, id, &live);
+                    return;
+                }
+                Ok(Err(e)) => {
+                    let id = live.remove(i).id;
+                    events
+                        .send(WorkerEvent::Failed {
+                            id,
+                            worker,
+                            error: format!("{e:#}"),
+                        })
+                        .ok();
+                }
+                Ok(Ok(StepEvent::Token { token, exit_layer, done })) => {
+                    let now = Instant::now();
+                    let l = &mut live[i];
+                    l.token_seconds.push(
+                        now.duration_since(l.last_event).as_secs_f64(),
+                    );
+                    l.last_event = now;
+                    events
+                        .send(WorkerEvent::Token {
+                            id: l.id,
+                            worker,
+                            token,
+                            exit_layer,
+                        })
+                        .ok();
+                    if done.is_some() {
+                        complete(worker, &events, live.remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+                Ok(Ok(StepEvent::Finished(_))) => {
+                    complete(worker, &events, live.remove(i));
+                }
             }
         }
     }
     engine.finish();
+}
+
+/// Emit the `Done` event for a finished live session.
+fn complete(worker: usize, events: &Sender<WorkerEvent>, l: Live) {
+    let output = l.session.output();
+    let service_seconds = l.admitted.elapsed().as_secs_f64();
+    let ttft_seconds = l.queue_seconds
+        + l.token_seconds.first().copied().unwrap_or(service_seconds);
+    events
+        .send(WorkerEvent::Done(ServeResponse {
+            id: l.id,
+            worker,
+            output,
+            queue_seconds: l.queue_seconds,
+            ttft_seconds,
+            token_seconds: l.token_seconds,
+            total_seconds: l.queue_seconds + service_seconds,
+        }))
+        .ok();
+}
+
+/// The engine panicked: fail the panicking request and every other live
+/// session (their engine is gone), then report the worker dead.
+fn retire(
+    worker: usize,
+    events: &Sender<WorkerEvent>,
+    panicked_id: u64,
+    live: &[Live],
+) {
+    events
+        .send(WorkerEvent::Failed {
+            id: panicked_id,
+            worker,
+            error: "worker panicked during decode".into(),
+        })
+        .ok();
+    for l in live {
+        events
+            .send(WorkerEvent::Failed {
+                id: l.id,
+                worker,
+                error: "worker retired mid-generation (engine panicked \
+                        on another request)"
+                    .into(),
+            })
+            .ok();
+    }
+    events
+        .send(WorkerEvent::Fatal {
+            worker,
+            error: "panicked during decode; worker retired".into(),
+        })
+        .ok();
 }
 
 fn build_engine(

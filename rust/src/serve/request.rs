@@ -1,5 +1,7 @@
 //! Serving request/response types and request-set builders.
 
+use std::time::Duration;
+
 use crate::data::tasks::EvalTask;
 use crate::inference::GenOutput;
 
@@ -12,6 +14,13 @@ pub struct ServeRequest {
     pub max_new: usize,
     /// Per-request exit threshold; `None` uses the pool default.
     pub threshold: Option<f32>,
+    /// Scheduling priority under `Policy::Priority` — higher is served
+    /// first (default 0).
+    pub priority: i32,
+    /// Relative deadline from submission. Under `Policy::Priority`, ties
+    /// in priority are served earliest-deadline-first; requests without a
+    /// deadline queue behind any deadlined peer of the same priority.
+    pub deadline: Option<Duration>,
 }
 
 impl ServeRequest {
@@ -20,11 +29,28 @@ impl ServeRequest {
         prompt: impl Into<String>,
         max_new: usize,
     ) -> ServeRequest {
-        ServeRequest { id, prompt: prompt.into(), max_new, threshold: None }
+        ServeRequest {
+            id,
+            prompt: prompt.into(),
+            max_new,
+            threshold: None,
+            priority: 0,
+            deadline: None,
+        }
     }
 
     pub fn with_threshold(mut self, t: f32) -> ServeRequest {
         self.threshold = Some(t);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> ServeRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> ServeRequest {
+        self.deadline = Some(deadline);
         self
     }
 }
@@ -36,8 +62,17 @@ pub struct ServeResponse {
     /// Index of the pool worker that served the request.
     pub worker: usize,
     pub output: GenOutput,
-    /// Time the request waited queued before a worker picked it up.
+    /// Time the request waited queued before a worker admitted it.
     pub queue_seconds: f64,
+    /// Time to first token: queue wait + prefill + the first decode step.
+    /// Equals `total_seconds` for degenerate requests that emit nothing.
+    pub ttft_seconds: f64,
+    /// Per-token emission gaps, one entry per generated token:
+    /// `token_seconds[0]` spans admission to the first token (prefill
+    /// included), later entries the gap since the previous token — under
+    /// continuous batching that includes steps the worker spent on other
+    /// live sessions.
+    pub token_seconds: Vec<f64>,
     /// Queue + service time — the latency a client observes.
     pub total_seconds: f64,
 }
@@ -116,5 +151,19 @@ mod tests {
     fn per_request_threshold_override() {
         let r = ServeRequest::new(3, "hi", 8).with_threshold(0.4);
         assert_eq!(r.threshold, Some(0.4));
+        assert_eq!(r.priority, 0);
+        assert_eq!(r.deadline, None);
+    }
+
+    #[test]
+    fn priority_and_deadline_builders() {
+        let r = ServeRequest::new(4, "hi", 8)
+            .with_priority(3)
+            .with_deadline(std::time::Duration::from_millis(250));
+        assert_eq!(r.priority, 3);
+        assert_eq!(
+            r.deadline,
+            Some(std::time::Duration::from_millis(250))
+        );
     }
 }

@@ -1,7 +1,7 @@
 //! The serving queue: submitted requests wait here until an engine worker
 //! pops them.
 //!
-//! Two policies:
+//! Three policies:
 //!
 //! - **FIFO** — arrival order; fair, and the baseline any latency claim
 //!   is measured against.
@@ -9,7 +9,11 @@
 //!   the service-time proxy; the classic mean-latency optimisation when
 //!   request sizes are heterogeneous (long summarisation prompts would
 //!   otherwise head-of-line-block short QA ones).
+//! - **Priority** — highest [`ServeRequest::priority`] first; ties go to
+//!   the earliest absolute deadline (earliest-deadline-first), with
+//!   deadline-less requests after any deadlined peer, then arrival order.
 
+use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
@@ -22,6 +26,7 @@ use super::request::ServeRequest;
 pub enum Policy {
     Fifo,
     ShortestPromptFirst,
+    Priority,
 }
 
 impl Policy {
@@ -29,7 +34,10 @@ impl Policy {
         match s {
             "fifo" => Ok(Policy::Fifo),
             "spf" | "shortest-prompt-first" => Ok(Policy::ShortestPromptFirst),
-            other => bail!("unknown scheduling policy {other:?} (fifo|spf)"),
+            "priority" | "edf" => Ok(Policy::Priority),
+            other => {
+                bail!("unknown scheduling policy {other:?} (fifo|spf|priority)")
+            }
         }
     }
 }
@@ -65,12 +73,18 @@ impl Scheduler {
         self.policy
     }
 
-    /// Enqueue a request. Panics if the queue was already closed.
-    pub fn push(&self, req: ServeRequest) {
+    /// Enqueue a request. Returns `false` — rejecting the request — when
+    /// the queue has already been closed: submitting to a shut-down pool
+    /// is an error for the caller to handle, never a submitter panic.
+    #[must_use]
+    pub fn push(&self, req: ServeRequest) -> bool {
         let mut st = self.state.lock().unwrap();
-        assert!(!st.closed, "push after close");
+        if st.closed {
+            return false;
+        }
         st.pending.push_back(Queued { req, enqueued: Instant::now() });
         self.cv.notify_one();
+        true
     }
 
     /// Number of queued (not yet claimed) requests.
@@ -83,7 +97,7 @@ impl Scheduler {
     }
 
     /// Close the queue: workers drain what is pending, then `pop` returns
-    /// `None` and they exit.
+    /// `None` and they exit. Subsequent `push` calls are rejected.
     pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
@@ -95,15 +109,29 @@ impl Scheduler {
     pub fn pop(&self) -> Option<(ServeRequest, f64)> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(i) = self.select(&st.pending) {
-                let q = st.pending.remove(i).unwrap();
-                return Some((q.req, q.enqueued.elapsed().as_secs_f64()));
+            if let Some(popped) = self.pop_locked(&mut st) {
+                return Some(popped);
             }
             if st.closed {
                 return None;
             }
             st = self.cv.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking pop: `None` when nothing is queued right now. This is
+    /// how continuous-batching workers admit requests *between* decode
+    /// steps without stalling their live sessions.
+    pub fn try_pop(&self) -> Option<(ServeRequest, f64)> {
+        let mut st = self.state.lock().unwrap();
+        self.pop_locked(&mut st)
+    }
+
+    /// Select-and-remove core shared by `pop` and `try_pop`.
+    fn pop_locked(&self, st: &mut State) -> Option<(ServeRequest, f64)> {
+        let i = self.select(&st.pending)?;
+        let q = st.pending.remove(i).unwrap();
+        Some((q.req, q.enqueued.elapsed().as_secs_f64()))
     }
 
     /// Index of the next request under the configured policy.
@@ -116,6 +144,18 @@ impl Scheduler {
             // Ties break by arrival order (stable min over index).
             Policy::ShortestPromptFirst => (0..pending.len())
                 .min_by_key(|&i| (pending[i].req.prompt.len(), i)),
+            // Highest priority; then earliest absolute deadline, with
+            // deadline-less requests last; then arrival order.
+            Policy::Priority => (0..pending.len()).min_by_key(|&i| {
+                let q = &pending[i];
+                let due = q.req.deadline.map(|d| q.enqueued + d);
+                (
+                    Reverse(q.req.priority),
+                    due.is_none(),
+                    due.unwrap_or(q.enqueued),
+                    i,
+                )
+            }),
         }
     }
 }
@@ -134,9 +174,9 @@ mod tests {
     #[test]
     fn fifo_pops_in_arrival_order() {
         let s = Scheduler::new(Policy::Fifo);
-        s.push(req(0, "long prompt here"));
-        s.push(req(1, "x"));
-        s.push(req(2, "mid"));
+        assert!(s.push(req(0, "long prompt here")));
+        assert!(s.push(req(1, "x")));
+        assert!(s.push(req(2, "mid")));
         s.close();
         let ids: Vec<u64> =
             std::iter::from_fn(|| s.pop().map(|(r, _)| r.id)).collect();
@@ -146,10 +186,10 @@ mod tests {
     #[test]
     fn spf_pops_shortest_prompt_first_with_stable_ties() {
         let s = Scheduler::new(Policy::ShortestPromptFirst);
-        s.push(req(0, "aaaa"));
-        s.push(req(1, "a"));
-        s.push(req(2, "aa"));
-        s.push(req(3, "a"));
+        assert!(s.push(req(0, "aaaa")));
+        assert!(s.push(req(1, "a")));
+        assert!(s.push(req(2, "aa")));
+        assert!(s.push(req(3, "a")));
         s.close();
         let ids: Vec<u64> =
             std::iter::from_fn(|| s.pop().map(|(r, _)| r.id)).collect();
@@ -157,10 +197,57 @@ mod tests {
     }
 
     #[test]
+    fn priority_policy_orders_by_priority_then_deadline() {
+        let s = Scheduler::new(Policy::Priority);
+        // Same priority, later deadline.
+        assert!(s.push(
+            req(0, "a").with_deadline(Duration::from_secs(60))
+        ));
+        // Highest priority wins regardless of arrival.
+        assert!(s.push(req(1, "b").with_priority(5)));
+        // Same priority as 0, sooner deadline: beats 0.
+        assert!(s.push(
+            req(2, "c").with_deadline(Duration::from_secs(1))
+        ));
+        // Same priority, no deadline: after every deadlined peer.
+        assert!(s.push(req(3, "d")));
+        // No deadline, arrived after 3: FIFO between the deadline-less.
+        assert!(s.push(req(4, "e")));
+        s.close();
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| s.pop().map(|(r, _)| r.id)).collect();
+        assert_eq!(ids, vec![1, 2, 0, 3, 4]);
+    }
+
+    /// Regression (push-after-close panic): a closed queue rejects new
+    /// requests instead of panicking the submitter.
+    #[test]
+    fn push_after_close_is_rejected_not_a_panic() {
+        let s = Scheduler::new(Policy::Fifo);
+        assert!(s.push(req(0, "a")));
+        s.close();
+        assert!(!s.push(req(1, "b")), "push after close must be rejected");
+        assert_eq!(s.len(), 1, "rejected request must not be queued");
+        assert_eq!(s.pop().unwrap().0.id, 0);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let s = Scheduler::new(Policy::Fifo);
+        assert!(s.try_pop().is_none(), "empty open queue: no block, None");
+        assert!(s.push(req(3, "hi")));
+        assert_eq!(s.try_pop().unwrap().0.id, 3);
+        assert!(s.try_pop().is_none());
+        s.close();
+        assert!(s.try_pop().is_none());
+    }
+
+    #[test]
     fn close_drains_pending_then_ends() {
         let s = Scheduler::new(Policy::Fifo);
-        s.push(req(0, "a"));
-        s.push(req(1, "b"));
+        assert!(s.push(req(0, "a")));
+        assert!(s.push(req(1, "b")));
         assert_eq!(s.len(), 2);
         s.close();
         assert_eq!(s.pop().unwrap().0.id, 0);
@@ -175,7 +262,7 @@ mod tests {
         let s2 = Arc::clone(&s);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
-            s2.push(req(7, "hi"));
+            assert!(s2.push(req(7, "hi")));
             s2.close();
         });
         let (r, q) = s.pop().expect("request");
@@ -189,6 +276,8 @@ mod tests {
     fn policy_parse_round_trips() {
         assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
         assert_eq!(Policy::parse("spf").unwrap(), Policy::ShortestPromptFirst);
+        assert_eq!(Policy::parse("priority").unwrap(), Policy::Priority);
+        assert_eq!(Policy::parse("edf").unwrap(), Policy::Priority);
         assert!(Policy::parse("lifo").is_err());
     }
 }

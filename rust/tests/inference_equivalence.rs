@@ -13,7 +13,7 @@ use eellm::data::synth::{Corpus, CorpusSpec};
 use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    EngineKind, EnginePool, Policy, PoolConfig, ServeRequest,
+    EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -187,6 +187,7 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 // SPF shuffles completion order relative to submission,
                 // exercising the id-based reordering.
                 policy: Policy::ShortestPromptFirst,
+                max_concurrent: 2,
             },
         );
         let reqs: Vec<ServeRequest> = prompts
@@ -194,8 +195,10 @@ fn pooled_serving_matches_serial_at_threshold_one() {
             .enumerate()
             .map(|(i, p)| ServeRequest::new(i as u64, *p, 12))
             .collect();
-        let (responses, metrics) = pool.run_batch(reqs).unwrap();
+        let out = pool.run_batch(reqs).unwrap();
         pool.shutdown().unwrap();
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        let responses = &out.responses;
         assert_eq!(responses.len(), prompts.len());
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i as u64);
@@ -205,12 +208,188 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 prompts[i]
             );
             assert!(r.total_seconds >= r.queue_seconds);
+            assert!(r.ttft_seconds >= r.queue_seconds);
+            assert!(r.ttft_seconds <= r.total_seconds + 1e-9);
+            assert_eq!(r.token_seconds.len(), r.output.tokens.len());
         }
         // Threshold 1.0: every token comes from the final exit.
-        assert_eq!(metrics.early_fraction(man.model.n_layers), 0.0);
-        assert!(metrics.total_tokens > 0);
-        assert!(metrics.throughput_tps() > 0.0);
+        assert_eq!(out.metrics.early_fraction(man.model.n_layers), 0.0);
+        assert!(out.metrics.total_tokens > 0);
+        assert!(out.metrics.throughput_tps() > 0.0);
     }
+}
+
+/// Continuous batching: one worker interleaving sessions must (a) stream
+/// byte-identical tokens to serial generation at threshold 1.0, (b) start
+/// decoding a second request before the first finishes (TTFT well below
+/// the first request's completion), and (c) admit requests queued beyond
+/// the concurrency cap mid-flight, not at batch close.
+#[test]
+fn continuous_batching_streams_and_admits_mid_flight() {
+    if !artifacts_root().join("ee-tiny").join("manifest.json").is_file() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 9);
+
+    // Pick prompts whose serial generations are long enough to overlap.
+    let candidates = [
+        "the capital of ",
+        "question: what is the ",
+        "count: 3 4 5 ",
+        "abc: a b c d ",
+        "copy: x y |",
+        "3+4=",
+    ];
+    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
+    let long: Vec<&str> = candidates
+        .iter()
+        .copied()
+        .filter(|p| seq.generate_text(p, 12).unwrap().tokens.len() >= 4)
+        .take(3)
+        .collect();
+    if long.len() < 3 {
+        eprintln!("skipping: generations too short to interleave");
+        return;
+    }
+    // Request 0 is short (budget 2) so it finishes while request 1 (>= 4
+    // tokens) is still live, freeing a slot for request 2 mid-flight.
+    let budgets = [2usize, 12, 12];
+    let serial: Vec<Vec<i32>> = long
+        .iter()
+        .zip(budgets)
+        .map(|(p, b)| seq.generate_text(p, b).unwrap().tokens)
+        .collect();
+
+    let mut pool = EnginePool::new(
+        state,
+        PoolConfig {
+            workers: 1,
+            engine: EngineKind::Sequential,
+            threshold: 1.0,
+            policy: Policy::Fifo,
+            max_concurrent: 2,
+        },
+    );
+    let reqs: Vec<ServeRequest> = long
+        .iter()
+        .zip(budgets)
+        .enumerate()
+        .map(|(i, (p, b))| ServeRequest::new(i as u64, *p, b))
+        .collect();
+    let mut events: Vec<ServeEvent> = Vec::new();
+    let out = pool
+        .run_batch_streamed(reqs, |e| events.push(e.clone()))
+        .unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    assert_eq!(out.responses.len(), 3);
+
+    // (a) Streamed tokens are byte-identical to serial generation.
+    for (i, expect) in serial.iter().enumerate() {
+        let streamed: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { id, token, .. } if *id == i as u64 => {
+                    Some(*token)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            &streamed, expect,
+            "request {i} streamed tokens diverge from serial"
+        );
+        assert_eq!(&out.responses[i].output.tokens, expect);
+    }
+
+    let first_token = |id: u64| {
+        events
+            .iter()
+            .position(|e| matches!(e, ServeEvent::Token { id: i, .. } if *i == id))
+            .unwrap_or_else(|| panic!("no token for request {id}"))
+    };
+    let done_of = |id: u64| {
+        events
+            .iter()
+            .position(|e| matches!(e, ServeEvent::Done { id: i } if *i == id))
+            .unwrap_or_else(|| panic!("no done for request {id}"))
+    };
+
+    // (b) Concurrent decode on one worker: request 1 starts before
+    // request 0 finishes, and its time-to-first-token lands before the
+    // first request's completion.
+    assert!(
+        first_token(1) < done_of(0),
+        "request 1 did not start before request 0 finished: {events:?}"
+    );
+    assert!(
+        out.responses[1].ttft_seconds < out.responses[0].total_seconds,
+        "TTFT of the second request ({}) should precede the first \
+         request's completion ({})",
+        out.responses[1].ttft_seconds,
+        out.responses[0].total_seconds
+    );
+
+    // (c) Mid-flight admission: request 2 (queued beyond the concurrency
+    // cap) starts decoding while request 1 is still generating.
+    assert!(
+        first_token(2) < done_of(1),
+        "request 2 was not admitted mid-flight: {events:?}"
+    );
+
+    // Stream timing is populated and ordered sanely.
+    for r in &out.responses {
+        assert_eq!(r.token_seconds.len(), r.output.tokens.len());
+        assert!(r.ttft_seconds > 0.0);
+        assert!(r.ttft_seconds <= r.total_seconds + 1e-9);
+    }
+    assert!(out.metrics.p95_ttft_seconds >= out.metrics.p50_ttft_seconds);
+}
+
+/// Regression (batch poisoning): one failing request must not wipe out
+/// the other responses of its batch — failures are reported per request.
+#[test]
+fn batch_reports_per_request_failures() {
+    if !artifacts_root().join("ee-tiny").join("manifest.json").is_file() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 4);
+    // A prompt longer than the KV cache fails at session setup.
+    let poisoned = "a".repeat(man.model.max_seq + 8);
+    let reqs = vec![
+        ServeRequest::new(0, "abc: a b", 8),
+        ServeRequest::new(1, poisoned, 8),
+        ServeRequest::new(2, "count: 1 2 ", 8),
+    ];
+    let mut pool = EnginePool::new(
+        state,
+        PoolConfig {
+            workers: 1,
+            engine: EngineKind::Sequential,
+            threshold: 1.0,
+            policy: Policy::Fifo,
+            max_concurrent: 2,
+        },
+    );
+    let out = pool.run_batch(reqs).unwrap();
+    pool.shutdown().unwrap();
+    assert_eq!(out.responses.len(), 2, "good requests must survive");
+    assert_eq!(out.responses[0].id, 0);
+    assert_eq!(out.responses[1].id, 2);
+    assert!(!out.responses[0].output.tokens.is_empty());
+    assert_eq!(out.failures.len(), 1);
+    assert_eq!(out.failures[0].id, 1);
+    assert_eq!(out.failures[0].worker, Some(0));
+    assert!(
+        out.failures[0].error.contains("exceeds"),
+        "unexpected error: {}",
+        out.failures[0].error
+    );
+    assert_eq!(out.metrics.requests, 2);
 }
 
 /// Regression (over-strict capacity check): a prompt that fits must
