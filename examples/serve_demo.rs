@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             threshold: 0.8,
             policy,
             max_concurrent: concurrent,
+            prefix_cache_positions: args.usize_or("prefix-cache", 0),
         },
     );
 
@@ -119,7 +120,8 @@ fn main() -> anyhow::Result<()> {
     let m = &out.metrics;
     println!(
         "{} requests | {:.1} tok/s | p50 {:.0}ms p95 {:.0}ms | TTFT p50 \
-         {:.0}ms p95 {:.0}ms | tok gap p50 {:.1}ms | early {:.0}% | exits {:?}",
+         {:.0}ms p95 {:.0}ms | tok gap p50 {:.1}ms | early {:.0}% | exits \
+         {:?} | deadline misses {}",
         m.requests,
         m.throughput_tps(),
         m.p50_latency_seconds * 1e3,
@@ -129,6 +131,15 @@ fn main() -> anyhow::Result<()> {
         m.p50_token_gap_seconds * 1e3,
         100.0 * m.early_fraction(n_layers),
         m.exits.counts,
+        m.deadline_misses,
     );
+    if m.prefix.lookups() > 0 {
+        println!(
+            "prefix cache (--prefix-cache): hit rate {:.0}%, prefill \
+             positions saved {}",
+            100.0 * m.prefix_hit_rate(),
+            m.prefill_positions_saved(),
+        );
+    }
     Ok(())
 }

@@ -4,15 +4,19 @@
 //! the serving front-end.
 //!
 //! Shape checks: pool size > 1 must out-throughput pool size 1 on the
-//! same request set (that is the point of the pool), and the aggregate
-//! early-exit fraction must grow as the threshold drops.
+//! same request set (that is the point of the pool), the aggregate
+//! early-exit fraction must grow as the threshold drops, and on the
+//! shared-system-prompt workload the prefix KV cache must score hits and
+//! save prefill positions without changing a single generated token.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
+use eellm::data::synth::{shared_prefix_prompts, SharedPrefixSpec};
 use eellm::data::tasks;
 use eellm::serve::{
     requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
+    ServeRequest,
 };
 use eellm::util::table::Table;
 
@@ -49,6 +53,7 @@ fn main() {
                     threshold: tau,
                     policy: Policy::ShortestPromptFirst,
                     max_concurrent: 4,
+                    prefix_cache_positions: 0,
                 },
             );
             let out = pool.run_batch(reqs.clone()).expect("batch");
@@ -92,6 +97,71 @@ fn main() {
     assert!(
         early.last().unwrap() >= early.first().unwrap(),
         "early-exit fraction did not grow as the threshold dropped: {early:?}"
+    );
+
+    // --- Prefix KV-cache reuse on a shared-system-prompt workload ---
+    // Shape checks: outputs are byte-identical with the cache on vs off,
+    // and the cached run actually restores prefixes (nonzero hits and
+    // prefill positions saved).
+    let max_seq = state.man.model.max_seq;
+    let spec = SharedPrefixSpec {
+        seed: 11,
+        n_groups: 2,
+        requests_per_group: if bench_util::fast() { 3 } else { 6 },
+        prefix_bytes: max_seq / 2,
+    };
+    let prompts = shared_prefix_prompts(&spec, &corpus.facts);
+    let shared_reqs: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest::new(i as u64, p.as_str(), 8))
+        .collect();
+    let mut prefix_table = Table::new(
+        "Prefix KV-cache reuse (shared-system-prompt workload)",
+        &["cache", "tok/s", "hit rate", "prefill saved", "insert", "evict"],
+    );
+    let mut outputs: Vec<Vec<Vec<i32>>> = Vec::new();
+    for &budget in &[0usize, 8 * max_seq] {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            PoolConfig {
+                workers: 1,
+                engine: EngineKind::Sequential,
+                threshold: 0.6,
+                policy: Policy::Fifo,
+                max_concurrent: 4,
+                prefix_cache_positions: budget,
+            },
+        );
+        let out = pool.run_batch(shared_reqs.clone()).expect("batch");
+        pool.shutdown().expect("shutdown");
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        let m = &out.metrics;
+        prefix_table.row(vec![
+            if budget == 0 { "off".into() } else { format!("{budget} pos") },
+            format!("{:.1}", m.throughput_tps()),
+            format!("{:.0}%", 100.0 * m.prefix_hit_rate()),
+            format!("{} pos", m.prefill_positions_saved()),
+            format!("{}", m.prefix.insertions),
+            format!("{}", m.prefix.evictions),
+        ]);
+        if budget == 0 {
+            assert_eq!(m.prefix.lookups(), 0, "disabled cache was consulted");
+        } else {
+            assert!(m.prefix.hits > 0, "no prefix hits on shared prompts");
+            assert!(
+                m.prefill_positions_saved() > 0,
+                "prefix hits saved no prefill positions"
+            );
+        }
+        outputs.push(
+            out.responses.iter().map(|r| r.output.tokens.clone()).collect(),
+        );
+    }
+    prefix_table.emit("serving_throughput");
+    assert_eq!(
+        outputs[0], outputs[1],
+        "prefix cache changed generated tokens"
     );
     println!("serving_throughput shape checks OK");
 }

@@ -151,6 +151,63 @@ fn summary_doc(rng: &mut Rng, facts: &[Fact]) -> String {
     format!("{} summary: {}", body.join(" "), fact_sentence(ef[0], 0))
 }
 
+/// Spec for the shared-system-prompt serving workload: templated traffic
+/// where many requests repeat a long fixed prefix (the common case for
+/// production serving, and the case prefix KV-cache reuse exists for).
+#[derive(Debug, Clone)]
+pub struct SharedPrefixSpec {
+    pub seed: u64,
+    /// Distinct system prompts.
+    pub n_groups: usize,
+    /// Requests sharing each system prompt.
+    pub requests_per_group: usize,
+    /// Byte budget for each system prompt; the generated prefix always
+    /// stays strictly under it, so callers can bound prompt length
+    /// against the KV-cache capacity.
+    pub prefix_bytes: usize,
+}
+
+/// Build the workload's prompts: each is
+/// `<system prompt> question: what is the <relation> of <entity>? answer:`
+/// with the system prompt shared byte-for-byte inside a group. Prompts
+/// are emitted round-robin across groups — the serving-realistic arrival
+/// order, which also exercises a prefix store holding several groups at
+/// once. Deterministic in the spec.
+pub fn shared_prefix_prompts(
+    spec: &SharedPrefixSpec,
+    facts: &[Fact],
+) -> Vec<String> {
+    assert!(!facts.is_empty(), "shared-prefix workload needs a fact KB");
+    let mut rng = Rng::new(spec.seed);
+    let groups: Vec<String> = (0..spec.n_groups)
+        .map(|g| {
+            // The numbered tag keeps group prefixes distinct even when
+            // the same facts are drawn.
+            let mut sys = format!("system {g}:");
+            loop {
+                let f = &facts[rng.below(facts.len())];
+                let s = fact_sentence(f, rng.below(3));
+                if sys.len() + s.len() + 1 >= spec.prefix_bytes {
+                    break;
+                }
+                sys.push(' ');
+                sys.push_str(&s);
+            }
+            sys
+        })
+        .collect();
+    let mut prompts =
+        Vec::with_capacity(spec.n_groups * spec.requests_per_group);
+    for _ in 0..spec.requests_per_group {
+        for sys in &groups {
+            let f = &facts[rng.below(facts.len())];
+            let (q, _) = qa_pair(f);
+            prompts.push(format!("{sys} {q}"));
+        }
+    }
+    prompts
+}
+
 impl Corpus {
     pub fn build(spec: &CorpusSpec) -> Corpus {
         let mut rng = Rng::new(spec.seed);
@@ -228,6 +285,45 @@ mod tests {
         let (q, a) = qa_pair(&f);
         assert_eq!(q, "question: what is the capital of bace? answer:");
         assert_eq!(a, " zarbon");
+    }
+
+    #[test]
+    fn shared_prefix_prompts_share_within_groups_and_bound_length() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 4,
+            n_entities: 8,
+            target_bytes: 5_000,
+        });
+        let spec = SharedPrefixSpec {
+            seed: 11,
+            n_groups: 3,
+            requests_per_group: 4,
+            prefix_bytes: 96,
+        };
+        let a = shared_prefix_prompts(&spec, &c.facts);
+        assert_eq!(a.len(), 12);
+        assert_eq!(a, shared_prefix_prompts(&spec, &c.facts), "deterministic");
+        // Round-robin emission: prompts i and i + n_groups share their
+        // group's system prefix byte-for-byte; neighbouring prompts are
+        // from different groups.
+        for (i, p) in a.iter().enumerate() {
+            let g = i % spec.n_groups;
+            let tag = format!("system {g}:");
+            assert!(p.starts_with(&tag), "{p:?}");
+            let sys_len = p.find(" question: ").expect("question suffix");
+            assert!(sys_len < spec.prefix_bytes, "prefix over budget: {p:?}");
+            if i >= spec.n_groups {
+                assert_eq!(
+                    p[..sys_len],
+                    a[i - spec.n_groups][..sys_len],
+                    "group {g} prefix not shared"
+                );
+            }
+            assert!(p.ends_with("? answer:"), "{p:?}");
+            assert!(p.is_ascii());
+        }
+        // Distinct groups diverge immediately after the tag.
+        assert_ne!(a[0], a[1]);
     }
 
     #[test]

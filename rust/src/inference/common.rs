@@ -112,8 +112,24 @@ pub fn prefill_chunks(
     widths: &[usize],
     l: usize,
 ) -> Result<Vec<(usize, usize)>> {
+    prefill_chunks_from(widths, 0, l)
+}
+
+/// [`prefill_chunks`] for a *suffix*: plan windows covering positions
+/// [start, l-1) of the token buffer — the cached-prefix case, where
+/// positions below `start` were restored from a snapshot and only the
+/// remainder needs computing.
+///
+/// Windows may slide left of `start` over restored/healed territory
+/// (recomputation is idempotent), so the only hard requirement is that
+/// the smallest width fits the buffer at all.
+pub fn prefill_chunks_from(
+    widths: &[usize],
+    start: usize,
+    l: usize,
+) -> Result<Vec<(usize, usize)>> {
     let mut chunks = Vec::new();
-    if l < 2 {
+    if l < 2 || start + 1 >= l {
         return Ok(chunks);
     }
     let wmin = match widths.iter().copied().min() {
@@ -126,7 +142,7 @@ pub fn prefill_chunks(
              token buffer of {l} (widths {widths:?})"
         );
     }
-    let mut pos = 0usize;
+    let mut pos = start;
     while pos + 1 < l {
         let remaining = l - 1 - pos;
         match widths.iter().copied().filter(|&w| w <= remaining).max() {
@@ -340,6 +356,78 @@ mod tests {
                     "position {i} uncovered (l {l}, widths {widths:?}, \
                      chunks {chunks:?})"
                 ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefill_chunks_from_covers_only_the_suffix() {
+        // widths [1,2,4,8], start 8, l 12: positions [8,11) as 2 + 1.
+        let c = prefill_chunks_from(&[1, 2, 4, 8], 8, 12).unwrap();
+        assert_eq!(c, vec![(8, 2), (10, 1)]);
+        // Nothing left to prefill (cached prefix covers the buffer).
+        assert!(prefill_chunks_from(&[1, 2], 11, 12).unwrap().is_empty());
+        assert!(prefill_chunks_from(&[1, 2], 20, 12).unwrap().is_empty());
+        // Suffix shorter than every width: the smallest window slides
+        // left over restored territory (idempotent recomputation).
+        let c = prefill_chunks_from(&[4], 9, 12).unwrap();
+        assert_eq!(c, vec![(8, 4)]);
+    }
+
+    /// Property: for arbitrary width sets, buffer lengths, and resume
+    /// points, every suffix plan either errors (only legal when even the
+    /// smallest width exceeds the buffer) or covers every position in
+    /// [start, l-1) with in-bounds windows.
+    #[test]
+    fn prefill_chunks_from_cover_suffix_for_arbitrary_widths() {
+        use crate::util::proptest;
+
+        proptest::check("prefill_chunks_from coverage", 256, |rng| {
+            let n_widths = rng.range(1, 5);
+            let mut widths: Vec<usize> =
+                (0..n_widths).map(|_| rng.range(1, 17)).collect();
+            widths.sort();
+            widths.dedup();
+            let l = rng.range(0, 40);
+            let start = rng.range(0, 40);
+            let chunks = match prefill_chunks_from(&widths, start, l) {
+                Err(_) => {
+                    let wmin = *widths.iter().min().unwrap();
+                    if l >= 2 && start + 1 < l && wmin <= l {
+                        return Err(format!(
+                            "error despite a fitting width: widths \
+                             {widths:?} start {start} l {l}"
+                        ));
+                    }
+                    return Ok(());
+                }
+                Ok(c) => c,
+            };
+            let mut covered = vec![false; l.max(1)];
+            for &(pos, w) in &chunks {
+                if pos + w > l {
+                    return Err(format!(
+                        "window {pos}+{w} out of bounds (l {l}, widths \
+                         {widths:?})"
+                    ));
+                }
+                for c in covered.iter_mut().skip(pos).take(w) {
+                    *c = true;
+                }
+            }
+            for (i, c) in covered
+                .iter()
+                .enumerate()
+                .take(l.saturating_sub(1))
+                .skip(start.min(l))
+            {
+                if !*c {
+                    return Err(format!(
+                        "position {i} uncovered (start {start}, l {l}, \
+                         widths {widths:?}, chunks {chunks:?})"
+                    ));
+                }
             }
             Ok(())
         });

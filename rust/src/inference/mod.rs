@@ -25,19 +25,32 @@
 //! stream tokens as they are emitted. `generate_tokens` on either engine
 //! is just a session drained to completion.
 //!
+//! [`prefix_cache`] adds shared-prefix KV reuse on top of the sessions:
+//! a token-trie keyed store of immutable post-prefill cache snapshots
+//! (refcounted, LRU-evicted under a position budget), so sessions whose
+//! prompts share a prefix restore it and prefill only the suffix. Only
+//! backends whose sessions own snapshottable caches participate
+//! ([`DecodeBackend::supports_cache_snapshots`]): the sequential engine
+//! does, the pipelined engine declines.
+//!
 //! [`probe`] reproduces Table 4: per-exit predictions + confidences for
 //! every generated token.
 
 pub mod common;
 pub mod pipelined;
+pub mod prefix_cache;
 pub mod probe;
 pub mod sequential;
 pub mod session;
 
 pub use common::{ExitStats, GenOutput, ModelState};
 pub use pipelined::PipelinedEngine;
+pub use prefix_cache::{
+    CacheSnapshot, PinnedSnapshot, PrefixCacheStats, PrefixCacheStore,
+    PrefixHit,
+};
 pub use sequential::SequentialEngine;
 pub use session::{
-    DecodeBackend, DecodeSession, DoneReason, SessionCaches, StepEvent,
-    WindowOutcome,
+    CachedPrefill, DecodeBackend, DecodeSession, DoneReason, SessionCaches,
+    StepEvent, WindowOutcome,
 };

@@ -433,6 +433,35 @@ impl DecodeBackend for PipelinedEngine {
     fn max_live_sessions(&self) -> usize {
         1
     }
+
+    /// Declined: decode state lives sharded across the stage threads
+    /// (one resident KV cache per thread), not in the session — there is
+    /// no per-session cache to copy out. The serving pool checks this
+    /// flag and serves pipelined workers without prefix reuse.
+    fn supports_cache_snapshots(&self) -> bool {
+        false
+    }
+
+    fn snapshot_caches(
+        &mut self,
+        _caches: &SessionCaches,
+    ) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
+        bail!(
+            "the pipelined engine keeps KV caches in its stage threads \
+             and cannot snapshot them (supports_cache_snapshots is false)"
+        )
+    }
+
+    fn restore_caches(
+        &mut self,
+        _snapshot: &[crate::runtime::tensor::HostTensor],
+    ) -> Result<SessionCaches> {
+        bail!(
+            "the pipelined engine keeps KV caches in its stage threads \
+             and cannot restore snapshots (supports_cache_snapshots is \
+             false)"
+        )
+    }
 }
 
 impl Generator for PipelinedEngine {

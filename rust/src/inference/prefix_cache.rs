@@ -1,0 +1,838 @@
+//! Shared-prefix KV-cache store — a token-trie keyed store of immutable
+//! prefill snapshots, so decode sessions whose prompts share a prefix
+//! (templated / system-prompt traffic) pay prefill only for the suffix.
+//!
+//! The store holds [`CacheSnapshot`]s: host-side copies of a session's
+//! per-stage KV caches taken right after prefill, together with the token
+//! prefix they cover and the recompute deficit they carry (Section 4 /
+//! Appendix D.3 — trailing positions whose deep-layer KV entries an early
+//! exit left missing). Snapshots are immutable and handed out by `Arc`,
+//! so a restore never races an eviction.
+//!
+//! Semantics:
+//!
+//! - **Lookup** walks the token trie and returns the entry with the
+//!   *longest common prefix* against the query (maximal by construction:
+//!   trie nodes exist only on paths to live entries). The caller may
+//!   trust restored KV entries for positions below
+//!   `matched.min(healed frontier)` and must re-run the rest — tokens
+//!   past the common prefix differ, and the snapshot's deficit region
+//!   was never fully healed.
+//! - **Pinning** — a hit returns a [`PinnedSnapshot`] guard; entries with
+//!   live pins are never evicted. Sessions hold their pin until they
+//!   finish, so a hot prefix stays resident while anyone decodes from it.
+//! - **Eviction** is LRU over unpinned entries under a configurable
+//!   budget of cached positions; inserts that cannot fit (budget smaller
+//!   than the snapshot, or every resident entry pinned) are rejected
+//!   rather than ever exceeding the budget.
+//! - **Counters** — hits, misses, insertions, rejections, evictions,
+//!   evicted positions, and prefill positions saved (reported by the
+//!   sessions that skipped them) for [`ServeMetrics`].
+//!
+//! The properties above are enforced by the model-based property tests at
+//! the bottom of this file and by `rust/tests/prefix_cache_equivalence.rs`
+//! (cache-on outputs are token-for-token and exit-layer-for-exit-layer
+//! identical to cache-off).
+//!
+//! [`ServeMetrics`]: crate::serve::ServeMetrics
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::tensor::HostTensor;
+
+/// Shortest prefix worth caching: BOS plus at least one real token.
+/// Every token buffer starts with BOS, so a 1-token "shared prefix"
+/// saves nothing and would still burn a budget position.
+const MIN_PREFIX: usize = 2;
+
+/// An immutable prefill-state snapshot: everything a session needs to
+/// resume decoding after `tokens` as if it had prefilled them itself.
+///
+/// Note on sizing: `stage_caches` copies each stage's *whole*
+/// fixed-shape KV cache (capacity `max_seq`), whatever the prefix
+/// length — the budget's `positions` unit (the key length) is a
+/// reuse-value proxy, not a byte count. Budget accordingly: a store of
+/// `N * max_seq` positions can hold at most `N * max_seq / MIN_PREFIX`
+/// full-size cache copies in the degenerate short-prefix case.
+/// Bytes-accurate accounting (slicing snapshots to their live prefix)
+/// is on the roadmap.
+#[derive(Debug, Clone)]
+pub struct CacheSnapshot {
+    /// Token prefix the snapshot covers (BOS included).
+    pub tokens: Vec<i32>,
+    /// Host-side copy of the per-stage KV caches
+    /// ([`DecodeBackend::snapshot_caches`]).
+    ///
+    /// [`DecodeBackend::snapshot_caches`]: super::session::DecodeBackend::snapshot_caches
+    pub stage_caches: Vec<HostTensor>,
+    /// Recompute-deficit bookkeeping carried across the store: the number
+    /// of trailing positions healed by fewer than all stages when the
+    /// snapshot was taken. Restorers must not trust KV entries at
+    /// positions `>= tokens.len() - 1 - deficit` (the healed frontier)
+    /// without re-running them.
+    pub deficit: usize,
+}
+
+impl CacheSnapshot {
+    /// Budget weight of the snapshot: the positions it covers.
+    pub fn positions(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// First position whose KV entries are *not* fully healed: trailing
+    /// deficit positions were only partially recomputed, and the last
+    /// token's position was never prefilled at all.
+    pub fn healed_frontier(&self) -> usize {
+        self.tokens
+            .len()
+            .saturating_sub(1)
+            .saturating_sub(self.deficit)
+    }
+}
+
+/// Activity counters of a [`PrefixCacheStore`] (monotonic; diff two
+/// readings with [`PrefixCacheStats::since`] to attribute one batch).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Lookups that returned a usable shared prefix.
+    pub hits: u64,
+    /// Lookups with no shared prefix of at least two positions.
+    pub misses: u64,
+    /// Snapshots stored.
+    pub insertions: u64,
+    /// Inserts refused: snapshot over budget, too short to ever help, or
+    /// every resident entry pinned.
+    pub rejected: u64,
+    /// Entries evicted (LRU under the position budget).
+    pub evictions: u64,
+    /// Positions those evictions released.
+    pub evicted_positions: u64,
+    /// Prefill positions sessions skipped thanks to hits (reported via
+    /// [`PrefixCacheStore::record_saved`]).
+    pub saved_positions: u64,
+}
+
+impl PrefixCacheStats {
+    /// Total lookups.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction (0 when the store was never consulted).
+    pub fn hit_rate(&self) -> f64 {
+        self.hits as f64 / (self.lookups().max(1)) as f64
+    }
+
+    /// Accumulate another store's counters (the pool merges per-worker
+    /// stores into one [`ServeMetrics`] reading).
+    ///
+    /// [`ServeMetrics`]: crate::serve::ServeMetrics
+    pub fn merge(&mut self, other: &PrefixCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.rejected += other.rejected;
+        self.evictions += other.evictions;
+        self.evicted_positions += other.evicted_positions;
+        self.saved_positions += other.saved_positions;
+    }
+
+    /// Counter delta `self - baseline` (saturating): the activity since
+    /// an earlier reading of the same store.
+    pub fn since(&self, baseline: &PrefixCacheStats) -> PrefixCacheStats {
+        PrefixCacheStats {
+            hits: self.hits.saturating_sub(baseline.hits),
+            misses: self.misses.saturating_sub(baseline.misses),
+            insertions: self.insertions.saturating_sub(baseline.insertions),
+            rejected: self.rejected.saturating_sub(baseline.rejected),
+            evictions: self.evictions.saturating_sub(baseline.evictions),
+            evicted_positions: self
+                .evicted_positions
+                .saturating_sub(baseline.evicted_positions),
+            saved_positions: self
+                .saved_positions
+                .saturating_sub(baseline.saved_positions),
+        }
+    }
+}
+
+/// One stored snapshot plus its bookkeeping. Shared by `Arc` between the
+/// store (trie + index) and outstanding [`PinnedSnapshot`] guards.
+struct Entry {
+    snap: CacheSnapshot,
+    /// Live [`PinnedSnapshot`] guards; entries with pins are never
+    /// evicted. Increments happen under the store lock, decrements on
+    /// guard drop (lock-free) — so a zero observed under the lock stays
+    /// zero for the duration of the critical section.
+    pins: AtomicUsize,
+    /// Logical LRU clock reading of the last touch (insert or hit).
+    last_used: AtomicU64,
+}
+
+/// RAII pin on a cached snapshot: the entry cannot be evicted while any
+/// pin is live. Sessions hold their pin until they finish decoding.
+pub struct PinnedSnapshot {
+    entry: Arc<Entry>,
+}
+
+impl PinnedSnapshot {
+    pub fn snapshot(&self) -> &CacheSnapshot {
+        &self.entry.snap
+    }
+
+    /// Token key of the pinned snapshot.
+    pub fn tokens(&self) -> &[i32] {
+        &self.entry.snap.tokens
+    }
+}
+
+impl Clone for PinnedSnapshot {
+    fn clone(&self) -> PinnedSnapshot {
+        self.entry.pins.fetch_add(1, Ordering::AcqRel);
+        PinnedSnapshot { entry: Arc::clone(&self.entry) }
+    }
+}
+
+impl Drop for PinnedSnapshot {
+    fn drop(&mut self) {
+        self.entry.pins.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A successful lookup: the pinned snapshot plus how much of the query
+/// it matched.
+pub struct PrefixHit {
+    pub snapshot: PinnedSnapshot,
+    /// Length of the common prefix between the query and the snapshot's
+    /// token key (>= 2). Restored KV entries are trustworthy below
+    /// `matched.min(snapshot.healed_frontier())`.
+    pub matched: usize,
+}
+
+#[derive(Default)]
+struct TrieNode {
+    children: BTreeMap<i32, TrieNode>,
+    entry: Option<Arc<Entry>>,
+}
+
+/// Remove the entry at `tokens`, pruning now-empty nodes on unwind.
+/// Returns true when `node` itself became prunable.
+fn trie_remove(node: &mut TrieNode, tokens: &[i32]) -> bool {
+    match tokens.split_first() {
+        None => node.entry = None,
+        Some((&t, rest)) => {
+            if let Some(child) = node.children.get_mut(&t) {
+                if trie_remove(child, rest) {
+                    node.children.remove(&t);
+                }
+            }
+        }
+    }
+    node.entry.is_none() && node.children.is_empty()
+}
+
+/// Shallowest entry in `node`'s subtree (ties: smallest token path —
+/// `BTreeMap` keeps children sorted, so level order is deterministic).
+fn min_depth_entry(node: &TrieNode) -> Option<Arc<Entry>> {
+    let mut level: Vec<&TrieNode> = vec![node];
+    while !level.is_empty() {
+        for n in &level {
+            if let Some(e) = &n.entry {
+                return Some(Arc::clone(e));
+            }
+        }
+        level = level.iter().flat_map(|n| n.children.values()).collect();
+    }
+    None
+}
+
+struct Inner {
+    root: TrieNode,
+    /// Key -> entry, for budget accounting and LRU victim scans.
+    index: BTreeMap<Vec<i32>, Arc<Entry>>,
+    used_positions: usize,
+    clock: u64,
+    stats: PrefixCacheStats,
+}
+
+/// Thread-safe prefix KV-cache store. One per pool worker today; the
+/// internal lock already makes cross-worker sharing safe when that lands.
+pub struct PrefixCacheStore {
+    max_positions: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PrefixCacheStore {
+    /// A store that may hold at most `max_positions` cached positions
+    /// (summed over resident snapshots).
+    pub fn new(max_positions: usize) -> PrefixCacheStore {
+        PrefixCacheStore {
+            max_positions,
+            inner: Mutex::new(Inner {
+                root: TrieNode::default(),
+                index: BTreeMap::new(),
+                used_positions: 0,
+                clock: 0,
+                stats: PrefixCacheStats::default(),
+            }),
+        }
+    }
+
+    pub fn max_positions(&self) -> usize {
+        self.max_positions
+    }
+
+    /// Cached positions currently resident.
+    pub fn used_positions(&self) -> usize {
+        self.inner.lock().unwrap().used_positions
+    }
+
+    /// Resident snapshots.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident snapshots with at least one live pin.
+    pub fn pinned_entries(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .index
+            .values()
+            .filter(|e| e.pins.load(Ordering::Acquire) > 0)
+            .count()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Attribute `positions` prefill positions skipped thanks to a hit
+    /// (called by the session that performed the cached prefill).
+    pub fn record_saved(&self, positions: u64) {
+        self.inner.lock().unwrap().stats.saved_positions += positions;
+    }
+
+    /// Longest-common-prefix lookup: the entry sharing the most leading
+    /// tokens with `query` (maximal — the trie walk depth *is* the best
+    /// achievable match, since nodes exist only on paths to entries).
+    /// Returns `None`, and counts a miss, when no entry shares at least
+    /// two positions. A hit pins the entry and refreshes its LRU slot.
+    pub fn lookup(&self, query: &[i32]) -> Option<PrefixHit> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let mut node = &inner.root;
+        let mut depth = 0usize;
+        for &t in query {
+            match node.children.get(&t) {
+                Some(child) => {
+                    node = child;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        let best = if depth >= MIN_PREFIX { min_depth_entry(node) } else { None };
+        match best {
+            Some(entry) => {
+                inner.clock += 1;
+                entry.last_used.store(inner.clock, Ordering::Relaxed);
+                entry.pins.fetch_add(1, Ordering::AcqRel);
+                inner.stats.hits += 1;
+                Some(PrefixHit {
+                    snapshot: PinnedSnapshot { entry },
+                    matched: depth,
+                })
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a snapshot, evicting LRU unpinned entries as needed to stay
+    /// within the position budget. Returns false — and stores nothing —
+    /// when the snapshot is too short to ever help, already present
+    /// (its entry's LRU slot is refreshed instead), over the whole
+    /// budget, or cannot fit because every resident entry is pinned.
+    pub fn insert(&self, snap: CacheSnapshot) -> bool {
+        let need = snap.positions();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if need < MIN_PREFIX || need > self.max_positions {
+            inner.stats.rejected += 1;
+            return false;
+        }
+        if let Some(existing) = inner.index.get(&snap.tokens) {
+            inner.clock += 1;
+            existing.last_used.store(inner.clock, Ordering::Relaxed);
+            return false;
+        }
+        // Feasibility before any eviction: reclaiming can only free
+        // unpinned positions, so an insert that cannot fit even after
+        // flushing every unpinned entry must be rejected up front —
+        // not after collateral-evicting the whole hot working set.
+        if Self::pinned_positions_locked(inner) + need > self.max_positions {
+            inner.stats.rejected += 1;
+            return false;
+        }
+        while inner.used_positions + need > self.max_positions {
+            if Self::evict_lru_locked(inner).is_none() {
+                // Unreachable given the feasibility check; never loop.
+                inner.stats.rejected += 1;
+                return false;
+            }
+        }
+        inner.clock += 1;
+        let entry = Arc::new(Entry {
+            pins: AtomicUsize::new(0),
+            last_used: AtomicU64::new(inner.clock),
+            snap,
+        });
+        let mut node = &mut inner.root;
+        for &t in &entry.snap.tokens {
+            node = node.children.entry(t).or_default();
+        }
+        node.entry = Some(Arc::clone(&entry));
+        inner.used_positions += need;
+        inner.index.insert(entry.snap.tokens.clone(), entry);
+        inner.stats.insertions += 1;
+        true
+    }
+
+    /// Whether a snapshot of `positions` could currently be admitted:
+    /// within the whole budget and not blocked by pinned entries. A
+    /// cheap pre-check so callers can skip building an expensive
+    /// snapshot (a full host copy of the KV caches) that the store
+    /// would only reject. Exact for per-worker stores (one inserting
+    /// thread); advisory if a store is ever shared.
+    pub fn would_admit(&self, positions: usize) -> bool {
+        if positions < MIN_PREFIX || positions > self.max_positions {
+            return false;
+        }
+        let inner = self.inner.lock().unwrap();
+        Self::pinned_positions_locked(&inner) + positions
+            <= self.max_positions
+    }
+
+    /// Evict the least-recently-used unpinned entry, returning its token
+    /// key (`None` when nothing is evictable). Exposed for tests and for
+    /// manual trimming.
+    pub fn evict_one(&self) -> Option<Vec<i32>> {
+        Self::evict_lru_locked(&mut self.inner.lock().unwrap())
+    }
+
+    /// Positions held by entries with live pins (not reclaimable).
+    fn pinned_positions_locked(inner: &Inner) -> usize {
+        inner
+            .index
+            .values()
+            .filter(|e| e.pins.load(Ordering::Acquire) > 0)
+            .map(|e| e.snap.positions())
+            .sum()
+    }
+
+    fn evict_lru_locked(inner: &mut Inner) -> Option<Vec<i32>> {
+        let victim = inner
+            .index
+            .iter()
+            .filter(|(_, e)| e.pins.load(Ordering::Acquire) == 0)
+            .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+            .map(|(k, _)| k.clone())?;
+        let entry = inner.index.remove(&victim).unwrap();
+        trie_remove(&mut inner.root, &victim);
+        inner.used_positions -= entry.snap.positions();
+        inner.stats.evictions += 1;
+        inner.stats.evicted_positions += entry.snap.positions() as u64;
+        Some(victim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    /// Snapshot with no tensors — the store never inspects them, so the
+    /// trie/LRU/pinning machinery can be tested without a model.
+    fn snap(tokens: &[i32]) -> CacheSnapshot {
+        CacheSnapshot {
+            tokens: tokens.to_vec(),
+            stage_caches: Vec::new(),
+            deficit: 0,
+        }
+    }
+
+    #[test]
+    fn lookup_returns_longest_common_prefix() {
+        let s = PrefixCacheStore::new(64);
+        assert!(s.insert(snap(&[1, 2, 3])));
+        assert!(s.insert(snap(&[1, 2, 3, 4, 5])));
+        assert!(s.insert(snap(&[1, 9])));
+        // Query diverges after [1,2,3,4]: the deepest walkable node is
+        // depth 4, and the shallowest entry below it is the 5-key.
+        let hit = s.lookup(&[1, 2, 3, 4, 9, 9]).expect("hit");
+        assert_eq!(hit.matched, 4);
+        assert_eq!(hit.snapshot.tokens(), &[1, 2, 3, 4, 5]);
+        // Exact-prefix query: the 3-key matches in full.
+        let hit = s.lookup(&[1, 2, 3]).expect("hit");
+        assert_eq!(hit.matched, 3);
+        assert_eq!(hit.snapshot.tokens(), &[1, 2, 3]);
+        // No shared prefix of >= 2 positions: a miss.
+        assert!(s.lookup(&[2, 2, 2]).is_none());
+        assert!(s.lookup(&[1]).is_none());
+        let st = s.stats();
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.misses, 2);
+    }
+
+    #[test]
+    fn insert_rejects_over_budget_and_trivial_prefixes() {
+        let s = PrefixCacheStore::new(4);
+        assert!(!s.insert(snap(&[1])), "1-token prefix can never help");
+        assert!(!s.insert(snap(&[1, 2, 3, 4, 5])), "over the whole budget");
+        assert!(s.insert(snap(&[1, 2, 3])));
+        assert_eq!(s.used_positions(), 3);
+        assert_eq!(s.stats().rejected, 2);
+    }
+
+    #[test]
+    fn duplicate_insert_touches_instead_of_storing() {
+        let s = PrefixCacheStore::new(8);
+        assert!(s.insert(snap(&[1, 2, 3])));
+        assert!(!s.insert(snap(&[1, 2, 3])));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats().insertions, 1);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_skips_pinned() {
+        let s = PrefixCacheStore::new(6);
+        assert!(s.insert(snap(&[1, 2])));
+        assert!(s.insert(snap(&[3, 4])));
+        assert!(s.insert(snap(&[5, 6])));
+        // Touch [1,2] so [3,4] becomes the LRU victim.
+        let pin = s.lookup(&[1, 2]).expect("hit");
+        assert_eq!(s.evict_one().expect("victim"), vec![3, 4]);
+        // Pin [5,6]; with [1,2] also pinned, nothing is evictable.
+        let pin2 = s.lookup(&[5, 6]).expect("hit");
+        assert!(s.evict_one().is_none());
+        assert_eq!(s.pinned_entries(), 2);
+        drop(pin);
+        assert_eq!(s.evict_one().expect("victim"), vec![1, 2]);
+        drop(pin2);
+        assert_eq!(s.pinned_entries(), 0);
+        let st = s.stats();
+        assert_eq!(st.evictions, 2);
+        assert_eq!(st.evicted_positions, 4);
+    }
+
+    #[test]
+    fn insert_evicts_lru_to_fit_but_never_pinned() {
+        let s = PrefixCacheStore::new(5);
+        assert!(s.insert(snap(&[1, 2])));
+        assert!(s.insert(snap(&[3, 4])));
+        // Needs 3 positions: evicts [1,2] (LRU), then fits.
+        assert!(s.insert(snap(&[5, 6, 7])));
+        assert!(s.lookup(&[1, 2]).is_none());
+        assert_eq!(s.used_positions(), 5);
+        // Pin everything: a large insert cannot evict and is rejected.
+        let _p1 = s.lookup(&[3, 4]).unwrap();
+        let _p2 = s.lookup(&[5, 6, 7]).unwrap();
+        assert!(!s.insert(snap(&[8, 9, 10, 11])));
+        assert_eq!(s.used_positions(), 5);
+    }
+
+    /// Regression: an insert that cannot fit even after flushing every
+    /// unpinned entry must be rejected up front, not after evicting the
+    /// whole hot working set as collateral damage.
+    #[test]
+    fn infeasible_insert_evicts_nothing() {
+        let s = PrefixCacheStore::new(8);
+        assert!(s.insert(snap(&[1, 2])));
+        assert!(s.insert(snap(&[3, 4])));
+        let _pin = s.lookup(&[1, 2]).unwrap();
+        // Needs 7; even evicting the unpinned [3,4] leaves only
+        // 8 - 2 (pinned) = 6 positions. Must reject *and* keep [3,4].
+        assert!(!s.would_admit(7));
+        assert!(!s.insert(snap(&[5, 6, 7, 8, 9, 10, 11])));
+        assert_eq!(s.len(), 2, "hot entries were collateral-evicted");
+        assert_eq!(s.stats().evictions, 0);
+        // A feasible insert still evicts just enough.
+        assert!(s.would_admit(6));
+        assert!(s.insert(snap(&[5, 6, 7, 8, 9, 10])));
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.used_positions(), 8);
+    }
+
+    #[test]
+    fn stats_since_reports_the_delta() {
+        let s = PrefixCacheStore::new(8);
+        assert!(s.insert(snap(&[1, 2])));
+        let base = s.stats();
+        assert!(s.lookup(&[1, 2, 3]).is_some());
+        s.record_saved(5);
+        let d = s.stats().since(&base);
+        assert_eq!(d.hits, 1);
+        assert_eq!(d.insertions, 0);
+        assert_eq!(d.saved_positions, 5);
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged, s.stats());
+    }
+
+    #[test]
+    fn concurrent_hammering_preserves_invariants() {
+        let s = std::sync::Arc::new(PrefixCacheStore::new(48));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = std::sync::Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE ^ t);
+                let mut pins = Vec::new();
+                for _ in 0..500 {
+                    let key: Vec<i32> = (0..rng.range(2, 8))
+                        .map(|_| rng.below(4) as i32)
+                        .collect();
+                    match rng.below(4) {
+                        0 => {
+                            s.insert(snap(&key));
+                        }
+                        1 => {
+                            if let Some(h) = s.lookup(&key) {
+                                pins.push(h.snapshot);
+                            }
+                        }
+                        2 => {
+                            if !pins.is_empty() {
+                                pins.swap_remove(rng.below(pins.len()));
+                            }
+                        }
+                        _ => {
+                            s.evict_one();
+                        }
+                    }
+                    assert!(s.used_positions() <= s.max_positions());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(s.used_positions() <= s.max_positions());
+        assert_eq!(s.pinned_entries(), 0, "all pins were dropped");
+        while s.evict_one().is_some() {}
+        assert!(s.is_empty());
+        assert_eq!(s.used_positions(), 0);
+    }
+
+    /// Mirror of the store used by the model-based property test below:
+    /// same keys, same logical clock, same pin state.
+    struct Model {
+        /// key -> (positions, last_used).
+        entries: std::collections::BTreeMap<Vec<i32>, (usize, u64)>,
+        clock: u64,
+    }
+
+    impl Model {
+        fn used(&self) -> usize {
+            self.entries.values().map(|e| e.0).sum()
+        }
+
+        /// (best lcp, chosen key) under the store's selection rule:
+        /// max lcp, then shortest key, then smallest token order.
+        fn best(&self, query: &[i32]) -> Option<(usize, Vec<i32>)> {
+            let lcp = |k: &[i32]| {
+                k.iter().zip(query).take_while(|(a, b)| a == b).count()
+            };
+            let m = self.entries.keys().map(|k| lcp(k)).max()?;
+            if m < MIN_PREFIX {
+                return None;
+            }
+            let key = self
+                .entries
+                .keys()
+                .filter(|k| lcp(k) == m)
+                .min_by_key(|k| (k.len(), (*k).clone()))
+                .unwrap()
+                .clone();
+            Some((m, key))
+        }
+
+        /// LRU victim among unpinned keys (clock readings are unique).
+        fn victim(&self, pinned: &std::collections::BTreeSet<Vec<i32>>) -> Option<Vec<i32>> {
+            self.entries
+                .iter()
+                .filter(|(k, _)| !pinned.contains(*k))
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+        }
+    }
+
+    /// The ISSUE's store properties, checked against the mirror model on
+    /// random insert / lookup / release / evict sequences:
+    /// the position budget is never exceeded, longest-prefix lookup is
+    /// maximal, pinned entries are never evicted, and eviction order is
+    /// LRU.
+    #[test]
+    fn store_matches_model_on_random_op_sequences() {
+        proptest::check("prefix cache store model", 96, |rng| {
+            let budget = rng.range(6, 32);
+            let store = PrefixCacheStore::new(budget);
+            let mut model = Model {
+                entries: std::collections::BTreeMap::new(),
+                clock: 0,
+            };
+            // Live pins: (key, guard). The model's pinned set derives
+            // from it.
+            let mut pins: Vec<(Vec<i32>, PinnedSnapshot)> = Vec::new();
+            for _ in 0..rng.range(20, 80) {
+                let key: Vec<i32> = (0..rng.range(1, 9))
+                    .map(|_| rng.below(3) as i32)
+                    .collect();
+                let pinned: std::collections::BTreeSet<Vec<i32>> =
+                    pins.iter().map(|(k, _)| k.clone()).collect();
+                match rng.below(4) {
+                    0 => {
+                        // Insert: mirror the store's evict-to-fit loop.
+                        let stored = store.insert(snap(&key));
+                        let need = key.len();
+                        if need < MIN_PREFIX || need > budget {
+                            if stored {
+                                return Err(format!(
+                                    "stored unstorable key {key:?}"
+                                ));
+                            }
+                        } else if model.entries.contains_key(&key) {
+                            if stored {
+                                return Err(format!(
+                                    "re-stored duplicate {key:?}"
+                                ));
+                            }
+                            model.clock += 1;
+                            model.entries.get_mut(&key).unwrap().1 =
+                                model.clock;
+                        } else {
+                            // Feasibility mirror: only unpinned
+                            // positions are reclaimable, and an
+                            // infeasible insert must evict nothing.
+                            let pinned_used: usize = model
+                                .entries
+                                .iter()
+                                .filter(|(k, _)| pinned.contains(*k))
+                                .map(|(_, (n, _))| n)
+                                .sum();
+                            let fits = pinned_used + need <= budget;
+                            if stored != fits {
+                                return Err(format!(
+                                    "insert {key:?}: store said {stored}, \
+                                     model said {fits}"
+                                ));
+                            }
+                            if fits {
+                                while model.used() + need > budget {
+                                    let v =
+                                        model.victim(&pinned).expect("victim");
+                                    model.entries.remove(&v);
+                                }
+                                model.clock += 1;
+                                model
+                                    .entries
+                                    .insert(key.clone(), (need, model.clock));
+                            }
+                        }
+                    }
+                    1 => {
+                        // Lookup: maximality + deterministic selection.
+                        let got = store.lookup(&key);
+                        match (got, model.best(&key)) {
+                            (None, None) => {}
+                            (Some(h), Some((m, k))) => {
+                                if h.matched != m {
+                                    return Err(format!(
+                                        "lookup {key:?}: matched \
+                                         {} != model lcp {m}",
+                                        h.matched
+                                    ));
+                                }
+                                if h.snapshot.tokens() != k.as_slice() {
+                                    return Err(format!(
+                                        "lookup {key:?}: chose {:?}, model \
+                                         chose {k:?}",
+                                        h.snapshot.tokens()
+                                    ));
+                                }
+                                model.clock += 1;
+                                model.entries.get_mut(&k).unwrap().1 =
+                                    model.clock;
+                                pins.push((k, h.snapshot));
+                            }
+                            (got, want) => {
+                                return Err(format!(
+                                    "lookup {key:?}: hit {} vs model {}",
+                                    got.is_some(),
+                                    want.is_some()
+                                ));
+                            }
+                        }
+                    }
+                    2 => {
+                        // Release a random pin.
+                        if !pins.is_empty() {
+                            pins.swap_remove(rng.below(pins.len()));
+                        }
+                    }
+                    _ => {
+                        // Explicit evict: must pick the model's LRU
+                        // victim and never a pinned entry.
+                        let got = store.evict_one();
+                        let want = model.victim(&pinned);
+                        if got != want {
+                            return Err(format!(
+                                "evict: store {got:?} vs model {want:?}"
+                            ));
+                        }
+                        if let Some(v) = got {
+                            if pinned.contains(&v) {
+                                return Err(format!(
+                                    "evicted pinned entry {v:?}"
+                                ));
+                            }
+                            model.entries.remove(&v);
+                        }
+                    }
+                }
+                if store.used_positions() > budget {
+                    return Err(format!(
+                        "budget exceeded: {} > {budget}",
+                        store.used_positions()
+                    ));
+                }
+                if store.used_positions() != model.used() {
+                    return Err(format!(
+                        "usage drift: store {} vs model {}",
+                        store.used_positions(),
+                        model.used()
+                    ));
+                }
+                if store.len() != model.entries.len() {
+                    return Err(format!(
+                        "entry-count drift: store {} vs model {}",
+                        store.len(),
+                        model.entries.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -15,7 +15,7 @@
 //! python/tests/test_decode.py), so this only costs compute — the batching
 //! effect the paper relies on.
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
@@ -268,6 +268,54 @@ impl DecodeBackend for SequentialEngine {
 
     fn max_live_sessions(&self) -> usize {
         usize::MAX
+    }
+
+    /// Sessions own their per-stage KV caches as plain literals, so the
+    /// prefix cache can copy them to host and rebuild them freely.
+    fn supports_cache_snapshots(&self) -> bool {
+        true
+    }
+
+    fn snapshot_caches(
+        &mut self,
+        caches: &SessionCaches,
+    ) -> Result<Vec<HostTensor>> {
+        caches
+            .caches
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+            .context("snapshotting per-stage KV caches")
+    }
+
+    fn restore_caches(
+        &mut self,
+        snapshot: &[HostTensor],
+    ) -> Result<SessionCaches> {
+        let stages = &self.state.man.stages;
+        ensure!(
+            snapshot.len() == stages.len(),
+            "snapshot has {} stage caches, engine has {} stages",
+            snapshot.len(),
+            stages.len()
+        );
+        for (t, st) in snapshot.iter().zip(stages) {
+            ensure!(
+                t.shape == st.cache_shape,
+                "stage {} cache shape {:?} does not match snapshot {:?}",
+                st.index,
+                st.cache_shape,
+                t.shape
+            );
+        }
+        Ok(SessionCaches {
+            caches: snapshot
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()
+                .context("restoring per-stage KV caches")?,
+            generation: 0,
+        })
     }
 }
 

@@ -24,10 +24,13 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::runtime::tensor::HostTensor;
+
 use super::common::{
-    clamp_max_new, detokenize, is_stop_token, pick_width, prefill_chunks,
-    prompt_tokens, ExitStats, GenOutput,
+    clamp_max_new, detokenize, is_stop_token, pick_width,
+    prefill_chunks_from, prompt_tokens, ExitStats, GenOutput,
 };
+use super::prefix_cache::{CacheSnapshot, PinnedSnapshot, PrefixCacheStore};
 
 /// Per-session decode state handed out by a backend.
 pub struct SessionCaches {
@@ -101,6 +104,34 @@ pub trait DecodeBackend {
 
     /// How many sessions may be live on this backend at once.
     fn max_live_sessions(&self) -> usize;
+
+    /// Capability flag for the prefix KV cache
+    /// ([`crate::inference::prefix_cache`]): whether this backend's
+    /// per-session KV state can be copied to host snapshots and rebuilt
+    /// from them. The sequential engine supports it (sessions own their
+    /// caches); the pipelined engine declines (decode state lives in its
+    /// stage threads), and callers must serve it without prefix reuse.
+    fn supports_cache_snapshots(&self) -> bool;
+
+    /// Copy a session's KV caches to host tensors, one per stage. Errors
+    /// on backends where [`supports_cache_snapshots`] is false.
+    ///
+    /// [`supports_cache_snapshots`]: DecodeBackend::supports_cache_snapshots
+    fn snapshot_caches(
+        &mut self,
+        caches: &SessionCaches,
+    ) -> Result<Vec<HostTensor>>;
+
+    /// Rebuild per-session caches from a host snapshot taken by
+    /// [`snapshot_caches`] on a same-shaped engine. Errors on backends
+    /// where [`supports_cache_snapshots`] is false.
+    ///
+    /// [`snapshot_caches`]: DecodeBackend::snapshot_caches
+    /// [`supports_cache_snapshots`]: DecodeBackend::supports_cache_snapshots
+    fn restore_caches(
+        &mut self,
+        snapshot: &[HostTensor],
+    ) -> Result<SessionCaches>;
 }
 
 /// Why a session finished.
@@ -146,8 +177,23 @@ pub struct DecodeSession {
     generated: Vec<i32>,
     done: Option<DoneReason>,
     prefilled: bool,
+    /// Prefix-cache snapshot this session restored from, held pinned for
+    /// the session's lifetime so the entry stays resident while in use.
+    pin: Option<PinnedSnapshot>,
     started: Instant,
     seconds: f64,
+}
+
+/// Result of [`DecodeSession::prefill_with_cache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CachedPrefill {
+    /// Leading token positions matched by the restored snapshot (0 on a
+    /// miss or when the cache was not consulted).
+    pub cached_tokens: usize,
+    /// Prefill positions actually computed after the restore.
+    pub prefilled_positions: usize,
+    /// Prefill positions skipped thanks to the restore.
+    pub saved_positions: usize,
 }
 
 impl DecodeSession {
@@ -171,6 +217,7 @@ impl DecodeSession {
             generated: Vec::new(),
             done: if max_new == 0 { Some(DoneReason::Budget) } else { None },
             prefilled: false,
+            pin: None,
             started: Instant::now(),
             seconds: 0.0,
         })
@@ -190,12 +237,72 @@ impl DecodeSession {
     /// over the available widths, no exit checks. Idempotent; a no-op for
     /// sessions that are already done (zero-budget prompts).
     pub fn prefill(&mut self, backend: &mut dyn DecodeBackend) -> Result<()> {
+        self.prefill_inner(backend, None).map(|_| ())
+    }
+
+    /// [`DecodeSession::prefill`] through a shared-prefix KV-cache store:
+    /// look up the longest cached prefix of the prompt, restore its
+    /// snapshot, and prefill only the remainder. Falls back to a plain
+    /// prefill (without consulting the store) on backends that do not
+    /// support cache snapshots, and on a miss.
+    ///
+    /// The restored snapshot stays pinned in the store for this session's
+    /// lifetime. Restored KV entries are trusted only up to the
+    /// snapshot's healed frontier — its recompute-deficit tail (Section 4
+    /// / Appendix D.3) is re-run with full-stage passes along with the
+    /// suffix, so early-exit KV healing stays correct across the restore.
+    pub fn prefill_with_cache(
+        &mut self,
+        backend: &mut dyn DecodeBackend,
+        store: &PrefixCacheStore,
+    ) -> Result<CachedPrefill> {
+        self.prefill_inner(backend, Some(store))
+    }
+
+    fn prefill_inner(
+        &mut self,
+        backend: &mut dyn DecodeBackend,
+        store: Option<&PrefixCacheStore>,
+    ) -> Result<CachedPrefill> {
+        let mut report = CachedPrefill::default();
         if self.prefilled || self.done.is_some() {
             self.prefilled = true;
-            return Ok(());
+            return Ok(report);
+        }
+        let l = self.tokens.len();
+        let mut start = 0usize;
+        let store = store.filter(|_| backend.supports_cache_snapshots());
+        if let Some(store) = store {
+            if let Some(hit) = store.lookup(&self.tokens) {
+                let snap = hit.snapshot.snapshot();
+                // Restoring is best-effort: the cache is an optimization,
+                // so a failed restore degrades to a full prefill over the
+                // still-untouched fresh caches instead of failing a
+                // request that would have served fine uncached.
+                match backend.restore_caches(&snap.stage_caches) {
+                    Ok(caches) => {
+                        self.caches = caches;
+                        // Trust restored positions only below the
+                        // snapshot's healed frontier and the common
+                        // prefix; everything from `start` on gets a
+                        // full-stage pass below, which also heals any
+                        // deficit tail the snapshot carried.
+                        start = hit
+                            .matched
+                            .min(snap.healed_frontier())
+                            .min(l - 1);
+                        report.cached_tokens = hit.matched;
+                        self.pin = Some(hit.snapshot);
+                    }
+                    Err(e) => eprintln!(
+                        "[prefix-cache] snapshot restore failed; falling \
+                         back to full prefill: {e:#}"
+                    ),
+                }
+            }
         }
         let chunks =
-            prefill_chunks(backend.decode_widths(), self.tokens.len())?;
+            prefill_chunks_from(backend.decode_widths(), start, l)?;
         for (pos, w) in chunks {
             backend.run_window(
                 &mut self.caches,
@@ -206,8 +313,53 @@ impl DecodeSession {
                 false,
             )?;
         }
+        // Every untrusted position just ran all stages, so the session
+        // starts decoding with a clean deficit regardless of what the
+        // snapshot carried.
+        self.deficit = 0;
         self.prefilled = true;
-        Ok(())
+        report.prefilled_positions = (l - 1).saturating_sub(start);
+        report.saved_positions = start;
+        if let Some(store) = store {
+            if report.saved_positions > 0 {
+                store.record_saved(report.saved_positions as u64);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Capture the post-prefill state as an immutable snapshot for a
+    /// [`PrefixCacheStore`]. Only valid between [`prefill`] and the first
+    /// [`step`] — the one point where "KV entries for the whole token
+    /// buffer, deficit included" is a well-defined prefix state.
+    ///
+    /// [`prefill`]: DecodeSession::prefill
+    /// [`step`]: DecodeSession::step
+    pub fn prefix_snapshot(
+        &self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<CacheSnapshot> {
+        ensure!(
+            self.prefilled && self.done.is_none() && self.generated.is_empty(),
+            "prefix snapshots are only valid after prefill and before \
+             decoding"
+        );
+        Ok(CacheSnapshot {
+            tokens: self.tokens.clone(),
+            stage_caches: backend.snapshot_caches(&self.caches)?,
+            deficit: self.deficit,
+        })
+    }
+
+    /// Length of the prompt token buffer (BOS included).
+    pub fn prompt_len(&self) -> usize {
+        self.tokens.len() - self.generated.len()
+    }
+
+    /// Token key of the prefix-cache snapshot this session restored from
+    /// (held pinned for the session's lifetime), if any.
+    pub fn pinned_prefix(&self) -> Option<&[i32]> {
+        self.pin.as_ref().map(|p| p.tokens())
     }
 
     /// Decode one token. Returns [`StepEvent::Finished`] (idempotently)

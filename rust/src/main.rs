@@ -14,7 +14,9 @@ use anyhow::{bail, Context, Result};
 
 use eellm::config::{InferenceConfig, TrainConfig};
 use eellm::data::dataset::{Dataset, TrainBatch};
-use eellm::data::synth::{Corpus, CorpusSpec};
+use eellm::data::synth::{
+    shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
+};
 use eellm::data::tasks;
 use eellm::eval::harness::evaluate_task;
 use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
@@ -26,9 +28,11 @@ use eellm::schedule::report::render_timeline;
 use eellm::schedule::sim::Simulator;
 use eellm::serve::{
     requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
+    ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 use eellm::util::cli::Args;
+use eellm::util::json::Json;
 use eellm::util::table::Table;
 
 const USAGE: &str = "\
@@ -51,6 +55,12 @@ eval:      --threshold F --checkpoint PATH --examples-per-task N
 serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
            --policy fifo|spf|priority --concurrent N (live sessions per
            worker, continuous batching) --threshold F --checkpoint PATH
+           --prefix-cache POSITIONS (per-worker shared-prefix KV-cache
+           budget; as a bare trailing flag the budget defaults to
+           8 * max_seq, but mid-line it must carry a value)
+           --workload tasks|shared-prefix (request set; defaults to
+           shared-prefix when the prefix cache is on, tasks otherwise)
+           --json-out PATH (metrics JSON)
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
 probe:     --prompt STR --checkpoint PATH --max-new-tokens N
@@ -280,13 +290,62 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let concurrent = args.usize_or("concurrent", 4);
     let state = model_state(args)?;
     let n_layers = state.man.model.n_layers;
+    let max_seq = state.man.model.max_seq;
+    // `--prefix-cache` takes a per-worker position budget; passed as a
+    // bare trailing flag it gets a generous default.
+    let prefix_positions = match args.get("prefix-cache") {
+        Some(v) => v
+            .parse::<usize>()
+            .context("--prefix-cache wants a position budget")?,
+        None if args.flag("prefix-cache") => 8 * max_seq,
+        None => 0,
+    };
+    // Workload and cache budget are orthogonal: the default workload
+    // follows the cache flag (shared prefixes are what the cache is
+    // for), but --workload lets a cache-off run decode the *same*
+    // shared-prefix request set, so on-vs-off deltas are attributable.
+    let workload = args.get_or(
+        "workload",
+        if prefix_positions > 0 { "shared-prefix" } else { "tasks" },
+    );
     let corpus = standard_corpus(icfg.seed);
-    let suite = tasks::all_tasks(&corpus, n_req, icfg.seed);
-    let reqs = requests_from_tasks(&suite, n_req, state.man.model.max_seq);
+    let reqs = match workload.as_str() {
+        "shared-prefix" => {
+            // Shared-system-prompt workload: the templated traffic
+            // shape prefix KV reuse exists for.
+            let n_groups = 3.min(n_req.max(1));
+            let spec = SharedPrefixSpec {
+                seed: icfg.seed,
+                n_groups,
+                requests_per_group: n_req.div_ceil(n_groups),
+                prefix_bytes: max_seq / 2,
+            };
+            shared_prefix_prompts(&spec, &corpus.facts)
+                .into_iter()
+                .take(n_req)
+                .enumerate()
+                .map(|(i, p)| ServeRequest::new(i as u64, p, 8))
+                .collect()
+        }
+        "tasks" => {
+            let suite = tasks::all_tasks(&corpus, n_req, icfg.seed);
+            requests_from_tasks(&suite, n_req, max_seq)
+        }
+        other => {
+            bail!("unknown --workload {other:?} (tasks|shared-prefix)")
+        }
+    };
     println!(
-        "[serve-bench] {n_req} requests, engine {kind:?}, policy {policy:?}, \
-         threshold {}, {concurrent} live sessions/worker",
-        icfg.threshold
+        "[serve-bench] {n_req} requests ({workload} workload), engine \
+         {kind:?}, policy {policy:?}, threshold {}, {concurrent} live \
+         sessions/worker, prefix cache {}",
+        icfg.threshold,
+        if prefix_positions > 0 {
+            format!("{prefix_positions} positions/worker (shared-prefix \
+                     workload)")
+        } else {
+            "off".to_string()
+        }
     );
     let mut table = Table::new(
         &format!(
@@ -296,6 +355,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         &["pool", "requests", "tok/s", "p50 latency", "p95 latency",
           "p50 TTFT", "p95 TTFT", "p50 tok gap", "mean queue", "early%"],
     );
+    let mut json_rows: Vec<Json> = Vec::new();
     for &workers in &pool_sizes {
         let mut pool = EnginePool::new(
             state.clone(),
@@ -305,6 +365,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 threshold: icfg.threshold,
                 policy,
                 max_concurrent: concurrent,
+                prefix_cache_positions: prefix_positions,
             },
         );
         let out = pool.run_batch(reqs.clone())?;
@@ -325,9 +386,92 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             format!("{:.0}ms", m.mean_queue_seconds * 1e3),
             format!("{:.0}%", 100.0 * m.early_fraction(n_layers)),
         ]);
+        if prefix_positions > 0 {
+            let p = &m.prefix;
+            println!(
+                "[serve-bench] pool {workers}: prefix hit rate {:.0}% \
+                 ({}/{} lookups), prefill positions saved {}, \
+                 {} insertions, {} evictions",
+                100.0 * p.hit_rate(),
+                p.hits,
+                p.lookups(),
+                p.saved_positions,
+                p.insertions,
+                p.evictions
+            );
+        }
+        if m.deadline_misses > 0 {
+            println!(
+                "[serve-bench] pool {workers}: {} deadline misses",
+                m.deadline_misses
+            );
+        }
+        json_rows.push(serve_metrics_json(workers, m, n_layers));
     }
     table.emit("serve-bench");
+    if let Some(path) = args.get("json-out") {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("requests".to_string(), Json::Num(n_req as f64));
+        obj.insert(
+            "engine".to_string(),
+            Json::Str(format!("{kind:?}").to_lowercase()),
+        );
+        obj.insert(
+            "policy".to_string(),
+            Json::Str(format!("{policy:?}").to_lowercase()),
+        );
+        obj.insert(
+            "threshold".to_string(),
+            Json::Num(icfg.threshold as f64),
+        );
+        obj.insert(
+            "concurrent".to_string(),
+            Json::Num(concurrent as f64),
+        );
+        obj.insert(
+            "prefix_cache_positions".to_string(),
+            Json::Num(prefix_positions as f64),
+        );
+        obj.insert("workload".to_string(), Json::Str(workload.clone()));
+        obj.insert("pools".to_string(), Json::Arr(json_rows));
+        std::fs::write(path, Json::Obj(obj).to_string_pretty())
+            .with_context(|| format!("writing --json-out {path}"))?;
+        println!("[serve-bench] metrics JSON written to {path}");
+    }
     Ok(())
+}
+
+/// One pool size's metrics as a JSON row for `--json-out`.
+fn serve_metrics_json(
+    workers: usize,
+    m: &eellm::serve::ServeMetrics,
+    n_layers: usize,
+) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    let mut num = |k: &str, v: f64| {
+        o.insert(k.to_string(), Json::Num(v));
+    };
+    num("workers", workers as f64);
+    num("requests", m.requests as f64);
+    num("total_tokens", m.total_tokens as f64);
+    num("wall_seconds", m.wall_seconds);
+    num("throughput_tps", m.throughput_tps());
+    num("p50_latency_seconds", m.p50_latency_seconds);
+    num("p95_latency_seconds", m.p95_latency_seconds);
+    num("p50_ttft_seconds", m.p50_ttft_seconds);
+    num("p95_ttft_seconds", m.p95_ttft_seconds);
+    num("p50_token_gap_seconds", m.p50_token_gap_seconds);
+    num("p95_token_gap_seconds", m.p95_token_gap_seconds);
+    num("mean_queue_seconds", m.mean_queue_seconds);
+    num("early_fraction", m.early_fraction(n_layers));
+    num("deadline_misses", m.deadline_misses as f64);
+    num("prefix_hits", m.prefix.hits as f64);
+    num("prefix_misses", m.prefix.misses as f64);
+    num("prefix_hit_rate", m.prefix_hit_rate());
+    num("prefill_positions_saved", m.prefill_positions_saved() as f64);
+    num("prefix_insertions", m.prefix.insertions as f64);
+    num("prefix_evictions", m.prefix.evictions as f64);
+    Json::Obj(o)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -3,7 +3,7 @@
 //! the serving-side analogue of the paper's Figure 8 axes
 //! (quality/latency vs. threshold), lifted to a multi-request batch.
 
-use crate::inference::ExitStats;
+use crate::inference::{ExitStats, PrefixCacheStats};
 pub use crate::metrics::percentile;
 
 use super::request::ServeResponse;
@@ -29,8 +29,15 @@ pub struct ServeMetrics {
     pub p50_token_gap_seconds: f64,
     pub p95_token_gap_seconds: f64,
     pub mean_queue_seconds: f64,
+    /// Requests that completed after their stated deadline (queue +
+    /// service vs. the request's relative deadline); deadline-less
+    /// requests never miss.
+    pub deadline_misses: usize,
     /// Per-exit usage merged across all requests.
     pub exits: ExitStats,
+    /// Prefix KV-cache activity during the batch, merged across the
+    /// pool's per-worker stores (all zeros when the cache is disabled).
+    pub prefix: PrefixCacheStats,
 }
 
 impl ServeMetrics {
@@ -71,8 +78,26 @@ impl ServeMetrics {
                 .map(|r| r.queue_seconds)
                 .sum::<f64>()
                 / n,
+            deadline_misses: responses
+                .iter()
+                .filter(|r| {
+                    r.deadline
+                        .is_some_and(|d| r.total_seconds > d.as_secs_f64())
+                })
+                .count(),
             exits,
+            prefix: PrefixCacheStats::default(),
         }
+    }
+
+    /// Fraction of admissions that restored a cached prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.prefix.hit_rate()
+    }
+
+    /// Prefill positions skipped thanks to prefix-cache hits.
+    pub fn prefill_positions_saved(&self) -> u64 {
+        self.prefix.saved_positions
     }
 
     /// Aggregate generated tokens per wall-clock second.
@@ -117,6 +142,7 @@ mod tests {
             ttft_seconds: queue + service / 2.0,
             token_seconds,
             total_seconds: total,
+            deadline: None,
         }
     }
 
@@ -157,5 +183,40 @@ mod tests {
         assert_eq!(m.requests, 0);
         assert_eq!(m.p50_ttft_seconds, 0.0);
         assert_eq!(m.p50_token_gap_seconds, 0.0);
+        assert_eq!(m.deadline_misses, 0);
+        assert_eq!(m.prefix.lookups(), 0);
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn metrics_count_deadline_misses() {
+        use std::time::Duration;
+
+        let mut on_time = resp(0, 4, 0.2, 0.0);
+        on_time.deadline = Some(Duration::from_secs(1));
+        let mut late = resp(1, 4, 0.4, 0.1);
+        late.deadline = Some(Duration::from_millis(100));
+        // No deadline: slow but never a miss.
+        let unconstrained = resp(2, 4, 9.0, 0.0);
+        let m = ServeMetrics::from_responses(
+            &[on_time, late, unconstrained],
+            1.0,
+        );
+        assert_eq!(m.deadline_misses, 1);
+    }
+
+    #[test]
+    fn metrics_surface_prefix_cache_stats() {
+        use crate::inference::PrefixCacheStats;
+
+        let mut m = ServeMetrics::from_responses(&[resp(0, 4, 0.2, 0.0)], 0.5);
+        m.prefix.merge(&PrefixCacheStats {
+            hits: 3,
+            misses: 1,
+            saved_positions: 120,
+            ..PrefixCacheStats::default()
+        });
+        assert_eq!(m.prefix_hit_rate(), 0.75);
+        assert_eq!(m.prefill_positions_saved(), 120);
     }
 }

@@ -25,10 +25,17 @@
 //!   [`PoolConfig::max_concurrent`] live sessions stepped round-robin,
 //!   new requests admitted between steps, every token streamed as a
 //!   [`ServeEvent`] the moment it is emitted. Batches return per-request
-//!   outcomes ([`BatchOutcome`]): one poisoned prompt fails alone.
+//!   outcomes ([`BatchOutcome`]): one poisoned prompt fails alone. With
+//!   [`PoolConfig::prefix_cache_positions`] set, each worker keeps a
+//!   [`PrefixCacheStore`](crate::inference::PrefixCacheStore) of
+//!   post-prefill KV snapshots, so admissions sharing a prompt prefix
+//!   (system-prompt traffic) restore it and prefill only the suffix —
+//!   sequential-engine workers only; the pipelined engine declines the
+//!   capability and serves without reuse.
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
 //!   p50/p95 request latency, p50/p95 time-to-first-token, p50/p95
-//!   per-token gaps, queueing, merged per-exit usage.
+//!   per-token gaps, queueing, deadline misses, merged per-exit usage,
+//!   and prefix-cache hit-rate / prefill-positions-saved.
 //!
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.

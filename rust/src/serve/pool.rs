@@ -16,18 +16,24 @@
 //! All workers pull from one [`Scheduler`] queue and report per-request
 //! completions (or failures) over the same mpsc channel the token stream
 //! uses.
+//!
+//! With [`PoolConfig::prefix_cache_positions`] set, each worker also
+//! keeps a [`PrefixCacheStore`] of post-prefill KV snapshots: admissions
+//! restore the longest cached prefix of their prompt and prefill only
+//! the suffix (shared system-prompt traffic), with hit-rate and
+//! prefill-positions-saved surfaced in [`ServeMetrics`].
 
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::inference::{
     DecodeBackend, DecodeSession, ModelState, PipelinedEngine,
-    SequentialEngine, StepEvent,
+    PrefixCacheStats, PrefixCacheStore, SequentialEngine, StepEvent,
 };
 
 use super::metrics::ServeMetrics;
@@ -68,6 +74,15 @@ pub struct PoolConfig {
     /// caps this at 1; the sequential engine's sessions own their KV
     /// caches and interleave freely.
     pub max_concurrent: usize,
+    /// Per-worker shared-prefix KV-cache budget in cached positions
+    /// (0 disables). When set, each worker keeps a
+    /// [`PrefixCacheStore`] of post-prefill snapshots: admissions restore
+    /// the longest cached prefix of their prompt and prefill only the
+    /// suffix. Only engines that support cache snapshots participate
+    /// ([`DecodeBackend::supports_cache_snapshots`]) — the sequential
+    /// engine does; pipelined workers log the capability gap once and
+    /// serve without reuse.
+    pub prefix_cache_positions: usize,
 }
 
 /// The engine surface the pool needs: a threshold knob plus the
@@ -178,6 +193,9 @@ pub struct EnginePool {
     /// arriving during the readiness wait); consumed before `recv`.
     stash: VecDeque<WorkerEvent>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Per-worker prefix KV-cache stores (empty when disabled). The pool
+    /// keeps a handle to each so batch metrics can read their counters.
+    prefix_stores: Vec<Arc<PrefixCacheStore>>,
     /// Workers that have not reported `Fatal`.
     alive: usize,
     /// Every live worker has reported `Ready`.
@@ -193,14 +211,27 @@ impl EnginePool {
         assert!(cfg.workers > 0, "pool needs at least one worker");
         let sched = Arc::new(Scheduler::new(cfg.policy));
         let (tx, events) = channel::<WorkerEvent>();
+        let prefix_stores: Vec<Arc<PrefixCacheStore>> =
+            if cfg.prefix_cache_positions > 0 {
+                (0..cfg.workers)
+                    .map(|_| {
+                        Arc::new(PrefixCacheStore::new(
+                            cfg.prefix_cache_positions,
+                        ))
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let sched = Arc::clone(&sched);
             let tx = tx.clone();
             let state = state.clone();
+            let store = prefix_stores.get(w).cloned();
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
-                .spawn(move || worker_main(w, state, cfg, sched, tx))
+                .spawn(move || worker_main(w, state, cfg, sched, tx, store))
                 .expect("spawn serve worker");
             workers.push(handle);
         }
@@ -214,6 +245,7 @@ impl EnginePool {
             events,
             stash: VecDeque::new(),
             workers,
+            prefix_stores,
             alive,
             ready: false,
         }
@@ -221,6 +253,22 @@ impl EnginePool {
 
     pub fn config(&self) -> PoolConfig {
         self.cfg
+    }
+
+    /// The per-worker prefix KV-cache stores (empty when the cache is
+    /// disabled). Handles stay valid across [`EnginePool::shutdown`], so
+    /// tests can assert pin/budget invariants after the workers exit.
+    pub fn prefix_stores(&self) -> &[Arc<PrefixCacheStore>] {
+        &self.prefix_stores
+    }
+
+    /// Lifetime prefix KV-cache counters merged across workers.
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        let mut agg = PrefixCacheStats::default();
+        for st in &self.prefix_stores {
+            agg.merge(&st.stats());
+        }
+        agg
     }
 
     /// Enqueue one request (non-blocking). Returns `false` when the pool
@@ -303,6 +351,11 @@ impl EnginePool {
         }
         let n = reqs.len();
         let t0 = Instant::now();
+        // Store counters are monotonic across batches; remember where
+        // they start so this batch's metrics report only its own
+        // activity.
+        let prefix_base: Vec<PrefixCacheStats> =
+            self.prefix_stores.iter().map(|s| s.stats()).collect();
         let mut failures: Vec<RequestFailure> = Vec::new();
         for r in reqs {
             let id = r.id;
@@ -357,7 +410,10 @@ impl EnginePool {
         let wall = t0.elapsed().as_secs_f64();
         responses.sort_by_key(|r| r.id);
         failures.sort_by_key(|f| f.id);
-        let metrics = ServeMetrics::from_responses(&responses, wall);
+        let mut metrics = ServeMetrics::from_responses(&responses, wall);
+        for (store, base) in self.prefix_stores.iter().zip(&prefix_base) {
+            metrics.prefix.merge(&store.stats().since(base));
+        }
         Ok(BatchOutcome { responses, failures, metrics })
     }
 
@@ -393,6 +449,9 @@ struct Live {
     threshold: f32,
     session: DecodeSession,
     queue_seconds: f64,
+    /// The request's relative deadline, echoed into the response for
+    /// deadline-miss accounting.
+    deadline: Option<Duration>,
     /// When the worker admitted (and prefilled) the request.
     admitted: Instant,
     /// Last token emission (admission before the first token).
@@ -410,6 +469,7 @@ fn worker_main(
     cfg: PoolConfig,
     sched: Arc<Scheduler>,
     events: Sender<WorkerEvent>,
+    store: Option<Arc<PrefixCacheStore>>,
 ) {
     let mut engine: Box<dyn PoolEngine> = match build_engine(state, cfg) {
         Ok(e) => e,
@@ -419,6 +479,22 @@ fn worker_main(
                 .ok();
             return;
         }
+    };
+    // Capability gate: the prefix cache needs snapshottable per-session
+    // caches. Engines that decline (the pipelined one) are served
+    // without reuse, loudly.
+    let store = match store {
+        Some(st) if !engine.backend().supports_cache_snapshots() => {
+            eprintln!(
+                "[serve] worker {worker}: prefix KV cache requested but \
+                 the {:?} engine does not support cache snapshots; \
+                 serving without prefix reuse",
+                cfg.engine
+            );
+            drop(st);
+            None
+        }
+        other => other,
     };
     events.send(WorkerEvent::Ready { worker }).ok();
     let max_live =
@@ -456,7 +532,35 @@ fn worker_main(
                 let be = engine.backend();
                 let mut s =
                     DecodeSession::new_text(be, &req.prompt, req.max_new)?;
-                s.prefill(be)?;
+                match store.as_deref() {
+                    Some(st) => {
+                        let cached = s.prefill_with_cache(be, st)?;
+                        // Extend the store with this prompt's full
+                        // prefix unless a resident entry already covers
+                        // it in full (then the hit refreshed its LRU
+                        // slot and a re-insert would only duplicate it).
+                        // `would_admit` skips the host-copy snapshot
+                        // when the store could only reject it, and a
+                        // failed snapshot merely logs — the request
+                        // already prefilled fine without the cache.
+                        if !s.is_done()
+                            && cached.cached_tokens < s.prompt_len()
+                            && st.would_admit(s.prompt_len())
+                        {
+                            match s.prefix_snapshot(be) {
+                                Ok(snap) => {
+                                    st.insert(snap);
+                                }
+                                Err(e) => eprintln!(
+                                    "[serve] worker {worker}: prefix \
+                                     snapshot failed (serving continues \
+                                     uncached): {e:#}"
+                                ),
+                            }
+                        }
+                    }
+                    None => s.prefill(be)?,
+                }
                 Ok::<_, anyhow::Error>(s)
             }));
             match started {
@@ -465,6 +569,7 @@ fn worker_main(
                     threshold: t,
                     session,
                     queue_seconds,
+                    deadline: req.deadline,
                     admitted,
                     last_event: admitted,
                     token_seconds: Vec::new(),
@@ -568,6 +673,7 @@ fn complete(worker: usize, events: &Sender<WorkerEvent>, l: Live) {
             ttft_seconds,
             token_seconds: l.token_seconds,
             total_seconds: l.queue_seconds + service_seconds,
+            deadline: l.deadline,
         }))
         .ok();
 }

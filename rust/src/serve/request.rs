@@ -75,6 +75,9 @@ pub struct ServeResponse {
     pub token_seconds: Vec<f64>,
     /// Queue + service time — the latency a client observes.
     pub total_seconds: f64,
+    /// The request's relative deadline, echoed back so metrics can count
+    /// deadline misses (`total_seconds` vs. this).
+    pub deadline: Option<Duration>,
 }
 
 /// Build an `n`-request set by cycling the task suite's prompts,

@@ -188,6 +188,7 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 // exercising the id-based reordering.
                 policy: Policy::ShortestPromptFirst,
                 max_concurrent: 2,
+                prefix_cache_positions: 0,
             },
         );
         let reqs: Vec<ServeRequest> = prompts
@@ -270,6 +271,7 @@ fn continuous_batching_streams_and_admits_mid_flight() {
             threshold: 1.0,
             policy: Policy::Fifo,
             max_concurrent: 2,
+            prefix_cache_positions: 0,
         },
     );
     let reqs: Vec<ServeRequest> = long
@@ -373,6 +375,7 @@ fn batch_reports_per_request_failures() {
             threshold: 1.0,
             policy: Policy::Fifo,
             max_concurrent: 2,
+            prefix_cache_positions: 0,
         },
     );
     let out = pool.run_batch(reqs).unwrap();

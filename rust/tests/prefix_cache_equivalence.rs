@@ -1,0 +1,404 @@
+//! Integration: shared-prefix KV-cache reuse must be *invisible* in the
+//! outputs. For a grid of exit thresholds and prompt-overlap patterns,
+//! decoding with the prefix cache enabled must produce token-for-token
+//! and exit-layer-for-exit-layer identical results to decoding without
+//! it — including when entries are evicted mid-workload and sessions
+//! fall back to full prefill, and under the serving pool's continuous
+//! batching where live sessions pin the prefixes new admissions look up.
+//!
+//! Cache reuse is exactly the kind of optimisation that corrupts outputs
+//! silently (stale KV entries change logits, not error codes), which is
+//! why the feature ships inside this suite.
+
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{
+    shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
+};
+use eellm::inference::{
+    DecodeSession, ModelState, PrefixCacheStore, SequentialEngine, StepEvent,
+};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so exit confidences are meaningful (an untrained
+/// model has near-uniform logits and ties everywhere).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+/// Drain one session, collecting (token, exit layer) per emission. With a
+/// store, mirrors the pool's admission flow: cached prefill, then insert
+/// the full-prompt snapshot unless an entry already covers it.
+fn run_session(
+    eng: &mut SequentialEngine,
+    prompt: &str,
+    max_new: usize,
+    store: Option<&PrefixCacheStore>,
+) -> Vec<(i32, usize)> {
+    let mut s = DecodeSession::new_text(eng, prompt, max_new).unwrap();
+    match store {
+        Some(st) => {
+            let cached = s.prefill_with_cache(eng, st).unwrap();
+            if !s.is_done() && cached.cached_tokens < s.prompt_len() {
+                st.insert(s.prefix_snapshot(eng).unwrap());
+            }
+        }
+        None => s.prefill(eng).unwrap(),
+    }
+    let mut out = Vec::new();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(eng).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    out
+}
+
+/// The acceptance grid: >= 3 exit thresholds x prompt-overlap patterns.
+/// One store per pattern is shared across *all* thresholds — prefill
+/// snapshots are threshold-independent (prefill never takes exits), so a
+/// snapshot inserted at tau=1.0 must serve a tau=0.2 session unchanged.
+#[test]
+fn cache_on_equals_cache_off_across_thresholds_and_overlap() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 50_000,
+    });
+    let shared = shared_prefix_prompts(
+        &SharedPrefixSpec {
+            seed: 5,
+            n_groups: 2,
+            requests_per_group: 3,
+            prefix_bytes: man.model.max_seq / 2,
+        },
+        &corpus.facts,
+    );
+    let nested = vec![
+        "abc: a b c ".to_string(),
+        "abc: a b c d e ".to_string(),
+        "abc: a b c d e f g ".to_string(),
+    ];
+    let disjoint = vec!["3+4=".to_string(), "count: 1 2 3 ".to_string()];
+    let patterns: Vec<(&str, Vec<String>, bool)> = vec![
+        ("shared-system-prompt", shared, true),
+        ("nested-prefixes", nested, true),
+        ("disjoint", disjoint, false),
+    ];
+
+    let thresholds = [1.0f32, 0.6, 0.2];
+    let stores: Vec<PrefixCacheStore> = patterns
+        .iter()
+        .map(|_| PrefixCacheStore::new(64 * man.model.max_seq))
+        .collect();
+    for &tau in &thresholds {
+        let mut eng = SequentialEngine::new(state.clone(), tau).unwrap();
+        for ((name, prompts, _), store) in patterns.iter().zip(&stores) {
+            for p in prompts {
+                let baseline = run_session(&mut eng, p, 16, None);
+                let cached = run_session(&mut eng, p, 16, Some(store));
+                assert_eq!(
+                    baseline, cached,
+                    "pattern {name}, tau {tau}, prompt {p:?}: cached \
+                     decode diverged (tokens or exit layers)"
+                );
+            }
+        }
+    }
+    for ((name, _, expect_hits), store) in patterns.iter().zip(&stores) {
+        let st = store.stats();
+        assert!(
+            st.lookups() > 0,
+            "pattern {name}: the store was never consulted"
+        );
+        if *expect_hits {
+            assert!(st.hits > 0, "pattern {name}: no prefix hits: {st:?}");
+            assert!(
+                st.saved_positions > 0,
+                "pattern {name}: hits saved no prefill positions: {st:?}"
+            );
+        }
+        assert!(
+            store.used_positions() <= store.max_positions(),
+            "pattern {name}: budget exceeded"
+        );
+        assert_eq!(
+            store.pinned_entries(),
+            0,
+            "pattern {name}: sessions leaked pins"
+        );
+    }
+}
+
+/// A budget that only fits one snapshot forces eviction every time the
+/// workload alternates groups; sessions that resume after their prefix
+/// was evicted must fall back to full prefill with identical outputs.
+#[test]
+fn eviction_mid_workload_keeps_outputs_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    // Untrained weights + threshold 0.0: every token exits at the first
+    // early exit, so restores interact with the recompute deficit
+    // machinery as hard as possible.
+    let state = ModelState::init(man.clone(), 9);
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 50_000,
+    });
+    // Two groups, interleaved arrival: a1 b1 a2 b2 a3 b3.
+    let prompts = shared_prefix_prompts(
+        &SharedPrefixSpec {
+            seed: 13,
+            n_groups: 2,
+            requests_per_group: 3,
+            prefix_bytes: 80,
+        },
+        &corpus.facts,
+    );
+    let longest = prompts.iter().map(|p| p.len()).max().unwrap() + 1;
+    // Room for one snapshot, never two: every group switch evicts.
+    let store = PrefixCacheStore::new(longest + 8);
+
+    let mut eng = SequentialEngine::new(state, 0.0).unwrap();
+    for p in &prompts {
+        let baseline = run_session(&mut eng, p, 12, None);
+        let cached = run_session(&mut eng, p, 12, Some(&store));
+        assert_eq!(
+            baseline, cached,
+            "prompt {p:?} diverged after mid-workload eviction"
+        );
+    }
+    let st = store.stats();
+    assert!(st.evictions > 0, "budget never forced an eviction: {st:?}");
+    assert!(st.hits > 0, "no hits despite shared group prefixes: {st:?}");
+    assert!(store.used_positions() <= store.max_positions());
+}
+
+/// Pool-level equivalence: the same shared-prefix batch through
+/// continuous-batching workers with the cache on vs. off must stream
+/// identical (token, exit layer) sequences per request, and the cached
+/// run must report nonzero hits and prefill savings in its metrics.
+#[test]
+fn pooled_prefix_cache_matches_disabled_and_saves_prefill() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 9);
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 50_000,
+    });
+    let prompts = shared_prefix_prompts(
+        &SharedPrefixSpec {
+            seed: 3,
+            n_groups: 2,
+            requests_per_group: 3,
+            prefix_bytes: man.model.max_seq / 2,
+        },
+        &corpus.facts,
+    );
+
+    for &tau in &[1.0f32, 0.0] {
+        let mut streams: Vec<Vec<Vec<(i32, usize)>>> = Vec::new();
+        let mut saved = Vec::new();
+        for &budget in &[0usize, 32 * man.model.max_seq] {
+            let mut pool = EnginePool::new(
+                state.clone(),
+                PoolConfig {
+                    workers: 1,
+                    engine: EngineKind::Sequential,
+                    threshold: tau,
+                    policy: Policy::Fifo,
+                    max_concurrent: 2,
+                    prefix_cache_positions: budget,
+                },
+            );
+            let reqs: Vec<ServeRequest> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| ServeRequest::new(i as u64, p.as_str(), 8))
+                .collect();
+            let mut per_req: Vec<Vec<(i32, usize)>> =
+                vec![Vec::new(); reqs.len()];
+            let out = pool
+                .run_batch_streamed(reqs, |e| {
+                    if let ServeEvent::Token {
+                        id, token, exit_layer, ..
+                    } = e
+                    {
+                        per_req[*id as usize].push((*token, *exit_layer));
+                    }
+                })
+                .unwrap();
+            pool.shutdown().unwrap();
+            assert!(out.failures.is_empty(), "{:?}", out.failures);
+            if budget == 0 {
+                assert_eq!(out.metrics.prefix.lookups(), 0);
+            } else {
+                assert!(out.metrics.prefix.hits > 0, "tau {tau}: no hits");
+                assert!(
+                    out.metrics.prefill_positions_saved() > 0,
+                    "tau {tau}: nothing saved"
+                );
+            }
+            saved.push(out.metrics.prefill_positions_saved());
+            streams.push(per_req);
+        }
+        assert_eq!(
+            streams[0], streams[1],
+            "tau {tau}: prefix cache changed streamed tokens/exit layers \
+             (saved {saved:?})"
+        );
+    }
+}
+
+/// Concurrency: admissions whose prefix is pinned by live sessions must
+/// neither deadlock nor double-release the snapshot. One worker
+/// interleaves up to `max_concurrent` sessions over one shared prefix,
+/// repeatedly; afterwards every pin must be released exactly once
+/// (a double-release would wrap the pin counter and show up as a
+/// permanently-pinned entry).
+#[test]
+fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 4);
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 50_000,
+    });
+    let prompts = shared_prefix_prompts(
+        &SharedPrefixSpec {
+            seed: 21,
+            n_groups: 1,
+            requests_per_group: 8,
+            prefix_bytes: man.model.max_seq / 2,
+        },
+        &corpus.facts,
+    );
+    // Varying budgets finish sessions at different times, churning the
+    // pin set while later admissions look the prefix up.
+    let budgets: Vec<usize> = (0..prompts.len()).map(|i| 1 + i % 5).collect();
+
+    for &tau in &[1.0f32, 0.0] {
+        let mut eng = SequentialEngine::new(state.clone(), tau).unwrap();
+        let serial: Vec<Vec<(i32, usize)>> = prompts
+            .iter()
+            .zip(&budgets)
+            .map(|(p, &b)| run_session(&mut eng, p, b, None))
+            .collect();
+        for max_concurrent in [2usize, 3, 4] {
+            let mut pool = EnginePool::new(
+                state.clone(),
+                PoolConfig {
+                    workers: 1,
+                    engine: EngineKind::Sequential,
+                    threshold: tau,
+                    policy: Policy::Fifo,
+                    max_concurrent,
+                    prefix_cache_positions: 16 * man.model.max_seq,
+                },
+            );
+            let stores: Vec<_> = pool.prefix_stores().to_vec();
+            assert_eq!(stores.len(), 1);
+            for round in 0..2 {
+                let reqs: Vec<ServeRequest> = prompts
+                    .iter()
+                    .zip(&budgets)
+                    .enumerate()
+                    .map(|(i, (p, &b))| {
+                        ServeRequest::new(i as u64, p.as_str(), b)
+                    })
+                    .collect();
+                let out = pool.run_batch(reqs).unwrap();
+                assert!(out.failures.is_empty(), "{:?}", out.failures);
+                assert_eq!(out.responses.len(), prompts.len());
+                for (i, r) in out.responses.iter().enumerate() {
+                    let want: Vec<i32> =
+                        serial[i].iter().map(|&(t, _)| t).collect();
+                    assert_eq!(
+                        r.output.tokens, want,
+                        "request {i} diverged (tau {tau}, \
+                         concurrent {max_concurrent}, round {round})"
+                    );
+                }
+                // The second round runs against a warm store.
+                if round > 0 {
+                    assert!(out.metrics.prefix.hits > 0);
+                }
+            }
+            pool.shutdown().unwrap();
+            // Workers have exited: every session pin must be released.
+            assert_eq!(
+                stores[0].pinned_entries(),
+                0,
+                "leaked or double-released pins (tau {tau}, \
+                 concurrent {max_concurrent})"
+            );
+            assert!(
+                stores[0].used_positions() <= stores[0].max_positions()
+            );
+        }
+    }
+}
