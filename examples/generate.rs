@@ -10,7 +10,9 @@
 
 use std::path::PathBuf;
 
-use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
+use eellm::inference::{
+    ExitPolicy, ModelState, PipelinedEngine, SequentialEngine,
+};
 use eellm::runtime::artifacts::Manifest;
 use eellm::util::cli::Args;
 use eellm::util::table::Table;
@@ -52,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         );
         let mut full_text = String::new();
         for tau in [1.0f32, 0.8, 0.4, 0.2] {
-            let mut eng = SequentialEngine::new(state.clone(), tau)?;
+            let mut eng = SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau))?;
             let out = eng.generate_text(&prompt, max_new)?;
             if tau == 1.0 {
                 full_text = out.text.clone();
@@ -73,8 +75,10 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    let tau = args.f64_or("threshold", 0.5) as f32;
-    let mut seq = SequentialEngine::new(state.clone(), tau)?;
+    // Full spec grammar via --policy; --threshold stays as confidence
+    // sugar (shared resolution rule).
+    let policy = ExitPolicy::from_args(&args, 0.5)?;
+    let mut seq = SequentialEngine::new(state.clone(), policy.clone())?;
     let a = seq.generate_text(&prompt, max_new)?;
     println!(
         "recompute: {:?} ({:.0}ms, exits {:?})",
@@ -82,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         a.seconds * 1e3,
         a.stats.counts
     );
-    let mut pipe = PipelinedEngine::new(state, tau)?;
+    let mut pipe = PipelinedEngine::new(state, policy)?;
     let b = pipe.generate_text(&prompt, max_new)?;
     println!(
         "pipelined: {:?} ({:.0}ms, exits {:?})",

@@ -9,7 +9,9 @@
 use eellm::config::{LossWeightSchedule, LrSchedule};
 use eellm::data::dataset::{Dataset, TrainBatch};
 use eellm::data::synth::{Corpus, CorpusSpec};
-use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
+use eellm::inference::{
+    ExitPolicy, ModelState, PipelinedEngine, SequentialEngine,
+};
 use eellm::runtime::artifacts::Manifest;
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -70,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     let prompt = "question: what is the ";
     println!("\nprompt: {prompt:?}");
     for tau in [1.0f32, 0.5, 0.2] {
-        let mut eng = SequentialEngine::new(state.clone(), tau)?;
+        let mut eng = SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau))?;
         let out = eng.generate_text(prompt, 24)?;
         println!(
             "  recompute tau={tau:<4} -> {:?}  ({:.0}ms, {:.0}% early)",
@@ -79,7 +81,7 @@ fn main() -> anyhow::Result<()> {
             100.0 * out.stats.early_fraction(man.model.n_layers)
         );
     }
-    let mut eng = PipelinedEngine::new(state, 0.2)?;
+    let mut eng = PipelinedEngine::new(state, ExitPolicy::confidence(0.2))?;
     let out = eng.generate_text(prompt, 24)?;
     println!(
         "  pipelined tau=0.2  -> {:?}  ({:.0}ms, {:.0}% early)",

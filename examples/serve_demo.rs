@@ -1,10 +1,10 @@
 //! Multi-request serving demo: a pool of early-exit engines continuously
 //! batching a mixed request set, streaming tokens as they are emitted,
-//! with per-request thresholds, priorities, and deadlines.
+//! with per-request exit policies, priorities, and deadlines.
 //!
 //!     cargo run --release --example serve_demo -- \
 //!         --config ee-tiny --checkpoint artifacts/runs/ee-e2e.eckpt \
-//!         --workers 2 --concurrent 3 --policy priority --engine recompute
+//!         --workers 2 --concurrent 3 --sched priority --engine recompute
 //!
 //! The event trace printed while the batch runs shows requests
 //! interleaving on each worker (continuous batching) rather than running
@@ -15,7 +15,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use eellm::data::tokenizer::ByteTokenizer;
-use eellm::inference::ModelState;
+use eellm::inference::{ExitPolicy, ModelState};
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
     EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
@@ -27,7 +27,18 @@ fn main() -> anyhow::Result<()> {
     let config = args.get_or("config", "ee-tiny");
     let workers = args.usize_or("workers", 2);
     let concurrent = args.usize_or("concurrent", 3);
-    let policy = Policy::parse(&args.get_or("policy", "priority"))?;
+    // Same migration guard as serve-bench: `--policy` used to be the
+    // scheduling policy and now takes an exit-policy spec.
+    if let Some(p) = args.get("policy") {
+        if Policy::parse(p).is_ok() {
+            anyhow::bail!(
+                "--policy now takes an exit-policy spec (e.g. \
+                 confidence:0.8); the queue scheduling policy moved to \
+                 --sched {p}"
+            );
+        }
+    }
+    let sched = Policy::parse(&args.get_or("sched", "priority"))?;
     let kind = EngineKind::parse(&args.get_or("engine", "recompute"))?;
     let man = Manifest::load_config(&PathBuf::from("artifacts"), &config)?;
     let n_layers = man.model.n_layers;
@@ -51,13 +62,19 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .enumerate()
         .map(|(i, p)| {
-            // Alternate aggressive and conservative per-request
-            // thresholds to show both paths through the pool; give the
-            // last request a high priority and a tight deadline so it
-            // jumps the queue under --policy priority.
-            let tau = if i % 2 == 0 { 0.4 } else { 1.0 };
-            let mut r =
-                ServeRequest::new(i as u64, *p, 24).with_threshold(tau);
+            // Mix per-request exit policies to show the pluggable
+            // surface: the paper's confidence rule (aggressive and
+            // baseline, via the `with_threshold` sugar) alongside
+            // entropy- and margin-based exits. The last request gets a
+            // high priority and a tight deadline so it jumps the queue
+            // under --sched priority.
+            let mut r = ServeRequest::new(i as u64, *p, 24);
+            r = match i % 4 {
+                0 => r.with_threshold(0.4),
+                1 => r.with_threshold(1.0),
+                2 => r.with_policy(ExitPolicy::Entropy { max_nats: 1.0 }),
+                _ => r.with_policy(ExitPolicy::TopTwoMargin { delta: 0.3 }),
+            };
             if i + 1 == prompts.len() {
                 r = r
                     .with_priority(10)
@@ -72,8 +89,8 @@ fn main() -> anyhow::Result<()> {
         PoolConfig {
             workers,
             engine: kind,
-            threshold: 0.8,
-            policy,
+            policy: ExitPolicy::from_args(&args, 0.8)?,
+            sched,
             max_concurrent: concurrent,
             prefix_cache_positions: args.usize_or("prefix-cache", 0),
         },

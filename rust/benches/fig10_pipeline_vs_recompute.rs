@@ -13,7 +13,7 @@
 mod bench_util;
 
 use eellm::data::tasks;
-use eellm::inference::{PipelinedEngine, SequentialEngine};
+use eellm::inference::{ExitPolicy, PipelinedEngine, SequentialEngine};
 use eellm::util::table::Table;
 
 fn main() {
@@ -40,12 +40,14 @@ fn main() {
         ],
     );
 
-    let mut pipe = PipelinedEngine::new(state.clone(), 1.0).expect("pipe");
+    let mut pipe = PipelinedEngine::new(state.clone(), ExitPolicy::confidence(1.0)).expect("pipe");
     let mut rec_best = f64::INFINITY;
     let mut rec_base = 0.0f64;
     for &tau in &thresholds {
-        let mut seq = SequentialEngine::new(state.clone(), tau).expect("seq");
-        pipe.set_threshold(tau);
+        let mut seq =
+            SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau))
+                .expect("seq");
+        pipe.set_policy(ExitPolicy::confidence(tau));
         let mut t_rec = 0.0;
         let mut t_pipe = 0.0;
         let mut equal = true;

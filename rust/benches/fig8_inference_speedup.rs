@@ -12,7 +12,7 @@ mod bench_util;
 
 use eellm::data::tasks;
 use eellm::eval::harness::evaluate_task;
-use eellm::inference::SequentialEngine;
+use eellm::inference::{ExitPolicy, SequentialEngine};
 use eellm::util::table::Table;
 
 fn main() {
@@ -44,7 +44,7 @@ fn main() {
         let mut base_time = 0.0f64;
         for (ti, &tau) in thresholds.iter().enumerate() {
             let mut eng =
-                SequentialEngine::new(state.clone(), tau).expect("engine");
+                SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau)).expect("engine");
             let mut early = 0.0f64;
             let mut toks = 0usize;
             let mut stages_run = 0usize;

@@ -14,6 +14,7 @@ mod bench_util;
 
 use eellm::data::synth::{shared_prefix_prompts, SharedPrefixSpec};
 use eellm::data::tasks;
+use eellm::inference::ExitPolicy;
 use eellm::serve::{
     requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
     ServeRequest,
@@ -50,8 +51,8 @@ fn main() {
                 PoolConfig {
                     workers,
                     engine: EngineKind::Sequential,
-                    threshold: tau,
-                    policy: Policy::ShortestPromptFirst,
+                    policy: ExitPolicy::confidence(tau),
+                    sched: Policy::ShortestPromptFirst,
                     max_concurrent: 4,
                     prefix_cache_positions: 0,
                 },
@@ -127,8 +128,8 @@ fn main() {
             PoolConfig {
                 workers: 1,
                 engine: EngineKind::Sequential,
-                threshold: 0.6,
-                policy: Policy::Fifo,
+                policy: ExitPolicy::confidence(0.6),
+                sched: Policy::Fifo,
                 max_concurrent: 4,
                 prefix_cache_positions: budget,
             },

@@ -5,6 +5,7 @@
 
 use std::path::PathBuf;
 
+use crate::inference::ExitPolicy;
 use crate::util::cli::Args;
 
 pub mod schedules;
@@ -73,9 +74,11 @@ impl TrainConfig {
 pub struct InferenceConfig {
     pub config: String,
     pub artifacts_dir: PathBuf,
-    /// Confidence threshold for early exiting; 1.0 disables early exits
-    /// (full-model baseline, as in the paper's speedup denominator).
-    pub threshold: f32,
+    /// Exit-decision policy ([`ExitPolicy`]). Parsed from `--policy
+    /// <spec>`; `--threshold F` is sugar for `--policy confidence:F`
+    /// (1.0 disables early exits — the full-model baseline, the paper's
+    /// speedup denominator).
+    pub policy: ExitPolicy,
     pub max_new_tokens: usize,
     /// KV-recomputation deficit cap (forces a full pass when reached).
     pub recompute_cap: usize,
@@ -84,16 +87,17 @@ pub struct InferenceConfig {
 }
 
 impl InferenceConfig {
-    pub fn from_args(a: &Args) -> InferenceConfig {
-        InferenceConfig {
+    pub fn from_args(a: &Args) -> anyhow::Result<InferenceConfig> {
+        let policy = ExitPolicy::from_args(a, 0.8)?;
+        Ok(InferenceConfig {
             config: a.get_or("config", "ee-tiny"),
             artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
-            threshold: a.f64_or("threshold", 0.8) as f32,
+            policy,
             max_new_tokens: a.usize_or("max-new-tokens", 32),
             recompute_cap: a.usize_or("recompute-cap", 4),
             checkpoint: a.get("checkpoint").map(PathBuf::from),
             seed: a.usize_or("seed", 42) as u64,
-        }
+        })
     }
 }
 
@@ -101,6 +105,30 @@ impl InferenceConfig {
 mod tests {
     use super::*;
     use crate::util::cli::Args;
+
+    #[test]
+    fn inference_config_policy_spec_and_threshold_sugar() {
+        let parse = |argv: &[&str]| {
+            let argv: Vec<String> =
+                argv.iter().map(|s| s.to_string()).collect();
+            InferenceConfig::from_args(&Args::parse(&argv, &[]))
+        };
+        // Default: the old 0.8 confidence threshold.
+        assert_eq!(parse(&[]).unwrap().policy, ExitPolicy::confidence(0.8));
+        // --threshold is sugar for confidence.
+        assert_eq!(
+            parse(&["--threshold", "0.5"]).unwrap().policy,
+            ExitPolicy::confidence(0.5)
+        );
+        // --policy takes the full spec grammar and wins over --threshold.
+        assert_eq!(
+            parse(&["--threshold", "0.5", "--policy", "entropy:1.5"])
+                .unwrap()
+                .policy,
+            ExitPolicy::Entropy { max_nats: 1.5 }
+        );
+        assert!(parse(&["--policy", "bogus:1"]).is_err());
+    }
 
     #[test]
     fn train_config_defaults_and_overrides() {

@@ -1,5 +1,9 @@
 //! Shared inference machinery: model state (params from checkpoint or
-//! seed), exit metadata, confidence rule, width selection, statistics.
+//! seed), exit metadata, width selection, statistics. The exit rule
+//! itself lives in [`super::policy`] ([`ExitPolicy`]); engines hand each
+//! exit head's logits summary to the policy and act on its decision.
+//!
+//! [`ExitPolicy`]: super::policy::ExitPolicy
 
 use std::path::Path;
 
@@ -8,7 +12,7 @@ use anyhow::{bail, Result};
 use crate::data::tokenizer::{ByteTokenizer, BOS_ID, EOS_ID};
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::params;
-use crate::runtime::tensor::{argmax_prob, softmax, HostTensor};
+use crate::runtime::tensor::HostTensor;
 
 /// Parameters + manifest for an inference engine (host-resident; each
 /// engine converts to literals/buffers as it sees fit).
@@ -49,14 +53,6 @@ impl ModelState {
     pub fn final_exit(&self) -> &crate::runtime::artifacts::ExitMeta {
         self.man.stages.last().unwrap().exits.last().unwrap()
     }
-}
-
-/// The paper's exit rule: exit iff max softmax probability >= threshold.
-/// Returns (token, confidence).
-pub fn confidence_decision(logits: &[f32]) -> (i32, f32) {
-    let probs = softmax(logits);
-    let (idx, p) = argmax_prob(&probs);
-    (idx as i32, p)
 }
 
 /// Smallest available decode width >= `need` that fits before `pos + 1`
@@ -237,18 +233,6 @@ pub fn detokenize(tokens: &[i32]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn confidence_decision_peaks() {
-        let mut logits = vec![0.0f32; 10];
-        logits[3] = 8.0;
-        let (tok, conf) = confidence_decision(&logits);
-        assert_eq!(tok, 3);
-        assert!(conf > 0.99);
-        let flat = vec![0.0f32; 10];
-        let (_, conf) = confidence_decision(&flat);
-        assert!((conf - 0.1).abs() < 1e-5);
-    }
 
     #[test]
     fn pick_width_policies() {

@@ -15,8 +15,13 @@
 //!   back to the first stage immediately and generation of the next token
 //!   overlaps with the KV back-fill of the current token at stages >= s.
 //!
-//! Exit decisions use the paper's confidence rule (max softmax probability
-//! >= threshold) at stage-entry exits (Optimization-2 placement).
+//! Exit decisions are delegated to a pluggable [`ExitPolicy`] ([`policy`])
+//! evaluated at stage-entry exits (Optimization-2 placement):
+//! [`ExitPolicy::Confidence`] is the paper's rule (max softmax probability
+//! >= threshold, with 1.0 the full-model baseline), and the same surface
+//! carries per-layer, top-2-margin, entropy, never, and probe-calibrated
+//! policies end-to-end — per request, through the serving pool, without
+//! touching the engines.
 //!
 //! Both engines drive the same resumable decode core: a [`DecodeSession`]
 //! ([`session`]) advances one token per `step()` over a [`DecodeBackend`]
@@ -38,6 +43,7 @@
 
 pub mod common;
 pub mod pipelined;
+pub mod policy;
 pub mod prefix_cache;
 pub mod probe;
 pub mod sequential;
@@ -45,6 +51,7 @@ pub mod session;
 
 pub use common::{ExitStats, GenOutput, ModelState};
 pub use pipelined::PipelinedEngine;
+pub use policy::{summarize_logits, ExitDecision, ExitPolicy, LogitsSummary};
 pub use prefix_cache::{
     CacheSnapshot, PinnedSnapshot, PrefixCacheStats, PrefixCacheStore,
     PrefixHit,

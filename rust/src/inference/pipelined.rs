@@ -25,7 +25,8 @@ use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
-use super::common::{confidence_decision, GenOutput, ModelState};
+use super::common::{GenOutput, ModelState};
+use super::policy::{summarize_logits, ExitPolicy};
 use super::session::{
     DecodeBackend, DecodeSession, SessionCaches, WindowOutcome,
 };
@@ -61,12 +62,16 @@ struct StageThread {
 
 pub struct PipelinedEngine {
     pub state: ModelState,
-    pub threshold: f32,
+    /// Exit-decision policy the stage threads run under. Updated via
+    /// [`PipelinedEngine::set_policy`]; the stages pick the new policy up
+    /// at the next chain reset (session start).
+    pub policy: ExitPolicy,
     to_first: Sender<Work>,
     from_last: Receiver<ToLeader>,
     threads: Vec<StageThread>,
-    /// Shared threshold cell read by stage threads (set before each run).
-    threshold_tx: Vec<Sender<f32>>,
+    /// Per-stage policy channels: each stage thread carries its own
+    /// [`ExitPolicy`] clone and refreshes it during `Reset`.
+    policy_tx: Vec<Sender<ExitPolicy>>,
     /// Bumped on every session start (chain reset); window passes from a
     /// superseded session are refused instead of silently decoding
     /// against the reset stage caches.
@@ -80,11 +85,11 @@ struct StageWorker {
     rt: StageRuntime,
     plits: Vec<xla::Literal>,
     cache: xla::Literal,
-    threshold: f32,
+    policy: ExitPolicy,
     inbox: Receiver<Work>,
     next: Option<Sender<Work>>,
     leader: Sender<ToLeader>,
-    threshold_rx: Receiver<f32>,
+    policy_rx: Receiver<ExitPolicy>,
     entry_exit_layers: Vec<usize>,
     final_layer: usize,
 }
@@ -124,8 +129,8 @@ impl StageWorker {
                     return Ok(());
                 }
                 Ok(Work::Reset) => {
-                    while let Ok(t) = self.threshold_rx.try_recv() {
-                        self.threshold = t;
+                    while let Ok(p) = self.policy_rx.try_recv() {
+                        self.policy = p;
                     }
                     self.cache = HostTensor::zeros(
                         &self.man.stages[self.s].cache_shape,
@@ -147,16 +152,28 @@ impl StageWorker {
                     check_exits,
                 }) => {
                     // Entry-exit decision on the last window position.
-                    if self.s > 0 && !exited && check_exits {
+                    // Policies that can never exit (`Never`, confidence
+                    // 1.0 — the full-model baseline) skip the exit heads
+                    // entirely; the decision could only be Continue.
+                    if self.s > 0
+                        && !exited
+                        && check_exits
+                        && self.policy.may_exit()
+                    {
                         let xh = hidden.as_ref().unwrap();
                         let last = &xh.data[(width - 1) * h..];
                         for &layer in &self.entry_exit_layers.clone() {
+                            // Skip heads the policy can never fire at
+                            // (unlisted / 1.0 per-layer thresholds).
+                            if !self.policy.may_exit_at(layer) {
+                                continue;
+                            }
                             let logits = self.head_logits(layer, last)?;
-                            let (tok, conf) = confidence_decision(&logits);
-                            if conf >= self.threshold {
+                            let sum = summarize_logits(&logits);
+                            if self.policy.decide(layer, &sum).is_exit() {
                                 self.leader
                                     .send(ToLeader::Token {
-                                        token: tok,
+                                        token: sum.token,
                                         exit_layer: layer,
                                     })
                                     .ok();
@@ -206,10 +223,10 @@ impl StageWorker {
                         let last = &x_out.data[(width - 1) * h..];
                         let logits =
                             self.head_logits(self.final_layer, last)?;
-                        let (tok, _conf) = confidence_decision(&logits);
+                        let sum = summarize_logits(&logits);
                         self.leader
                             .send(ToLeader::Token {
-                                token: tok,
+                                token: sum.token,
                                 exit_layer: self.final_layer,
                             })
                             .ok();
@@ -221,7 +238,10 @@ impl StageWorker {
 }
 
 impl PipelinedEngine {
-    pub fn new(state: ModelState, threshold: f32) -> Result<PipelinedEngine> {
+    pub fn new(
+        state: ModelState,
+        policy: ExitPolicy,
+    ) -> Result<PipelinedEngine> {
         let p = state.man.stages.len();
         let (leader_tx, from_last) = channel::<ToLeader>();
 
@@ -229,16 +249,16 @@ impl PipelinedEngine {
         let mut next_tx: Option<Sender<Work>> = None;
         let mut first_tx: Option<Sender<Work>> = None;
         let mut threads = Vec::new();
-        let mut threshold_tx = Vec::new();
+        let mut policy_tx = Vec::new();
         for s in (0..p).rev() {
             let (tx, rx) = channel::<Work>();
-            let (ttx, trx) = channel::<f32>();
-            threshold_tx.push(ttx);
+            let (ptx, prx) = channel::<ExitPolicy>();
+            policy_tx.push(ptx);
             let man = state.man.clone();
             let params = state.stage_params[s].clone();
             let next = next_tx.take();
             let leader = leader_tx.clone();
-            let thr = threshold;
+            let pol = policy.clone();
             let join = std::thread::Builder::new()
                 .name(format!("infer-{s}"))
                 .spawn(move || -> Result<()> {
@@ -263,11 +283,11 @@ impl PipelinedEngine {
                         man,
                         rt,
                         plits,
-                        threshold: thr,
+                        policy: pol,
                         inbox: rx,
                         next,
                         leader,
-                        threshold_rx: trx,
+                        policy_rx: prx,
                         entry_exit_layers,
                         final_layer,
                     };
@@ -278,23 +298,26 @@ impl PipelinedEngine {
             next_tx = Some(tx.clone());
             first_tx = Some(tx);
         }
-        threshold_tx.reverse();
+        policy_tx.reverse();
 
         Ok(PipelinedEngine {
             state,
-            threshold,
+            policy,
             to_first: first_tx.unwrap(),
             from_last,
             threads,
-            threshold_tx,
+            policy_tx,
             session_generation: 0,
         })
     }
 
-    pub fn set_threshold(&mut self, t: f32) {
-        self.threshold = t;
-        for tx in &self.threshold_tx {
-            tx.send(t).ok();
+    /// Swap the exit policy. The stage threads adopt it at the next chain
+    /// reset (i.e. the next session start), exactly when the old
+    /// per-threshold setter took effect.
+    pub fn set_policy(&mut self, policy: ExitPolicy) {
+        self.policy = policy;
+        for tx in &self.policy_tx {
+            tx.send(self.policy.clone()).ok();
         }
     }
 
@@ -345,7 +368,7 @@ impl PipelinedEngine {
 impl DecodeBackend for PipelinedEngine {
     /// Decode state lives in the stage threads, so a fresh session resets
     /// the whole chain — and only one session may be live at a time.
-    /// Thresholds set via [`PipelinedEngine::set_threshold`] are picked up
+    /// Policies set via [`PipelinedEngine::set_policy`] are picked up
     /// by the stages during this reset.
     fn fresh_caches(&mut self) -> Result<SessionCaches> {
         let widths = &self.state.man.decode_widths;
@@ -422,8 +445,8 @@ impl DecodeBackend for PipelinedEngine {
         self.state.man.stages.len()
     }
 
-    fn exit_threshold(&self) -> f32 {
-        self.threshold
+    fn exit_policy(&self) -> &ExitPolicy {
+        &self.policy
     }
 
     fn tracks_deficit(&self) -> bool {
@@ -503,7 +526,8 @@ mod tests {
         let man =
             Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
         let state = ModelState::init(man, 1);
-        let eng = PipelinedEngine::new(state, 1.0).unwrap();
+        let eng =
+            PipelinedEngine::new(state, ExitPolicy::confidence(1.0)).unwrap();
         let extra: Sender<Work> = eng.to_first.clone();
         let (done_tx, done_rx) = channel::<()>();
         std::thread::spawn(move || {

@@ -1,0 +1,560 @@
+//! Pluggable exit-decision policies — the first-class API behind every
+//! early-exit check in the system.
+//!
+//! The paper's Section 4 exit rule (exit iff max softmax probability >=
+//! a scalar threshold) used to be a bare `f32` threaded through the
+//! engines, sessions, serving pool, and eval harness. [`ExitPolicy`]
+//! replaces that plumbing with a closed set of decision rules over a
+//! per-exit [`LogitsSummary`]:
+//!
+//! - [`ExitPolicy::Confidence`] — the paper's rule, bit-for-bit: exit
+//!   iff `top_prob >= threshold`. `threshold = 1.0` is *defined* as the
+//!   full-model baseline (exits disabled entirely, exactly like the old
+//!   scalar-1.0 path, including the sequential engine's forced-full-pass
+//!   accounting).
+//! - [`ExitPolicy::PerLayer`] — one confidence threshold per exit layer
+//!   (EE-Tuning, Pan et al. 2024: exit decisions are worth tuning
+//!   per-exit). Layers not listed never exit. Uniform thresholds are
+//!   exactly [`ExitPolicy::Confidence`].
+//! - [`ExitPolicy::TopTwoMargin`] — exit iff the probability gap between
+//!   the top-1 and top-2 tokens is at least `delta` (Shan et al. 2024
+//!   study margin-style exit signals).
+//! - [`ExitPolicy::Entropy`] — exit iff the softmax entropy is at most
+//!   `max_nats` (low entropy = confident distribution, not just a
+//!   confident argmax).
+//! - [`ExitPolicy::Never`] — full-model decoding regardless of layer or
+//!   summary; the explicit baseline spelling.
+//!
+//! [`ExitPolicy::calibrated`] fits a [`ExitPolicy::PerLayer`] policy
+//! from [`ProbeReport`] data (the Table-4 machinery): for every early
+//! exit it picks the smallest confidence threshold whose accepted tokens
+//! agree with the final exit's prediction at a target rate.
+//!
+//! The textual spec grammar (CLI `--policy`, round-tripped by
+//! [`ExitPolicy::spec`]):
+//!
+//! ```text
+//! never                      full-model baseline
+//! confidence:0.8   |  0.8    the paper's rule (bare floats accepted)
+//! per-layer:2=0.7,4=0.9      per-exit-layer confidence thresholds
+//! margin:0.3                 top-2 probability margin
+//! entropy:1.5                max softmax entropy in nats
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{argmax_prob, softmax};
+
+use super::probe::ProbeReport;
+
+/// What a policy tells the engine to do at one exit head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitDecision {
+    /// Emit the exit head's argmax token here.
+    Exit,
+    /// Keep running deeper layers.
+    Continue,
+}
+
+impl ExitDecision {
+    pub fn is_exit(self) -> bool {
+        self == ExitDecision::Exit
+    }
+}
+
+/// Per-exit softmax summary handed to [`ExitPolicy::decide`]: everything
+/// any resident policy needs, computed once per head evaluation so the
+/// decision itself is engine-agnostic (both engines, the probe, and
+/// tests share [`summarize_logits`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogitsSummary {
+    /// Argmax token id — what would be emitted on exit.
+    pub token: i32,
+    /// Max softmax probability (the paper's confidence signal).
+    pub top_prob: f32,
+    /// Probability gap between the top-1 and top-2 tokens.
+    pub margin: f32,
+    /// Softmax entropy in nats.
+    pub entropy_nats: f32,
+}
+
+/// Summarise one logits vector for exit decisions.
+pub fn summarize_logits(logits: &[f32]) -> LogitsSummary {
+    let probs = softmax(logits);
+    let (idx, top) = argmax_prob(&probs);
+    let mut second = 0.0f32;
+    let mut entropy = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        if i != idx && p > second {
+            second = p;
+        }
+        if p > 0.0 {
+            entropy -= p * p.ln();
+        }
+    }
+    LogitsSummary {
+        token: idx as i32,
+        top_prob: top,
+        margin: top - second,
+        entropy_nats: entropy,
+    }
+}
+
+/// A pluggable early-exit decision rule. See the module docs for the
+/// variants' semantics and the textual spec grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExitPolicy {
+    /// The paper's rule: exit iff `top_prob >= threshold`. `1.0` is the
+    /// full-model baseline (exits disabled, [`ExitPolicy::may_exit`] is
+    /// false — identical to the pre-policy scalar-threshold semantics).
+    Confidence { threshold: f32 },
+    /// Per-exit-layer confidence thresholds `(layer, threshold)`.
+    /// Layers not listed never exit; uniform thresholds are exactly
+    /// [`ExitPolicy::Confidence`].
+    PerLayer { thresholds: Vec<(usize, f32)> },
+    /// Exit iff `top_prob - second_prob >= delta`.
+    TopTwoMargin { delta: f32 },
+    /// Exit iff the softmax entropy is at most `max_nats`.
+    Entropy { max_nats: f32 },
+    /// Never exit early — the explicit full-model spelling.
+    Never,
+}
+
+impl ExitPolicy {
+    /// The paper's confidence rule — the spelling every pre-policy
+    /// `threshold: f32` call site migrates to.
+    pub fn confidence(threshold: f32) -> ExitPolicy {
+        ExitPolicy::Confidence { threshold }
+    }
+
+    /// Decide whether to exit at `layer` given the head's summary.
+    pub fn decide(&self, layer: usize, s: &LogitsSummary) -> ExitDecision {
+        let exit = match self {
+            ExitPolicy::Confidence { threshold } => s.top_prob >= *threshold,
+            ExitPolicy::PerLayer { thresholds } => thresholds
+                .iter()
+                .find(|(l, _)| *l == layer)
+                .is_some_and(|(_, t)| s.top_prob >= *t),
+            ExitPolicy::TopTwoMargin { delta } => s.margin >= *delta,
+            ExitPolicy::Entropy { max_nats } => s.entropy_nats <= *max_nats,
+            ExitPolicy::Never => false,
+        };
+        if exit {
+            ExitDecision::Exit
+        } else {
+            ExitDecision::Continue
+        }
+    }
+
+    /// Whether this policy can ever exit early. False means full-model
+    /// decoding: engines may skip exit-head evaluation and the
+    /// sequential session suspends its forced-full-pass bookkeeping —
+    /// exactly the old `threshold >= 1.0` behaviour.
+    ///
+    /// `Confidence`/`PerLayer` thresholds at `1.0` count as "never": the
+    /// scalar-threshold API defined `1.0` as the full-model baseline and
+    /// the policy API preserves that bit-for-bit. Margin and entropy
+    /// rules are only "never" when their bound is unsatisfiable.
+    pub fn may_exit(&self) -> bool {
+        match self {
+            ExitPolicy::Confidence { threshold } => *threshold < 1.0,
+            ExitPolicy::PerLayer { thresholds } => {
+                thresholds.iter().any(|(_, t)| *t < 1.0)
+            }
+            ExitPolicy::TopTwoMargin { delta } => *delta <= 1.0,
+            ExitPolicy::Entropy { max_nats } => *max_nats >= 0.0,
+            ExitPolicy::Never => false,
+        }
+    }
+
+    /// [`ExitPolicy::may_exit`] restricted to one exit layer: false when
+    /// this policy can never fire *there* (unlisted `PerLayer` layers,
+    /// or a per-layer threshold at 1.0). Engines use this to skip the
+    /// layer's head computation outright — the decision could only be
+    /// `Continue`.
+    pub fn may_exit_at(&self, layer: usize) -> bool {
+        match self {
+            ExitPolicy::PerLayer { thresholds } => thresholds
+                .iter()
+                .any(|(l, t)| *l == layer && *t < 1.0),
+            _ => self.may_exit(),
+        }
+    }
+
+    /// Fit a [`ExitPolicy::PerLayer`] policy from Table-4 probe data:
+    /// for each early exit, the smallest confidence threshold such that
+    /// tokens accepted at it agree with the final exit's prediction at a
+    /// rate of at least `target_agreement`. Exits that cannot reach the
+    /// target at any observed confidence get threshold `1.0` (disabled).
+    /// A probe with no early exits at all yields [`ExitPolicy::Never`]
+    /// (an empty `PerLayer` would not round-trip through the spec
+    /// grammar).
+    pub fn calibrated(
+        report: &ProbeReport,
+        target_agreement: f64,
+    ) -> ExitPolicy {
+        // The deepest probed layer is the final exit — it is the
+        // agreement reference, not a calibration target.
+        let final_layer = report.exit_layers.iter().copied().max();
+        let early: Vec<usize> = report
+            .exit_layers
+            .iter()
+            .copied()
+            .filter(|&l| Some(l) != final_layer)
+            .collect();
+        let mut thresholds = Vec::with_capacity(early.len());
+        for layer in early {
+            // (confidence, agrees-with-final) per generated token.
+            let mut obs: Vec<(f32, bool)> = report
+                .probes
+                .iter()
+                .filter_map(|p| {
+                    let fin = p.exits.last()?;
+                    let e = p.exits.iter().find(|e| e.0 == layer)?;
+                    Some((e.2, e.1 == fin.1))
+                })
+                .collect();
+            // Highest confidence first; accepting threshold t means
+            // accepting every observation with conf >= t, so scan the
+            // prefixes and keep the smallest t whose prefix still meets
+            // the agreement target. Ties in confidence are admitted
+            // together (>= is inclusive).
+            obs.sort_by(|a, b| b.0.total_cmp(&a.0));
+            let mut best = 1.0f32;
+            let mut agree = 0usize;
+            let mut i = 0usize;
+            while i < obs.len() {
+                let conf = obs[i].0;
+                while i < obs.len() && obs[i].0 == conf {
+                    agree += usize::from(obs[i].1);
+                    i += 1;
+                }
+                if agree as f64 / i as f64 >= target_agreement {
+                    best = conf;
+                }
+            }
+            thresholds.push((layer, best));
+        }
+        if thresholds.is_empty() {
+            return ExitPolicy::Never;
+        }
+        ExitPolicy::PerLayer { thresholds }
+    }
+
+    /// The one CLI resolution rule, shared by every surface that takes
+    /// an exit policy: `--policy SPEC` wins; otherwise `--threshold F`
+    /// is sugar for the confidence rule; otherwise
+    /// `Confidence{default_threshold}`.
+    pub fn from_args(
+        args: &crate::util::cli::Args,
+        default_threshold: f32,
+    ) -> Result<ExitPolicy> {
+        match args.get("policy") {
+            Some(spec) => ExitPolicy::parse(spec),
+            None => Ok(ExitPolicy::confidence(
+                args.f64_or("threshold", default_threshold as f64) as f32,
+            )),
+        }
+    }
+
+    /// Parse the textual spec grammar (see module docs). A bare float is
+    /// shorthand for `confidence:<float>`.
+    pub fn parse(spec: &str) -> Result<ExitPolicy> {
+        let spec = spec.trim();
+        if spec == "never" {
+            return Ok(ExitPolicy::Never);
+        }
+        if let Ok(t) = spec.parse::<f32>() {
+            if !t.is_finite() {
+                bail!("bad confidence threshold {spec:?}: must be finite");
+            }
+            return Ok(ExitPolicy::Confidence { threshold: t });
+        }
+        let (kind, body) = spec.split_once(':').with_context(|| {
+            format!(
+                "bad exit-policy spec {spec:?} (expected never | \
+                 confidence:T | per-layer:L=T,... | margin:D | entropy:N)"
+            )
+        })?;
+        match kind {
+            "confidence" | "conf" => Ok(ExitPolicy::Confidence {
+                threshold: parse_f32(body, "confidence threshold")?,
+            }),
+            "margin" | "top2-margin" => Ok(ExitPolicy::TopTwoMargin {
+                delta: parse_f32(body, "margin delta")?,
+            }),
+            "entropy" => Ok(ExitPolicy::Entropy {
+                max_nats: parse_f32(body, "entropy bound")?,
+            }),
+            "per-layer" | "per_layer" => {
+                let mut thresholds = Vec::new();
+                for part in body.split(',').filter(|p| !p.is_empty()) {
+                    let (l, t) = part.split_once('=').with_context(|| {
+                        format!(
+                            "bad per-layer entry {part:?} (want LAYER=T)"
+                        )
+                    })?;
+                    let layer: usize = l.trim().parse().with_context(|| {
+                        format!("bad per-layer exit layer {l:?}")
+                    })?;
+                    let t = parse_f32(t, "per-layer threshold")?;
+                    if thresholds.iter().any(|(x, _)| *x == layer) {
+                        bail!("duplicate per-layer exit layer {layer}");
+                    }
+                    thresholds.push((layer, t));
+                }
+                if thresholds.is_empty() {
+                    bail!("per-layer policy needs at least one LAYER=T");
+                }
+                thresholds.sort_by_key(|(l, _)| *l);
+                Ok(ExitPolicy::PerLayer { thresholds })
+            }
+            other => bail!(
+                "unknown exit-policy kind {other:?} (never | confidence | \
+                 per-layer | margin | entropy)"
+            ),
+        }
+    }
+
+    /// Canonical spec string: `ExitPolicy::parse(p.spec())` reproduces
+    /// `p` (modulo `PerLayer` entry order, which `parse` sorts).
+    pub fn spec(&self) -> String {
+        match self {
+            ExitPolicy::Confidence { threshold } => {
+                format!("confidence:{threshold}")
+            }
+            ExitPolicy::PerLayer { thresholds } => {
+                let parts: Vec<String> = thresholds
+                    .iter()
+                    .map(|(l, t)| format!("{l}={t}"))
+                    .collect();
+                format!("per-layer:{}", parts.join(","))
+            }
+            ExitPolicy::TopTwoMargin { delta } => format!("margin:{delta}"),
+            ExitPolicy::Entropy { max_nats } => format!("entropy:{max_nats}"),
+            ExitPolicy::Never => "never".to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for ExitPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+fn parse_f32(s: &str, what: &str) -> Result<f32> {
+    let v: f32 = s
+        .trim()
+        .parse()
+        .with_context(|| format!("bad {what} {s:?}"))?;
+    if !v.is_finite() {
+        bail!("bad {what} {s:?}: must be finite");
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sequential::TokenProbe;
+    use super::*;
+    use crate::util::proptest;
+
+    fn summary(top: f32, second: f32) -> LogitsSummary {
+        LogitsSummary {
+            token: 0,
+            top_prob: top,
+            margin: top - second,
+            entropy_nats: 0.5,
+        }
+    }
+
+    #[test]
+    fn summarize_logits_matches_softmax_facts() {
+        let mut logits = vec![0.0f32; 10];
+        logits[3] = 8.0;
+        let s = summarize_logits(&logits);
+        assert_eq!(s.token, 3);
+        assert!(s.top_prob > 0.99);
+        assert!(s.margin > 0.99);
+        assert!(s.entropy_nats < 0.05, "{s:?}");
+        // Flat logits: uniform distribution, max entropy ln(10).
+        let s = summarize_logits(&vec![0.0f32; 10]);
+        assert!((s.top_prob - 0.1).abs() < 1e-5);
+        assert!(s.margin.abs() < 1e-6);
+        assert!((s.entropy_nats - 10f32.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn confidence_decides_on_top_prob_inclusive() {
+        let p = ExitPolicy::confidence(0.8);
+        assert!(p.decide(2, &summary(0.8, 0.1)).is_exit(), "boundary is >=");
+        assert!(p.decide(2, &summary(0.91, 0.1)).is_exit());
+        assert!(!p.decide(2, &summary(0.79, 0.1)).is_exit());
+        assert!(p.may_exit());
+        // 1.0 is the full-model baseline: exits disabled entirely.
+        assert!(!ExitPolicy::confidence(1.0).may_exit());
+        assert!(!ExitPolicy::confidence(1.5).may_exit());
+    }
+
+    #[test]
+    fn per_layer_uses_each_layers_threshold_and_skips_unlisted() {
+        let p = ExitPolicy::PerLayer {
+            thresholds: vec![(2, 0.9), (4, 0.5)],
+        };
+        let s = summary(0.7, 0.1);
+        assert!(!p.decide(2, &s).is_exit());
+        assert!(p.decide(4, &s).is_exit());
+        assert!(!p.decide(6, &s).is_exit(), "unlisted layer never exits");
+        assert!(p.may_exit());
+        // Per-layer reachability: engines skip heads where the policy
+        // can never fire.
+        assert!(p.may_exit_at(2) && p.may_exit_at(4));
+        assert!(!p.may_exit_at(6), "unlisted layer is unreachable");
+        let disabled = ExitPolicy::PerLayer {
+            thresholds: vec![(2, 1.0), (4, 1.0)],
+        };
+        assert!(!disabled.may_exit());
+        assert!(!disabled.may_exit_at(2));
+        assert!(ExitPolicy::confidence(0.5).may_exit_at(7));
+        assert!(!ExitPolicy::Never.may_exit_at(2));
+    }
+
+    #[test]
+    fn margin_entropy_and_never_semantics() {
+        let m = ExitPolicy::TopTwoMargin { delta: 0.3 };
+        assert!(m.decide(2, &summary(0.6, 0.3)).is_exit());
+        assert!(!m.decide(2, &summary(0.6, 0.4)).is_exit());
+        assert!(m.may_exit());
+        assert!(!ExitPolicy::TopTwoMargin { delta: 1.5 }.may_exit());
+
+        let e = ExitPolicy::Entropy { max_nats: 0.5 };
+        assert!(e.decide(2, &summary(0.9, 0.05)).is_exit());
+        let mut hot = summary(0.4, 0.3);
+        hot.entropy_nats = 1.2;
+        assert!(!e.decide(2, &hot).is_exit());
+        assert!(e.may_exit());
+        assert!(!ExitPolicy::Entropy { max_nats: -1.0 }.may_exit());
+
+        assert!(!ExitPolicy::Never.decide(0, &summary(1.0, 0.0)).is_exit());
+        assert!(!ExitPolicy::Never.may_exit());
+    }
+
+    /// Property: `PerLayer` with one uniform threshold on every probed
+    /// layer decides identically to `Confidence` with that threshold,
+    /// for arbitrary summaries and layers.
+    #[test]
+    fn uniform_per_layer_equals_confidence() {
+        proptest::check("uniform per-layer == confidence", 256, |rng| {
+            let t = rng.below(101) as f32 / 100.0;
+            let layers = [2usize, 4, 6, 8];
+            let per = ExitPolicy::PerLayer {
+                thresholds: layers.iter().map(|&l| (l, t)).collect(),
+            };
+            let conf = ExitPolicy::confidence(t);
+            if per.may_exit() != conf.may_exit() {
+                return Err(format!("may_exit diverges at t={t}"));
+            }
+            for &layer in &layers {
+                let top = rng.below(101) as f32 / 100.0;
+                let s = summary(top, (top / 2.0).min(1.0 - top));
+                if per.decide(layer, &s) != conf.decide(layer, &s) {
+                    return Err(format!(
+                        "decision diverges: layer {layer} t {t} top {top}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let policies = [
+            ExitPolicy::confidence(0.8),
+            ExitPolicy::confidence(1.0),
+            ExitPolicy::PerLayer { thresholds: vec![(2, 0.7), (4, 0.9)] },
+            ExitPolicy::TopTwoMargin { delta: 0.25 },
+            ExitPolicy::Entropy { max_nats: 1.5 },
+            ExitPolicy::Never,
+        ];
+        for p in policies {
+            let parsed = ExitPolicy::parse(&p.spec()).unwrap();
+            assert_eq!(parsed, p, "spec {:?} did not round-trip", p.spec());
+        }
+        // Sugar forms.
+        assert_eq!(
+            ExitPolicy::parse("0.6").unwrap(),
+            ExitPolicy::confidence(0.6)
+        );
+        assert_eq!(
+            ExitPolicy::parse("conf:0.6").unwrap(),
+            ExitPolicy::confidence(0.6)
+        );
+        // Rejections.
+        assert!(ExitPolicy::parse("fifo").is_err());
+        assert!(ExitPolicy::parse("per-layer:").is_err());
+        assert!(ExitPolicy::parse("per-layer:2=0.5,2=0.6").is_err());
+        assert!(ExitPolicy::parse("entropy:abc").is_err());
+        // Non-finite numbers would make a policy unequal to itself
+        // (NaN != NaN breaks the pool's policy change-detection).
+        assert!(ExitPolicy::parse("nan").is_err());
+        assert!(ExitPolicy::parse("inf").is_err());
+        assert!(ExitPolicy::parse("confidence:nan").is_err());
+        assert!(ExitPolicy::parse("entropy:inf").is_err());
+    }
+
+    fn probe(position: usize, exits: Vec<(usize, i32, f32)>) -> TokenProbe {
+        TokenProbe { position, exits }
+    }
+
+    #[test]
+    fn calibration_picks_smallest_threshold_meeting_target() {
+        // Layer 2 observations (final layer 4 always predicts token 7):
+        // conf 0.9 agrees, 0.7 agrees, 0.5 disagrees, 0.3 agrees.
+        let report = ProbeReport {
+            probes: vec![
+                probe(0, vec![(2, 7, 0.9), (4, 7, 0.99)]),
+                probe(1, vec![(2, 7, 0.7), (4, 7, 0.99)]),
+                probe(2, vec![(2, 9, 0.5), (4, 7, 0.99)]),
+                probe(3, vec![(2, 7, 0.3), (4, 7, 0.99)]),
+            ],
+            generated: String::new(),
+            exit_layers: vec![2, 4],
+        };
+        // Target 1.0: only the {0.9, 0.7} prefix is all-agreeing.
+        let p = ExitPolicy::calibrated(&report, 1.0);
+        assert_eq!(
+            p,
+            ExitPolicy::PerLayer { thresholds: vec![(2, 0.7)] }
+        );
+        // Target 0.75: the {0.9, 0.7, 0.5, 0.3} prefix agrees at 3/4.
+        let p = ExitPolicy::calibrated(&report, 0.75);
+        assert_eq!(
+            p,
+            ExitPolicy::PerLayer { thresholds: vec![(2, 0.3)] }
+        );
+        // Unreachable target on an always-disagreeing exit: disabled.
+        let bad = ProbeReport {
+            probes: vec![probe(0, vec![(2, 1, 0.9), (4, 7, 0.99)])],
+            generated: String::new(),
+            exit_layers: vec![2, 4],
+        };
+        let p = ExitPolicy::calibrated(&bad, 0.9);
+        assert_eq!(
+            p,
+            ExitPolicy::PerLayer { thresholds: vec![(2, 1.0)] }
+        );
+        assert!(!p.may_exit());
+        // No early exits at all: Never, not an unparseable empty
+        // PerLayer — the printed spec must round-trip.
+        let none = ProbeReport {
+            probes: vec![probe(0, vec![(4, 7, 0.99)])],
+            generated: String::new(),
+            exit_layers: vec![4],
+        };
+        let p = ExitPolicy::calibrated(&none, 0.9);
+        assert_eq!(p, ExitPolicy::Never);
+        assert_eq!(ExitPolicy::parse(&p.spec()).unwrap(), p);
+    }
+}

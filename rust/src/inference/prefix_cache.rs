@@ -125,8 +125,9 @@ impl PrefixCacheStats {
         self.hits as f64 / (self.lookups().max(1)) as f64
     }
 
-    /// Accumulate another store's counters (the pool merges per-worker
-    /// stores into one [`ServeMetrics`] reading).
+    /// Accumulate another store's counters into one [`ServeMetrics`]
+    /// reading (the pool shares a single store today, but stats from
+    /// several stores — e.g. multiple pools — still merge).
     ///
     /// [`ServeMetrics`]: crate::serve::ServeMetrics
     pub fn merge(&mut self, other: &PrefixCacheStats) {
@@ -257,8 +258,10 @@ struct Inner {
     stats: PrefixCacheStats,
 }
 
-/// Thread-safe prefix KV-cache store. One per pool worker today; the
-/// internal lock already makes cross-worker sharing safe when that lands.
+/// Thread-safe prefix KV-cache store. The serving pool shares one store
+/// across all its workers (the internal lock makes that safe); snapshots
+/// are engine-independent host tensors, so a prefix prefilled on one
+/// worker's engine restores onto any same-shaped engine.
 pub struct PrefixCacheStore {
     max_positions: usize,
     inner: Mutex<Inner>,
@@ -412,8 +415,10 @@ impl PrefixCacheStore {
     /// within the whole budget and not blocked by pinned entries. A
     /// cheap pre-check so callers can skip building an expensive
     /// snapshot (a full host copy of the KV caches) that the store
-    /// would only reject. Exact for per-worker stores (one inserting
-    /// thread); advisory if a store is ever shared.
+    /// would only reject. Advisory under the pool's shared store
+    /// (another worker may insert between the check and the insert);
+    /// `insert` itself re-checks under the lock, so the race only costs
+    /// a wasted snapshot copy, never a budget violation.
     pub fn would_admit(&self, positions: usize) -> bool {
         if positions < MIN_PREFIX || positions > self.max_positions {
             return false;

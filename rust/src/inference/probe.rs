@@ -4,6 +4,12 @@
 //! prediction and confidence for each token, so one can see which tokens
 //! are "easy" (all exits agree with high confidence) and which require the
 //! full model.
+//!
+//! Probe data is also the input to exit-policy calibration
+//! ([`ExitPolicy::calibrated`](super::policy::ExitPolicy::calibrated)):
+//! run `ee-llm probe --calibrate TARGET` to fit per-layer confidence
+//! thresholds whose accepted tokens agree with the final exit at the
+//! target rate, emitted as a ready-to-use `--policy per-layer:...` spec.
 
 use anyhow::Result;
 
@@ -11,6 +17,7 @@ use crate::data::tokenizer::ByteTokenizer;
 use crate::util::table::Table;
 
 use super::common::ModelState;
+use super::policy::ExitPolicy;
 use super::sequential::{SequentialEngine, TokenProbe};
 
 pub struct ProbeReport {
@@ -34,9 +41,9 @@ pub fn probe_generation(
         .filter(|&l| l > 0)
         .collect();
     exit_layers.sort();
-    // Threshold 1.0: never exit early, so every exit is probed for every
-    // token (the Table 4 setting).
-    let mut eng = SequentialEngine::new(state, 1.0)?;
+    // `Never`: no early exits, so every exit is probed for every token
+    // (the Table 4 setting, previously spelled threshold 1.0).
+    let mut eng = SequentialEngine::new(state, ExitPolicy::Never)?;
     eng.probe = true;
     let out = eng.generate_text(prompt, max_new)?;
     Ok(ProbeReport {

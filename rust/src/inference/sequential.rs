@@ -1,5 +1,6 @@
 //! Single-process early-exit inference with **KV recomputation**
-//! (Section 4 / Appendix D.3), and the full-model baseline (threshold=1).
+//! (Section 4 / Appendix D.3), and the full-model baseline (an
+//! [`ExitPolicy`] that can never exit: `Confidence{1.0}` or `Never`).
 //!
 //! State per generation: one KV cache per stage plus the *deficit* — the
 //! trailing run of positions whose deep-layer KV entries are missing
@@ -21,7 +22,8 @@ use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
-use super::common::{confidence_decision, GenOutput, ModelState};
+use super::common::{GenOutput, ModelState};
+use super::policy::{summarize_logits, ExitPolicy};
 use super::session::{
     DecodeBackend, DecodeSession, SessionCaches, WindowOutcome,
 };
@@ -41,7 +43,9 @@ pub struct SequentialEngine {
     rt: StageRuntime,
     /// Per-stage parameter literals (cached; params are immutable here).
     plits: Vec<Vec<xla::Literal>>,
-    pub threshold: f32,
+    /// Exit-decision policy every window pass consults
+    /// ([`ExitPolicy::Confidence`] reproduces the paper's scalar rule).
+    pub policy: ExitPolicy,
     widths: Vec<usize>,
     /// Collect per-exit probes for every generated token (Table 4 mode).
     pub probe: bool,
@@ -49,7 +53,10 @@ pub struct SequentialEngine {
 }
 
 impl SequentialEngine {
-    pub fn new(state: ModelState, threshold: f32) -> Result<SequentialEngine> {
+    pub fn new(
+        state: ModelState,
+        policy: ExitPolicy,
+    ) -> Result<SequentialEngine> {
         let mut rt = StageRuntime::cpu()?;
         for st in &state.man.stages {
             for w in &state.man.decode_widths {
@@ -77,7 +84,7 @@ impl SequentialEngine {
             state,
             rt,
             plits,
-            threshold,
+            policy,
             widths,
 
             probe: false,
@@ -133,21 +140,37 @@ impl SequentialEngine {
         };
 
         for s in 0..p {
-            // Entry exits (paper: Optimization-2 placement).
-            if let Some(xh) = &x {
+            // Entry exits (paper: Optimization-2 placement). Head logits
+            // are only worth computing when someone consumes them — an
+            // exit decision or a probe record. In particular the
+            // full-model baseline (`allow_exit` false: prefill, forced
+            // full passes, or a policy that can never exit) skips every
+            // exit head, which is exactly what the paper's speedup
+            // denominator should cost.
+            if let Some(xh) = x.as_ref().filter(|_| {
+                emit && (allow_exit || self.probe)
+            }) {
                 let last = &xh.data[(width - 1) * h..];
                 for e in self.state.entry_exits(s) {
                     let layer = e.layer;
-                    let logits = self.head_logits(s, layer, last)?;
-                    let (tok, conf) = confidence_decision(&logits);
-                    if self.probe && emit {
-                        probe.exits.push((layer, tok, conf));
+                    // Layers where the policy can never fire (unlisted
+                    // or 1.0 in a PerLayer) only matter to the probe.
+                    if !self.probe && !self.policy.may_exit_at(layer) {
+                        continue;
                     }
-                    if allow_exit && emit && conf >= self.threshold {
+                    let logits = self.head_logits(s, layer, last)?;
+                    let sum = summarize_logits(&logits);
+                    if self.probe && emit {
+                        probe.exits.push((layer, sum.token, sum.top_prob));
+                    }
+                    if allow_exit
+                        && emit
+                        && self.policy.decide(layer, &sum).is_exit()
+                    {
                         if self.probe {
                             self.probes.push(probe);
                         }
-                        return Ok((tok, layer, s));
+                        return Ok((sum.token, layer, s));
                     }
                 }
             }
@@ -179,12 +202,12 @@ impl SequentialEngine {
         let last = &xh.data[(width - 1) * h..];
         let fin = self.state.final_exit();
         let logits = self.head_logits(p - 1, fin.layer, last)?;
-        let (tok, conf) = confidence_decision(&logits);
+        let sum = summarize_logits(&logits);
         if self.probe {
-            probe.exits.push((fin.layer, tok, conf));
+            probe.exits.push((fin.layer, sum.token, sum.top_prob));
             self.probes.push(probe);
         }
-        Ok((tok, fin.layer, p))
+        Ok((sum.token, fin.layer, p))
     }
 
     /// Generate up to `max_new` tokens after `prompt` (token ids, BOS
@@ -258,8 +281,8 @@ impl DecodeBackend for SequentialEngine {
         self.state.man.stages.len()
     }
 
-    fn exit_threshold(&self) -> f32 {
-        self.threshold
+    fn exit_policy(&self) -> &ExitPolicy {
+        &self.policy
     }
 
     fn tracks_deficit(&self) -> bool {

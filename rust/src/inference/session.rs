@@ -30,6 +30,7 @@ use super::common::{
     clamp_max_new, detokenize, is_stop_token, pick_width,
     prefill_chunks_from, prompt_tokens, ExitStats, GenOutput,
 };
+use super::policy::ExitPolicy;
 use super::prefix_cache::{CacheSnapshot, PinnedSnapshot, PrefixCacheStore};
 
 /// Per-session decode state handed out by a backend.
@@ -93,8 +94,11 @@ pub trait DecodeBackend {
     /// Number of pipeline stages.
     fn n_stages(&self) -> usize;
 
-    /// Current confidence threshold for early exits.
-    fn exit_threshold(&self) -> f32;
+    /// The resident exit policy ([`ExitPolicy`]) early-exit checks run
+    /// under. Sessions consult [`ExitPolicy::may_exit`] for the forced
+    /// full-pass bookkeeping; the per-head decisions happen inside the
+    /// engine's window pass.
+    fn exit_policy(&self) -> &ExitPolicy;
 
     /// Whether early-exited tokens leave deep-layer KV entries missing
     /// that the session must track and heal (KV recomputation). Backends
@@ -169,7 +173,11 @@ pub enum StepEvent {
 pub struct DecodeSession {
     tokens: Vec<i32>,
     max_new: usize,
-    caches: SessionCaches,
+    /// Built lazily during prefill: a prefix-cache hit *becomes* the
+    /// session caches directly, so a restored admission never pays the
+    /// redundant zeroed [`DecodeBackend::fresh_caches`] build. `Some`
+    /// for every prefilled session that is not already done.
+    caches: Option<SessionCaches>,
     /// Trailing positions healed by fewer than all stages (KV
     /// recomputation backends only).
     deficit: usize,
@@ -207,11 +215,13 @@ impl DecodeSession {
     ) -> Result<DecodeSession> {
         let tokens = prompt_tokens(prompt, max_new);
         let max_new = clamp_max_new(tokens.len(), max_new, backend.max_seq())?;
-        let caches = backend.fresh_caches()?;
         Ok(DecodeSession {
             tokens,
             max_new,
-            caches,
+            // Deferred to prefill: a prefix-cache restore supplies the
+            // caches itself, and building fresh ones here would waste a
+            // full zeroed-cache allocation on every hit.
+            caches: None,
             deficit: 0,
             stats: ExitStats::default(),
             generated: Vec::new(),
@@ -276,12 +286,15 @@ impl DecodeSession {
             if let Some(hit) = store.lookup(&self.tokens) {
                 let snap = hit.snapshot.snapshot();
                 // Restoring is best-effort: the cache is an optimization,
-                // so a failed restore degrades to a full prefill over the
-                // still-untouched fresh caches instead of failing a
-                // request that would have served fine uncached.
+                // so a failed restore degrades to a full prefill over
+                // fresh caches instead of failing a request that would
+                // have served fine uncached.
                 match backend.restore_caches(&snap.stage_caches) {
                     Ok(caches) => {
-                        self.caches = caches;
+                        // The restored caches *are* the session caches —
+                        // a hit skips the zeroed fresh-cache build
+                        // entirely (see the `caches` field docs).
+                        self.caches = Some(caches);
                         // Trust restored positions only below the
                         // snapshot's healed frontier and the common
                         // prefix; everything from `start` on gets a
@@ -301,17 +314,14 @@ impl DecodeSession {
                 }
             }
         }
+        if self.caches.is_none() {
+            self.caches = Some(backend.fresh_caches()?);
+        }
+        let caches = self.caches.as_mut().unwrap();
         let chunks =
             prefill_chunks_from(backend.decode_widths(), start, l)?;
         for (pos, w) in chunks {
-            backend.run_window(
-                &mut self.caches,
-                &self.tokens,
-                pos,
-                w,
-                false,
-                false,
-            )?;
+            backend.run_window(caches, &self.tokens, pos, w, false, false)?;
         }
         // Every untrusted position just ran all stages, so the session
         // starts decoding with a clean deficit regardless of what the
@@ -344,9 +354,12 @@ impl DecodeSession {
             "prefix snapshots are only valid after prefill and before \
              decoding"
         );
+        // Prefilled and not done implies the prefill pass built (or
+        // restored) the session caches.
+        let caches = self.caches.as_ref().expect("prefilled session caches");
         Ok(CacheSnapshot {
             tokens: self.tokens.clone(),
-            stage_caches: backend.snapshot_caches(&self.caches)?,
+            stage_caches: backend.snapshot_caches(caches)?,
             deficit: self.deficit,
         })
     }
@@ -390,11 +403,15 @@ impl DecodeSession {
             // Exit eligibility: after exiting, the deficit becomes `need`,
             // so the *next* pass needs a window of need + 1 — suspend
             // early exits when that would not fit (the paper's forced
-            // full-model pass).
-            let eligible = backend.exit_threshold() < 1.0
+            // full-model pass). Policies that can never exit
+            // ([`ExitPolicy::may_exit`] false — `Never`, `Confidence` at
+            // 1.0) skip the check and the forced-full accounting, exactly
+            // like the old scalar threshold at 1.0.
+            let may_exit = backend.exit_policy().may_exit();
+            let eligible = may_exit
                 && pick_width(backend.decode_widths(), need + 1, n + 1)
                     .is_some();
-            if !eligible && backend.exit_threshold() < 1.0 {
+            if !eligible && may_exit {
                 self.stats.forced_full += 1;
             }
             (width, eligible)
@@ -403,8 +420,12 @@ impl DecodeSession {
             (1, true)
         };
         let pos0 = n + 1 - width;
+        let caches = self
+            .caches
+            .as_mut()
+            .expect("prefilled session has caches");
         let out = backend.run_window(
-            &mut self.caches,
+            caches,
             &self.tokens,
             pos0,
             width,

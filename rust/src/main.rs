@@ -19,7 +19,9 @@ use eellm::data::synth::{
 };
 use eellm::data::tasks;
 use eellm::eval::harness::evaluate_task;
-use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
+use eellm::inference::{
+    ExitPolicy, ModelState, PipelinedEngine, SequentialEngine,
+};
 use eellm::metrics::CurveWriter;
 use eellm::runtime::artifacts::Manifest;
 use eellm::schedule::costs::{CostModel, PAPER_MODELS};
@@ -49,21 +51,34 @@ train:     --steps N --microbatches M --lr F --grad-clip F
            --loss-weight-schedule constant|warmup[:N]|cooldown[:F]
            --bubble-fill K --bf-ratio F --checkpoint PATH --resume PATH
            --curve-out PATH --log-every N --eval-every N
-generate:  --prompt STR --engine recompute|pipelined|full --threshold F
+generate:  --prompt STR --engine recompute|pipelined|full --policy SPEC
            --max-new-tokens N --checkpoint PATH
-eval:      --threshold F --checkpoint PATH --examples-per-task N
+eval:      --policy SPEC --checkpoint PATH --examples-per-task N
 serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
-           --policy fifo|spf|priority --concurrent N (live sessions per
-           worker, continuous batching) --threshold F --checkpoint PATH
-           --prefix-cache POSITIONS (per-worker shared-prefix KV-cache
-           budget; as a bare trailing flag the budget defaults to
-           8 * max_seq, but mid-line it must carry a value)
+           --sched fifo|spf|priority (queue scheduling) --concurrent N
+           (live sessions per worker, continuous batching) --policy SPEC
+           --checkpoint PATH
+           --prefix-cache POSITIONS (pool-wide shared-prefix KV-cache
+           budget, one store shared by all workers; as a bare trailing
+           flag the budget defaults to 8 * max_seq, but mid-line it must
+           carry a value)
            --workload tasks|shared-prefix (request set; defaults to
            shared-prefix when the prefix cache is on, tasks otherwise)
            --json-out PATH (metrics JSON)
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
 probe:     --prompt STR --checkpoint PATH --max-new-tokens N
+           --calibrate TARGET (fit a per-layer exit policy from the probe
+           at the given final-exit agreement rate; prints a --policy spec)
+
+EXIT POLICY SPECS (--policy; --threshold F stays as sugar for
+confidence:F):
+  never               full-model baseline (no early exits)
+  confidence:0.8      the paper's rule: exit iff max prob >= 0.8
+                      (a bare float means the same; 1.0 = baseline)
+  per-layer:2=0.7,4=0.9   per-exit-layer confidence thresholds
+  margin:0.3          exit iff top-1/top-2 probability gap >= 0.3
+  entropy:1.5         exit iff softmax entropy <= 1.5 nats
 ";
 
 fn main() {
@@ -206,7 +221,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn model_state(args: &Args) -> Result<ModelState> {
-    let icfg = InferenceConfig::from_args(args);
+    let icfg = InferenceConfig::from_args(args)?;
     let man = load_manifest(&icfg.config, &icfg.artifacts_dir)?;
     match &icfg.checkpoint {
         Some(p) => ModelState::from_checkpoint(man, p),
@@ -221,19 +236,23 @@ fn model_state(args: &Args) -> Result<ModelState> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let icfg = InferenceConfig::from_args(args);
+    let icfg = InferenceConfig::from_args(args)?;
     let prompt = args.get_or("prompt", "the capital of ");
     let engine = args.get_or("engine", "recompute");
     let state = model_state(args)?;
     let n_layers = state.man.model.n_layers;
     let out = match engine.as_str() {
         "recompute" | "full" => {
-            let thr = if engine == "full" { 1.0 } else { icfg.threshold };
-            let mut eng = SequentialEngine::new(state, thr)?;
+            let policy = if engine == "full" {
+                ExitPolicy::Never
+            } else {
+                icfg.policy.clone()
+            };
+            let mut eng = SequentialEngine::new(state, policy)?;
             eng.generate_text(&prompt, icfg.max_new_tokens)?
         }
         "pipelined" => {
-            let mut eng = PipelinedEngine::new(state, icfg.threshold)?;
+            let mut eng = PipelinedEngine::new(state, icfg.policy.clone())?;
             let out = eng.generate_text(&prompt, icfg.max_new_tokens)?;
             eng.shutdown();
             out
@@ -254,14 +273,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let icfg = InferenceConfig::from_args(args);
+    let icfg = InferenceConfig::from_args(args)?;
     let n_per = args.usize_or("examples-per-task", 20);
     let state = model_state(args)?;
     let corpus = standard_corpus(icfg.seed);
     let suite = tasks::all_tasks(&corpus, n_per, icfg.seed);
-    let mut eng = SequentialEngine::new(state, icfg.threshold)?;
+    let mut eng = SequentialEngine::new(state, icfg.policy.clone())?;
     let mut table = Table::new(
-        &format!("Task scores at threshold {}", icfg.threshold),
+        &format!("Task scores under exit policy {}", icfg.policy),
         &["task", "metric", "score", "mean latency"],
     );
     for task in &suite {
@@ -278,21 +297,34 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    let icfg = InferenceConfig::from_args(args);
+    // `--policy` used to be the *scheduling* policy; it now takes an
+    // exit-policy spec. Catch the old spelling with a pointer at --sched
+    // before the spec parser produces a less helpful error.
+    if let Some(p) = args.get("policy") {
+        if Policy::parse(p).is_ok() {
+            bail!(
+                "--policy now takes an exit-policy spec (e.g. \
+                 confidence:0.8); the queue scheduling policy moved to \
+                 --sched {p}"
+            );
+        }
+    }
+    let icfg = InferenceConfig::from_args(args)?;
     let n_req = args.usize_or("requests", 16);
     let pool_sizes: Vec<usize> = args
         .get_or("pool-sizes", "1,2,4")
         .split(',')
         .map(|s| s.trim().parse::<usize>().context("bad --pool-sizes"))
         .collect::<Result<_>>()?;
-    let policy = Policy::parse(&args.get_or("policy", "fifo"))?;
+    let sched = Policy::parse(&args.get_or("sched", "fifo"))?;
     let kind = EngineKind::parse(&args.get_or("engine", "recompute"))?;
     let concurrent = args.usize_or("concurrent", 4);
     let state = model_state(args)?;
     let n_layers = state.man.model.n_layers;
     let max_seq = state.man.model.max_seq;
-    // `--prefix-cache` takes a per-worker position budget; passed as a
-    // bare trailing flag it gets a generous default.
+    // `--prefix-cache` takes a pool-wide position budget (one store
+    // shared by all workers); passed as a bare trailing flag it gets a
+    // generous default.
     let prefix_positions = match args.get("prefix-cache") {
         Some(v) => v
             .parse::<usize>()
@@ -337,20 +369,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
     println!(
         "[serve-bench] {n_req} requests ({workload} workload), engine \
-         {kind:?}, policy {policy:?}, threshold {}, {concurrent} live \
+         {kind:?}, sched {sched:?}, exit policy {}, {concurrent} live \
          sessions/worker, prefix cache {}",
-        icfg.threshold,
+        icfg.policy,
         if prefix_positions > 0 {
-            format!("{prefix_positions} positions/worker (shared-prefix \
-                     workload)")
+            format!("{prefix_positions} positions (pool-wide shared store)")
         } else {
             "off".to_string()
         }
     );
     let mut table = Table::new(
         &format!(
-            "Serving throughput at threshold {} ({policy:?})",
-            icfg.threshold
+            "Serving throughput under exit policy {} ({sched:?})",
+            icfg.policy
         ),
         &["pool", "requests", "tok/s", "p50 latency", "p95 latency",
           "p50 TTFT", "p95 TTFT", "p50 tok gap", "mean queue", "early%"],
@@ -362,8 +393,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             PoolConfig {
                 workers,
                 engine: kind,
-                threshold: icfg.threshold,
-                policy,
+                policy: icfg.policy.clone(),
+                sched,
                 max_concurrent: concurrent,
                 prefix_cache_positions: prefix_positions,
             },
@@ -417,13 +448,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             Json::Str(format!("{kind:?}").to_lowercase()),
         );
         obj.insert(
-            "policy".to_string(),
-            Json::Str(format!("{policy:?}").to_lowercase()),
+            "sched".to_string(),
+            Json::Str(format!("{sched:?}").to_lowercase()),
         );
-        obj.insert(
-            "threshold".to_string(),
-            Json::Num(icfg.threshold as f64),
-        );
+        obj.insert("policy".to_string(), Json::Str(icfg.policy.spec()));
         obj.insert(
             "concurrent".to_string(),
             Json::Num(concurrent as f64),
@@ -523,7 +551,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_probe(args: &Args) -> Result<()> {
-    let icfg = InferenceConfig::from_args(args);
+    let icfg = InferenceConfig::from_args(args)?;
     let prompt = args.get_or("prompt", "the capital of ");
     let state = model_state(args)?;
     let report = eellm::inference::probe::probe_generation(
@@ -537,5 +565,25 @@ fn cmd_probe(args: &Args) -> Result<()> {
         "cross-exit agreement on confident (>=0.8) tokens: {:.1}%",
         100.0 * report.agreement_at(0.8)
     );
+    // Calibration workflow: fit per-layer confidence thresholds from
+    // this probe so each exit only fires where it agrees with the final
+    // exit at the target rate, and print the ready-to-use spec.
+    if let Some(target) = args.get("calibrate") {
+        let target: f64 = target
+            .parse()
+            .context("--calibrate wants an agreement rate in [0, 1]")?;
+        let policy = ExitPolicy::calibrated(&report, target);
+        println!(
+            "calibrated exit policy (target agreement {target}): \
+             --policy {}",
+            policy.spec()
+        );
+        if !policy.may_exit() {
+            println!(
+                "(no exit reaches the target on this probe; the fitted \
+                 policy never exits early)"
+            );
+        }
+    }
     Ok(())
 }

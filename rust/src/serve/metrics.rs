@@ -35,8 +35,8 @@ pub struct ServeMetrics {
     pub deadline_misses: usize,
     /// Per-exit usage merged across all requests.
     pub exits: ExitStats,
-    /// Prefix KV-cache activity during the batch, merged across the
-    /// pool's per-worker stores (all zeros when the cache is disabled).
+    /// Prefix KV-cache activity during the batch, read from the pool's
+    /// shared store (all zeros when the cache is disabled).
     pub prefix: PrefixCacheStats,
 }
 

@@ -9,8 +9,10 @@
 //! batched, multi-request front-end with iteration-level scheduling.
 //! This module supplies that front-end for both engines:
 //!
-//! - [`request`] — request/response types (per-request thresholds,
-//!   priorities, deadlines; TTFT and per-token stream timing on
+//! - [`request`] — request/response types (per-request exit policies
+//!   ([`ExitPolicy`](crate::inference::ExitPolicy), via
+//!   [`ServeRequest::with_policy`] or the `with_threshold` confidence
+//!   sugar), priorities, deadlines; TTFT and per-token stream timing on
 //!   responses) and request-set builders over the eval task suite.
 //! - [`scheduler`] — the shared queue with FIFO, shortest-prompt-first,
 //!   and priority/earliest-deadline policies, plus the non-blocking
@@ -26,10 +28,11 @@
 //!   new requests admitted between steps, every token streamed as a
 //!   [`ServeEvent`] the moment it is emitted. Batches return per-request
 //!   outcomes ([`BatchOutcome`]): one poisoned prompt fails alone. With
-//!   [`PoolConfig::prefix_cache_positions`] set, each worker keeps a
+//!   [`PoolConfig::prefix_cache_positions`] set, the pool keeps one
 //!   [`PrefixCacheStore`](crate::inference::PrefixCacheStore) of
-//!   post-prefill KV snapshots, so admissions sharing a prompt prefix
-//!   (system-prompt traffic) restore it and prefill only the suffix —
+//!   post-prefill KV snapshots **shared across all workers**, so
+//!   admissions sharing a prompt prefix (system-prompt traffic) restore
+//!   it — whichever worker prefilled it — and prefill only the suffix;
 //!   sequential-engine workers only; the pipelined engine declines the
 //!   capability and serves without reuse.
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,

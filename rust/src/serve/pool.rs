@@ -17,11 +17,19 @@
 //! completions (or failures) over the same mpsc channel the token stream
 //! uses.
 //!
-//! With [`PoolConfig::prefix_cache_positions`] set, each worker also
-//! keeps a [`PrefixCacheStore`] of post-prefill KV snapshots: admissions
-//! restore the longest cached prefix of their prompt and prefill only
-//! the suffix (shared system-prompt traffic), with hit-rate and
-//! prefill-positions-saved surfaced in [`ServeMetrics`].
+//! With [`PoolConfig::prefix_cache_positions`] set, the pool keeps **one**
+//! [`PrefixCacheStore`] of post-prefill KV snapshots shared by every
+//! worker (the store is `Sync`; a prefix prefilled by worker 0 serves
+//! admissions on worker 3): admissions restore the longest cached prefix
+//! of their prompt and prefill only the suffix (shared system-prompt
+//! traffic), with hit-rate and prefill-positions-saved surfaced in
+//! [`ServeMetrics`].
+//!
+//! Exit decisions are [`ExitPolicy`] values end-to-end: the pool default
+//! is [`PoolConfig::policy`], each request may override it
+//! ([`crate::serve::ServeRequest::with_policy`]), and workers re-apply
+//! the engine-resident policy before touching a session that wants a
+//! different one.
 
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
@@ -32,7 +40,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::inference::{
-    DecodeBackend, DecodeSession, ModelState, PipelinedEngine,
+    DecodeBackend, DecodeSession, ExitPolicy, ModelState, PipelinedEngine,
     PrefixCacheStats, PrefixCacheStore, SequentialEngine, StepEvent,
 };
 
@@ -61,42 +69,45 @@ impl EngineKind {
     }
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct PoolConfig {
     pub workers: usize,
     pub engine: EngineKind,
-    /// Default exit threshold; requests may override per-request.
-    pub threshold: f32,
-    pub policy: Policy,
+    /// Default exit policy; requests may override per-request
+    /// ([`crate::serve::ServeRequest::with_policy`]).
+    pub policy: ExitPolicy,
+    /// Queue scheduling policy (FIFO / SPF / priority+deadline).
+    pub sched: Policy,
     /// Live decode sessions each worker interleaves (continuous
     /// batching). Clamped to at least 1 and to what the engine supports —
     /// the pipelined engine keeps decode state in its stage threads and
     /// caps this at 1; the sequential engine's sessions own their KV
     /// caches and interleave freely.
     pub max_concurrent: usize,
-    /// Per-worker shared-prefix KV-cache budget in cached positions
-    /// (0 disables). When set, each worker keeps a
-    /// [`PrefixCacheStore`] of post-prefill snapshots: admissions restore
-    /// the longest cached prefix of their prompt and prefill only the
-    /// suffix. Only engines that support cache snapshots participate
+    /// Pool-wide shared-prefix KV-cache budget in cached positions
+    /// (0 disables). When set, the pool keeps one [`PrefixCacheStore`]
+    /// of post-prefill snapshots shared across all workers: admissions
+    /// on any worker restore the longest cached prefix of their prompt
+    /// and prefill only the suffix. Only engines that support cache
+    /// snapshots participate
     /// ([`DecodeBackend::supports_cache_snapshots`]) — the sequential
     /// engine does; pipelined workers log the capability gap once and
     /// serve without reuse.
     pub prefix_cache_positions: usize,
 }
 
-/// The engine surface the pool needs: a threshold knob plus the
+/// The engine surface the pool needs: an exit-policy knob plus the
 /// [`DecodeBackend`] that decode sessions step over.
 trait PoolEngine {
-    fn apply_threshold(&mut self, t: f32);
+    fn apply_policy(&mut self, policy: &ExitPolicy);
     fn backend(&mut self) -> &mut dyn DecodeBackend;
     /// Tear down engine-owned resources (threads), if any.
     fn finish(self: Box<Self>) {}
 }
 
 impl PoolEngine for SequentialEngine {
-    fn apply_threshold(&mut self, t: f32) {
-        self.threshold = t;
+    fn apply_policy(&mut self, policy: &ExitPolicy) {
+        self.policy = policy.clone();
     }
 
     fn backend(&mut self) -> &mut dyn DecodeBackend {
@@ -105,8 +116,8 @@ impl PoolEngine for SequentialEngine {
 }
 
 impl PoolEngine for PipelinedEngine {
-    fn apply_threshold(&mut self, t: f32) {
-        self.set_threshold(t);
+    fn apply_policy(&mut self, policy: &ExitPolicy) {
+        self.set_policy(policy.clone());
     }
 
     fn backend(&mut self) -> &mut dyn DecodeBackend {
@@ -193,8 +204,9 @@ pub struct EnginePool {
     /// arriving during the readiness wait); consumed before `recv`.
     stash: VecDeque<WorkerEvent>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    /// Per-worker prefix KV-cache stores (empty when disabled). The pool
-    /// keeps a handle to each so batch metrics can read their counters.
+    /// The pool-wide prefix KV-cache store shared by every worker (one
+    /// element; empty when the cache is disabled). The pool keeps the
+    /// handle so batch metrics can read its counters.
     prefix_stores: Vec<Arc<PrefixCacheStore>>,
     /// Workers that have not reported `Fatal`.
     alive: usize,
@@ -209,17 +221,17 @@ impl EnginePool {
     /// [`EnginePool::run_batch`].
     pub fn new(state: ModelState, cfg: PoolConfig) -> EnginePool {
         assert!(cfg.workers > 0, "pool needs at least one worker");
-        let sched = Arc::new(Scheduler::new(cfg.policy));
+        let sched = Arc::new(Scheduler::new(cfg.sched));
         let (tx, events) = channel::<WorkerEvent>();
+        // One store for the whole pool: the store is `Sync` (internal
+        // lock), so sharing it lets a prefix prefilled on one worker
+        // serve admissions on every other, and the position budget
+        // bounds the pool rather than budget x workers.
         let prefix_stores: Vec<Arc<PrefixCacheStore>> =
             if cfg.prefix_cache_positions > 0 {
-                (0..cfg.workers)
-                    .map(|_| {
-                        Arc::new(PrefixCacheStore::new(
-                            cfg.prefix_cache_positions,
-                        ))
-                    })
-                    .collect()
+                vec![Arc::new(PrefixCacheStore::new(
+                    cfg.prefix_cache_positions,
+                ))]
             } else {
                 Vec::new()
             };
@@ -228,7 +240,8 @@ impl EnginePool {
             let sched = Arc::clone(&sched);
             let tx = tx.clone();
             let state = state.clone();
-            let store = prefix_stores.get(w).cloned();
+            let cfg = cfg.clone();
+            let store = prefix_stores.first().cloned();
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
                 .spawn(move || worker_main(w, state, cfg, sched, tx, store))
@@ -251,18 +264,19 @@ impl EnginePool {
         }
     }
 
-    pub fn config(&self) -> PoolConfig {
-        self.cfg
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
     }
 
-    /// The per-worker prefix KV-cache stores (empty when the cache is
-    /// disabled). Handles stay valid across [`EnginePool::shutdown`], so
-    /// tests can assert pin/budget invariants after the workers exit.
+    /// The pool's shared prefix KV-cache store as a one-element slice
+    /// (empty when the cache is disabled). Handles stay valid across
+    /// [`EnginePool::shutdown`], so tests can assert pin/budget
+    /// invariants after the workers exit.
     pub fn prefix_stores(&self) -> &[Arc<PrefixCacheStore>] {
         &self.prefix_stores
     }
 
-    /// Lifetime prefix KV-cache counters merged across workers.
+    /// Lifetime prefix KV-cache counters of the shared store.
     pub fn prefix_stats(&self) -> PrefixCacheStats {
         let mut agg = PrefixCacheStats::default();
         for st in &self.prefix_stores {
@@ -446,7 +460,9 @@ impl Drop for EnginePool {
 /// state.
 struct Live {
     id: u64,
-    threshold: f32,
+    /// Exit policy this request decodes under (request override or the
+    /// pool default).
+    policy: ExitPolicy,
     session: DecodeSession,
     queue_seconds: f64,
     /// The request's relative deadline, echoed into the response for
@@ -471,7 +487,7 @@ fn worker_main(
     events: Sender<WorkerEvent>,
     store: Option<Arc<PrefixCacheStore>>,
 ) {
-    let mut engine: Box<dyn PoolEngine> = match build_engine(state, cfg) {
+    let mut engine: Box<dyn PoolEngine> = match build_engine(state, &cfg) {
         Ok(e) => e,
         Err(e) => {
             events
@@ -500,9 +516,9 @@ fn worker_main(
     let max_live =
         cfg.max_concurrent.max(1).min(engine.backend().max_live_sessions());
     let mut live: Vec<Live> = Vec::new();
-    // Engines read one global threshold; track it and re-apply before
+    // Engines read one resident policy; track it and re-apply before
     // touching a session that wants a different one.
-    let mut current_threshold = cfg.threshold;
+    let mut current_policy = cfg.policy.clone();
     'serve: loop {
         // Admission: fill free slots. Block only when idle; poll with
         // `try_pop` while sessions are live, so queued requests join
@@ -519,10 +535,11 @@ fn worker_main(
                 }
                 break; // nothing queued right now; keep stepping
             };
-            let t = req.threshold.unwrap_or(cfg.threshold);
-            if t != current_threshold {
-                engine.apply_threshold(t);
-                current_threshold = t;
+            let policy =
+                req.policy.clone().unwrap_or_else(|| cfg.policy.clone());
+            if policy != current_policy {
+                engine.apply_policy(&policy);
+                current_policy = policy.clone();
             }
             let admitted = Instant::now();
             // Every popped request must produce exactly one completion
@@ -566,7 +583,7 @@ fn worker_main(
             match started {
                 Ok(Ok(session)) => live.push(Live {
                     id: req.id,
-                    threshold: t,
+                    policy,
                     session,
                     queue_seconds,
                     deadline: req.deadline,
@@ -597,10 +614,9 @@ fn worker_main(
         // finish free their slot for the next admission pass.
         let mut i = 0;
         while i < live.len() {
-            let t = live[i].threshold;
-            if t != current_threshold {
-                engine.apply_threshold(t);
-                current_threshold = t;
+            if live[i].policy != current_policy {
+                engine.apply_policy(&live[i].policy);
+                current_policy = live[i].policy.clone();
             }
             let stepped = {
                 let l = &mut live[i];
@@ -714,15 +730,15 @@ fn retire(
 
 fn build_engine(
     state: ModelState,
-    cfg: PoolConfig,
+    cfg: &PoolConfig,
 ) -> Result<Box<dyn PoolEngine>> {
     Ok(match cfg.engine {
         EngineKind::Sequential => Box::new(
-            SequentialEngine::new(state, cfg.threshold)
+            SequentialEngine::new(state, cfg.policy.clone())
                 .context("building sequential engine")?,
         ),
         EngineKind::Pipelined => Box::new(
-            PipelinedEngine::new(state, cfg.threshold)
+            PipelinedEngine::new(state, cfg.policy.clone())
                 .context("building pipelined engine")?,
         ),
     })

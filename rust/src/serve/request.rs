@@ -3,7 +3,7 @@
 use std::time::Duration;
 
 use crate::data::tasks::EvalTask;
-use crate::inference::GenOutput;
+use crate::inference::{ExitPolicy, GenOutput};
 
 /// One generation request; `id`s are caller-assigned and echoed back in
 /// the response (the pool sorts batch results by id).
@@ -12,8 +12,9 @@ pub struct ServeRequest {
     pub id: u64,
     pub prompt: String,
     pub max_new: usize,
-    /// Per-request exit threshold; `None` uses the pool default.
-    pub threshold: Option<f32>,
+    /// Per-request exit policy; `None` uses the pool default
+    /// ([`crate::serve::PoolConfig::policy`]).
+    pub policy: Option<ExitPolicy>,
     /// Scheduling priority under `Policy::Priority` — higher is served
     /// first (default 0).
     pub priority: i32,
@@ -33,15 +34,23 @@ impl ServeRequest {
             id,
             prompt: prompt.into(),
             max_new,
-            threshold: None,
+            policy: None,
             priority: 0,
             deadline: None,
         }
     }
 
-    pub fn with_threshold(mut self, t: f32) -> ServeRequest {
-        self.threshold = Some(t);
+    /// Serve this request under its own exit policy instead of the pool
+    /// default.
+    pub fn with_policy(mut self, policy: ExitPolicy) -> ServeRequest {
+        self.policy = Some(policy);
         self
+    }
+
+    /// Sugar for [`ServeRequest::with_policy`] with the paper's
+    /// confidence rule — the migration spelling for pre-policy callers.
+    pub fn with_threshold(self, t: f32) -> ServeRequest {
+        self.with_policy(ExitPolicy::confidence(t))
     }
 
     pub fn with_priority(mut self, priority: i32) -> ServeRequest {
@@ -143,7 +152,7 @@ mod tests {
         for (i, r) in reqs.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert!(r.prompt.len() + r.max_new + 4 < 256, "{r:?}");
-            assert!(r.threshold.is_none());
+            assert!(r.policy.is_none());
         }
         // Round-robin across tasks: the first few requests are not all
         // from the same task (prompts differ in shape).
@@ -151,11 +160,15 @@ mod tests {
     }
 
     #[test]
-    fn per_request_threshold_override() {
+    fn per_request_policy_override() {
+        // `with_threshold` is sugar for the confidence policy.
         let r = ServeRequest::new(3, "hi", 8).with_threshold(0.4);
-        assert_eq!(r.threshold, Some(0.4));
+        assert_eq!(r.policy, Some(ExitPolicy::confidence(0.4)));
         assert_eq!(r.priority, 0);
         assert_eq!(r.deadline, None);
+        let r = ServeRequest::new(4, "hi", 8)
+            .with_policy(ExitPolicy::Entropy { max_nats: 1.0 });
+        assert_eq!(r.policy, Some(ExitPolicy::Entropy { max_nats: 1.0 }));
     }
 
     #[test]

@@ -10,7 +10,9 @@ use std::path::PathBuf;
 use eellm::config::{LossWeightSchedule, LrSchedule};
 use eellm::data::dataset::{Dataset, TrainBatch};
 use eellm::data::synth::{Corpus, CorpusSpec};
-use eellm::inference::{ModelState, PipelinedEngine, SequentialEngine};
+use eellm::inference::{
+    ExitPolicy, ModelState, PipelinedEngine, SequentialEngine,
+};
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
     EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
@@ -71,8 +73,8 @@ fn engines_agree_and_early_exits_fire() {
 
     // --- threshold = 1.0: both engines are the full model; outputs must
     // match token-for-token, and every token must use the final exit.
-    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
-    let mut pipe = PipelinedEngine::new(state.clone(), 1.0).unwrap();
+    let mut seq = SequentialEngine::new(state.clone(), ExitPolicy::confidence(1.0)).unwrap();
+    let mut pipe = PipelinedEngine::new(state.clone(), ExitPolicy::confidence(1.0)).unwrap();
     for p in &prompts {
         let a = seq.generate_text(p, 16).unwrap();
         let b = pipe.generate_text(p, 16).unwrap();
@@ -89,8 +91,8 @@ fn engines_agree_and_early_exits_fire() {
     // examples/probe_check.rs); tau = 0.2 exercises real early exits while
     // the equivalence claim stays the assertion under test.
     let tau = 0.2f32;
-    let mut seq = SequentialEngine::new(state.clone(), tau).unwrap();
-    pipe.set_threshold(tau);
+    let mut seq = SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau)).unwrap();
+    pipe.set_policy(ExitPolicy::confidence(tau));
     let mut early_total = 0.0;
     let mut n = 0.0;
     for p in &prompts {
@@ -123,7 +125,7 @@ fn recompute_deficit_respects_cap_and_heals() {
     // Untrained params + threshold 0.0: *every* token exits at the first
     // early exit, driving the deficit into the cap continuously.
     let state = ModelState::init(man.clone(), 5);
-    let mut eng = SequentialEngine::new(state, 0.0).unwrap();
+    let mut eng = SequentialEngine::new(state, ExitPolicy::confidence(0.0)).unwrap();
     let out = eng.generate_text("hello world", 24).unwrap();
     assert!(out.tokens.len() >= 8, "{out:?}");
     // Early exits fired...
@@ -141,11 +143,11 @@ fn generation_is_deterministic() {
     }
     let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
     let state = ModelState::init(man, 11);
-    let mut eng = SequentialEngine::new(state.clone(), 0.7).unwrap();
+    let mut eng = SequentialEngine::new(state.clone(), ExitPolicy::confidence(0.7)).unwrap();
     let a = eng.generate_text("abc: a b", 12).unwrap();
     let b = eng.generate_text("abc: a b", 12).unwrap();
     assert_eq!(a.tokens, b.tokens);
-    let mut eng2 = SequentialEngine::new(state, 0.7).unwrap();
+    let mut eng2 = SequentialEngine::new(state, ExitPolicy::confidence(0.7)).unwrap();
     let c = eng2.generate_text("abc: a b", 12).unwrap();
     assert_eq!(a.tokens, c.tokens);
 }
@@ -171,7 +173,7 @@ fn pooled_serving_matches_serial_at_threshold_one() {
     ];
 
     // Serial baseline through one SequentialEngine.
-    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
+    let mut seq = SequentialEngine::new(state.clone(), ExitPolicy::confidence(1.0)).unwrap();
     let serial: Vec<Vec<i32>> = prompts
         .iter()
         .map(|p| seq.generate_text(p, 12).unwrap().tokens)
@@ -183,10 +185,10 @@ fn pooled_serving_matches_serial_at_threshold_one() {
             PoolConfig {
                 workers,
                 engine: EngineKind::Sequential,
-                threshold: 1.0,
+                policy: ExitPolicy::confidence(1.0),
                 // SPF shuffles completion order relative to submission,
                 // exercising the id-based reordering.
-                policy: Policy::ShortestPromptFirst,
+                sched: Policy::ShortestPromptFirst,
                 max_concurrent: 2,
                 prefix_cache_positions: 0,
             },
@@ -243,7 +245,7 @@ fn continuous_batching_streams_and_admits_mid_flight() {
         "copy: x y |",
         "3+4=",
     ];
-    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
+    let mut seq = SequentialEngine::new(state.clone(), ExitPolicy::confidence(1.0)).unwrap();
     let long: Vec<&str> = candidates
         .iter()
         .copied()
@@ -268,8 +270,8 @@ fn continuous_batching_streams_and_admits_mid_flight() {
         PoolConfig {
             workers: 1,
             engine: EngineKind::Sequential,
-            threshold: 1.0,
-            policy: Policy::Fifo,
+            policy: ExitPolicy::confidence(1.0),
+            sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
         },
@@ -372,8 +374,8 @@ fn batch_reports_per_request_failures() {
         PoolConfig {
             workers: 1,
             engine: EngineKind::Sequential,
-            threshold: 1.0,
-            policy: Policy::Fifo,
+            policy: ExitPolicy::confidence(1.0),
+            sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
         },
@@ -413,7 +415,7 @@ fn capacity_clamps_instead_of_erroring() {
     let prompt = "a".repeat(max_seq - 4);
     let too_long = "a".repeat(max_seq + 8);
 
-    let mut seq = SequentialEngine::new(state.clone(), 1.0).unwrap();
+    let mut seq = SequentialEngine::new(state.clone(), ExitPolicy::confidence(1.0)).unwrap();
     let out = seq.generate_text(&prompt, 100).unwrap();
     assert!(
         (1..=3).contains(&out.tokens.len()),
@@ -422,7 +424,7 @@ fn capacity_clamps_instead_of_erroring() {
     );
     assert!(seq.generate_text(&too_long, 4).is_err());
 
-    let mut pipe = PipelinedEngine::new(state, 1.0).unwrap();
+    let mut pipe = PipelinedEngine::new(state, ExitPolicy::confidence(1.0)).unwrap();
     let out = pipe.generate_text(&prompt, 100).unwrap();
     assert!(
         (1..=3).contains(&out.tokens.len()),

@@ -1,0 +1,367 @@
+//! Integration: the `ExitPolicy` redesign must be invisible where it
+//! claims compatibility and meaningful where it adds power.
+//!
+//! - `Confidence{t}` is the old scalar-threshold path bit-for-bit: both
+//!   engines produce identical (token, exit-layer) streams for the same
+//!   prompt across thresholds {0.6, 0.9, 1.0}, and 1.0 is the
+//!   full-model baseline (every token from the final exit, no
+//!   forced-full accounting) exactly as the pre-policy code defined it.
+//! - `Never` always runs full depth, on both engines, whatever the
+//!   model.
+//! - `PerLayer` with one uniform threshold on every exit layer decodes
+//!   identically to `Confidence` with that threshold.
+//! - Per-request policy overrides through the serving pool reproduce
+//!   the serial engine's streams (the pool's policy swap is sound), and
+//!   the `with_threshold` sugar is indistinguishable from
+//!   `with_policy(Confidence)`.
+
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{Corpus, CorpusSpec};
+use eellm::inference::{
+    DecodeBackend, DecodeSession, ExitPolicy, ModelState, PipelinedEngine,
+    SequentialEngine, StepEvent,
+};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    EngineKind, EnginePool, Policy, PoolConfig, ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so confidences are meaningful (same recipe as
+/// the sibling equivalence suites).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+/// Drain one session over any backend, collecting the per-token
+/// (token, exit layer) stream — the quantity every equivalence claim in
+/// this suite is about.
+fn stream(
+    backend: &mut dyn DecodeBackend,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<(i32, usize)> {
+    let mut s = DecodeSession::new_text(backend, prompt, max_new).unwrap();
+    s.prefill(backend).unwrap();
+    let mut out = Vec::new();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    out
+}
+
+const PROMPTS: [&str; 4] = [
+    "the capital of ",
+    "question: what is the ",
+    "count: 3 4 5 ",
+    "abc: a b c d ",
+];
+
+/// The acceptance grid: `Confidence{t}` for t in {0.6, 0.9, 1.0}
+/// produces identical (token, exit-layer) streams on both engines, and
+/// t = 1.0 is the full-model baseline on both.
+#[test]
+fn confidence_streams_match_across_engines_and_thresholds() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let n_layers = man.model.n_layers;
+
+    let mut pipe =
+        PipelinedEngine::new(state.clone(), ExitPolicy::confidence(1.0))
+            .unwrap();
+    // {0.6, 0.9, 1.0} is the acceptance grid; 0.2 additionally fires
+    // real early exits on this briefly-trained model (confidences top
+    // out near ~0.23 — see the Appendix B.1 suite).
+    for &tau in &[0.2f32, 0.6, 0.9, 1.0] {
+        let mut seq =
+            SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau))
+                .unwrap();
+        pipe.set_policy(ExitPolicy::confidence(tau));
+        for p in &PROMPTS {
+            let a = stream(&mut seq, p, 16);
+            let b = stream(&mut pipe, p, 16);
+            assert!(!a.is_empty(), "tau {tau}, prompt {p:?}: empty stream");
+            assert_eq!(
+                a, b,
+                "tau {tau}, prompt {p:?}: engines diverged under \
+                 Confidence (tokens or exit layers)"
+            );
+            if tau >= 1.0 {
+                // The full-model baseline: every token from the final
+                // exit, exactly like the old threshold-1.0 path.
+                assert!(
+                    a.iter().all(|&(_, l)| l == n_layers),
+                    "tau 1.0 emitted an early exit: {a:?}"
+                );
+            }
+        }
+    }
+    pipe.shutdown();
+}
+
+/// `Never` always runs full depth on both engines — and on the
+/// sequential engine it skips the forced-full accounting exactly like
+/// the old threshold-1.0 spelling (which it must equal token-for-token).
+#[test]
+fn never_always_runs_full_depth() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let n_layers = man.model.n_layers;
+    // Untrained weights make every exit confident-ish and tie-prone —
+    // the hardest setting for a "never exit" claim.
+    for seed in [3u64, 9, 17] {
+        let state = ModelState::init(man.clone(), seed);
+        let mut seq =
+            SequentialEngine::new(state.clone(), ExitPolicy::Never).unwrap();
+        let mut base = SequentialEngine::new(
+            state.clone(),
+            ExitPolicy::confidence(1.0),
+        )
+        .unwrap();
+        let mut pipe =
+            PipelinedEngine::new(state, ExitPolicy::Never).unwrap();
+        for p in &PROMPTS {
+            let a = stream(&mut seq, p, 12);
+            assert!(
+                a.iter().all(|&(_, l)| l == n_layers),
+                "seed {seed}, prompt {p:?}: Never exited early: {a:?}"
+            );
+            assert_eq!(
+                a,
+                stream(&mut base, p, 12),
+                "seed {seed}, prompt {p:?}: Never != Confidence{{1.0}}"
+            );
+            let b = stream(&mut pipe, p, 12);
+            assert_eq!(a, b, "seed {seed}, prompt {p:?}: engines diverged");
+        }
+        let out = seq.generate_text("hello world", 12).unwrap();
+        assert_eq!(
+            out.stats.forced_full, 0,
+            "Never must skip forced-full accounting"
+        );
+        pipe.shutdown();
+    }
+}
+
+/// Property: `PerLayer` with a uniform threshold on every entry-exit
+/// layer decodes identically to `Confidence` with that threshold — over
+/// a grid of thresholds, model seeds, and prompts, on both engines.
+#[test]
+fn uniform_per_layer_equals_confidence() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    // Every early-exit layer the engines can fire at (entry exits).
+    let exit_layers: Vec<usize> = {
+        let state = ModelState::init(man.clone(), 1);
+        let mut layers = Vec::new();
+        for s in 0..state.man.stages.len() {
+            layers.extend(state.entry_exits(s).iter().map(|e| e.layer));
+        }
+        layers
+    };
+    assert!(!exit_layers.is_empty());
+
+    for seed in [5u64, 11] {
+        let state = ModelState::init(man.clone(), seed);
+        // One pipelined engine per seed; policies swap between sessions
+        // (the stages adopt the new policy at the chain reset).
+        let mut pipe =
+            PipelinedEngine::new(state.clone(), ExitPolicy::Never).unwrap();
+        for &tau in &[0.0f32, 0.3, 0.7, 1.0] {
+            let uniform = ExitPolicy::PerLayer {
+                thresholds: exit_layers.iter().map(|&l| (l, tau)).collect(),
+            };
+            let mut a =
+                SequentialEngine::new(state.clone(), uniform.clone())
+                    .unwrap();
+            let mut b = SequentialEngine::new(
+                state.clone(),
+                ExitPolicy::confidence(tau),
+            )
+            .unwrap();
+            for p in &PROMPTS {
+                let sa = stream(&mut a, p, 10);
+                assert_eq!(
+                    sa,
+                    stream(&mut b, p, 10),
+                    "seed {seed}, tau {tau}, prompt {p:?}: sequential \
+                     uniform PerLayer != Confidence"
+                );
+                // The pipelined engine admits one session at a time:
+                // drain the PerLayer session fully before Confidence.
+                pipe.set_policy(uniform.clone());
+                let qa = stream(&mut pipe, p, 10);
+                pipe.set_policy(ExitPolicy::confidence(tau));
+                assert_eq!(
+                    qa,
+                    stream(&mut pipe, p, 10),
+                    "seed {seed}, tau {tau}, prompt {p:?}: pipelined \
+                     uniform PerLayer != Confidence"
+                );
+                // No cross-engine assertion here: at aggressive
+                // thresholds the sequential engine's forced full-model
+                // passes legitimately diverge from the pipelined
+                // engine's in-band back-fill (see the Appendix B.1
+                // suite for the cross-engine claims at the thresholds
+                // where they hold).
+            }
+        }
+        pipe.shutdown();
+    }
+}
+
+/// Per-request policies through the serving pool: a batch mixing
+/// `with_policy(Confidence)` and the `with_threshold` sugar must
+/// reproduce the serial per-policy streams byte-for-byte, proving the
+/// pool's engine-resident policy swap never leaks across sessions.
+#[test]
+fn pooled_per_request_policies_match_serial() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+
+    // Serial baselines, one engine per distinct policy.
+    let taus = [0.6f32, 1.0, 0.9, 0.6];
+    let mut serial: Vec<Vec<i32>> = Vec::new();
+    for (p, &tau) in PROMPTS.iter().zip(&taus) {
+        let mut eng =
+            SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau))
+                .unwrap();
+        serial.push(stream(&mut eng, p, 12).iter().map(|&(t, _)| t).collect());
+    }
+
+    let mut pool = EnginePool::new(
+        state,
+        PoolConfig {
+            workers: 1,
+            engine: EngineKind::Sequential,
+            // A pool default none of the requests use: any leak of the
+            // default into a session shows up as a diverged stream.
+            policy: ExitPolicy::confidence(0.2),
+            sched: Policy::Fifo,
+            max_concurrent: 2,
+            prefix_cache_positions: 0,
+        },
+    );
+    let reqs: Vec<ServeRequest> = PROMPTS
+        .iter()
+        .zip(&taus)
+        .enumerate()
+        .map(|(i, (p, &tau))| {
+            let r = ServeRequest::new(i as u64, *p, 12);
+            if i % 2 == 0 {
+                r.with_policy(ExitPolicy::confidence(tau))
+            } else {
+                r.with_threshold(tau) // the sugar spelling
+            }
+        })
+        .collect();
+    let out = pool.run_batch(reqs).unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    assert_eq!(out.responses.len(), PROMPTS.len());
+    for (i, r) in out.responses.iter().enumerate() {
+        assert_eq!(
+            r.output.tokens, serial[i],
+            "request {i} (tau {}) diverged under pooled per-request \
+             policies",
+            taus[i]
+        );
+    }
+}
+
+/// Degenerate alternative policies collapse to known baselines: an
+/// unsatisfiable margin bound decodes exactly like `Never`, and a
+/// trivially-satisfied entropy bound exactly like `Confidence{0.0}`
+/// (every token exits at the first eligible exit).
+#[test]
+fn margin_and_entropy_extremes_match_baselines() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man, 9);
+
+    let mut never =
+        SequentialEngine::new(state.clone(), ExitPolicy::Never).unwrap();
+    let mut margin_never = SequentialEngine::new(
+        state.clone(),
+        ExitPolicy::TopTwoMargin { delta: 2.0 },
+    )
+    .unwrap();
+    let mut always =
+        SequentialEngine::new(state.clone(), ExitPolicy::confidence(0.0))
+            .unwrap();
+    let mut entropy_always = SequentialEngine::new(
+        state,
+        ExitPolicy::Entropy { max_nats: f32::MAX },
+    )
+    .unwrap();
+    for p in &PROMPTS {
+        assert_eq!(
+            stream(&mut never, p, 10),
+            stream(&mut margin_never, p, 10),
+            "prompt {p:?}: unsatisfiable margin != Never"
+        );
+        assert_eq!(
+            stream(&mut always, p, 10),
+            stream(&mut entropy_always, p, 10),
+            "prompt {p:?}: trivial entropy bound != confidence 0.0"
+        );
+    }
+}

@@ -18,7 +18,8 @@ use eellm::data::synth::{
     shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
 };
 use eellm::inference::{
-    DecodeSession, ModelState, PrefixCacheStore, SequentialEngine, StepEvent,
+    DecodeSession, ExitPolicy, ModelState, PrefixCacheStore,
+    SequentialEngine, StepEvent,
 };
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
@@ -145,7 +146,7 @@ fn cache_on_equals_cache_off_across_thresholds_and_overlap() {
         .map(|_| PrefixCacheStore::new(64 * man.model.max_seq))
         .collect();
     for &tau in &thresholds {
-        let mut eng = SequentialEngine::new(state.clone(), tau).unwrap();
+        let mut eng = SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau)).unwrap();
         for ((name, prompts, _), store) in patterns.iter().zip(&stores) {
             for p in prompts {
                 let baseline = run_session(&mut eng, p, 16, None);
@@ -215,7 +216,7 @@ fn eviction_mid_workload_keeps_outputs_identical() {
     // Room for one snapshot, never two: every group switch evicts.
     let store = PrefixCacheStore::new(longest + 8);
 
-    let mut eng = SequentialEngine::new(state, 0.0).unwrap();
+    let mut eng = SequentialEngine::new(state, ExitPolicy::confidence(0.0)).unwrap();
     for p in &prompts {
         let baseline = run_session(&mut eng, p, 12, None);
         let cached = run_session(&mut eng, p, 12, Some(&store));
@@ -265,8 +266,8 @@ fn pooled_prefix_cache_matches_disabled_and_saves_prefill() {
                 PoolConfig {
                     workers: 1,
                     engine: EngineKind::Sequential,
-                    threshold: tau,
-                    policy: Policy::Fifo,
+                    policy: ExitPolicy::confidence(tau),
+                    sched: Policy::Fifo,
                     max_concurrent: 2,
                     prefix_cache_positions: budget,
                 },
@@ -342,7 +343,7 @@ fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
     let budgets: Vec<usize> = (0..prompts.len()).map(|i| 1 + i % 5).collect();
 
     for &tau in &[1.0f32, 0.0] {
-        let mut eng = SequentialEngine::new(state.clone(), tau).unwrap();
+        let mut eng = SequentialEngine::new(state.clone(), ExitPolicy::confidence(tau)).unwrap();
         let serial: Vec<Vec<(i32, usize)>> = prompts
             .iter()
             .zip(&budgets)
@@ -354,8 +355,8 @@ fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
                 PoolConfig {
                     workers: 1,
                     engine: EngineKind::Sequential,
-                    threshold: tau,
-                    policy: Policy::Fifo,
+                    policy: ExitPolicy::confidence(tau),
+                    sched: Policy::Fifo,
                     max_concurrent,
                     prefix_cache_positions: 16 * man.model.max_seq,
                 },
