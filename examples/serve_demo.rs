@@ -93,6 +93,9 @@ fn main() -> anyhow::Result<()> {
             sched,
             max_concurrent: concurrent,
             prefix_cache_positions: args.usize_or("prefix-cache", 0),
+            // The demo serves the default hot path: fused lane decode
+            // whenever the manifest ships decode_lanes executables.
+            lane_fusion: true,
         },
     );
 

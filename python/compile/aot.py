@@ -14,6 +14,11 @@ Per config the artifact set is, for each pipeline stage s:
   s{s}_adam        (step, lr, scale, *p, *g, *m, *v)     -> (*p', *m', *v')
   s{s}_sqsum       (*grads)                              -> (sq_sum,)
   s{s}_decode_w{W} (params, x|tokens, cache, pos0)       -> (x_out, cache')
+  s{s}_decode_b{B}_w1
+                   (params, x[B]|tokens[B], caches[B,...], pos[B])
+                   -> (x_out[B], caches')  [lane-fused batched decode:
+                   B independent width-1 windows, one per live session,
+                   with lane-stacked KV caches and per-lane positions]
   s{s}_head{L}     (head_params, x)                      -> (logits,)
 
 plus, for configs with emit_reference, a monolithic `full_loss_grads` /
@@ -149,6 +154,14 @@ def build_config(cfg, out_root):
                 f"s{s}_decode_w{width}", dec, pspecs, din, cache_spec,
                 _spec((), I32))
 
+        for lanes in sorted(set(cfg.decode_lanes)):
+            dec_b = decode.stage_decode_batched_fn(cfg, s)
+            din = (_spec((lanes,), I32) if s == 0
+                   else _spec((lanes, h)))
+            execs[f"decode_b{lanes}_w1"] = w.emit(
+                f"s{s}_decode_b{lanes}_w1", dec_b, pspecs, din,
+                _spec((lanes,) + cache_shape), _spec((lanes,), I32))
+
         exit_meta = []
         first_layer = cfg.layers_of_stage(s)[0]
         for layer, kind, weight in exits:
@@ -194,6 +207,7 @@ def build_config(cfg, out_root):
         "model": cfg.to_json(),
         "approx_param_count": param_count(cfg),
         "decode_widths": sorted(set(cfg.decode_widths + [cfg.prefill_width])),
+        "decode_lanes": sorted(set(cfg.decode_lanes)),
         "prefill_width": cfg.prefill_width,
         "stages": stages_meta,
         "reference": reference,

@@ -59,6 +59,14 @@ class ModelConfig:
     use_pallas: bool = True
     decode_widths: list = field(default_factory=lambda: [1, 4])
     prefill_width: int = 16
+    # Lane-fused batched decode: each entry B emits a per-stage
+    # `s{s}_decode_b{B}_w1` executable stepping B independent width-1
+    # windows (one per live decode session) in a single XLA call, with
+    # lane-stacked KV caches and a per-lane position vector. The serving
+    # pool fuses same-policy sessions into the largest lane group that
+    # fits; sessions with a recompute deficit fall back to the solo
+    # windowed executables above.
+    decode_lanes: list = field(default_factory=lambda: [2, 4])
     # Emit the monolithic full-model reference executables (tests only;
     # too large for big configs).
     emit_reference: bool = True
@@ -106,6 +114,9 @@ class ModelConfig:
         for w in self.decode_widths:
             assert w >= 1 and w <= self.max_seq
         assert 1 in self.decode_widths, "width-1 decode is required"
+        for b in self.decode_lanes:
+            assert b >= 2, f"lane count {b} < 2 fuses nothing"
+        assert len(set(self.decode_lanes)) == len(self.decode_lanes)
         return self
 
     def to_json(self):
@@ -131,6 +142,7 @@ def presets():
             microbatch=2, pipeline_stages=2,
             early_exits=[ExitSpec(layer=2, head="bare", weight=0.5)],
             decode_widths=[1, 2, 4, 8], prefill_width=8,
+            decode_lanes=[2, 4, 8],
         ),
         # Tied variant: input embedding shared with every exit head
         # (paper Section 2, option 3). Exercises the cross-stage tied
@@ -173,7 +185,7 @@ def presets():
             early_exits=[ExitSpec(layer=2, head="norm", weight=0.25),
                          ExitSpec(layer=4, head="norm", weight=0.5)],
             decode_widths=[1, 2, 4, 8], prefill_width=32,
-            emit_reference=False,
+            decode_lanes=[2, 4, 8], emit_reference=False,
         ),
     ]
     return {c.name: c for c in cfgs}

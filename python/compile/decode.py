@@ -90,6 +90,35 @@ def stage_decode_fn(cfg, s):
     return fn
 
 
+def stage_decode_batched_fn(cfg, s):
+    """fn(params, toks_or_x, caches, pos) -> (x_out, new_caches).
+
+    The lane-fused decode step: B *independent* width-1 windows — one per
+    live decode session — advanced in a single XLA call, so serving N
+    concurrent requests costs one dispatch per stage instead of N. Lanes
+    carry their own KV cache and position, so sessions at different
+    sequence lengths share the call; the maths per lane is exactly
+    `stage_decode_fn` at W = 1 (vmap over the lane axis), which is what
+    makes fused and solo decoding interchangeable mid-generation.
+
+    Stage 0 takes tokens (B,) int32; later stages take x (B, H).
+    caches: (B, n_stage_layers, 2, max_seq, n_heads, head_dim);
+    pos: (B,) int32 — each lane's current position.
+    """
+    base = stage_decode_fn(cfg, s)
+
+    def lane(params, xt, cache, pos):
+        win = xt[None] if s == 0 else xt[None, :]
+        x, new_cache = base(params, win, cache, pos)
+        return x[0], new_cache
+
+    def fn(params, x_or_tokens, caches, pos):
+        return jax.vmap(lane, in_axes=(None, 0, 0, 0))(
+            params, x_or_tokens, caches, pos)
+
+    return fn
+
+
 def head_decode_fn(cfg, s, layer, kind):
     """fn(head_params, x (H,)) -> logits (V,) for the exit after `layer`."""
     all_specs = model.stage_param_specs(cfg, s)

@@ -107,6 +107,79 @@ def test_decode_recompute_is_idempotent(rng):
     assert_allclose(np.asarray(first), np.asarray(x), atol=1e-6)
 
 
+def test_batched_decode_matches_solo_lanes(rng):
+    """Lane-fused batched decode == B independent width-1 solo decodes.
+
+    Lanes sit at *different* positions with *different* cache contents —
+    the serving-pool case — and the fused step must reproduce each
+    lane's solo hidden state and updated KV cache exactly (it is the
+    same maths vmapped over the lane axis)."""
+    cfg, params, toks = _setup(rng)
+    P = cfg.pipeline_stages
+    per = cfg.n_layers // P
+    B = 3
+    solo = [decode.stage_decode_fn(cfg, s) for s in range(P)]
+    batched = [decode.stage_decode_batched_fn(cfg, s) for s in range(P)]
+    # Per-lane prefill to distinct depths via the solo path.
+    depths = [2, 5, 9]
+    caches = [[jnp.zeros((per, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim),
+                         jnp.float32) for _ in range(P)] for _ in range(B)]
+    for i, d in enumerate(depths):
+        x = toks[0, :d]
+        for s in range(P):
+            x, caches[i][s] = solo[s](params[s], x, caches[i][s],
+                                      jnp.int32(0))
+    # One fused step: lane i decodes position depths[i].
+    lane_toks = jnp.asarray([int(toks[0, d]) for d in depths], jnp.int32)
+    pos = jnp.asarray(depths, jnp.int32)
+    x_b = lane_toks
+    new_caches_b = []
+    for s in range(P):
+        stacked = jnp.stack([caches[i][s] for i in range(B)])
+        x_b, out_c = batched[s](params[s], x_b, stacked, pos)
+        new_caches_b.append(out_c)
+    # The same step, lane by lane, through the solo executables.
+    for i, d in enumerate(depths):
+        x = toks[0, d:d + 1]
+        for s in range(P):
+            x, caches[i][s] = solo[s](params[s], x, caches[i][s],
+                                      jnp.int32(d))
+        assert_allclose(np.asarray(x_b[i]), np.asarray(x[0]),
+                        atol=1e-5, rtol=1e-5, err_msg=f"lane {i} hidden")
+        for s in range(P):
+            assert_allclose(np.asarray(new_caches_b[s][i]),
+                            np.asarray(caches[i][s]),
+                            atol=1e-5, rtol=1e-5,
+                            err_msg=f"lane {i} stage {s} cache")
+
+
+def test_batched_decode_lanes_are_independent(rng):
+    """A lane's output must not depend on what rides in the other lanes
+    (no cross-lane attention or cache bleed)."""
+    cfg, params, toks = _setup(rng)
+    P = cfg.pipeline_stages
+    per = cfg.n_layers // P
+    batched = [decode.stage_decode_batched_fn(cfg, s) for s in range(P)]
+
+    def run(lane_toks, pos, caches):
+        x = lane_toks
+        outs = []
+        for s in range(P):
+            x, c = batched[s](params[s], x, caches[s], pos)
+            outs.append(c)
+        return x, outs
+
+    caches = [jnp.zeros((2, per, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim),
+                        jnp.float32) for _ in range(P)]
+    pos = jnp.asarray([0, 0], jnp.int32)
+    a, _ = run(jnp.asarray([5, 7], jnp.int32), pos, caches)
+    b, _ = run(jnp.asarray([5, 200], jnp.int32), pos, caches)
+    assert_allclose(np.asarray(a[0]), np.asarray(b[0]), atol=1e-6,
+                    err_msg="lane 0 depends on lane 1's token")
+    assert not np.allclose(np.asarray(a[1]), np.asarray(b[1])), \
+        "lane 1 ignored its own token"
+
+
 def test_head_decode_matches_head_logits(rng):
     cfg, params, _ = _setup(rng)
     s = 1  # ee-tiny: stage 1 owns the early exit (layer 2) + final (4)

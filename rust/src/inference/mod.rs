@@ -28,7 +28,11 @@
 //! (implemented by each engine), which is what lets the serving layer
 //! interleave many requests over one engine (continuous batching) and
 //! stream tokens as they are emitted. `generate_tokens` on either engine
-//! is just a session drained to completion.
+//! is just a session drained to completion. The sequential engine
+//! additionally fuses many sessions into one batched pass per stage
+//! ([`DecodeBackend::run_lanes`] over the manifest's `decode_lanes`
+//! executables; [`DecodeSession::step_fused`]), with per-lane exit
+//! decisions — the serving pool's compute-batching hot path.
 //!
 //! [`prefix_cache`] adds shared-prefix KV reuse on top of the sessions:
 //! a token-trie keyed store of immutable post-prefill cache snapshots
@@ -58,6 +62,6 @@ pub use prefix_cache::{
 };
 pub use sequential::SequentialEngine;
 pub use session::{
-    CachedPrefill, DecodeBackend, DecodeSession, DoneReason, SessionCaches,
-    StepEvent, WindowOutcome,
+    CachedPrefill, DecodeBackend, DecodeSession, DoneReason, FusedStep,
+    LaneSlot, SessionCaches, StepEvent, WindowOutcome,
 };

@@ -468,6 +468,7 @@ impl DecodeBackend for PipelinedEngine {
     fn snapshot_caches(
         &mut self,
         _caches: &SessionCaches,
+        _positions: usize,
     ) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
         bail!(
             "the pipelined engine keeps KV caches in its stage threads \

@@ -50,14 +50,14 @@ const MIN_PREFIX: usize = 2;
 /// An immutable prefill-state snapshot: everything a session needs to
 /// resume decoding after `tokens` as if it had prefilled them itself.
 ///
-/// Note on sizing: `stage_caches` copies each stage's *whole*
-/// fixed-shape KV cache (capacity `max_seq`), whatever the prefix
-/// length — the budget's `positions` unit (the key length) is a
-/// reuse-value proxy, not a byte count. Budget accordingly: a store of
-/// `N * max_seq` positions can hold at most `N * max_seq / MIN_PREFIX`
-/// full-size cache copies in the degenerate short-prefix case.
-/// Bytes-accurate accounting (slicing snapshots to their live prefix)
-/// is on the roadmap.
+/// Sizing is bytes-accurate: `stage_caches` holds each stage's cache
+/// *sliced to the live prefix* along the position axis
+/// ([`DecodeBackend::snapshot_caches`] with the prefilled position
+/// count), so a short prompt's snapshot is proportionally small
+/// whatever the cache capacity — and the budget charges the positions
+/// actually held ([`CacheSnapshot::positions`]), not the key length.
+///
+/// [`DecodeBackend::snapshot_caches`]: super::session::DecodeBackend::snapshot_caches
 #[derive(Debug, Clone)]
 pub struct CacheSnapshot {
     /// Token prefix the snapshot covers (BOS included).
@@ -76,9 +76,21 @@ pub struct CacheSnapshot {
 }
 
 impl CacheSnapshot {
-    /// Budget weight of the snapshot: the positions it covers.
+    /// Budget weight of the snapshot: the KV positions it actually
+    /// holds, read from the sliced cache tensors' position axis.
+    /// Tensor-less snapshots (store unit tests, older callers) fall
+    /// back to the token-key length as before.
     pub fn positions(&self) -> usize {
-        self.tokens.len()
+        match self.stage_caches.first() {
+            Some(t) if t.shape.len() == 5 => t.shape[2],
+            _ => self.tokens.len(),
+        }
+    }
+
+    /// Host memory the snapshot occupies (the bytes-accurate quantity
+    /// the position budget is a proxy for).
+    pub fn bytes(&self) -> usize {
+        self.stage_caches.iter().map(|t| t.bytes()).sum()
     }
 
     /// First position whose KV entries are *not* fully healed: trailing
@@ -498,6 +510,36 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.hits, 2);
         assert_eq!(st.misses, 2);
+    }
+
+    /// Bytes-accurate budgeting: the store charges the positions a
+    /// snapshot actually holds (the sliced tensors' position axis), so
+    /// a short-prompt snapshot charges less than a long-prompt one even
+    /// though both engines share one fixed cache capacity.
+    #[test]
+    fn budget_charges_actual_positions_held() {
+        fn sized(tokens: &[i32], held: usize) -> CacheSnapshot {
+            CacheSnapshot {
+                tokens: tokens.to_vec(),
+                stage_caches: vec![HostTensor::zeros(&[1, 2, held, 1, 1])],
+                deficit: 0,
+            }
+        }
+        let short = sized(&[1, 2, 3, 4], 3);
+        let long = sized(&[9, 8, 7, 6, 5, 4, 3, 2, 1, 0], 9);
+        assert_eq!(short.positions(), 3);
+        assert_eq!(long.positions(), 9);
+        assert!(short.positions() < long.positions());
+        assert!(short.bytes() < long.bytes());
+        let s = PrefixCacheStore::new(64);
+        assert!(s.insert(short));
+        assert_eq!(s.used_positions(), 3, "short prompt charged its slice");
+        assert!(s.insert(long));
+        assert_eq!(s.used_positions(), 12);
+        // Tensor-less snapshots (unit-test fixtures) still weigh their
+        // key length.
+        assert!(s.insert(snap(&[40, 41])));
+        assert_eq!(s.used_positions(), 14);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::runtime::tensor::{HostTensor, IntTensor};
 use super::common::{GenOutput, ModelState};
 use super::policy::{summarize_logits, ExitPolicy};
 use super::session::{
-    DecodeBackend, DecodeSession, SessionCaches, WindowOutcome,
+    DecodeBackend, DecodeSession, LaneSlot, SessionCaches, WindowOutcome,
 };
 
 /// Per-token probe record (Table 4): predictions + confidences at every
@@ -47,6 +47,9 @@ pub struct SequentialEngine {
     /// ([`ExitPolicy::Confidence`] reproduces the paper's scalar rule).
     pub policy: ExitPolicy,
     widths: Vec<usize>,
+    /// Fused-lane batch sizes with a `decode_b{B}_w1` executable on
+    /// every stage (sorted; empty on manifests without lane fusion).
+    lanes: Vec<usize>,
     /// Collect per-exit probes for every generated token (Table 4 mode).
     pub probe: bool,
     pub probes: Vec<TokenProbe>,
@@ -58,9 +61,34 @@ impl SequentialEngine {
         policy: ExitPolicy,
     ) -> Result<SequentialEngine> {
         let mut rt = StageRuntime::cpu()?;
+        // A lane size is usable only when *every* stage ships its
+        // batched executable (tolerates hand-trimmed artifact sets).
+        let lanes: Vec<usize> = {
+            let mut lanes: Vec<usize> = state
+                .man
+                .decode_lanes
+                .iter()
+                .copied()
+                .filter(|b| {
+                    state.man.stages.iter().all(|st| {
+                        st.executables.contains_key(&format!("decode_b{b}_w1"))
+                    })
+                })
+                .collect();
+            lanes.sort_unstable();
+            lanes.dedup();
+            lanes
+        };
         for st in &state.man.stages {
             for w in &state.man.decode_widths {
                 let key = format!("decode_w{w}");
+                rt.load(
+                    &format!("s{}:{key}", st.index),
+                    &state.man.exec_path(st.exec(&key)?),
+                )?;
+            }
+            for b in &lanes {
+                let key = format!("decode_b{b}_w1");
                 rt.load(
                     &format!("s{}:{key}", st.index),
                     &state.man.exec_path(st.exec(&key)?),
@@ -86,7 +114,7 @@ impl SequentialEngine {
             plits,
             policy,
             widths,
-
+            lanes,
             probe: false,
             probes: Vec::new(),
         })
@@ -210,6 +238,72 @@ impl SequentialEngine {
         Ok((sum.token, fin.layer, p))
     }
 
+    /// Stack the lanes' per-session stage-`s` caches into the fused
+    /// `[B, ...cache_shape]` layout one batched executable consumes.
+    ///
+    /// Known cost: this is a host round-trip of each lane's full
+    /// fixed-shape cache per stage per fused step (the solo path keeps
+    /// caches device-resident, §L3-2), traded for correctness-first
+    /// group membership that may change every round. Keeping a
+    /// lane-stacked literal device-resident across a group's lifetime
+    /// is the ROADMAP next step; the serving benches report the
+    /// fused-vs-solo throughput ratio so the trade stays visible.
+    fn gather_lane_caches(
+        &self,
+        lanes: &[LaneSlot<'_>],
+        s: usize,
+    ) -> Result<xla::Literal> {
+        let shape = &self.state.man.stages[s].cache_shape;
+        let len: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(lanes.len() * len);
+        for lane in lanes {
+            let t = HostTensor::from_literal(&lane.caches.caches[s])?;
+            ensure!(
+                t.shape == *shape,
+                "lane cache shape {:?} != stage {s} cache shape {shape:?}",
+                t.shape
+            );
+            data.extend_from_slice(&t.data);
+        }
+        let mut full = Vec::with_capacity(shape.len() + 1);
+        full.push(lanes.len());
+        full.extend_from_slice(shape);
+        HostTensor::new(full, data).to_literal()
+    }
+
+    /// Scatter a fused pass's updated stage-`s` caches back to their
+    /// sessions. Lanes with `skip[i]` set (already fired at an earlier
+    /// stage entry) keep their pre-pass literal: the solo path never
+    /// runs stages at or beyond an exit, and mirroring that here keeps
+    /// the per-session cache state — and therefore every downstream
+    /// deficit-heal window — bit-identical to unfused decoding.
+    fn scatter_lane_caches(
+        &self,
+        lanes: &mut [LaneSlot<'_>],
+        s: usize,
+        stacked: &xla::Literal,
+        skip: &[bool],
+    ) -> Result<()> {
+        let shape = &self.state.man.stages[s].cache_shape;
+        let len: usize = shape.iter().product();
+        let t = HostTensor::from_literal(stacked)?;
+        ensure!(
+            t.data.len() == lanes.len() * len,
+            "fused stage {s} cache output has {} elements, want {}",
+            t.data.len(),
+            lanes.len() * len
+        );
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if skip[i] {
+                continue;
+            }
+            let chunk = t.data[i * len..(i + 1) * len].to_vec();
+            lane.caches.caches[s] =
+                HostTensor::new(shape.clone(), chunk).to_literal()?;
+        }
+        Ok(())
+    }
+
     /// Generate up to `max_new` tokens after `prompt` (token ids, BOS
     /// prepended automatically) — a [`DecodeSession`] drained to
     /// completion.
@@ -273,6 +367,128 @@ impl DecodeBackend for SequentialEngine {
         &self.widths
     }
 
+    fn decode_lanes(&self) -> &[usize] {
+        &self.lanes
+    }
+
+    /// The lane-fused batched decode pass: one `decode_b{B}_w1` dispatch
+    /// per stage advances every lane's width-1 window at once, with
+    /// per-lane exit decisions at stage entries. Control flow and cache
+    /// effects mirror [`SequentialEngine::window_pass`] per lane exactly
+    /// — a fired lane reports `stages_run` at its exit and keeps its
+    /// deeper-stage caches untouched (it rides the batch as padding
+    /// until every lane has fired, at which point the remaining stages
+    /// are skipped) — so fused and solo stepping are interchangeable
+    /// mid-generation. Probe mode is a solo-path feature; fused passes
+    /// are only issued by the serving pool, which never probes.
+    fn run_lanes(
+        &mut self,
+        lanes: &mut [LaneSlot<'_>],
+    ) -> Result<Vec<WindowOutcome>> {
+        let b = lanes.len();
+        ensure!(
+            self.lanes.contains(&b),
+            "no decode_b{b}_w1 executable (available lane sizes {:?})",
+            self.lanes
+        );
+        let p = self.state.man.stages.len();
+        let h = self.state.man.model.hidden;
+        // (token, exit layer, stages run) per fired lane.
+        let mut fired: Vec<Option<(i32, usize, usize)>> = vec![None; b];
+        let pos_lit = IntTensor::new(
+            vec![b],
+            lanes.iter().map(|l| l.pos as i32).collect(),
+        )
+        .to_literal()?;
+        let mut x: Option<HostTensor> = None;
+        // Cache scatters are deferred until the whole pass has
+        // succeeded, so a mid-pass error leaves every lane's session
+        // state untouched and the caller can retry those sessions on
+        // the solo path.
+        let mut pending: Vec<(usize, xla::Literal, Vec<bool>)> = Vec::new();
+        for s in 0..p {
+            // Entry exits (Optimization-2 placement) per un-fired lane,
+            // on its slice of the batched hidden state.
+            if let Some(xh) = x.as_ref() {
+                for (i, lane) in lanes.iter().enumerate() {
+                    if fired[i].is_some() || !lane.allow_exit {
+                        continue;
+                    }
+                    let last = &xh.data[i * h..(i + 1) * h];
+                    for e in self.state.entry_exits(s) {
+                        let layer = e.layer;
+                        if !self.policy.may_exit_at(layer) {
+                            continue;
+                        }
+                        let logits = self.head_logits(s, layer, last)?;
+                        let sum = summarize_logits(&logits);
+                        if self.policy.decide(layer, &sum).is_exit() {
+                            fired[i] = Some((sum.token, layer, s));
+                            break;
+                        }
+                    }
+                }
+                if fired.iter().all(|f| f.is_some()) {
+                    // Every lane has fired: deeper stages would only
+                    // compute padding. Un-fired lanes never reach here,
+                    // so they never pay for a skipped stage.
+                    break;
+                }
+            }
+            let in_lit: xla::Literal = if s == 0 {
+                IntTensor::new(
+                    vec![b],
+                    lanes.iter().map(|l| l.token).collect(),
+                )
+                .to_literal()?
+            } else {
+                x.as_ref().unwrap().to_literal()?
+            };
+            let stacked = self.gather_lane_caches(lanes, s)?;
+            let mut args: Vec<&xla::Literal> =
+                self.plits[s].iter().collect();
+            args.push(&in_lit);
+            args.push(&stacked);
+            args.push(&pos_lit);
+            let out = self
+                .rt
+                .get(&format!("s{s}:decode_b{b}_w1"))?
+                .run(&args)?;
+            let mut it = out.into_iter();
+            x = Some(HostTensor::from_literal(&it.next().unwrap())?);
+            let new_caches = it.next().unwrap();
+            let skip: Vec<bool> =
+                fired.iter().map(|f| f.is_some()).collect();
+            pending.push((s, new_caches, skip));
+        }
+        let fin_layer = self.state.final_exit().layer;
+        let mut outs = Vec::with_capacity(b);
+        for (i, f) in fired.iter().enumerate() {
+            if let Some(&(token, layer, stage)) = f.as_ref() {
+                outs.push(WindowOutcome {
+                    token,
+                    exit_layer: layer,
+                    stages_run: stage,
+                });
+            } else {
+                let xh = x.as_ref().expect("un-fired lanes ran all stages");
+                let last = &xh.data[i * h..(i + 1) * h];
+                let logits = self.head_logits(p - 1, fin_layer, last)?;
+                let sum = summarize_logits(&logits);
+                outs.push(WindowOutcome {
+                    token: sum.token,
+                    exit_layer: fin_layer,
+                    stages_run: p,
+                });
+            }
+        }
+        // Every fallible step is behind us: commit the cache updates.
+        for (s, stacked, skip) in &pending {
+            self.scatter_lane_caches(lanes, *s, stacked, skip)?;
+        }
+        Ok(outs)
+    }
+
     fn max_seq(&self) -> usize {
         self.state.man.model.max_seq
     }
@@ -299,14 +515,45 @@ impl DecodeBackend for SequentialEngine {
         true
     }
 
+    /// Bytes-accurate snapshots: only the first `positions` entries of
+    /// the position axis are copied to host — the rest of the
+    /// fixed-shape cache is zeros-by-construction (prefill never wrote
+    /// past the prompt), so a short prompt's snapshot is proportionally
+    /// small whatever the cache capacity.
     fn snapshot_caches(
         &mut self,
         caches: &SessionCaches,
+        positions: usize,
     ) -> Result<Vec<HostTensor>> {
         caches
             .caches
             .iter()
-            .map(HostTensor::from_literal)
+            .zip(&self.state.man.stages)
+            .map(|(lit, st)| {
+                let t = HostTensor::from_literal(lit)?;
+                let shape = &st.cache_shape; // [layers, 2, S, heads, dim]
+                ensure!(
+                    t.shape == *shape,
+                    "stage {} cache shape {:?} != snapshot source {:?}",
+                    st.index,
+                    shape,
+                    t.shape
+                );
+                let held = positions.min(shape[2]);
+                let row = shape[3] * shape[4];
+                let src_block = shape[2] * row;
+                let dst_block = held * row;
+                let mut data = vec![0f32; shape[0] * 2 * dst_block];
+                for blk in 0..shape[0] * 2 {
+                    data[blk * dst_block..][..dst_block].copy_from_slice(
+                        &t.data[blk * src_block..][..dst_block],
+                    );
+                }
+                Ok(HostTensor::new(
+                    vec![shape[0], 2, held, shape[3], shape[4]],
+                    data,
+                ))
+            })
             .collect::<Result<Vec<_>>>()
             .context("snapshotting per-stage KV caches")
     }
@@ -322,23 +569,45 @@ impl DecodeBackend for SequentialEngine {
             snapshot.len(),
             stages.len()
         );
-        for (t, st) in snapshot.iter().zip(stages) {
-            ensure!(
-                t.shape == st.cache_shape,
-                "stage {} cache shape {:?} does not match snapshot {:?}",
-                st.index,
-                st.cache_shape,
-                t.shape
-            );
-        }
-        Ok(SessionCaches {
-            caches: snapshot
-                .iter()
-                .map(|t| t.to_literal())
-                .collect::<Result<Vec<_>>>()
-                .context("restoring per-stage KV caches")?,
-            generation: 0,
-        })
+        let caches = snapshot
+            .iter()
+            .zip(stages)
+            .map(|(t, st)| {
+                let shape = &st.cache_shape;
+                if t.shape == *shape {
+                    // Full-capacity snapshot (pre-slicing format).
+                    return t.to_literal();
+                }
+                // Position-sliced snapshot: zero-pad back to capacity.
+                ensure!(
+                    t.shape.len() == 5
+                        && t.shape[0] == shape[0]
+                        && t.shape[1] == 2
+                        && t.shape[2] <= shape[2]
+                        && t.shape[3] == shape[3]
+                        && t.shape[4] == shape[4],
+                    "stage {} cache shape {:?} does not match snapshot \
+                     {:?}",
+                    st.index,
+                    shape,
+                    t.shape
+                );
+                let held = t.shape[2];
+                let row = shape[3] * shape[4];
+                let src_block = held * row;
+                let dst_block = shape[2] * row;
+                let mut full = HostTensor::zeros(shape);
+                for blk in 0..shape[0] * 2 {
+                    full.data[blk * dst_block..][..src_block]
+                        .copy_from_slice(
+                            &t.data[blk * src_block..][..src_block],
+                        );
+                }
+                full.to_literal()
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("restoring per-stage KV caches")?;
+        Ok(SessionCaches { caches, generation: 0 })
     }
 }
 

@@ -22,7 +22,7 @@
 
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::tensor::HostTensor;
 
@@ -47,6 +47,36 @@ pub struct SessionCaches {
     /// error instead of silently decoding against reset caches.
     /// Backends with fully session-owned state ignore it.
     pub generation: u64,
+}
+
+/// One lane of a fused batched decode pass ([`DecodeBackend::run_lanes`]):
+/// a session's current width-1 window, by reference into its state.
+///
+/// Lanes are independent — each carries its own KV caches and position —
+/// so sessions at different sequence lengths share one fused call. The
+/// engine gathers `caches` into the lane-stacked layout, runs one batched
+/// executable per stage, applies exit heads to per-lane hidden slices,
+/// and scatters the updated caches back.
+pub struct LaneSlot<'a> {
+    /// The session's per-stage KV caches (gathered, then scattered back).
+    pub caches: &'a mut SessionCaches,
+    /// The lane's current token (the one whose successor is decoded).
+    pub token: i32,
+    /// The token's position in the lane's buffer.
+    pub pos: usize,
+    /// Early-exit checks enabled for this lane (false under the forced
+    /// full-model pass bookkeeping, exactly as in the solo path).
+    pub allow_exit: bool,
+}
+
+/// Result of one fused [`DecodeSession::step_fused`] round.
+#[derive(Debug)]
+pub struct FusedStep {
+    /// Per-lane step events, in lane order.
+    pub events: Vec<StepEvent>,
+    /// Stages the fused pass skipped because *every* lane had already
+    /// taken an early exit (un-fired lanes never cause a skip).
+    pub stages_skipped: usize,
 }
 
 /// Result of one decode window pass.
@@ -88,6 +118,36 @@ pub trait DecodeBackend {
     /// Decode window widths available in the manifest.
     fn decode_widths(&self) -> &[usize];
 
+    /// Fused-lane batch sizes this backend can decode in one call
+    /// (sorted ascending; empty when lane fusion is unavailable —
+    /// default). A non-empty ladder promises [`run_lanes`] works for
+    /// exactly these group sizes.
+    ///
+    /// [`run_lanes`]: DecodeBackend::run_lanes
+    fn decode_lanes(&self) -> &[usize] {
+        &[]
+    }
+
+    /// Advance every lane by one width-1 decode window in a single
+    /// batched pass per stage, with per-lane exit decisions: a fired
+    /// lane's token is taken at its exit layer, and deeper stages are
+    /// skipped only once every lane has fired. Returns one
+    /// [`WindowOutcome`] per lane, in lane order, with solo-equivalent
+    /// `stages_run` (so the caller's deficit accounting matches the
+    /// unfused path exactly).
+    ///
+    /// Errors on backends whose [`decode_lanes`] is empty, and when
+    /// `lanes.len()` is not one of the advertised sizes.
+    ///
+    /// [`decode_lanes`]: DecodeBackend::decode_lanes
+    fn run_lanes(
+        &mut self,
+        lanes: &mut [LaneSlot<'_>],
+    ) -> Result<Vec<WindowOutcome>> {
+        let _ = lanes;
+        bail!("this backend does not support fused lane decode")
+    }
+
     /// KV-cache capacity in positions.
     fn max_seq(&self) -> usize;
 
@@ -117,18 +177,23 @@ pub trait DecodeBackend {
     /// stage threads), and callers must serve it without prefix reuse.
     fn supports_cache_snapshots(&self) -> bool;
 
-    /// Copy a session's KV caches to host tensors, one per stage. Errors
-    /// on backends where [`supports_cache_snapshots`] is false.
+    /// Copy a session's KV caches to host tensors, one per stage,
+    /// sliced along the position axis to the first `positions` entries
+    /// (bytes-accurate snapshots: a short prompt's snapshot is small,
+    /// whatever the cache capacity). Errors on backends where
+    /// [`supports_cache_snapshots`] is false.
     ///
     /// [`supports_cache_snapshots`]: DecodeBackend::supports_cache_snapshots
     fn snapshot_caches(
         &mut self,
         caches: &SessionCaches,
+        positions: usize,
     ) -> Result<Vec<HostTensor>>;
 
     /// Rebuild per-session caches from a host snapshot taken by
-    /// [`snapshot_caches`] on a same-shaped engine. Errors on backends
-    /// where [`supports_cache_snapshots`] is false.
+    /// [`snapshot_caches`] on a same-shaped engine, zero-padding
+    /// position-sliced snapshots back to the cache capacity. Errors on
+    /// backends where [`supports_cache_snapshots`] is false.
     ///
     /// [`snapshot_caches`]: DecodeBackend::snapshot_caches
     /// [`supports_cache_snapshots`]: DecodeBackend::supports_cache_snapshots
@@ -357,9 +422,13 @@ impl DecodeSession {
         // Prefilled and not done implies the prefill pass built (or
         // restored) the session caches.
         let caches = self.caches.as_ref().expect("prefilled session caches");
+        // Prefill computed KV for positions [0, l-1); slice the host
+        // copy there instead of hauling the full fixed-shape cache
+        // (bytes-accurate budgeting — the store charges what is held).
+        let positions = self.tokens.len().saturating_sub(1);
         Ok(CacheSnapshot {
             tokens: self.tokens.clone(),
-            stage_caches: backend.snapshot_caches(caches)?,
+            stage_caches: backend.snapshot_caches(caches, positions)?,
             deficit: self.deficit,
         })
     }
@@ -432,9 +501,24 @@ impl DecodeSession {
             allow_exit,
             true,
         )?;
-        if backend.tracks_deficit() {
+        Ok(self.absorb(out, p, backend.tracks_deficit()))
+    }
+
+    /// Fold one emitted window outcome into the session: deficit
+    /// bookkeeping, stats, token buffers, and the stop/budget check —
+    /// the shared tail of [`step`] and [`step_fused`].
+    ///
+    /// [`step`]: DecodeSession::step
+    /// [`step_fused`]: DecodeSession::step_fused
+    fn absorb(
+        &mut self,
+        out: WindowOutcome,
+        n_stages: usize,
+        tracks_deficit: bool,
+    ) -> StepEvent {
+        if tracks_deficit {
             self.deficit =
-                if out.stages_run == p { 0 } else { self.deficit + 1 };
+                if out.stages_run == n_stages { 0 } else { self.deficit + 1 };
         }
         self.stats.record(out.exit_layer);
         self.tokens.push(out.token);
@@ -446,7 +530,101 @@ impl DecodeSession {
         } else {
             None
         };
-        Ok(StepEvent::Token { token: out.token, exit_layer: out.exit_layer, done })
+        StepEvent::Token { token: out.token, exit_layer: out.exit_layer, done }
+    }
+
+    /// Whether this session may join a fused lane group right now: it
+    /// must be mid-decode (prefilled, not done, budget and KV capacity
+    /// left), hold its own caches, and carry **no recompute deficit** —
+    /// a session whose healing window exceeds width 1 takes the solo
+    /// windowed path until the deficit clears, so fused lanes are always
+    /// plain width-1 windows.
+    pub fn fusable(&self, backend: &dyn DecodeBackend) -> bool {
+        self.prefilled
+            && self.done.is_none()
+            && self.deficit == 0
+            && self.generated.len() < self.max_new
+            && self.tokens.len() < backend.max_seq()
+            && self.caches.is_some()
+    }
+
+    /// Decode one token for *every* session in a single fused pass
+    /// ([`DecodeBackend::run_lanes`]) — the compute-batching hot path of
+    /// the serving pool. All sessions must be [`fusable`] and share the
+    /// backend's resident exit policy (the pool groups by policy), and
+    /// `sessions.len()` must be one of [`DecodeBackend::decode_lanes`].
+    ///
+    /// Per-lane bookkeeping (exit eligibility, the forced-full pass
+    /// accounting, deficit updates) mirrors [`step`] exactly, so a
+    /// session stepped through fused rounds and one stepped solo produce
+    /// identical streams.
+    ///
+    /// [`fusable`]: DecodeSession::fusable
+    /// [`step`]: DecodeSession::step
+    pub fn step_fused(
+        backend: &mut dyn DecodeBackend,
+        sessions: &mut [&mut DecodeSession],
+    ) -> Result<FusedStep> {
+        let p = backend.n_stages();
+        let widths = backend.decode_widths().to_vec();
+        let may_exit = backend.exit_policy().may_exit();
+        let tracks_deficit = backend.tracks_deficit();
+        for sess in sessions.iter() {
+            ensure!(
+                sess.fusable(&*backend),
+                "step_fused over a session that is not fusable"
+            );
+        }
+        let mut slots: Vec<LaneSlot<'_>> =
+            Vec::with_capacity(sessions.len());
+        let mut forced: Vec<bool> = Vec::with_capacity(sessions.len());
+        for sess in sessions.iter_mut() {
+            let s = &mut **sess;
+            let n = s.tokens.len() - 1; // current position (has a token)
+            // Exit eligibility mirrors the solo step exactly. Deficit
+            // trackers at deficit 0: after exiting, the next pass needs
+            // a window of width 2 — suspend early exits when that would
+            // not fit (the forced full-model pass), with the same
+            // accounting. In-band back-fill backends never suspend.
+            let eligible = if tracks_deficit {
+                may_exit && pick_width(&widths, 2, n + 1).is_some()
+            } else {
+                true
+            };
+            // Forced-full accounting lands only once the fused pass
+            // succeeds: a failed pass is retried on the solo path,
+            // which does its own accounting — no double count.
+            forced.push(tracks_deficit && may_exit && !eligible);
+            let token = s.tokens[n];
+            let caches =
+                s.caches.as_mut().expect("fusable session has caches");
+            slots.push(LaneSlot {
+                caches,
+                token,
+                pos: n,
+                allow_exit: eligible,
+            });
+        }
+        let outs = backend.run_lanes(&mut slots)?;
+        drop(slots);
+        ensure!(
+            outs.len() == sessions.len(),
+            "run_lanes returned {} outcomes for {} lanes",
+            outs.len(),
+            sessions.len()
+        );
+        let deepest = outs.iter().map(|o| o.stages_run).max().unwrap_or(p);
+        let events = sessions
+            .iter_mut()
+            .zip(outs.iter().zip(&forced))
+            .map(|(s, (&o, &f))| {
+                if f {
+                    s.stats.forced_full += 1;
+                }
+                s.absorb(o, p, tracks_deficit)
+            })
+            .collect();
+        Ok(FusedStep { events, stages_skipped: p.saturating_sub(deepest) })
     }
 
     /// Prefill, then step to completion — the serial path

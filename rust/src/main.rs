@@ -64,6 +64,9 @@ serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
            carry a value)
            --workload tasks|shared-prefix (request set; defaults to
            shared-prefix when the prefix cache is on, tasks otherwise)
+           --no-lanes (disable lane-fused batched decode; by default
+           same-policy live sessions are stepped through the manifest's
+           decode_lanes executables, one batched XLA call per stage)
            --json-out PATH (metrics JSON)
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
@@ -88,7 +91,8 @@ fn main() {
         return;
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..], &["no-defer", "gpipe", "verbose"]);
+    let args =
+        Args::parse(&argv[1..], &["no-defer", "gpipe", "verbose", "no-lanes"]);
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
@@ -340,6 +344,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         "workload",
         if prefix_positions > 0 { "shared-prefix" } else { "tasks" },
     );
+    let lane_fusion = !args.flag("no-lanes");
     let corpus = standard_corpus(icfg.seed);
     let reqs = match workload.as_str() {
         "shared-prefix" => {
@@ -370,13 +375,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "[serve-bench] {n_req} requests ({workload} workload), engine \
          {kind:?}, sched {sched:?}, exit policy {}, {concurrent} live \
-         sessions/worker, prefix cache {}",
+         sessions/worker, prefix cache {}, lane fusion {}",
         icfg.policy,
         if prefix_positions > 0 {
             format!("{prefix_positions} positions (pool-wide shared store)")
         } else {
             "off".to_string()
-        }
+        },
+        if lane_fusion { "on" } else { "off" }
     );
     let mut table = Table::new(
         &format!(
@@ -397,6 +403,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 sched,
                 max_concurrent: concurrent,
                 prefix_cache_positions: prefix_positions,
+                lane_fusion,
             },
         );
         let out = pool.run_batch(reqs.clone())?;
@@ -437,6 +444,20 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 m.deadline_misses
             );
         }
+        if lane_fusion {
+            let l = &m.lanes;
+            println!(
+                "[serve-bench] pool {workers}: {:.2} decode steps/dispatch \
+                 ({} fused calls x occupancy {:?}, {} solo steps, {} stages \
+                 skipped all-fired, {} policy swaps)",
+                l.steps_per_dispatch(),
+                l.fused_calls,
+                l.occupancy,
+                l.solo_steps,
+                l.stages_skipped,
+                l.policy_applies
+            );
+        }
         json_rows.push(serve_metrics_json(workers, m, n_layers));
     }
     table.emit("serve-bench");
@@ -459,6 +480,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         obj.insert(
             "prefix_cache_positions".to_string(),
             Json::Num(prefix_positions as f64),
+        );
+        obj.insert(
+            "lane_fusion".to_string(),
+            Json::Num(if lane_fusion { 1.0 } else { 0.0 }),
         );
         obj.insert("workload".to_string(), Json::Str(workload.clone()));
         obj.insert("pools".to_string(), Json::Arr(json_rows));
@@ -499,6 +524,19 @@ fn serve_metrics_json(
     num("prefill_positions_saved", m.prefill_positions_saved() as f64);
     num("prefix_insertions", m.prefix.insertions as f64);
     num("prefix_evictions", m.prefix.evictions as f64);
+    num("fused_calls", m.lanes.fused_calls as f64);
+    num("fused_steps", m.lanes.fused_steps as f64);
+    num("solo_steps", m.lanes.solo_steps as f64);
+    num("decode_steps_per_dispatch", m.lanes.steps_per_dispatch());
+    num("stages_skipped_all_fired", m.lanes.stages_skipped as f64);
+    num("policy_applies", m.lanes.policy_applies as f64);
+    let occupancy = m
+        .lanes
+        .occupancy
+        .iter()
+        .map(|&(w, c)| (w.to_string(), Json::Num(c as f64)))
+        .collect();
+    o.insert("lane_occupancy".to_string(), Json::Obj(occupancy));
     Json::Obj(o)
 }
 

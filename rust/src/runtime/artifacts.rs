@@ -116,6 +116,11 @@ pub struct Manifest {
     pub model: ModelMeta,
     pub approx_param_count: usize,
     pub decode_widths: Vec<usize>,
+    /// Lane-fused batched decode ladder: each entry B names a per-stage
+    /// `decode_b{B}_w1` executable stepping B independent width-1
+    /// windows (lane-stacked KV caches, per-lane positions) in one XLA
+    /// call. Empty on manifests predating lane fusion.
+    pub decode_lanes: Vec<usize>,
     pub prefill_width: usize,
     pub stages: Vec<StageMeta>,
     pub reference: Option<ReferenceMeta>,
@@ -243,6 +248,12 @@ impl Manifest {
                 .as_usize()
                 .context("approx_param_count")?,
             decode_widths: j.field("decode_widths")?.usize_arr()?,
+            // Optional: manifests built before lane fusion lack the key
+            // (and decode fine, solo-only).
+            decode_lanes: match j.get("decode_lanes") {
+                Some(v) => v.usize_arr()?,
+                None => Vec::new(),
+            },
             prefill_width: j
                 .field("prefill_width")?
                 .as_usize()
@@ -284,6 +295,12 @@ impl Manifest {
         // engine additionally checks for width 1 at generation time).
         if self.decode_widths.is_empty() {
             bail!("manifest lists no decode widths");
+        }
+        // Lane fusion is optional, but a listed lane must fuse something.
+        for &b in &self.decode_lanes {
+            if b < 2 {
+                bail!("decode lane size {b} fuses nothing (need >= 2)");
+            }
         }
         Ok(())
     }

@@ -3,10 +3,140 @@
 //! the serving-side analogue of the paper's Figure 8 axes
 //! (quality/latency vs. threshold), lifted to a multi-request batch.
 
+use std::sync::Mutex;
+
 use crate::inference::{ExitStats, PrefixCacheStats};
 pub use crate::metrics::percentile;
 
 use super::request::ServeResponse;
+
+/// Lane-fusion activity of the decode hot path: how often the pool
+/// stepped sessions through fused batched passes vs solo windows — the
+/// "did compute batching actually happen" observability the fused
+/// decode work is judged by.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaneStats {
+    /// Fused `run_lanes` invocations (each is one batched XLA dispatch
+    /// chain per stage, whatever the lane count).
+    pub fused_calls: u64,
+    /// Decode steps taken inside fused calls (one per lane per call).
+    pub fused_steps: u64,
+    /// Decode steps taken on the solo windowed path.
+    pub solo_steps: u64,
+    /// Stages skipped entirely because every lane of a fused call had
+    /// already taken an early exit.
+    pub stages_skipped: u64,
+    /// Engine-resident exit-policy swaps workers performed. With
+    /// policy-ordered rounds this is bounded by distinct policies per
+    /// round, not by live sessions (the pre-lane loop swapped once per
+    /// adjacent policy change, i.e. up to once per step).
+    pub policy_applies: u64,
+    /// Lane-occupancy histogram: (lane count B, fused calls at B).
+    pub occupancy: Vec<(usize, u64)>,
+}
+
+impl LaneStats {
+    /// Decode steps per engine dispatch round: `(fused + solo steps) /
+    /// (fused calls + solo steps)`. Above 1.0 means fused lane groups
+    /// formed — N live sessions cost fewer than N dispatch rounds.
+    pub fn steps_per_dispatch(&self) -> f64 {
+        let dispatches = self.fused_calls + self.solo_steps;
+        if dispatches == 0 {
+            return 0.0;
+        }
+        (self.fused_steps + self.solo_steps) as f64 / dispatches as f64
+    }
+
+    fn occupancy_add(&mut self, width: usize, calls: u64) {
+        match self.occupancy.iter_mut().find(|(w, _)| *w == width) {
+            Some(e) => e.1 += calls,
+            None => {
+                self.occupancy.push((width, calls));
+                self.occupancy.sort();
+            }
+        }
+    }
+
+    /// Accumulate another reading into this one.
+    pub fn merge(&mut self, other: &LaneStats) {
+        self.fused_calls += other.fused_calls;
+        self.fused_steps += other.fused_steps;
+        self.solo_steps += other.solo_steps;
+        self.stages_skipped += other.stages_skipped;
+        self.policy_applies += other.policy_applies;
+        for &(w, c) in &other.occupancy {
+            self.occupancy_add(w, c);
+        }
+    }
+
+    /// Counter delta `self - baseline` (saturating): activity since an
+    /// earlier reading of the same counters.
+    pub fn since(&self, baseline: &LaneStats) -> LaneStats {
+        let mut out = LaneStats {
+            fused_calls: self
+                .fused_calls
+                .saturating_sub(baseline.fused_calls),
+            fused_steps: self
+                .fused_steps
+                .saturating_sub(baseline.fused_steps),
+            solo_steps: self.solo_steps.saturating_sub(baseline.solo_steps),
+            stages_skipped: self
+                .stages_skipped
+                .saturating_sub(baseline.stages_skipped),
+            policy_applies: self
+                .policy_applies
+                .saturating_sub(baseline.policy_applies),
+            occupancy: Vec::new(),
+        };
+        for &(w, c) in &self.occupancy {
+            let base = baseline
+                .occupancy
+                .iter()
+                .find(|(bw, _)| *bw == w)
+                .map_or(0, |(_, bc)| *bc);
+            if c > base {
+                out.occupancy_add(w, c - base);
+            }
+        }
+        out
+    }
+}
+
+/// Thread-safe lane counters shared by every worker of a pool (the
+/// lane-fusion analogue of the shared [`PrefixCacheStore`] stats).
+///
+/// [`PrefixCacheStore`]: crate::inference::PrefixCacheStore
+#[derive(Debug, Default)]
+pub struct LaneCounters {
+    inner: Mutex<LaneStats>,
+}
+
+impl LaneCounters {
+    /// Counter snapshot.
+    pub fn stats(&self) -> LaneStats {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// One fused call over `width` lanes that skipped `stages_skipped`
+    /// stages because every lane had fired.
+    pub fn record_fused(&self, width: usize, stages_skipped: usize) {
+        let mut s = self.inner.lock().unwrap();
+        s.fused_calls += 1;
+        s.fused_steps += width as u64;
+        s.stages_skipped += stages_skipped as u64;
+        s.occupancy_add(width, 1);
+    }
+
+    /// One solo decode step.
+    pub fn record_solo(&self) {
+        self.inner.lock().unwrap().solo_steps += 1;
+    }
+
+    /// One engine-resident exit-policy swap.
+    pub fn record_policy_apply(&self) {
+        self.inner.lock().unwrap().policy_applies += 1;
+    }
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
@@ -38,6 +168,10 @@ pub struct ServeMetrics {
     /// Prefix KV-cache activity during the batch, read from the pool's
     /// shared store (all zeros when the cache is disabled).
     pub prefix: PrefixCacheStats,
+    /// Lane-fusion activity during the batch: fused vs solo decode
+    /// steps, lane occupancy, stages skipped by all-lanes-fired, and
+    /// policy swaps (all zeros when lane fusion is off or unavailable).
+    pub lanes: LaneStats,
 }
 
 impl ServeMetrics {
@@ -87,6 +221,7 @@ impl ServeMetrics {
                 .count(),
             exits,
             prefix: PrefixCacheStats::default(),
+            lanes: LaneStats::default(),
         }
     }
 
@@ -203,6 +338,43 @@ mod tests {
             1.0,
         );
         assert_eq!(m.deadline_misses, 1);
+    }
+
+    #[test]
+    fn lane_stats_steps_per_dispatch_and_since() {
+        let c = LaneCounters::default();
+        assert_eq!(c.stats().steps_per_dispatch(), 0.0, "no activity");
+        // Two fused calls (4 + 2 lanes) and two solo steps: 8 steps over
+        // 4 dispatch rounds.
+        c.record_fused(4, 0);
+        c.record_fused(2, 3);
+        c.record_solo();
+        c.record_solo();
+        c.record_policy_apply();
+        let s = c.stats();
+        assert_eq!(s.fused_calls, 2);
+        assert_eq!(s.fused_steps, 6);
+        assert_eq!(s.solo_steps, 2);
+        assert_eq!(s.stages_skipped, 3);
+        assert_eq!(s.policy_applies, 1);
+        assert_eq!(s.occupancy, vec![(2, 1), (4, 1)]);
+        assert!((s.steps_per_dispatch() - 2.0).abs() < 1e-12);
+        // Delta attribution, as run_batch uses it.
+        let base = s.clone();
+        c.record_fused(4, 0);
+        let d = c.stats().since(&base);
+        assert_eq!(d.fused_calls, 1);
+        assert_eq!(d.fused_steps, 4);
+        assert_eq!(d.solo_steps, 0);
+        assert_eq!(d.occupancy, vec![(4, 1)]);
+        // since + merge round-trips to the later reading.
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged, c.stats());
+        // Solo-only serving reads as exactly 1 step per dispatch.
+        let solo = LaneCounters::default();
+        solo.record_solo();
+        assert!((solo.stats().steps_per_dispatch() - 1.0).abs() < 1e-12);
     }
 
     #[test]

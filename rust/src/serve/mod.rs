@@ -35,10 +35,18 @@
 //!   it — whichever worker prefilled it — and prefill only the suffix;
 //!   sequential-engine workers only; the pipelined engine declines the
 //!   capability and serves without reuse.
+//!   Workers step their live sessions in policy-ordered rounds with
+//!   **lane-fused batched decode** ([`PoolConfig::lane_fusion`]):
+//!   same-policy sessions with no recompute deficit advance through one
+//!   batched XLA call per stage (the manifest's `decode_lanes`
+//!   executables, greedy largest group first), the rest step solo —
+//!   output-invisibly (`tests/batched_decode_equivalence.rs`).
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
 //!   p50/p95 request latency, p50/p95 time-to-first-token, p50/p95
 //!   per-token gaps, queueing, deadline misses, merged per-exit usage,
-//!   and prefix-cache hit-rate / prefill-positions-saved.
+//!   prefix-cache hit-rate / prefill-positions-saved, and lane-fusion
+//!   activity ([`LaneStats`]: fused vs solo steps, lane occupancy,
+//!   stages skipped, policy swaps).
 //!
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.
@@ -48,10 +56,10 @@ pub mod pool;
 pub mod request;
 pub mod scheduler;
 
-pub use metrics::{percentile, ServeMetrics};
+pub use metrics::{percentile, LaneCounters, LaneStats, ServeMetrics};
 pub use pool::{
-    BatchOutcome, EngineKind, EnginePool, PoolConfig, RequestFailure,
-    ServeEvent,
+    plan_round, BatchOutcome, EngineKind, EnginePool, PoolConfig,
+    RequestFailure, ServeEvent,
 };
 pub use request::{requests_from_tasks, ServeRequest, ServeResponse};
 pub use scheduler::{Policy, Scheduler};

@@ -30,6 +30,20 @@
 //! ([`crate::serve::ServeRequest::with_policy`]), and workers re-apply
 //! the engine-resident policy before touching a session that wants a
 //! different one.
+//!
+//! **Lane-fused batched decode** ([`PoolConfig::lane_fusion`], on by
+//! default): instead of stepping live sessions one batch-1 forward pass
+//! at a time, each round is planned by [`plan_round`] — sessions are
+//! grouped by exit policy (each distinct policy applied once per round,
+//! not once per adjacent policy change), and same-policy sessions with
+//! no recompute deficit form greedy lane groups (largest manifest
+//! `decode_lanes` size that fits) advanced through one batched XLA call
+//! per stage ([`DecodeSession::step_fused`]); the remainder and
+//! deficit-carrying sessions step solo. Fusion is output-invisible —
+//! `tests/batched_decode_equivalence.rs` pins token-for-token and
+//! exit-layer-for-exit-layer equality against unfused and serial
+//! decoding — and its activity (fused vs solo steps, lane occupancy,
+//! stages skipped) lands in [`ServeMetrics::lanes`].
 
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
@@ -44,7 +58,7 @@ use crate::inference::{
     PrefixCacheStats, PrefixCacheStore, SequentialEngine, StepEvent,
 };
 
-use super::metrics::ServeMetrics;
+use super::metrics::{LaneCounters, LaneStats, ServeMetrics};
 use super::request::{ServeRequest, ServeResponse};
 use super::scheduler::{Policy, Scheduler};
 
@@ -94,6 +108,12 @@ pub struct PoolConfig {
     /// engine does; pipelined workers log the capability gap once and
     /// serve without reuse.
     pub prefix_cache_positions: usize,
+    /// Fuse same-policy live sessions into batched decode lane groups
+    /// (manifest `decode_lanes` executables) instead of stepping each
+    /// with its own batch-1 pass. On engines or manifests without lane
+    /// executables this is a no-op; turning it off forces the solo path
+    /// everywhere (the lanes-off baseline benches compare against).
+    pub lane_fusion: bool,
 }
 
 /// The engine surface the pool needs: an exit-policy knob plus the
@@ -208,6 +228,8 @@ pub struct EnginePool {
     /// element; empty when the cache is disabled). The pool keeps the
     /// handle so batch metrics can read its counters.
     prefix_stores: Vec<Arc<PrefixCacheStore>>,
+    /// Pool-wide lane-fusion counters, shared by every worker.
+    lane_counters: Arc<LaneCounters>,
     /// Workers that have not reported `Fatal`.
     alive: usize,
     /// Every live worker has reported `Ready`.
@@ -235,6 +257,7 @@ impl EnginePool {
             } else {
                 Vec::new()
             };
+        let lane_counters = Arc::new(LaneCounters::default());
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let sched = Arc::clone(&sched);
@@ -242,9 +265,12 @@ impl EnginePool {
             let state = state.clone();
             let cfg = cfg.clone();
             let store = prefix_stores.first().cloned();
+            let counters = Arc::clone(&lane_counters);
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
-                .spawn(move || worker_main(w, state, cfg, sched, tx, store))
+                .spawn(move || {
+                    worker_main(w, state, cfg, sched, tx, store, counters)
+                })
                 .expect("spawn serve worker");
             workers.push(handle);
         }
@@ -259,9 +285,16 @@ impl EnginePool {
             stash: VecDeque::new(),
             workers,
             prefix_stores,
+            lane_counters,
             alive,
             ready: false,
         }
+    }
+
+    /// Lifetime lane-fusion counters of the pool (per-batch deltas are
+    /// in [`ServeMetrics::lanes`]).
+    pub fn lane_stats(&self) -> LaneStats {
+        self.lane_counters.stats()
     }
 
     pub fn config(&self) -> &PoolConfig {
@@ -370,6 +403,7 @@ impl EnginePool {
         // activity.
         let prefix_base: Vec<PrefixCacheStats> =
             self.prefix_stores.iter().map(|s| s.stats()).collect();
+        let lane_base = self.lane_counters.stats();
         let mut failures: Vec<RequestFailure> = Vec::new();
         for r in reqs {
             let id = r.id;
@@ -428,6 +462,7 @@ impl EnginePool {
         for (store, base) in self.prefix_stores.iter().zip(&prefix_base) {
             metrics.prefix.merge(&store.stats().since(base));
         }
+        metrics.lanes = self.lane_counters.stats().since(&lane_base);
         Ok(BatchOutcome { responses, failures, metrics })
     }
 
@@ -486,6 +521,7 @@ fn worker_main(
     sched: Arc<Scheduler>,
     events: Sender<WorkerEvent>,
     store: Option<Arc<PrefixCacheStore>>,
+    counters: Arc<LaneCounters>,
 ) {
     let mut engine: Box<dyn PoolEngine> = match build_engine(state, &cfg) {
         Ok(e) => e,
@@ -540,6 +576,7 @@ fn worker_main(
             if policy != current_policy {
                 engine.apply_policy(&policy);
                 current_policy = policy.clone();
+                counters.record_policy_apply();
             }
             let admitted = Instant::now();
             // Every popped request must produce exactly one completion
@@ -562,7 +599,9 @@ fn worker_main(
                         // already prefilled fine without the cache.
                         if !s.is_done()
                             && cached.cached_tokens < s.prompt_len()
-                            && st.would_admit(s.prompt_len())
+                            && st.would_admit(
+                                s.prompt_len().saturating_sub(1),
+                            )
                         {
                             match s.prefix_snapshot(be) {
                                 Ok(snap) => {
@@ -610,68 +649,293 @@ fn worker_main(
             // Every admission this round failed; go back to waiting.
             continue;
         }
-        // One decode step per live session, round-robin. Sessions that
-        // finish free their slot for the next admission pass.
-        let mut i = 0;
-        while i < live.len() {
-            if live[i].policy != current_policy {
-                engine.apply_policy(&live[i].policy);
-                current_policy = live[i].policy.clone();
-            }
-            let stepped = {
-                let l = &mut live[i];
-                let be = engine.backend();
-                std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    l.session.step(be)
-                }))
+        // One decode step per live session per round, planned as
+        // policy-ordered fused lane groups plus solo steps. Removals
+        // are deferred to the round's end so the plan's indices stay
+        // valid throughout.
+        let classes = policy_classes(&live);
+        let (lanes, fusable) = {
+            let be = engine.backend();
+            let lanes: Vec<usize> = if cfg.lane_fusion {
+                be.decode_lanes().to_vec()
+            } else {
+                Vec::new()
             };
-            match stepped {
-                Err(_) => {
-                    // The engine may be in a corrupt state: fail the
-                    // stepped request and every other live one, then
-                    // retire the worker.
-                    let id = live.remove(i).id;
-                    retire(worker, &events, id, &live);
-                    return;
-                }
-                Ok(Err(e)) => {
-                    let id = live.remove(i).id;
-                    events
-                        .send(WorkerEvent::Failed {
-                            id,
-                            worker,
-                            error: format!("{e:#}"),
-                        })
-                        .ok();
-                }
-                Ok(Ok(StepEvent::Token { token, exit_layer, done })) => {
-                    let now = Instant::now();
+            let fusable: Vec<bool> = if lanes.is_empty() {
+                vec![false; live.len()]
+            } else {
+                live.iter().map(|l| l.session.fusable(&*be)).collect()
+            };
+            (lanes, fusable)
+        };
+        let plan = plan_round(&classes, &fusable, &lanes);
+        // Sessions finished (Ok) or failed (Err(msg)) this round, by
+        // live index.
+        let mut retired: Vec<(usize, Option<String>)> = Vec::new();
+        // A worklist rather than a plain loop: a failed fused group is
+        // re-queued as solo steps (see below).
+        let mut queue: VecDeque<Vec<usize>> = plan.into_iter().collect();
+        while let Some(group) = queue.pop_front() {
+            let group = &group;
+            let gpolicy = live[group[0]].policy.clone();
+            if gpolicy != current_policy {
+                engine.apply_policy(&gpolicy);
+                current_policy = gpolicy;
+                counters.record_policy_apply();
+            }
+            if group.len() == 1 {
+                let i = group[0];
+                let stepped = {
                     let l = &mut live[i];
-                    l.token_seconds.push(
-                        now.duration_since(l.last_event).as_secs_f64(),
-                    );
-                    l.last_event = now;
-                    events
-                        .send(WorkerEvent::Token {
-                            id: l.id,
-                            worker,
-                            token,
-                            exit_layer,
-                        })
-                        .ok();
-                    if done.is_some() {
-                        complete(worker, &events, live.remove(i));
-                    } else {
-                        i += 1;
+                    let be = engine.backend();
+                    std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        l.session.step(be)
+                    }))
+                };
+                match stepped {
+                    Err(_) => {
+                        // The engine may be in a corrupt state: fail
+                        // the stepped request and every other live one,
+                        // then retire the worker. Outcomes that predate
+                        // the panic still count — deliver the round's
+                        // deferred completions/failures first.
+                        let below =
+                            retired.iter().filter(|(j, _)| *j < i).count();
+                        settle_round(worker, &events, &mut live, retired);
+                        let id = live.remove(i - below).id;
+                        retire(worker, &events, id, &live);
+                        return;
+                    }
+                    Ok(Err(e)) => {
+                        retired.push((i, Some(format!("{e:#}"))));
+                    }
+                    Ok(Ok(StepEvent::Token { token, exit_layer, done })) => {
+                        counters.record_solo();
+                        let now = Instant::now();
+                        let l = &mut live[i];
+                        l.token_seconds.push(
+                            now.duration_since(l.last_event).as_secs_f64(),
+                        );
+                        l.last_event = now;
+                        events
+                            .send(WorkerEvent::Token {
+                                id: l.id,
+                                worker,
+                                token,
+                                exit_layer,
+                            })
+                            .ok();
+                        if done.is_some() {
+                            retired.push((i, None));
+                        }
+                    }
+                    Ok(Ok(StepEvent::Finished(_))) => {
+                        retired.push((i, None));
                     }
                 }
-                Ok(Ok(StepEvent::Finished(_))) => {
-                    complete(worker, &events, live.remove(i));
+            } else {
+                // Fused lane group: every member advances one token in
+                // a single batched pass per stage.
+                let mut members: Vec<(usize, &mut Live)> = live
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| group.contains(i))
+                    .collect();
+                let stepped = {
+                    let mut sess: Vec<&mut DecodeSession> = members
+                        .iter_mut()
+                        .map(|(_, l)| &mut l.session)
+                        .collect();
+                    let be = engine.backend();
+                    std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        DecodeSession::step_fused(be, &mut sess)
+                    }))
+                };
+                match stepped {
+                    Err(_) => {
+                        // As in the solo panic arm: deliver the round's
+                        // deferred outcomes, then fail the group and
+                        // every other live session.
+                        drop(members);
+                        let i = group[0];
+                        let below =
+                            retired.iter().filter(|(j, _)| *j < i).count();
+                        settle_round(worker, &events, &mut live, retired);
+                        let id = live.remove(i - below).id;
+                        retire(worker, &events, id, &live);
+                        return;
+                    }
+                    Ok(Err(e)) => {
+                        // The fused pass failed before touching any
+                        // lane's session state (`run_lanes` defers its
+                        // cache scatters until the whole pass has
+                        // succeeded; stats accounting is deferred the
+                        // same way): retry every member on the solo
+                        // path this round, so a poisoned session fails
+                        // alone instead of wiping the group — the
+                        // PR-2 isolation property, kept under fusion.
+                        drop(members);
+                        eprintln!(
+                            "[serve] worker {worker}: fused lane group \
+                             of {} failed; retrying solo: {e:#}",
+                            group.len()
+                        );
+                        for &i in group.iter().rev() {
+                            queue.push_front(vec![i]);
+                        }
+                    }
+                    Ok(Ok(fused)) => {
+                        counters
+                            .record_fused(group.len(), fused.stages_skipped);
+                        let now = Instant::now();
+                        for ((i, l), ev) in
+                            members.iter_mut().zip(fused.events)
+                        {
+                            let StepEvent::Token {
+                                token,
+                                exit_layer,
+                                done,
+                            } = ev
+                            else {
+                                // Fusable sessions always decode.
+                                retired.push((*i, None));
+                                continue;
+                            };
+                            l.token_seconds.push(
+                                now.duration_since(l.last_event)
+                                    .as_secs_f64(),
+                            );
+                            l.last_event = now;
+                            events
+                                .send(WorkerEvent::Token {
+                                    id: l.id,
+                                    worker,
+                                    token,
+                                    exit_layer,
+                                })
+                                .ok();
+                            if done.is_some() {
+                                retired.push((*i, None));
+                            }
+                        }
+                    }
                 }
             }
         }
+        // Retire finished/failed sessions; their slots free up for the
+        // next admission pass.
+        settle_round(worker, &events, &mut live, retired);
     }
     engine.finish();
+}
+
+/// Deliver a round's deferred outcomes — `(live index, Some(error))`
+/// failures and `(live index, None)` completions — removing each from
+/// the live set, highest index first so the recorded indices stay
+/// valid.
+fn settle_round(
+    worker: usize,
+    events: &Sender<WorkerEvent>,
+    live: &mut Vec<Live>,
+    mut retired: Vec<(usize, Option<String>)>,
+) {
+    retired.sort_by(|a, b| b.0.cmp(&a.0));
+    for (i, err) in retired {
+        let l = live.remove(i);
+        match err {
+            Some(error) => {
+                events
+                    .send(WorkerEvent::Failed { id: l.id, worker, error })
+                    .ok();
+            }
+            None => complete(worker, events, l),
+        }
+    }
+}
+
+/// Dense policy-class ids over the live set: sessions with equal exit
+/// policies share an id; ids are assigned in first-appearance order.
+fn policy_classes(live: &[Live]) -> Vec<usize> {
+    let mut classes: Vec<&ExitPolicy> = Vec::new();
+    live.iter()
+        .map(|l| {
+            match classes.iter().position(|p| **p == l.policy) {
+                Some(i) => i,
+                None => {
+                    classes.push(&l.policy);
+                    classes.len() - 1
+                }
+            }
+        })
+        .collect()
+}
+
+/// Plan one continuous-batching round over the live sessions.
+///
+/// Inputs are parallel per-session slices: `classes[i]` is session
+/// `i`'s policy class ([`policy_classes`]), `fusable[i]` whether it may
+/// join a fused lane group ([`DecodeSession::fusable`]); `lanes` is the
+/// backend's fused group-size ladder (sorted ascending; sizes < 2 are
+/// ignored, empty disables fusion).
+///
+/// Returns step groups covering every session exactly once. Invariants
+/// (property-tested below):
+///
+/// - groups are contiguous per policy class, classes in
+///   first-appearance order — each distinct policy is applied once per
+///   round instead of once per adjacent policy change;
+/// - a group of size > 1 is a fused lane group: its size is one of
+///   `lanes` (greedy, largest that fits the class's remaining fusable
+///   sessions), all members share a class and are fusable;
+/// - non-fusable sessions (recompute deficit, capacity edge) always
+///   step solo.
+pub fn plan_round(
+    classes: &[usize],
+    fusable: &[bool],
+    lanes: &[usize],
+) -> Vec<Vec<usize>> {
+    assert_eq!(classes.len(), fusable.len());
+    let lanes: Vec<usize> =
+        lanes.iter().copied().filter(|&b| b >= 2).collect();
+    let mut order: Vec<usize> = Vec::new();
+    let mut by_class: Vec<Vec<usize>> = Vec::new();
+    for (i, &c) in classes.iter().enumerate() {
+        if c >= by_class.len() {
+            by_class.resize(c + 1, Vec::new());
+        }
+        if by_class[c].is_empty() {
+            order.push(c);
+        }
+        by_class[c].push(i);
+    }
+    let mut groups = Vec::new();
+    for c in order {
+        let members = &by_class[c];
+        let eligible: Vec<usize> =
+            members.iter().copied().filter(|&i| fusable[i]).collect();
+        let mut k = 0;
+        while k < eligible.len() {
+            match lanes
+                .iter()
+                .copied()
+                .filter(|&b| b <= eligible.len() - k)
+                .max()
+            {
+                Some(b) => {
+                    groups.push(eligible[k..k + b].to_vec());
+                    k += b;
+                }
+                None => break,
+            }
+        }
+        for &i in &eligible[k..] {
+            groups.push(vec![i]);
+        }
+        for &i in members.iter().filter(|&&i| !fusable[i]) {
+            groups.push(vec![i]);
+        }
+    }
+    groups
 }
 
 /// Emit the `Done` event for a finished live session.
@@ -742,4 +1006,137 @@ fn build_engine(
                 .context("building pipelined engine")?,
         ),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    /// How many `apply_policy` calls executing `plan` in order costs,
+    /// starting from a resident policy unequal to every class — the
+    /// quantity the policy-churn fix is about.
+    fn policy_swaps(plan: &[Vec<usize>], classes: &[usize]) -> usize {
+        let mut swaps = 0;
+        let mut current = usize::MAX;
+        for g in plan {
+            if classes[g[0]] != current {
+                swaps += 1;
+                current = classes[g[0]];
+            }
+        }
+        swaps
+    }
+
+    #[test]
+    fn lane_plan_greedy_group_formation() {
+        // 5 fusable same-policy sessions over lanes [2, 4]: one 4-lane
+        // group, remainder solo.
+        let classes = [0usize; 5];
+        let fusable = [true; 5];
+        let plan = plan_round(&classes, &fusable, &[2, 4]);
+        assert_eq!(plan, vec![vec![0, 1, 2, 3], vec![4]]);
+        // Lanes off: everyone solo.
+        let plan = plan_round(&classes, &fusable, &[]);
+        assert_eq!(plan.len(), 5);
+        assert!(plan.iter().all(|g| g.len() == 1));
+        // Deficit-carrying sessions (non-fusable) step solo even when a
+        // lane would fit.
+        let plan =
+            plan_round(&classes, &[true, false, true, false, true], &[2, 4]);
+        assert_eq!(plan, vec![vec![0, 2], vec![4], vec![1], vec![3]]);
+    }
+
+    /// Regression (policy churn): the pre-lane loop applied the engine
+    /// policy once per adjacent policy change — an interleaved live set
+    /// swapped once per step per session. The planned round applies
+    /// each distinct policy exactly once.
+    #[test]
+    fn lane_plan_applies_each_policy_once_per_round() {
+        let classes = [0usize, 1, 0, 1, 0, 1];
+        let fusable = [true; 6];
+        // The old round-robin order would swap 6 times.
+        let naive: Vec<Vec<usize>> = (0..6).map(|i| vec![i]).collect();
+        assert_eq!(policy_swaps(&naive, &classes), 6);
+        for lanes in [&[][..], &[2, 4][..]] {
+            let plan = plan_round(&classes, &fusable, lanes);
+            assert_eq!(
+                policy_swaps(&plan, &classes),
+                2,
+                "lanes {lanes:?}: one apply per distinct policy"
+            );
+        }
+        // Mixed-policy sessions never share a fused group.
+        let plan = plan_round(&classes, &fusable, &[2, 4]);
+        for g in &plan {
+            assert!(
+                g.iter().all(|&i| classes[i] == classes[g[0]]),
+                "mixed-policy group {g:?}"
+            );
+        }
+    }
+
+    /// The ISSUE's lane-group invariants over random live sets: every
+    /// session planned exactly once, fused sizes come from the ladder
+    /// and never exceed it, groups are policy-pure, non-fusable
+    /// sessions always solo, and each policy is applied once per round.
+    #[test]
+    fn lane_plan_invariants_hold_for_arbitrary_live_sets() {
+        proptest::check("plan_round invariants", 256, |rng| {
+            let n = rng.range(0, 24);
+            let n_classes = rng.range(1, 5);
+            let classes: Vec<usize> =
+                (0..n).map(|_| rng.below(n_classes)).collect();
+            let fusable: Vec<bool> =
+                (0..n).map(|_| rng.below(3) > 0).collect();
+            let mut lanes: Vec<usize> = (0..rng.range(0, 4))
+                .map(|_| rng.range(2, 9))
+                .collect();
+            lanes.sort_unstable();
+            lanes.dedup();
+            let plan = plan_round(&classes, &fusable, &lanes);
+            let mut seen = vec![0usize; n];
+            for g in &plan {
+                if g.is_empty() {
+                    return Err("empty group".into());
+                }
+                for &i in g {
+                    if i >= n {
+                        return Err(format!("index {i} out of range"));
+                    }
+                    seen[i] += 1;
+                }
+                if g.len() > 1 {
+                    if !lanes.contains(&g.len()) {
+                        return Err(format!(
+                            "fused group size {} not in ladder {lanes:?}",
+                            g.len()
+                        ));
+                    }
+                    if g.iter().any(|&i| !fusable[i]) {
+                        return Err(format!(
+                            "non-fusable session fused: {g:?}"
+                        ));
+                    }
+                }
+                if g.iter().any(|&i| classes[i] != classes[g[0]]) {
+                    return Err(format!("mixed-policy group {g:?}"));
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err(format!(
+                    "sessions not planned exactly once: {seen:?}"
+                ));
+            }
+            let distinct: std::collections::BTreeSet<usize> =
+                classes.iter().copied().collect();
+            if policy_swaps(&plan, &classes) != distinct.len() {
+                return Err(format!(
+                    "policy applied more than once per round: plan \
+                     {plan:?} classes {classes:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
 }

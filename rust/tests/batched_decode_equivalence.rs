@@ -1,0 +1,519 @@
+//! Integration: lane-fused batched decode must be **output-invisible**.
+//!
+//! Serving N concurrent sessions through the fused `decode_b{B}_w1`
+//! executables (one batched XLA call per stage, per-lane exit decisions)
+//! must produce token-for-token and exit-layer-for-exit-layer the same
+//! streams as the solo windowed path — across exit policies (including
+//! the `Confidence{1.0}` and `Never` full-model baselines), mixed
+//! per-request policies, mid-flight admission, and with the prefix KV
+//! cache on or off. The speedup claim is separate and observable:
+//! fused lane groups must actually form under load (decode steps per
+//! XLA dispatch > 1 at `max_concurrent` >= 4).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{
+    shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
+};
+use eellm::inference::{
+    DecodeBackend, DecodeSession, ExitPolicy, ModelState, SequentialEngine,
+    StepEvent,
+};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    BatchOutcome, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
+    ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so confidences are meaningful (same recipe as
+/// the sibling equivalence suites).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+type Streams = BTreeMap<u64, Vec<(i32, usize)>>;
+
+/// Serve `reqs` on a one-worker pool and collect each request's
+/// (token, exit layer) stream from the live event feed.
+fn pooled_streams(
+    state: &ModelState,
+    policy: ExitPolicy,
+    reqs: Vec<ServeRequest>,
+    max_concurrent: usize,
+    lane_fusion: bool,
+    prefix_cache_positions: usize,
+) -> (Streams, BatchOutcome) {
+    let mut pool = EnginePool::new(
+        state.clone(),
+        PoolConfig {
+            workers: 1,
+            engine: EngineKind::Sequential,
+            policy,
+            sched: Policy::Fifo,
+            max_concurrent,
+            prefix_cache_positions,
+            lane_fusion,
+        },
+    );
+    let mut streams: Streams = BTreeMap::new();
+    let out = pool
+        .run_batch_streamed(reqs, |ev| {
+            if let ServeEvent::Token { id, token, exit_layer, .. } = ev {
+                streams.entry(*id).or_default().push((*token, *exit_layer));
+            }
+        })
+        .unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    (streams, out)
+}
+
+/// Drain one serial session, collecting its (token, exit layer) stream.
+fn serial_stream(
+    backend: &mut dyn DecodeBackend,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<(i32, usize)> {
+    let mut s = DecodeSession::new_text(backend, prompt, max_new).unwrap();
+    s.prefill(backend).unwrap();
+    let mut out = Vec::new();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    out
+}
+
+const PROMPTS: [&str; 6] = [
+    "the capital of ",
+    "question: what is the ",
+    "count: 3 4 5 ",
+    "abc: a b c d ",
+    "the color of ",
+    "fact: the capital ",
+];
+
+/// The acceptance grid: pooled streams with lanes enabled equal the
+/// lanes-disabled pool and serial decoding, across >= 3 exit policies
+/// including the `Confidence{1.0}` and `Never` full-model baselines.
+#[test]
+fn lanes_match_unfused_and_serial_across_policies() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    assert!(
+        !man.decode_lanes.is_empty(),
+        "ee-tiny manifest lists no decode_lanes; rebuild artifacts"
+    );
+    let state = trained_state(&man, 60);
+    let policies = [
+        ExitPolicy::confidence(0.2),
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::confidence(1.0),
+        ExitPolicy::Never,
+        ExitPolicy::Entropy { max_nats: 1.0 },
+    ];
+    for policy in &policies {
+        let reqs: Vec<ServeRequest> = PROMPTS
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ServeRequest::new(i as u64, *p, 12))
+            .collect();
+        let (on, m_on) = pooled_streams(
+            &state,
+            policy.clone(),
+            reqs.clone(),
+            4,
+            true,
+            0,
+        );
+        let (off, _) =
+            pooled_streams(&state, policy.clone(), reqs, 4, false, 0);
+        assert_eq!(
+            on, off,
+            "policy {policy}: lanes-on pool diverged from lanes-off"
+        );
+        let mut serial =
+            SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+        for (i, p) in PROMPTS.iter().enumerate() {
+            let want = serial_stream(&mut serial, p, 12);
+            assert!(!want.is_empty(), "policy {policy}: empty stream");
+            assert_eq!(
+                on[&(i as u64)],
+                want,
+                "policy {policy}, prompt {p:?}: pooled lanes-on diverged \
+                 from serial"
+            );
+        }
+        // Same-policy live sessions must actually fuse (the un-fusable
+        // exceptions are deficit-healing rounds after early exits).
+        assert!(
+            m_on.metrics.lanes.fused_steps > 0,
+            "policy {policy}: no fused steps despite 4 live sessions"
+        );
+    }
+}
+
+/// Mixed per-request policies: lanes group same-policy sessions only,
+/// and every stream still equals the lanes-off pool and the per-policy
+/// serial engines.
+#[test]
+fn mixed_policy_batches_match_unfused_and_serial() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policies = [
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::Never,
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::confidence(0.2),
+        ExitPolicy::Never,
+        ExitPolicy::confidence(0.6),
+    ];
+    let reqs: Vec<ServeRequest> = PROMPTS
+        .iter()
+        .zip(&policies)
+        .enumerate()
+        .map(|(i, (p, pol))| {
+            ServeRequest::new(i as u64, *p, 12).with_policy(pol.clone())
+        })
+        .collect();
+    // Pool default differs from every request: a leak shows up as a
+    // diverged stream.
+    let default = ExitPolicy::confidence(0.9);
+    let (on, m_on) =
+        pooled_streams(&state, default.clone(), reqs.clone(), 6, true, 0);
+    let (off, m_off) = pooled_streams(&state, default, reqs, 6, false, 0);
+    assert_eq!(on, off, "mixed-policy lanes-on diverged from lanes-off");
+    for (i, (p, pol)) in PROMPTS.iter().zip(&policies).enumerate() {
+        let mut serial =
+            SequentialEngine::new(state.clone(), pol.clone()).unwrap();
+        assert_eq!(
+            on[&(i as u64)],
+            serial_stream(&mut serial, p, 12),
+            "request {i} (policy {pol}) diverged from serial"
+        );
+    }
+    // Policy-churn regression: policy-ordered rounds apply each distinct
+    // policy once per round; the pre-lane loop swapped on every adjacent
+    // policy change (~once per decode step on this interleaved set).
+    for m in [&m_on, &m_off] {
+        let l = &m.metrics.lanes;
+        let steps = l.fused_steps + l.solo_steps;
+        assert!(
+            l.policy_applies < steps,
+            "policy churn: {} applies for {steps} decode steps \
+             (interleaved policies should batch per round): {l:?}",
+            l.policy_applies
+        );
+    }
+}
+
+/// Mid-flight admission: more requests than live slots, so sessions
+/// join while earlier ones are mid-generation and lane groups reshape
+/// every round. Streams must match the lanes-off pool exactly.
+#[test]
+fn mid_flight_admission_matches_unfused() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let reqs: Vec<ServeRequest> = (0..10)
+        .map(|i| {
+            let p = PROMPTS[i % PROMPTS.len()];
+            // Varied budgets stagger completions, forcing admissions
+            // into partially-drained rounds.
+            ServeRequest::new(i as u64, p, 6 + (i % 5))
+        })
+        .collect();
+    let policy = ExitPolicy::confidence(0.4);
+    let (on, m_on) =
+        pooled_streams(&state, policy.clone(), reqs.clone(), 3, true, 0);
+    let (off, _) = pooled_streams(&state, policy, reqs, 3, false, 0);
+    assert_eq!(on, off, "mid-flight admission diverged under lanes");
+    assert!(m_on.metrics.lanes.fused_steps > 0, "no fusion under churn");
+}
+
+/// Prefix-cache interaction: restored-prefix sessions join lane groups
+/// like any other, and all four (lanes x cache) combinations produce
+/// identical streams. Also pins the bytes-accurate snapshot slicing:
+/// a snapshot holds its live prefix, not the cache capacity.
+#[test]
+fn prefix_cache_and_lanes_compose() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let max_seq = man.model.max_seq;
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let spec = SharedPrefixSpec {
+        seed: 11,
+        n_groups: 2,
+        requests_per_group: 4,
+        prefix_bytes: max_seq / 2,
+    };
+    let prompts = shared_prefix_prompts(&spec, &corpus.facts);
+    let reqs: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest::new(i as u64, p.as_str(), 8))
+        .collect();
+    let policy = ExitPolicy::confidence(0.6);
+    let mut all: Vec<Streams> = Vec::new();
+    for &lanes in &[false, true] {
+        for &budget in &[0usize, 8 * max_seq] {
+            let (streams, out) = pooled_streams(
+                &state,
+                policy.clone(),
+                reqs.clone(),
+                4,
+                lanes,
+                budget,
+            );
+            if budget > 0 {
+                assert!(
+                    out.metrics.prefix.hits > 0,
+                    "lanes {lanes}: no prefix hits on shared prompts"
+                );
+            }
+            all.push(streams);
+        }
+    }
+    for s in &all[1..] {
+        assert_eq!(
+            *s, all[0],
+            "streams diverged across lanes x prefix-cache combinations"
+        );
+    }
+
+    // Bytes-accurate snapshots: a short prompt's snapshot is sliced to
+    // its live prefix along the position axis.
+    let mut eng =
+        SequentialEngine::new(state.clone(), ExitPolicy::confidence(0.6))
+            .unwrap();
+    let mut sess =
+        DecodeSession::new_text(&mut eng, "the capital of ", 8).unwrap();
+    sess.prefill(&mut eng).unwrap();
+    let snap = sess.prefix_snapshot(&mut eng).unwrap();
+    let prompt_positions = "the capital of ".len() + 1; // + BOS
+    for (s, t) in snap.stage_caches.iter().enumerate() {
+        assert_eq!(
+            t.shape[2],
+            prompt_positions - 1,
+            "stage {s}: snapshot not sliced to the live prefix"
+        );
+        assert!(t.shape[2] < max_seq, "stage {s}: full-capacity copy");
+    }
+    assert_eq!(snap.positions(), prompt_positions - 1);
+}
+
+/// The observability acceptance bar: on the shared-prefix workload at
+/// max_concurrent 4, fused groups form and decode steps per XLA
+/// dispatch exceed 1 (N live sessions no longer cost N dispatch
+/// rounds).
+#[test]
+fn fused_groups_form_under_load() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let spec = SharedPrefixSpec {
+        seed: 11,
+        n_groups: 2,
+        requests_per_group: 6,
+        prefix_bytes: man.model.max_seq / 2,
+    };
+    let reqs: Vec<ServeRequest> =
+        shared_prefix_prompts(&spec, &corpus.facts)
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| ServeRequest::new(i as u64, p, 8))
+            .collect();
+    let (_, out) = pooled_streams(
+        &state,
+        ExitPolicy::confidence(0.6),
+        reqs,
+        4,
+        true,
+        0,
+    );
+    let l = &out.metrics.lanes;
+    assert!(l.fused_calls > 0, "no fused calls: {l:?}");
+    assert!(
+        l.steps_per_dispatch() > 1.0,
+        "steps per dispatch {:.2} <= 1 at max_concurrent 4: {l:?}",
+        l.steps_per_dispatch()
+    );
+    assert!(
+        l.occupancy.iter().any(|&(w, _)| w >= 2),
+        "no multi-lane occupancy recorded: {l:?}"
+    );
+}
+
+/// Session-level equivalence, no pool in the way: four sessions stepped
+/// through `step_fused` produce exactly the streams of four sessions
+/// stepped solo, and their final outputs (stats included) agree.
+#[test]
+fn step_fused_equals_solo_stepping() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    for policy in [
+        ExitPolicy::confidence(0.2),
+        ExitPolicy::confidence(0.7),
+        ExitPolicy::Never,
+    ] {
+        let mut eng =
+            SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+        assert!(
+            !DecodeBackend::decode_lanes(&eng).is_empty(),
+            "engine loaded no lane executables"
+        );
+        let prompts = &PROMPTS[..4];
+        // Solo reference streams.
+        let mut want = Vec::new();
+        for p in prompts {
+            want.push(serial_stream(&mut eng, p, 10));
+        }
+        // Fused: the same four prompts as concurrent sessions. Sessions
+        // drop out as they finish; un-fusable rounds (deficit healing)
+        // step solo, exactly like the pool.
+        let mut sessions: Vec<(usize, DecodeSession)> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut s =
+                    DecodeSession::new_text(&mut eng, p, 10).unwrap();
+                s.prefill(&mut eng).unwrap();
+                (i, s)
+            })
+            .collect();
+        let mut got: Vec<Vec<(i32, usize)>> = vec![Vec::new(); 4];
+        let lanes: Vec<usize> = DecodeBackend::decode_lanes(&eng).to_vec();
+        while !sessions.is_empty() {
+            let fusable: Vec<bool> = sessions
+                .iter()
+                .map(|(_, s)| s.fusable(&eng))
+                .collect();
+            let n_fusable = fusable.iter().filter(|&&f| f).count();
+            let width = lanes
+                .iter()
+                .copied()
+                .filter(|&b| b <= n_fusable)
+                .max();
+            if let Some(width) = width {
+                let mut group: Vec<&mut DecodeSession> = Vec::new();
+                let mut ids = Vec::new();
+                for ((id, s), &f) in sessions.iter_mut().zip(&fusable) {
+                    if f && group.len() < width {
+                        ids.push(*id);
+                        group.push(s);
+                    }
+                }
+                let fused =
+                    DecodeSession::step_fused(&mut eng, &mut group)
+                        .unwrap();
+                for (id, ev) in ids.iter().zip(fused.events) {
+                    if let StepEvent::Token { token, exit_layer, .. } = ev
+                    {
+                        got[*id].push((token, exit_layer));
+                    }
+                }
+            }
+            // Everyone not fused this round steps solo (deficit heals,
+            // leftovers).
+            let fused_now: std::collections::BTreeSet<usize> = {
+                let width = width.unwrap_or(0);
+                sessions
+                    .iter()
+                    .zip(&fusable)
+                    .filter(|(_, &f)| f)
+                    .map(|((id, _), _)| *id)
+                    .take(width)
+                    .collect()
+            };
+            for (id, s) in sessions.iter_mut() {
+                if fused_now.contains(id) || s.is_done() {
+                    continue;
+                }
+                if let StepEvent::Token { token, exit_layer, .. } =
+                    s.step(&mut eng).unwrap()
+                {
+                    got[*id].push((token, exit_layer));
+                }
+            }
+            sessions.retain(|(_, s)| !s.is_done());
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(!w.is_empty());
+            assert_eq!(
+                g, w,
+                "policy {policy}, prompt {i}: fused stepping diverged \
+                 from solo"
+            );
+        }
+    }
+}

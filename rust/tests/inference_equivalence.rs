@@ -191,6 +191,7 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 sched: Policy::ShortestPromptFirst,
                 max_concurrent: 2,
                 prefix_cache_positions: 0,
+                lane_fusion: false,
             },
         );
         let reqs: Vec<ServeRequest> = prompts
@@ -274,6 +275,7 @@ fn continuous_batching_streams_and_admits_mid_flight() {
             sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
+            lane_fusion: false,
         },
     );
     let reqs: Vec<ServeRequest> = long
@@ -378,6 +380,7 @@ fn batch_reports_per_request_failures() {
             sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
+            lane_fusion: false,
         },
     );
     let out = pool.run_batch(reqs).unwrap();

@@ -296,6 +296,7 @@ fn pooled_per_request_policies_match_serial() {
             sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
+            lane_fusion: false,
         },
     );
     let reqs: Vec<ServeRequest> = PROMPTS

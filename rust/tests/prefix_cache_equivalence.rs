@@ -270,6 +270,7 @@ fn pooled_prefix_cache_matches_disabled_and_saves_prefill() {
                     sched: Policy::Fifo,
                     max_concurrent: 2,
                     prefix_cache_positions: budget,
+                    lane_fusion: false,
                 },
             );
             let reqs: Vec<ServeRequest> = prompts
@@ -359,6 +360,7 @@ fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
                     sched: Policy::Fifo,
                     max_concurrent,
                     prefix_cache_positions: 16 * man.model.max_seq,
+                    lane_fusion: false,
                 },
             );
             let stores: Vec<_> = pool.prefix_stores().to_vec();
