@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::data::tokenizer::{ByteTokenizer, BOS_ID, EOS_ID};
 use crate::runtime::artifacts::Manifest;
@@ -228,6 +228,73 @@ pub fn is_stop_token(t: i32) -> bool {
 
 pub fn detokenize(tokens: &[i32]) -> String {
     ByteTokenizer.decode(tokens)
+}
+
+/// Slice a full-capacity per-stage KV cache `[layers, 2, S, heads, dim]`
+/// down to its first `positions` entries along the position axis — the
+/// bytes-accurate snapshot format every snapshot-capable backend shares
+/// (`DecodeBackend::snapshot_caches`). Entries past `positions` are
+/// zeros-by-construction (prefill never wrote them), so nothing is lost.
+pub fn slice_cache_positions(
+    cache: &HostTensor,
+    shape: &[usize],
+    positions: usize,
+) -> Result<HostTensor> {
+    ensure!(
+        cache.shape.as_slice() == shape
+            && shape.len() == 5
+            && shape[1] == 2,
+        "cache shape {:?} does not match stage cache shape {:?}",
+        cache.shape,
+        shape
+    );
+    let held = positions.min(shape[2]);
+    let row = shape[3] * shape[4];
+    let src_block = shape[2] * row;
+    let dst_block = held * row;
+    let mut data = vec![0f32; shape[0] * 2 * dst_block];
+    for blk in 0..shape[0] * 2 {
+        data[blk * dst_block..][..dst_block]
+            .copy_from_slice(&cache.data[blk * src_block..][..dst_block]);
+    }
+    Ok(HostTensor::new(vec![shape[0], 2, held, shape[3], shape[4]], data))
+}
+
+/// Zero-pad a position-sliced snapshot back to the full cache capacity
+/// `shape` (the inverse of [`slice_cache_positions`]); full-capacity
+/// snapshots pass through unchanged. Every non-position dimension is
+/// validated, so a snapshot from a differently shaped model is rejected
+/// instead of silently misread.
+pub fn pad_cache_to_capacity(
+    snap: &HostTensor,
+    shape: &[usize],
+) -> Result<HostTensor> {
+    if snap.shape.as_slice() == shape {
+        return Ok(snap.clone());
+    }
+    ensure!(
+        snap.shape.len() == 5
+            && shape.len() == 5
+            && snap.shape[0] == shape[0]
+            && snap.shape[1] == 2
+            && shape[1] == 2
+            && snap.shape[2] <= shape[2]
+            && snap.shape[3] == shape[3]
+            && snap.shape[4] == shape[4],
+        "cache snapshot shape {:?} does not fit capacity {:?}",
+        snap.shape,
+        shape
+    );
+    let held = snap.shape[2];
+    let row = shape[3] * shape[4];
+    let src_block = held * row;
+    let dst_block = shape[2] * row;
+    let mut full = HostTensor::zeros(shape);
+    for blk in 0..shape[0] * 2 {
+        full.data[blk * dst_block..][..src_block]
+            .copy_from_slice(&snap.data[blk * src_block..][..src_block]);
+    }
+    Ok(full)
 }
 
 #[cfg(test)]

@@ -28,19 +28,25 @@
 //! (implemented by each engine), which is what lets the serving layer
 //! interleave many requests over one engine (continuous batching) and
 //! stream tokens as they are emitted. `generate_tokens` on either engine
-//! is just a session drained to completion. The sequential engine
-//! additionally fuses many sessions into one batched pass per stage
-//! ([`DecodeBackend::run_lanes`] over the manifest's `decode_lanes`
-//! executables; [`DecodeSession::step_fused`]), with per-lane exit
-//! decisions — the serving pool's compute-batching hot path.
+//! is just a session drained to completion. Each engine also batches
+//! many sessions its own way: the sequential engine fuses them into one
+//! batched pass per stage ([`DecodeBackend::run_lanes`] over the
+//! manifest's `decode_lanes` executables; [`DecodeSession::step_fused`]),
+//! with per-lane exit decisions; the pipelined engine interleaves their
+//! width-1 windows down its stage chain
+//! ([`DecodeBackend::interleaves_windows`];
+//! [`DecodeSession::step_interleaved`]), so one session's KV back-fill
+//! fills another session's pipeline bubble. Both are the serving pool's
+//! hot paths, and both are output-invisible.
 //!
 //! [`prefix_cache`] adds shared-prefix KV reuse on top of the sessions:
 //! a token-trie keyed store of immutable post-prefill cache snapshots
 //! (refcounted, LRU-evicted under a position budget), so sessions whose
-//! prompts share a prefix restore it and prefill only the suffix. Only
-//! backends whose sessions own snapshottable caches participate
-//! ([`DecodeBackend::supports_cache_snapshots`]): the sequential engine
-//! does, the pipelined engine declines.
+//! prompts share a prefix restore it and prefill only the suffix. Both
+//! engines participate ([`DecodeBackend::supports_cache_snapshots`]):
+//! sequential sessions own their caches outright, and the pipelined
+//! engine drains per-stage session slots over its chain's snapshot
+//! protocol.
 //!
 //! [`probe`] reproduces Table 4: per-exit predictions + confidences for
 //! every generated token.

@@ -1,5 +1,6 @@
 //! Pipeline-based early-exit inference — the paper's novel Section 4
-//! method, as a real thread-per-stage pipeline.
+//! method, as a real thread-per-stage pipeline multiplexing many decode
+//! sessions down one stage chain.
 //!
 //! When stage s's entry exit fires for the current token, two things happen
 //! *in parallel* (Figure 5):
@@ -16,26 +17,65 @@
 //! stage — exactly the constraint the paper's latency analysis assumes.
 //! The generation latency of a token emitted at stage s is therefore the
 //! forward time of stages 0..s (plus queueing), not of the full model.
+//!
+//! **Session multiplexing.** Every [`Work::Window`] carries a session id
+//! and every stage keeps a per-session KV-cache slot map, so the leader
+//! interleaves windows from many live [`DecodeSession`]s down the one
+//! chain: while session A's token back-fills the deep stages, session B's
+//! next token occupies the shallow ones — one session's KV back-fill
+//! fills another session's pipeline bubble, the serving-side analogue of
+//! the paper's training-time bubble filling. Sessions open with
+//! [`Work::Open`] (a fresh zeroed slot, or one restored from a prefix
+//! snapshot), close with [`Work::Close`] (acked by the last stage), and
+//! snapshot with [`Work::Snapshot`]. The snapshot message's FIFO
+//! traversal *is* the quiesce/drain protocol: by the time a stage
+//! processes it, every earlier window of that session has been applied,
+//! so the per-stage cache reads are consistent without stopping the rest
+//! of the chain. Each slot also carries the [`ExitPolicy`] captured when
+//! the session opened, so interleaved sessions may decode under
+//! different policies without any engine-resident swap.
+//!
+//! A stage that fails (error or panic) reports [`ToLeader::StageError`]
+//! and forwards `Shutdown` down-chain before exiting, so the leader gets
+//! an error instead of blocking forever on an ack from a dead stage
+//! while shallower stages keep its channel open.
 
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
-use super::common::{GenOutput, ModelState};
+use super::common::{
+    pad_cache_to_capacity, slice_cache_positions, GenOutput, ModelState,
+};
 use super::policy::{summarize_logits, ExitPolicy};
 use super::session::{
     DecodeBackend, DecodeSession, SessionCaches, WindowOutcome,
 };
 
-/// Work flowing down the stage chain.
+/// Work flowing down the stage chain. Every variant that touches decode
+/// state names its session; stage FIFO order guarantees an `Open`
+/// precedes its session's windows and a `Snapshot` follows them.
 enum Work {
-    /// Decode a window of tokens at [pos0, pos0+width).
+    /// Start a session: each stage installs a KV-cache slot for it —
+    /// zeroed, or rebuilt from `restore[s]` (a full-capacity per-stage
+    /// snapshot) — and captures `policy` for the session's exit
+    /// decisions. Fire-and-forget: FIFO ordering makes an ack redundant.
+    Open {
+        session: u64,
+        policy: ExitPolicy,
+        restore: Option<Arc<Vec<HostTensor>>>,
+    },
+    /// Decode a window of tokens at [pos0, pos0+width) for `session`.
     /// `payload` is tokens for stage 0, hidden states beyond.
     Window {
+        session: u64,
         width: usize,
         pos0: usize,
         tokens: Vec<i32>,
@@ -46,36 +86,64 @@ enum Work {
         /// Exit checks enabled (generation steps, not prefill).
         check_exits: bool,
     },
-    /// Clear KV caches, then propagate; last stage acks the leader.
-    Reset,
+    /// End a session: each stage drops its slot; the last stage acks the
+    /// leader with [`ToLeader::Closed`].
+    Close { session: u64 },
+    /// Read a session's per-stage KV caches, sliced to the first
+    /// `positions` entries: each stage sends a [`ToLeader::SnapshotPart`]
+    /// and forwards. FIFO order quiesces the session — every earlier
+    /// window has been applied by the time a stage reads its slot.
+    Snapshot { session: u64, positions: usize },
     Shutdown,
+    /// Test-only fault injection: the named stage fails on receipt,
+    /// everyone else forwards — the mid-chain-failure regression hook.
+    #[cfg(test)]
+    Fail { stage: usize },
 }
 
 enum ToLeader {
-    Token { token: i32, exit_layer: usize },
-    ResetDone,
+    Token { session: u64, token: i32, exit_layer: usize },
+    /// Last-stage ack for [`Work::Close`]: every stage has dropped the
+    /// session's slot and no more of its messages are in flight.
+    Closed { session: u64 },
+    /// One stage's cache slice for a [`Work::Snapshot`] read.
+    SnapshotPart { session: u64, stage: usize, cache: HostTensor },
+    /// A stage died (error or panic). Sent before the stage exits so the
+    /// leader fails fast instead of deadlocking on an ack that can never
+    /// arrive.
+    StageError { stage: usize, error: String },
 }
 
 struct StageThread {
     join: Option<std::thread::JoinHandle<Result<()>>>,
 }
 
+/// One session's decode state on one stage: its KV-cache slice plus the
+/// exit policy captured when the session opened.
+struct SessionSlot {
+    cache: xla::Literal,
+    policy: ExitPolicy,
+}
+
 pub struct PipelinedEngine {
     pub state: ModelState,
-    /// Exit-decision policy the stage threads run under. Updated via
-    /// [`PipelinedEngine::set_policy`]; the stages pick the new policy up
-    /// at the next chain reset (session start).
+    /// Exit-decision policy captured by sessions as they open
+    /// ([`PipelinedEngine::set_policy`]); live sessions keep the policy
+    /// they opened under, so a swap never leaks into an in-flight
+    /// request.
     pub policy: ExitPolicy,
     to_first: Sender<Work>,
     from_last: Receiver<ToLeader>,
     threads: Vec<StageThread>,
-    /// Per-stage policy channels: each stage thread carries its own
-    /// [`ExitPolicy`] clone and refreshes it during `Reset`.
-    policy_tx: Vec<Sender<ExitPolicy>>,
-    /// Bumped on every session start (chain reset); window passes from a
-    /// superseded session are refused instead of silently decoding
-    /// against the reset stage caches.
-    session_generation: u64,
+    /// Monotonic session-id source; ids are never reused, so a stale
+    /// message can never be routed to a newer session.
+    next_session: u64,
+    /// Tokens that arrived while the leader was collecting for another
+    /// session (interleaved serving), parked until their own collect.
+    pending: HashMap<u64, WindowOutcome>,
+    /// First stage failure observed; once set, every chain operation
+    /// fails fast instead of feeding a dead pipeline.
+    chain_error: Option<String>,
 }
 
 struct StageWorker {
@@ -84,12 +152,11 @@ struct StageWorker {
     man: crate::runtime::artifacts::Manifest,
     rt: StageRuntime,
     plits: Vec<xla::Literal>,
-    cache: xla::Literal,
-    policy: ExitPolicy,
+    /// Per-session KV-cache slots, keyed by session id.
+    slots: HashMap<u64, SessionSlot>,
     inbox: Receiver<Work>,
     next: Option<Sender<Work>>,
     leader: Sender<ToLeader>,
-    policy_rx: Receiver<ExitPolicy>,
     entry_exit_layers: Vec<usize>,
     final_layer: usize,
 }
@@ -128,22 +195,81 @@ impl StageWorker {
                     }
                     return Ok(());
                 }
-                Ok(Work::Reset) => {
-                    while let Ok(p) = self.policy_rx.try_recv() {
-                        self.policy = p;
+                #[cfg(test)]
+                Ok(Work::Fail { stage }) => {
+                    if stage == self.s {
+                        bail!("injected stage failure");
                     }
-                    self.cache = HostTensor::zeros(
-                        &self.man.stages[self.s].cache_shape,
-                    )
-                    .to_literal()?;
+                    if let Some(n) = &self.next {
+                        n.send(Work::Fail { stage })
+                            .ok()
+                            .context("next stage gone")?;
+                    }
+                }
+                Ok(Work::Open { session, policy, restore }) => {
+                    let cache = match &restore {
+                        Some(parts) => parts[self.s].to_literal()?,
+                        None => HostTensor::zeros(
+                            &self.man.stages[self.s].cache_shape,
+                        )
+                        .to_literal()?,
+                    };
+                    self.slots.insert(
+                        session,
+                        SessionSlot { cache, policy: policy.clone() },
+                    );
+                    if let Some(n) = &self.next {
+                        n.send(Work::Open { session, policy, restore })
+                            .ok()
+                            .context("next stage gone")?;
+                    }
+                }
+                Ok(Work::Close { session }) => {
+                    self.slots.remove(&session);
                     match &self.next {
-                        Some(n) => n.send(Work::Reset).ok().context("next")?,
+                        Some(n) => n
+                            .send(Work::Close { session })
+                            .ok()
+                            .context("next stage gone")?,
                         None => {
-                            self.leader.send(ToLeader::ResetDone).ok();
+                            self.leader
+                                .send(ToLeader::Closed { session })
+                                .ok();
                         }
                     }
                 }
+                Ok(Work::Snapshot { session, positions }) => {
+                    // FIFO has already applied every earlier window of
+                    // this session: the slot is quiescent.
+                    let slot =
+                        self.slots.get(&session).with_context(|| {
+                            format!(
+                                "snapshot for unknown session {session} \
+                                 at stage {}",
+                                self.s
+                            )
+                        })?;
+                    let full = HostTensor::from_literal(&slot.cache)?;
+                    let part = slice_cache_positions(
+                        &full,
+                        &self.man.stages[self.s].cache_shape,
+                        positions,
+                    )?;
+                    self.leader
+                        .send(ToLeader::SnapshotPart {
+                            session,
+                            stage: self.s,
+                            cache: part,
+                        })
+                        .ok();
+                    if let Some(n) = &self.next {
+                        n.send(Work::Snapshot { session, positions })
+                            .ok()
+                            .context("next stage gone")?;
+                    }
+                }
                 Ok(Work::Window {
+                    session,
                     width,
                     pos0,
                     tokens,
@@ -151,39 +277,46 @@ impl StageWorker {
                     mut exited,
                     check_exits,
                 }) => {
-                    // Entry-exit decision on the last window position.
+                    ensure!(
+                        self.slots.contains_key(&session),
+                        "window for unknown session {session} at stage {}",
+                        self.s
+                    );
+                    // Entry-exit decision on the last window position,
+                    // under the session's own policy (captured at open).
                     // Policies that can never exit (`Never`, confidence
                     // 1.0 — the full-model baseline) skip the exit heads
                     // entirely; the decision could only be Continue.
-                    if self.s > 0
-                        && !exited
-                        && check_exits
-                        && self.policy.may_exit()
-                    {
-                        let xh = hidden.as_ref().unwrap();
-                        let last = &xh.data[(width - 1) * h..];
-                        for &layer in &self.entry_exit_layers.clone() {
-                            // Skip heads the policy can never fire at
-                            // (unlisted / 1.0 per-layer thresholds).
-                            if !self.policy.may_exit_at(layer) {
-                                continue;
-                            }
-                            let logits = self.head_logits(layer, last)?;
-                            let sum = summarize_logits(&logits);
-                            if self.policy.decide(layer, &sum).is_exit() {
-                                self.leader
-                                    .send(ToLeader::Token {
-                                        token: sum.token,
-                                        exit_layer: layer,
-                                    })
-                                    .ok();
-                                exited = true;
-                                break;
+                    if self.s > 0 && !exited && check_exits {
+                        let policy = self.slots[&session].policy.clone();
+                        if policy.may_exit() {
+                            let xh = hidden.as_ref().unwrap();
+                            let last = &xh.data[(width - 1) * h..];
+                            for &layer in &self.entry_exit_layers.clone() {
+                                // Skip heads the policy can never fire at
+                                // (unlisted / 1.0 per-layer thresholds).
+                                if !policy.may_exit_at(layer) {
+                                    continue;
+                                }
+                                let logits = self.head_logits(layer, last)?;
+                                let sum = summarize_logits(&logits);
+                                if policy.decide(layer, &sum).is_exit() {
+                                    self.leader
+                                        .send(ToLeader::Token {
+                                            session,
+                                            token: sum.token,
+                                            exit_layer: layer,
+                                        })
+                                        .ok();
+                                    exited = true;
+                                    break;
+                                }
                             }
                         }
                     }
 
-                    // Stage decode (KV fill), always.
+                    // Stage decode (KV fill) against the session's slot,
+                    // always.
                     let in_lit: xla::Literal = if self.s == 0 {
                         IntTensor::new(vec![width], tokens.clone())
                             .to_literal()?
@@ -195,7 +328,7 @@ impl StageWorker {
                     let mut args: Vec<&xla::Literal> =
                         self.plits.iter().collect();
                     args.push(&in_lit);
-                    args.push(&self.cache);
+                    args.push(&self.slots[&session].cache);
                     args.push(&pos_lit);
                     let out = self
                         .rt
@@ -203,13 +336,15 @@ impl StageWorker {
                         .run(&args)?;
                     let mut it = out.into_iter();
                     let x_out = HostTensor::from_literal(&it.next().unwrap())?;
-                    self.cache = it.next().unwrap();
+                    let new_cache = it.next().unwrap();
+                    self.slots.get_mut(&session).unwrap().cache = new_cache;
 
                     if self.s + 1 < self.p {
                         self.next
                             .as_ref()
                             .unwrap()
                             .send(Work::Window {
+                                session,
                                 width,
                                 pos0,
                                 tokens,
@@ -226,6 +361,7 @@ impl StageWorker {
                         let sum = summarize_logits(&logits);
                         self.leader
                             .send(ToLeader::Token {
+                                session,
                                 token: sum.token,
                                 exit_layer: self.final_layer,
                             })
@@ -249,56 +385,80 @@ impl PipelinedEngine {
         let mut next_tx: Option<Sender<Work>> = None;
         let mut first_tx: Option<Sender<Work>> = None;
         let mut threads = Vec::new();
-        let mut policy_tx = Vec::new();
         for s in (0..p).rev() {
             let (tx, rx) = channel::<Work>();
-            let (ptx, prx) = channel::<ExitPolicy>();
-            policy_tx.push(ptx);
             let man = state.man.clone();
             let params = state.stage_params[s].clone();
             let next = next_tx.take();
             let leader = leader_tx.clone();
-            let pol = policy.clone();
             let join = std::thread::Builder::new()
                 .name(format!("infer-{s}"))
                 .spawn(move || -> Result<()> {
-                    let mut rt = StageRuntime::cpu()?;
-                    rt.load_stage_inference(&man, &man.stages[s])?;
-                    let plits = params
-                        .iter()
-                        .map(|t| t.to_literal())
-                        .collect::<Result<Vec<_>>>()?;
-                    let entry_exit_layers: Vec<usize> = man.stages[s]
-                        .exits
-                        .iter()
-                        .filter(|e| !e.is_final && e.entry && e.layer > 0)
-                        .map(|e| e.layer)
-                        .collect();
-                    let final_layer = man.model.n_layers;
-                    let mut w = StageWorker {
-                        s,
-                        p,
-                        cache: HostTensor::zeros(&man.stages[s].cache_shape)
-                            .to_literal()?,
-                        man,
-                        rt,
-                        plits,
-                        policy: pol,
-                        inbox: rx,
-                        next,
-                        leader,
-                        policy_rx: prx,
-                        entry_exit_layers,
-                        final_layer,
+                    let leader_err = leader.clone();
+                    let next_err = next.clone();
+                    let serve = move || -> Result<()> {
+                        let mut rt = StageRuntime::cpu()?;
+                        rt.load_stage_inference(&man, &man.stages[s])?;
+                        let plits = params
+                            .iter()
+                            .map(|t| t.to_literal())
+                            .collect::<Result<Vec<_>>>()?;
+                        let entry_exit_layers: Vec<usize> = man.stages[s]
+                            .exits
+                            .iter()
+                            .filter(|e| {
+                                !e.is_final && e.entry && e.layer > 0
+                            })
+                            .map(|e| e.layer)
+                            .collect();
+                        let final_layer = man.model.n_layers;
+                        let mut w = StageWorker {
+                            s,
+                            p,
+                            man,
+                            rt,
+                            plits,
+                            slots: HashMap::new(),
+                            inbox: rx,
+                            next,
+                            leader,
+                            entry_exit_layers,
+                            final_layer,
+                        };
+                        w.run()
                     };
-                    w.run()
+                    let result =
+                        match std::panic::catch_unwind(AssertUnwindSafe(
+                            serve,
+                        )) {
+                            Ok(r) => r,
+                            Err(_) => Err(anyhow!("stage thread panicked")),
+                        };
+                    if let Err(e) = &result {
+                        // Report before exiting: the leader may be
+                        // blocked on an ack only this stage or its
+                        // descendants could send, and the shallower
+                        // stages keep its channel open — without this
+                        // message it would wait forever (the mid-chain
+                        // deadlock this fixes). Deeper stages exit via
+                        // the forwarded `Shutdown`.
+                        if let Some(n) = &next_err {
+                            n.send(Work::Shutdown).ok();
+                        }
+                        leader_err
+                            .send(ToLeader::StageError {
+                                stage: s,
+                                error: format!("{e:#}"),
+                            })
+                            .ok();
+                    }
+                    result
                 })
                 .expect("spawn inference stage");
             threads.push(StageThread { join: Some(join) });
             next_tx = Some(tx.clone());
             first_tx = Some(tx);
         }
-        policy_tx.reverse();
 
         Ok(PipelinedEngine {
             state,
@@ -306,28 +466,127 @@ impl PipelinedEngine {
             to_first: first_tx.unwrap(),
             from_last,
             threads,
-            policy_tx,
-            session_generation: 0,
+            next_session: 0,
+            pending: HashMap::new(),
+            chain_error: None,
         })
     }
 
-    /// Swap the exit policy. The stage threads adopt it at the next chain
-    /// reset (i.e. the next session start), exactly when the old
-    /// per-threshold setter took effect.
+    /// Swap the exit policy for sessions opened from now on. Live
+    /// sessions keep the policy captured when they opened — each stage
+    /// slot carries its own copy — so a swap never leaks into an
+    /// in-flight request (what lets the pool interleave mixed-policy
+    /// sessions down one chain).
     pub fn set_policy(&mut self, policy: ExitPolicy) {
         self.policy = policy;
-        for tx in &self.policy_tx {
-            tx.send(self.policy.clone()).ok();
+    }
+
+    /// Fail fast once a stage has died.
+    fn check_chain(&self) -> Result<()> {
+        if let Some(e) = &self.chain_error {
+            bail!("pipelined stage chain is down: {e}");
+        }
+        Ok(())
+    }
+
+    /// Receive one chain message, converting a stage failure into an
+    /// error (and poisoning the engine) instead of blocking forever on
+    /// an ack that can never arrive.
+    fn recv_ok(&mut self) -> Result<ToLeader> {
+        self.check_chain()?;
+        match self.from_last.recv() {
+            Ok(ToLeader::StageError { stage, error }) => {
+                let msg = format!("stage {stage} failed: {error}");
+                self.chain_error = Some(msg.clone());
+                bail!("pipelined stage chain is down: {msg}");
+            }
+            Ok(m) => Ok(m),
+            Err(_) => {
+                let msg = "every stage thread exited".to_string();
+                self.chain_error = Some(msg.clone());
+                bail!("pipelined stage chain is down: {msg}");
+            }
         }
     }
 
-    fn reset(&self) -> Result<()> {
-        self.to_first.send(Work::Reset).ok().context("chain gone")?;
+    /// Allocate a session id and open its per-stage slots (zeroed, or
+    /// restored from full-capacity per-stage snapshots).
+    fn open_session(
+        &mut self,
+        restore: Option<Arc<Vec<HostTensor>>>,
+    ) -> Result<u64> {
+        self.check_chain()?;
+        self.next_session += 1;
+        let id = self.next_session;
+        self.to_first
+            .send(Work::Open {
+                session: id,
+                policy: self.policy.clone(),
+                restore,
+            })
+            .ok()
+            .context("stage chain gone")?;
+        Ok(id)
+    }
+
+    /// Send one window down the chain (fire-and-forget; the matching
+    /// token, if any, is picked up by [`PipelinedEngine::collect`]).
+    fn submit(
+        &mut self,
+        session: u64,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        emit: bool,
+    ) -> Result<()> {
+        self.check_chain()?;
+        self.to_first
+            .send(Work::Window {
+                session,
+                width,
+                pos0,
+                tokens: tokens[pos0..pos0 + width].to_vec(),
+                hidden: None,
+                exited: !emit, // prefill wants no emission
+                check_exits: emit,
+            })
+            .ok()
+            .context("stage chain gone")
+    }
+
+    /// Await the emitted token of `session`'s outstanding window,
+    /// parking tokens of other interleaved sessions as they arrive.
+    fn collect(&mut self, session: u64) -> Result<WindowOutcome> {
+        if let Some(out) = self.pending.remove(&session) {
+            return Ok(out);
+        }
+        let p = self.state.man.stages.len();
         loop {
-            match self.from_last.recv().context("reset ack")? {
-                ToLeader::ResetDone => return Ok(()),
-                // Drain stale tokens from an aborted previous run.
-                ToLeader::Token { .. } => continue,
+            match self.recv_ok()? {
+                ToLeader::Token { session: s, token, exit_layer } => {
+                    // KV back-fill always completes through every stage,
+                    // so no session ever accrues a deficit.
+                    let out =
+                        WindowOutcome { token, exit_layer, stages_run: p };
+                    if s == session {
+                        return Ok(out);
+                    }
+                    self.pending.insert(s, out);
+                }
+                ToLeader::Closed { session: s } => {
+                    bail!(
+                        "unexpected close ack for session {s} while \
+                         awaiting a token for session {session}"
+                    );
+                }
+                ToLeader::SnapshotPart { session: s, stage, .. } => {
+                    bail!(
+                        "unexpected snapshot part (session {s}, stage \
+                         {stage}) while awaiting a token for session \
+                         {session}"
+                    );
+                }
+                ToLeader::StageError { .. } => unreachable!("recv_ok"),
             }
         }
     }
@@ -366,25 +625,24 @@ impl PipelinedEngine {
 }
 
 impl DecodeBackend for PipelinedEngine {
-    /// Decode state lives in the stage threads, so a fresh session resets
-    /// the whole chain — and only one session may be live at a time.
-    /// Policies set via [`PipelinedEngine::set_policy`] are picked up
-    /// by the stages during this reset.
+    /// Open a new session on the chain: every stage installs a zeroed
+    /// KV-cache slot keyed by a fresh session id (returned in
+    /// [`SessionCaches::generation`]), capturing the current
+    /// [`PipelinedEngine::set_policy`] policy. Arbitrarily many sessions
+    /// may be live at once; their windows interleave down the chain.
     fn fresh_caches(&mut self) -> Result<SessionCaches> {
-        let widths = &self.state.man.decode_widths;
-        // Generation steps decode one position at a time.
-        if !widths.contains(&1) {
-            bail!(
-                "pipelined engine decodes with width-1 windows, but the \
-                 manifest only lists decode widths {widths:?}"
-            );
+        {
+            let widths = &self.state.man.decode_widths;
+            // Generation steps decode one position at a time.
+            if !widths.contains(&1) {
+                bail!(
+                    "pipelined engine decodes with width-1 windows, but \
+                     the manifest only lists decode widths {widths:?}"
+                );
+            }
         }
-        self.reset()?;
-        self.session_generation += 1;
-        Ok(SessionCaches {
-            caches: Vec::new(),
-            generation: self.session_generation,
-        })
+        let id = self.open_session(None)?;
+        Ok(SessionCaches { caches: Vec::new(), generation: id })
     }
 
     /// Prefill windows (`emit` false) are fire-and-forget KV fills; the
@@ -402,35 +660,37 @@ impl DecodeBackend for PipelinedEngine {
         _allow_exit: bool,
         emit: bool,
     ) -> Result<WindowOutcome> {
-        if caches.generation != self.session_generation {
-            bail!(
-                "stale decode session: a newer session has reset this \
-                 pipelined engine (it supports one live session at a time)"
-            );
-        }
-        let p = self.state.man.stages.len();
-        self.to_first
-            .send(Work::Window {
-                width,
-                pos0,
-                tokens: tokens[pos0..pos0 + width].to_vec(),
-                hidden: None,
-                exited: !emit, // prefill wants no emission
-                check_exits: emit,
-            })
-            .ok()
-            .context("chain gone")?;
+        self.submit(caches.generation, tokens, pos0, width, emit)?;
         if !emit {
+            let p = self.state.man.stages.len();
             return Ok(WindowOutcome { token: -1, exit_layer: 0, stages_run: p });
         }
-        match self.from_last.recv().context("token")? {
-            ToLeader::Token { token, exit_layer } => {
-                // KV back-fill always completes through every stage, so
-                // the session never accrues a deficit.
-                Ok(WindowOutcome { token, exit_layer, stages_run: p })
-            }
-            ToLeader::ResetDone => bail!("unexpected reset ack"),
-        }
+        self.collect(caches.generation)
+    }
+
+    /// The split-phase emitting window pass interleaved serving is built
+    /// on: submit now, collect later, other sessions' windows in between
+    /// ([`DecodeSession::step_interleaved`]).
+    fn submit_window(
+        &mut self,
+        caches: &mut SessionCaches,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        _allow_exit: bool,
+    ) -> Result<()> {
+        self.submit(caches.generation, tokens, pos0, width, true)
+    }
+
+    fn collect_window(
+        &mut self,
+        caches: &mut SessionCaches,
+    ) -> Result<WindowOutcome> {
+        self.collect(caches.generation)
+    }
+
+    fn interleaves_windows(&self) -> bool {
+        true
     }
 
     fn decode_widths(&self) -> &[usize] {
@@ -453,38 +713,154 @@ impl DecodeBackend for PipelinedEngine {
         false
     }
 
+    /// Per-session stage slots make live sessions independent; the
+    /// serving pool's `max_concurrent` is the only admission bound.
     fn max_live_sessions(&self) -> usize {
-        1
+        usize::MAX
     }
 
-    /// Declined: decode state lives sharded across the stage threads
-    /// (one resident KV cache per thread), not in the session — there is
-    /// no per-session cache to copy out. The serving pool checks this
-    /// flag and serves pipelined workers without prefix reuse.
+    /// Sessions' KV state lives sharded across the stage threads, but
+    /// the `Snapshot`/`SnapshotPart` drain protocol reads it out
+    /// consistently (and `Open` rebuilds it), so the prefix KV cache
+    /// works on this engine exactly as on the sequential one.
     fn supports_cache_snapshots(&self) -> bool {
-        false
+        true
     }
 
+    /// Quiesce-and-read: a [`Work::Snapshot`] flows down the chain
+    /// behind the session's windows (the FIFO is the drain), each stage
+    /// answers with its position-sliced cache, and the leader reassembles
+    /// the per-stage snapshot in stage order.
     fn snapshot_caches(
         &mut self,
-        _caches: &SessionCaches,
-        _positions: usize,
-    ) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
-        bail!(
-            "the pipelined engine keeps KV caches in its stage threads \
-             and cannot snapshot them (supports_cache_snapshots is false)"
-        )
+        caches: &SessionCaches,
+        positions: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let session = caches.generation;
+        self.check_chain()?;
+        self.to_first
+            .send(Work::Snapshot { session, positions })
+            .ok()
+            .context("stage chain gone")?;
+        let p = self.state.man.stages.len();
+        let mut parts: Vec<Option<HostTensor>> = (0..p).map(|_| None).collect();
+        let mut got = 0usize;
+        while got < p {
+            match self.recv_ok()? {
+                ToLeader::SnapshotPart { session: s, stage, cache } => {
+                    ensure!(
+                        s == session,
+                        "snapshot part for session {s} while snapshotting \
+                         session {session}"
+                    );
+                    ensure!(
+                        stage < p && parts[stage].is_none(),
+                        "duplicate or out-of-range snapshot part for \
+                         stage {stage}"
+                    );
+                    parts[stage] = Some(cache);
+                    got += 1;
+                }
+                // Tokens of other interleaved sessions may be in flight;
+                // park them for their own collect calls.
+                ToLeader::Token { session: s, token, exit_layer } => {
+                    self.pending.insert(
+                        s,
+                        WindowOutcome { token, exit_layer, stages_run: p },
+                    );
+                }
+                ToLeader::Closed { session: s } => {
+                    bail!(
+                        "unexpected close ack for session {s} while \
+                         snapshotting session {session}"
+                    );
+                }
+                ToLeader::StageError { .. } => unreachable!("recv_ok"),
+            }
+        }
+        Ok(parts
+            .into_iter()
+            .map(|o| o.expect("collected every stage part"))
+            .collect())
     }
 
+    /// Open a session whose per-stage slots start from a snapshot taken
+    /// by [`DecodeBackend::snapshot_caches`] on a same-shaped engine
+    /// (either engine: the host snapshot format is shared). Validation
+    /// and zero-padding happen leader-side, so a malformed snapshot is
+    /// rejected here — where the prefix cache treats restores as
+    /// best-effort — instead of killing a stage thread.
     fn restore_caches(
         &mut self,
-        _snapshot: &[crate::runtime::tensor::HostTensor],
+        snapshot: &[HostTensor],
     ) -> Result<SessionCaches> {
-        bail!(
-            "the pipelined engine keeps KV caches in its stage threads \
-             and cannot restore snapshots (supports_cache_snapshots is \
-             false)"
-        )
+        let parts = {
+            let stages = &self.state.man.stages;
+            ensure!(
+                snapshot.len() == stages.len(),
+                "snapshot has {} stage caches, engine has {} stages",
+                snapshot.len(),
+                stages.len()
+            );
+            snapshot
+                .iter()
+                .zip(stages)
+                .map(|(t, st)| {
+                    pad_cache_to_capacity(t, &st.cache_shape)
+                        .with_context(|| format!("stage {}", st.index))
+                })
+                .collect::<Result<Vec<_>>>()
+                .context("restoring per-stage KV caches")?
+        };
+        let id = self.open_session(Some(Arc::new(parts)))?;
+        Ok(SessionCaches { caches: Vec::new(), generation: id })
+    }
+
+    /// Close the session on every stage and wait for the last stage's
+    /// ack, so its slots are gone (and none of its messages are in
+    /// flight) before the caches handle is dropped.
+    fn release_caches(&mut self, caches: &SessionCaches) -> Result<()> {
+        let session = caches.generation;
+        self.check_chain()?;
+        self.to_first
+            .send(Work::Close { session })
+            .ok()
+            .context("stage chain gone")?;
+        loop {
+            match self.recv_ok()? {
+                ToLeader::Closed { session: s } if s == session => break,
+                ToLeader::Closed { session: s } => {
+                    bail!(
+                        "unexpected close ack for session {s} while \
+                         closing session {session}"
+                    );
+                }
+                ToLeader::Token { session: s, token, exit_layer } => {
+                    // Another session's token parks; a token of the
+                    // closing session is stale and drops with it.
+                    if s != session {
+                        let p = self.state.man.stages.len();
+                        self.pending.insert(
+                            s,
+                            WindowOutcome {
+                                token,
+                                exit_layer,
+                                stages_run: p,
+                            },
+                        );
+                    }
+                }
+                ToLeader::SnapshotPart { session: s, stage, .. } => {
+                    bail!(
+                        "unexpected snapshot part (session {s}, stage \
+                         {stage}) while closing session {session}"
+                    );
+                }
+                ToLeader::StageError { .. } => unreachable!("recv_ok"),
+            }
+        }
+        self.pending.remove(&session);
+        Ok(())
     }
 }
 
@@ -507,10 +883,15 @@ mod tests {
 
     use crate::runtime::artifacts::Manifest;
 
+    use super::super::session::StepEvent;
     use super::*;
 
     fn artifacts_root() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_root().join("ee-tiny").join("manifest.json").is_file()
     }
 
     /// Regression (shutdown propagation): `shutdown` must join every
@@ -519,8 +900,7 @@ mod tests {
     /// down the chain, not only on the channel-close cascade.
     #[test]
     fn shutdown_joins_with_live_sender_clone() {
-        if !artifacts_root().join("ee-tiny").join("manifest.json").is_file()
-        {
+        if !have_artifacts() {
             eprintln!("skipping: run `make artifacts`");
             return;
         }
@@ -540,5 +920,126 @@ mod tests {
             "shutdown hung with a live Sender clone"
         );
         drop(extra);
+    }
+
+    /// Regression (mid-chain stage failure): a dead mid-chain stage must
+    /// surface as an error on the leader — not the pre-fix deadlock,
+    /// where deeper stages exited but the shallower ones kept the leader
+    /// channel open, so the leader blocked forever awaiting an ack only
+    /// the dead stage's descendants could send.
+    #[test]
+    fn mid_chain_stage_failure_errors_instead_of_deadlocking() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let man =
+            Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+        let state = ModelState::init(man, 1);
+        let mut eng =
+            PipelinedEngine::new(state, ExitPolicy::confidence(1.0)).unwrap();
+        let fail_stage = eng.state.man.stages.len() - 1;
+        let (done_tx, done_rx) = channel::<bool>();
+        std::thread::spawn(move || {
+            let mut caches = eng.fresh_caches().unwrap();
+            // Kill a deeper stage, then ask for a token: the emitting
+            // window chases the failure injection down the FIFO and the
+            // collect must error out.
+            eng.to_first.send(Work::Fail { stage: fail_stage }).unwrap();
+            let tokens = [1i32, 42];
+            let stepped =
+                eng.run_window(&mut caches, &tokens, 1, 1, true, true);
+            // Every later chain operation fails fast, including the
+            // close ack wait — none of them may hang.
+            let released = eng.release_caches(&caches);
+            done_tx.send(stepped.is_err() && released.is_err()).ok();
+            eng.shutdown();
+        });
+        assert!(
+            done_rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("leader hung on a dead mid-chain stage"),
+            "chain operations against a dead stage must error"
+        );
+    }
+
+    /// Two sessions stepped interleaved down one chain must reproduce
+    /// their serial streams token-for-token and exit-layer-for-exit-layer
+    /// (the full suite is `tests/pipelined_serving_equivalence.rs`; this
+    /// is the engine-level smoke check).
+    #[test]
+    fn interleaved_sessions_match_serial_streams() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let man =
+            Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+        let state = ModelState::init(man, 5);
+        let prompts = ["the capital of ", "count: 3 4 5 "];
+        let max_new = 8;
+        let mut eng =
+            PipelinedEngine::new(state, ExitPolicy::confidence(0.2)).unwrap();
+
+        let serial: Vec<Vec<(i32, usize)>> = prompts
+            .iter()
+            .map(|p| {
+                let mut s =
+                    DecodeSession::new_text(&mut eng, p, max_new).unwrap();
+                s.prefill(&mut eng).unwrap();
+                let mut out = Vec::new();
+                while !s.is_done() {
+                    if let StepEvent::Token { token, exit_layer, .. } =
+                        s.step(&mut eng).unwrap()
+                    {
+                        out.push((token, exit_layer));
+                    }
+                }
+                s.close(&mut eng);
+                out
+            })
+            .collect();
+
+        let mut sessions: Vec<DecodeSession> = prompts
+            .iter()
+            .map(|p| {
+                let mut s =
+                    DecodeSession::new_text(&mut eng, p, max_new).unwrap();
+                s.prefill(&mut eng).unwrap();
+                s
+            })
+            .collect();
+        let mut streams: Vec<Vec<(i32, usize)>> =
+            vec![Vec::new(); prompts.len()];
+        loop {
+            let eligible: Vec<usize> = (0..sessions.len())
+                .filter(|&i| sessions[i].fusable(&eng))
+                .collect();
+            if eligible.is_empty() {
+                break;
+            }
+            let mut refs: Vec<&mut DecodeSession> = sessions
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| eligible.contains(i))
+                .map(|(_, s)| s)
+                .collect();
+            let events =
+                DecodeSession::step_interleaved(&mut eng, &mut refs)
+                    .unwrap();
+            for (&i, ev) in eligible.iter().zip(events) {
+                if let StepEvent::Token { token, exit_layer, .. } = ev {
+                    streams[i].push((token, exit_layer));
+                }
+            }
+        }
+        for s in &mut sessions {
+            s.close(&mut eng);
+        }
+        assert_eq!(
+            streams, serial,
+            "interleaved streams diverged from serial"
+        );
+        eng.shutdown();
     }
 }

@@ -22,7 +22,9 @@ use crate::eval::harness::Generator;
 use crate::runtime::client::StageRuntime;
 use crate::runtime::tensor::{HostTensor, IntTensor};
 
-use super::common::{GenOutput, ModelState};
+use super::common::{
+    pad_cache_to_capacity, slice_cache_positions, GenOutput, ModelState,
+};
 use super::policy::{summarize_logits, ExitPolicy};
 use super::session::{
     DecodeBackend, DecodeSession, LaneSlot, SessionCaches, WindowOutcome,
@@ -531,28 +533,8 @@ impl DecodeBackend for SequentialEngine {
             .zip(&self.state.man.stages)
             .map(|(lit, st)| {
                 let t = HostTensor::from_literal(lit)?;
-                let shape = &st.cache_shape; // [layers, 2, S, heads, dim]
-                ensure!(
-                    t.shape == *shape,
-                    "stage {} cache shape {:?} != snapshot source {:?}",
-                    st.index,
-                    shape,
-                    t.shape
-                );
-                let held = positions.min(shape[2]);
-                let row = shape[3] * shape[4];
-                let src_block = shape[2] * row;
-                let dst_block = held * row;
-                let mut data = vec![0f32; shape[0] * 2 * dst_block];
-                for blk in 0..shape[0] * 2 {
-                    data[blk * dst_block..][..dst_block].copy_from_slice(
-                        &t.data[blk * src_block..][..dst_block],
-                    );
-                }
-                Ok(HostTensor::new(
-                    vec![shape[0], 2, held, shape[3], shape[4]],
-                    data,
-                ))
+                slice_cache_positions(&t, &st.cache_shape, positions)
+                    .with_context(|| format!("stage {}", st.index))
             })
             .collect::<Result<Vec<_>>>()
             .context("snapshotting per-stage KV caches")
@@ -573,37 +555,11 @@ impl DecodeBackend for SequentialEngine {
             .iter()
             .zip(stages)
             .map(|(t, st)| {
-                let shape = &st.cache_shape;
-                if t.shape == *shape {
-                    // Full-capacity snapshot (pre-slicing format).
-                    return t.to_literal();
-                }
-                // Position-sliced snapshot: zero-pad back to capacity.
-                ensure!(
-                    t.shape.len() == 5
-                        && t.shape[0] == shape[0]
-                        && t.shape[1] == 2
-                        && t.shape[2] <= shape[2]
-                        && t.shape[3] == shape[3]
-                        && t.shape[4] == shape[4],
-                    "stage {} cache shape {:?} does not match snapshot \
-                     {:?}",
-                    st.index,
-                    shape,
-                    t.shape
-                );
-                let held = t.shape[2];
-                let row = shape[3] * shape[4];
-                let src_block = held * row;
-                let dst_block = shape[2] * row;
-                let mut full = HostTensor::zeros(shape);
-                for blk in 0..shape[0] * 2 {
-                    full.data[blk * dst_block..][..src_block]
-                        .copy_from_slice(
-                            &t.data[blk * src_block..][..src_block],
-                        );
-                }
-                full.to_literal()
+                // Position-sliced snapshots zero-pad back to capacity;
+                // full-capacity ones pass through.
+                pad_cache_to_capacity(t, &st.cache_shape)
+                    .with_context(|| format!("stage {}", st.index))?
+                    .to_literal()
             })
             .collect::<Result<Vec<_>>>()
             .context("restoring per-stage KV caches")?;

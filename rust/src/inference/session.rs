@@ -12,10 +12,13 @@
 //! The engine side of the split is [`DecodeBackend`]: the minimal surface
 //! a session needs — fresh caches, one window pass, and static model
 //! facts. `SequentialEngine` implements it with host-side per-session
-//! caches (KV recomputation, Section 4 / Appendix D.3), so arbitrarily
-//! many of its sessions can be live at once; `PipelinedEngine` keeps
-//! decode state in its stage threads and therefore reports a single live
-//! session ([`DecodeBackend::max_live_sessions`]).
+//! caches (KV recomputation, Section 4 / Appendix D.3); `PipelinedEngine`
+//! keeps per-session KV slots inside its stage threads and interleaves
+//! many sessions' windows down the one chain
+//! ([`DecodeBackend::interleaves_windows`] /
+//! [`DecodeSession::step_interleaved`]). Either way, arbitrarily many
+//! sessions can be live at once, and both engines snapshot and restore
+//! per-session caches for the shared-prefix KV cache.
 //!
 //! [`step`]: DecodeSession::step
 //! [`drain`]: DecodeSession::drain
@@ -39,13 +42,12 @@ pub struct SessionCaches {
     /// literal per stage). Backends whose decode state lives elsewhere
     /// (the pipelined engine's stage threads) leave this empty.
     pub caches: Vec<xla::Literal>,
-    /// Generation stamp for backends with engine-resident state: the
-    /// pipelined engine bumps its counter on every
-    /// [`DecodeBackend::fresh_caches`] (which resets the stage chain)
-    /// and refuses window passes from a stale generation — starting a
-    /// second session on such a backend invalidates the first with an
-    /// error instead of silently decoding against reset caches.
-    /// Backends with fully session-owned state ignore it.
+    /// Backend-assigned session id for engines whose decode state is
+    /// engine-resident: the pipelined engine keys every stage's KV-cache
+    /// slot (and every in-flight chain message) by this id, so many live
+    /// sessions interleave down one chain without touching each other.
+    /// Ids are never reused. Backends with fully session-owned state
+    /// ignore it.
     pub generation: u64,
 }
 
@@ -115,6 +117,50 @@ pub trait DecodeBackend {
         emit: bool,
     ) -> Result<WindowOutcome>;
 
+    /// Whether this backend can interleave emitting windows from many
+    /// live sessions ([`submit_window`] / [`collect_window`]): submit
+    /// every session's window first, then collect their tokens, so one
+    /// session's deep-stage KV back-fill overlaps another session's
+    /// shallow-stage forward — the serving-side pipeline-bubble filling
+    /// of the paper's Section 4. Default false: callers fall back to
+    /// solo [`run_window`] steps.
+    ///
+    /// [`submit_window`]: DecodeBackend::submit_window
+    /// [`collect_window`]: DecodeBackend::collect_window
+    /// [`run_window`]: DecodeBackend::run_window
+    fn interleaves_windows(&self) -> bool {
+        false
+    }
+
+    /// Split-phase emitting window pass, submit half: queue one decode
+    /// window without waiting for its token. Only meaningful on backends
+    /// whose [`interleaves_windows`] is true (the default errors).
+    ///
+    /// [`interleaves_windows`]: DecodeBackend::interleaves_windows
+    fn submit_window(
+        &mut self,
+        caches: &mut SessionCaches,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        allow_exit: bool,
+    ) -> Result<()> {
+        let _ = (caches, tokens, pos0, width, allow_exit);
+        bail!("this backend does not interleave windows")
+    }
+
+    /// Split-phase emitting window pass, collect half: await the token
+    /// of this session's outstanding [`submit_window`].
+    ///
+    /// [`submit_window`]: DecodeBackend::submit_window
+    fn collect_window(
+        &mut self,
+        caches: &mut SessionCaches,
+    ) -> Result<WindowOutcome> {
+        let _ = caches;
+        bail!("this backend does not interleave windows")
+    }
+
     /// Decode window widths available in the manifest.
     fn decode_widths(&self) -> &[usize];
 
@@ -172,9 +218,10 @@ pub trait DecodeBackend {
     /// Capability flag for the prefix KV cache
     /// ([`crate::inference::prefix_cache`]): whether this backend's
     /// per-session KV state can be copied to host snapshots and rebuilt
-    /// from them. The sequential engine supports it (sessions own their
-    /// caches); the pipelined engine declines (decode state lives in its
-    /// stage threads), and callers must serve it without prefix reuse.
+    /// from them. Both engines support it — the sequential engine's
+    /// sessions own their caches outright, and the pipelined engine
+    /// reads its per-stage session slots over the chain's
+    /// quiesce/snapshot protocol and rebuilds them on open.
     fn supports_cache_snapshots(&self) -> bool;
 
     /// Copy a session's KV caches to host tensors, one per stage,
@@ -201,6 +248,16 @@ pub trait DecodeBackend {
         &mut self,
         snapshot: &[HostTensor],
     ) -> Result<SessionCaches>;
+
+    /// Release a session's backend-side decode state. Backends with
+    /// engine-resident state (the pipelined engine's per-stage session
+    /// slots) free it here; for backends whose state lives in the
+    /// `caches` handle itself, dropping the handle is enough and this is
+    /// a no-op (the default).
+    fn release_caches(&mut self, caches: &SessionCaches) -> Result<()> {
+        let _ = caches;
+        Ok(())
+    }
 }
 
 /// Why a session finished.
@@ -627,6 +684,61 @@ impl DecodeSession {
         Ok(FusedStep { events, stages_skipped: p.saturating_sub(deepest) })
     }
 
+    /// Decode one token for *every* session by interleaving their
+    /// width-1 windows down the backend's stage chain
+    /// ([`DecodeBackend::submit_window`] / [`collect_window`]): all
+    /// windows are submitted before any token is collected, so session
+    /// B's shallow-stage forward overlaps session A's deep-stage KV
+    /// back-fill — the pipeline-bubble filling the pool's interleaved
+    /// rounds are built on. All sessions must be [`fusable`], and the
+    /// per-session bookkeeping is the shared [`step`] tail (in-band
+    /// back-fill backends never suspend exits or track deficits), so an
+    /// interleaved stream is identical to a solo-stepped one.
+    ///
+    /// Returns one [`StepEvent`] per session, in session order.
+    ///
+    /// [`collect_window`]: DecodeBackend::collect_window
+    /// [`fusable`]: DecodeSession::fusable
+    /// [`step`]: DecodeSession::step
+    pub fn step_interleaved(
+        backend: &mut dyn DecodeBackend,
+        sessions: &mut [&mut DecodeSession],
+    ) -> Result<Vec<StepEvent>> {
+        ensure!(
+            backend.interleaves_windows() && !backend.tracks_deficit(),
+            "step_interleaved needs an in-band back-fill backend that \
+             interleaves windows"
+        );
+        for sess in sessions.iter() {
+            ensure!(
+                sess.fusable(&*backend),
+                "step_interleaved over a session that is not fusable"
+            );
+        }
+        let p = backend.n_stages();
+        // Submit every session's window before collecting any token:
+        // the chain starts session i+1's shallow stages while session i
+        // occupies the deeper ones.
+        for sess in sessions.iter_mut() {
+            let s = &mut **sess;
+            let n = s.tokens.len() - 1; // current position (has a token)
+            let caches =
+                s.caches.as_mut().expect("fusable session has caches");
+            backend.submit_window(caches, &s.tokens, n, 1, true)?;
+        }
+        // Collect in the same order, folding each token in with the
+        // shared solo bookkeeping.
+        let mut events = Vec::with_capacity(sessions.len());
+        for sess in sessions.iter_mut() {
+            let s = &mut **sess;
+            let caches =
+                s.caches.as_mut().expect("fusable session has caches");
+            let out = backend.collect_window(caches)?;
+            events.push(s.absorb(out, p, false));
+        }
+        Ok(events)
+    }
+
     /// Prefill, then step to completion — the serial path
     /// `generate_tokens` collapses to.
     pub fn drain(
@@ -637,7 +749,20 @@ impl DecodeSession {
         while !self.is_done() {
             self.step(backend)?;
         }
+        self.close(backend);
         Ok(self.output())
+    }
+
+    /// Release the session's backend-side decode state
+    /// ([`DecodeBackend::release_caches`]: per-stage KV slots on the
+    /// pipelined engine; a no-op for backends whose state lives in the
+    /// caches handle). Idempotent, and best-effort: a close can only
+    /// fail on an engine whose stage chain is already down, where there
+    /// is no state left to free.
+    pub fn close(&mut self, backend: &mut dyn DecodeBackend) {
+        if let Some(c) = self.caches.take() {
+            let _ = backend.release_caches(&c);
+        }
     }
 
     fn finish(&mut self, reason: DoneReason) -> DoneReason {

@@ -458,6 +458,18 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 l.policy_applies
             );
         }
+        if m.interleave.rounds > 0 {
+            let il = &m.interleave;
+            println!(
+                "[serve-bench] pool {workers}: {:.2} mean sessions in \
+                 flight per interleaved round ({} rounds x occupancy \
+                 {:?}, max {} in flight)",
+                il.mean_in_flight(),
+                il.rounds,
+                il.occupancy,
+                il.max_in_flight()
+            );
+        }
         json_rows.push(serve_metrics_json(workers, m, n_layers));
     }
     table.emit("serve-bench");
@@ -530,6 +542,10 @@ fn serve_metrics_json(
     num("decode_steps_per_dispatch", m.lanes.steps_per_dispatch());
     num("stages_skipped_all_fired", m.lanes.stages_skipped as f64);
     num("policy_applies", m.lanes.policy_applies as f64);
+    num("interleaved_rounds", m.interleave.rounds as f64);
+    num("interleaved_steps", m.interleave.steps as f64);
+    num("mean_sessions_in_flight", m.interleave.mean_in_flight());
+    num("max_sessions_in_flight", m.interleave.max_in_flight() as f64);
     let occupancy = m
         .lanes
         .occupancy
@@ -537,6 +553,13 @@ fn serve_metrics_json(
         .map(|&(w, c)| (w.to_string(), Json::Num(c as f64)))
         .collect();
     o.insert("lane_occupancy".to_string(), Json::Obj(occupancy));
+    let in_flight = m
+        .interleave
+        .occupancy
+        .iter()
+        .map(|&(n, c)| (n.to_string(), Json::Num(c as f64)))
+        .collect();
+    o.insert("interleave_occupancy".to_string(), Json::Obj(in_flight));
     Json::Obj(o)
 }
 

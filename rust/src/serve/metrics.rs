@@ -102,6 +102,79 @@ impl LaneStats {
     }
 }
 
+/// Interleaved stage-chain activity of the pipelined decode hot path:
+/// how many live sessions each interleaved round pushed down the chain
+/// together — the "did bubble filling actually happen" observability,
+/// the interleaving analogue of [`LaneStats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InterleaveStats {
+    /// Interleaved rounds (each submits every member's width-1 window
+    /// down the stage chain before collecting any token).
+    pub rounds: u64,
+    /// Decode steps taken inside interleaved rounds (one per member per
+    /// round).
+    pub steps: u64,
+    /// In-flight-occupancy histogram: (sessions in flight N, rounds at
+    /// N). Any entry with N >= 2 is an observed overlap of sessions on
+    /// the chain.
+    pub occupancy: Vec<(usize, u64)>,
+}
+
+impl InterleaveStats {
+    /// Mean sessions in flight per interleaved round.
+    pub fn mean_in_flight(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.steps as f64 / self.rounds as f64
+    }
+
+    /// Deepest interleaving any round reached.
+    pub fn max_in_flight(&self) -> usize {
+        self.occupancy.iter().map(|&(n, _)| n).max().unwrap_or(0)
+    }
+
+    fn occupancy_add(&mut self, width: usize, rounds: u64) {
+        match self.occupancy.iter_mut().find(|(w, _)| *w == width) {
+            Some(e) => e.1 += rounds,
+            None => {
+                self.occupancy.push((width, rounds));
+                self.occupancy.sort();
+            }
+        }
+    }
+
+    /// Accumulate another reading into this one.
+    pub fn merge(&mut self, other: &InterleaveStats) {
+        self.rounds += other.rounds;
+        self.steps += other.steps;
+        for &(w, c) in &other.occupancy {
+            self.occupancy_add(w, c);
+        }
+    }
+
+    /// Counter delta `self - baseline` (saturating): activity since an
+    /// earlier reading of the same counters.
+    pub fn since(&self, baseline: &InterleaveStats) -> InterleaveStats {
+        let mut out = InterleaveStats {
+            rounds: self.rounds.saturating_sub(baseline.rounds),
+            steps: self.steps.saturating_sub(baseline.steps),
+            occupancy: Vec::new(),
+        };
+        for &(w, c) in &self.occupancy {
+            let base = baseline
+                .occupancy
+                .iter()
+                .find(|(bw, _)| *bw == w)
+                .map_or(0, |(_, bc)| *bc);
+            if c > base {
+                out.occupancy_add(w, c - base);
+            }
+        }
+        out
+    }
+}
+
 /// Thread-safe lane counters shared by every worker of a pool (the
 /// lane-fusion analogue of the shared [`PrefixCacheStore`] stats).
 ///
@@ -109,6 +182,7 @@ impl LaneStats {
 #[derive(Debug, Default)]
 pub struct LaneCounters {
     inner: Mutex<LaneStats>,
+    interleave: Mutex<InterleaveStats>,
 }
 
 impl LaneCounters {
@@ -135,6 +209,19 @@ impl LaneCounters {
     /// One engine-resident exit-policy swap.
     pub fn record_policy_apply(&self) {
         self.inner.lock().unwrap().policy_applies += 1;
+    }
+
+    /// Interleaved-round counter snapshot.
+    pub fn interleave_stats(&self) -> InterleaveStats {
+        self.interleave.lock().unwrap().clone()
+    }
+
+    /// One interleaved stage-chain round over `width` live sessions.
+    pub fn record_interleaved(&self, width: usize) {
+        let mut s = self.interleave.lock().unwrap();
+        s.rounds += 1;
+        s.steps += width as u64;
+        s.occupancy_add(width, 1);
     }
 }
 
@@ -172,6 +259,10 @@ pub struct ServeMetrics {
     /// steps, lane occupancy, stages skipped by all-lanes-fired, and
     /// policy swaps (all zeros when lane fusion is off or unavailable).
     pub lanes: LaneStats,
+    /// Interleaved stage-chain activity during the batch (pipelined
+    /// engine): rounds, steps, and the in-flight-sessions occupancy
+    /// histogram (all zeros on non-interleaving engines).
+    pub interleave: InterleaveStats,
 }
 
 impl ServeMetrics {
@@ -222,6 +313,7 @@ impl ServeMetrics {
             exits,
             prefix: PrefixCacheStats::default(),
             lanes: LaneStats::default(),
+            interleave: InterleaveStats::default(),
         }
     }
 
@@ -375,6 +467,32 @@ mod tests {
         let solo = LaneCounters::default();
         solo.record_solo();
         assert!((solo.stats().steps_per_dispatch() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interleave_stats_occupancy_and_since() {
+        let c = LaneCounters::default();
+        assert_eq!(c.interleave_stats().mean_in_flight(), 0.0);
+        c.record_interleaved(3);
+        c.record_interleaved(3);
+        c.record_interleaved(1);
+        let s = c.interleave_stats();
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.steps, 7);
+        assert_eq!(s.occupancy, vec![(1, 1), (3, 2)]);
+        assert_eq!(s.max_in_flight(), 3);
+        assert!((s.mean_in_flight() - 7.0 / 3.0).abs() < 1e-12);
+        // Delta attribution, as run_batch uses it.
+        let base = s.clone();
+        c.record_interleaved(2);
+        let d = c.interleave_stats().since(&base);
+        assert_eq!(d.rounds, 1);
+        assert_eq!(d.steps, 2);
+        assert_eq!(d.occupancy, vec![(2, 1)]);
+        // since + merge round-trips to the later reading.
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged, c.interleave_stats());
     }
 
     #[test]

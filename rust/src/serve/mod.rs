@@ -32,21 +32,27 @@
 //!   [`PrefixCacheStore`](crate::inference::PrefixCacheStore) of
 //!   post-prefill KV snapshots **shared across all workers**, so
 //!   admissions sharing a prompt prefix (system-prompt traffic) restore
-//!   it — whichever worker prefilled it — and prefill only the suffix;
-//!   sequential-engine workers only; the pipelined engine declines the
-//!   capability and serves without reuse.
+//!   it — whichever worker prefilled it — and prefill only the suffix,
+//!   on either engine (the pipelined engine snapshots and restores over
+//!   its stage chain's drain protocol).
 //!   Workers step their live sessions in policy-ordered rounds with
 //!   **lane-fused batched decode** ([`PoolConfig::lane_fusion`]):
 //!   same-policy sessions with no recompute deficit advance through one
 //!   batched XLA call per stage (the manifest's `decode_lanes`
 //!   executables, greedy largest group first), the rest step solo —
-//!   output-invisibly (`tests/batched_decode_equivalence.rs`).
+//!   output-invisibly (`tests/batched_decode_equivalence.rs`). Pipelined
+//!   workers instead run **interleaved rounds**: every live session's
+//!   window is submitted down the stage chain before any token is
+//!   collected, overlapping sessions on the chain — output-invisibly too
+//!   (`tests/pipelined_serving_equivalence.rs`).
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
 //!   p50/p95 request latency, p50/p95 time-to-first-token, p50/p95
 //!   per-token gaps, queueing, deadline misses, merged per-exit usage,
-//!   prefix-cache hit-rate / prefill-positions-saved, and lane-fusion
+//!   prefix-cache hit-rate / prefill-positions-saved, lane-fusion
 //!   activity ([`LaneStats`]: fused vs solo steps, lane occupancy,
-//!   stages skipped, policy swaps).
+//!   stages skipped, policy swaps), and interleaved-round activity
+//!   ([`InterleaveStats`]: rounds, steps, and the in-flight-sessions
+//!   occupancy histogram that makes bubble-filling observable).
 //!
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.
@@ -56,7 +62,9 @@ pub mod pool;
 pub mod request;
 pub mod scheduler;
 
-pub use metrics::{percentile, LaneCounters, LaneStats, ServeMetrics};
+pub use metrics::{
+    percentile, InterleaveStats, LaneCounters, LaneStats, ServeMetrics,
+};
 pub use pool::{
     plan_round, BatchOutcome, EngineKind, EnginePool, PoolConfig,
     RequestFailure, ServeEvent,

@@ -44,6 +44,18 @@
 //! exit-layer-for-exit-layer equality against unfused and serial
 //! decoding — and its activity (fused vs solo steps, lane occupancy,
 //! stages skipped) lands in [`ServeMetrics::lanes`].
+//!
+//! **Interleaved pipelined serving**: on backends that interleave
+//! windows ([`DecodeBackend::interleaves_windows`] — the pipelined
+//! engine), a round submits every live session's width-1 window down
+//! the stage chain before collecting any token
+//! ([`DecodeSession::step_interleaved`]), so one session's deep-stage KV
+//! back-fill overlaps another session's shallow-stage forward — the
+//! pipeline bubbles a single session leaves are filled by its
+//! neighbours. Exit policies ride per-session (captured by the chain at
+//! admission), so mixed-policy sessions share rounds without
+//! engine-resident policy swaps, and per-round in-flight occupancy
+//! lands in [`ServeMetrics::interleave`].
 
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
@@ -58,7 +70,9 @@ use crate::inference::{
     PrefixCacheStats, PrefixCacheStore, SequentialEngine, StepEvent,
 };
 
-use super::metrics::{LaneCounters, LaneStats, ServeMetrics};
+use super::metrics::{
+    InterleaveStats, LaneCounters, LaneStats, ServeMetrics,
+};
 use super::request::{ServeRequest, ServeResponse};
 use super::scheduler::{Policy, Scheduler};
 
@@ -93,20 +107,20 @@ pub struct PoolConfig {
     /// Queue scheduling policy (FIFO / SPF / priority+deadline).
     pub sched: Policy,
     /// Live decode sessions each worker interleaves (continuous
-    /// batching). Clamped to at least 1 and to what the engine supports —
-    /// the pipelined engine keeps decode state in its stage threads and
-    /// caps this at 1; the sequential engine's sessions own their KV
-    /// caches and interleave freely.
+    /// batching). Clamped to at least 1 and to what the engine supports
+    /// ([`DecodeBackend::max_live_sessions`]). Both engines serve many
+    /// sessions at once: the sequential engine's sessions own their KV
+    /// caches, and the pipelined engine keys per-stage cache slots by
+    /// session id.
     pub max_concurrent: usize,
     /// Pool-wide shared-prefix KV-cache budget in cached positions
     /// (0 disables). When set, the pool keeps one [`PrefixCacheStore`]
     /// of post-prefill snapshots shared across all workers: admissions
     /// on any worker restore the longest cached prefix of their prompt
-    /// and prefill only the suffix. Only engines that support cache
-    /// snapshots participate
-    /// ([`DecodeBackend::supports_cache_snapshots`]) — the sequential
-    /// engine does; pipelined workers log the capability gap once and
-    /// serve without reuse.
+    /// and prefill only the suffix. Both engines participate
+    /// ([`DecodeBackend::supports_cache_snapshots`]): sequential
+    /// sessions snapshot their own caches, and the pipelined engine
+    /// drains per-stage session slots over its snapshot protocol.
     pub prefix_cache_positions: usize,
     /// Fuse same-policy live sessions into batched decode lane groups
     /// (manifest `decode_lanes` executables) instead of stepping each
@@ -297,6 +311,12 @@ impl EnginePool {
         self.lane_counters.stats()
     }
 
+    /// Lifetime interleaved-round counters of the pool (per-batch deltas
+    /// are in [`ServeMetrics::interleave`]).
+    pub fn interleave_stats(&self) -> InterleaveStats {
+        self.lane_counters.interleave_stats()
+    }
+
     pub fn config(&self) -> &PoolConfig {
         &self.cfg
     }
@@ -404,6 +424,7 @@ impl EnginePool {
         let prefix_base: Vec<PrefixCacheStats> =
             self.prefix_stores.iter().map(|s| s.stats()).collect();
         let lane_base = self.lane_counters.stats();
+        let interleave_base = self.lane_counters.interleave_stats();
         let mut failures: Vec<RequestFailure> = Vec::new();
         for r in reqs {
             let id = r.id;
@@ -463,6 +484,10 @@ impl EnginePool {
             metrics.prefix.merge(&store.stats().since(base));
         }
         metrics.lanes = self.lane_counters.stats().since(&lane_base);
+        metrics.interleave = self
+            .lane_counters
+            .interleave_stats()
+            .since(&interleave_base);
         Ok(BatchOutcome { responses, failures, metrics })
     }
 
@@ -532,25 +557,13 @@ fn worker_main(
             return;
         }
     };
-    // Capability gate: the prefix cache needs snapshottable per-session
-    // caches. Engines that decline (the pipelined one) are served
-    // without reuse, loudly.
-    let store = match store {
-        Some(st) if !engine.backend().supports_cache_snapshots() => {
-            eprintln!(
-                "[serve] worker {worker}: prefix KV cache requested but \
-                 the {:?} engine does not support cache snapshots; \
-                 serving without prefix reuse",
-                cfg.engine
-            );
-            drop(st);
-            None
-        }
-        other => other,
-    };
     events.send(WorkerEvent::Ready { worker }).ok();
     let max_live =
         cfg.max_concurrent.max(1).min(engine.backend().max_live_sessions());
+    // Interleaving backends (the pipelined engine) take whole rounds
+    // down the stage chain at once instead of fused lane groups or
+    // round-robined solo steps.
+    let interleaving = engine.backend().interleaves_windows();
     let mut live: Vec<Live> = Vec::new();
     // Engines read one resident policy; track it and re-apply before
     // touching a session that wants a different one.
@@ -656,19 +669,38 @@ fn worker_main(
         let classes = policy_classes(&live);
         let (lanes, fusable) = {
             let be = engine.backend();
-            let lanes: Vec<usize> = if cfg.lane_fusion {
+            let lanes: Vec<usize> = if cfg.lane_fusion && !interleaving {
                 be.decode_lanes().to_vec()
             } else {
                 Vec::new()
             };
-            let fusable: Vec<bool> = if lanes.is_empty() {
+            let fusable: Vec<bool> = if lanes.is_empty() && !interleaving {
                 vec![false; live.len()]
             } else {
                 live.iter().map(|l| l.session.fusable(&*be)).collect()
             };
             (lanes, fusable)
         };
-        let plan = plan_round(&classes, &fusable, &lanes);
+        let plan = if interleaving {
+            // One interleaved group of every eligible session — the
+            // chain handles mixed policies (each session's policy was
+            // captured stage-side at admission), so no policy-class
+            // split. The rest step solo: an ineligible session here is
+            // out of budget or KV capacity, so its solo step only emits
+            // `Finished` without touching the backend.
+            let group: Vec<usize> =
+                (0..live.len()).filter(|&i| fusable[i]).collect();
+            let mut plan: Vec<Vec<usize>> = Vec::new();
+            if !group.is_empty() {
+                plan.push(group);
+            }
+            plan.extend(
+                (0..live.len()).filter(|&i| !fusable[i]).map(|i| vec![i]),
+            );
+            plan
+        } else {
+            plan_round(&classes, &fusable, &lanes)
+        };
         // Sessions finished (Ok) or failed (Err(msg)) this round, by
         // live index.
         let mut retired: Vec<(usize, Option<String>)> = Vec::new();
@@ -678,12 +710,105 @@ fn worker_main(
         while let Some(group) = queue.pop_front() {
             let group = &group;
             let gpolicy = live[group[0]].policy.clone();
-            if gpolicy != current_policy {
+            // Interleaving backends read each session's policy from the
+            // chain slot captured at admission; the engine-resident
+            // policy only matters for future admissions, so rounds never
+            // swap it.
+            if !interleaving && gpolicy != current_policy {
                 engine.apply_policy(&gpolicy);
                 current_policy = gpolicy;
                 counters.record_policy_apply();
             }
-            if group.len() == 1 {
+            if interleaving && fusable[group[0]] {
+                // Interleaved stage-chain round: submit every member's
+                // window, then collect every token — members overlap on
+                // the chain, and the occupancy histogram records how
+                // many were in flight together.
+                let mut members: Vec<(usize, &mut Live)> = live
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| group.contains(i))
+                    .collect();
+                let stepped = {
+                    let mut sess: Vec<&mut DecodeSession> = members
+                        .iter_mut()
+                        .map(|(_, l)| &mut l.session)
+                        .collect();
+                    let be = engine.backend();
+                    std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        DecodeSession::step_interleaved(be, &mut sess)
+                    }))
+                };
+                match stepped {
+                    Err(_) => {
+                        // As in the solo panic arm: deliver the round's
+                        // deferred outcomes, then fail the group and
+                        // every other live session.
+                        drop(members);
+                        let i = group[0];
+                        let below =
+                            retired.iter().filter(|(j, _)| *j < i).count();
+                        settle_round(
+                            worker,
+                            &events,
+                            engine.backend(),
+                            &mut live,
+                            retired,
+                        );
+                        let id = live.remove(i - below).id;
+                        retire(worker, &events, id, &live);
+                        return;
+                    }
+                    Ok(Err(e)) => {
+                        // A failed interleaved round leaves the chain's
+                        // per-session state indeterminate — some members
+                        // may have absorbed their token while others'
+                        // windows never ran — so fail every member
+                        // rather than retry against unknown caches. The
+                        // worker itself keeps serving: a poisoned chain
+                        // fails future rounds fast, and healthy chains
+                        // (e.g. a malformed single window) carry on.
+                        let msg =
+                            format!("interleaved round failed: {e:#}");
+                        drop(members);
+                        for &i in group {
+                            retired.push((i, Some(msg.clone())));
+                        }
+                    }
+                    Ok(Ok(evs)) => {
+                        counters.record_interleaved(group.len());
+                        let now = Instant::now();
+                        for ((i, l), ev) in members.iter_mut().zip(evs) {
+                            let StepEvent::Token {
+                                token,
+                                exit_layer,
+                                done,
+                            } = ev
+                            else {
+                                // Fusable sessions always decode.
+                                retired.push((*i, None));
+                                continue;
+                            };
+                            l.token_seconds.push(
+                                now.duration_since(l.last_event)
+                                    .as_secs_f64(),
+                            );
+                            l.last_event = now;
+                            events
+                                .send(WorkerEvent::Token {
+                                    id: l.id,
+                                    worker,
+                                    token,
+                                    exit_layer,
+                                })
+                                .ok();
+                            if done.is_some() {
+                                retired.push((*i, None));
+                            }
+                        }
+                    }
+                }
+            } else if group.len() == 1 {
                 let i = group[0];
                 let stepped = {
                     let l = &mut live[i];
@@ -701,7 +826,13 @@ fn worker_main(
                         // deferred completions/failures first.
                         let below =
                             retired.iter().filter(|(j, _)| *j < i).count();
-                        settle_round(worker, &events, &mut live, retired);
+                        settle_round(
+                            worker,
+                            &events,
+                            engine.backend(),
+                            &mut live,
+                            retired,
+                        );
                         let id = live.remove(i - below).id;
                         retire(worker, &events, id, &live);
                         return;
@@ -760,7 +891,13 @@ fn worker_main(
                         let i = group[0];
                         let below =
                             retired.iter().filter(|(j, _)| *j < i).count();
-                        settle_round(worker, &events, &mut live, retired);
+                        settle_round(
+                            worker,
+                            &events,
+                            engine.backend(),
+                            &mut live,
+                            retired,
+                        );
                         let id = live.remove(i - below).id;
                         retire(worker, &events, id, &live);
                         return;
@@ -824,7 +961,7 @@ fn worker_main(
         }
         // Retire finished/failed sessions; their slots free up for the
         // next admission pass.
-        settle_round(worker, &events, &mut live, retired);
+        settle_round(worker, &events, engine.backend(), &mut live, retired);
     }
     engine.finish();
 }
@@ -832,16 +969,20 @@ fn worker_main(
 /// Deliver a round's deferred outcomes — `(live index, Some(error))`
 /// failures and `(live index, None)` completions — removing each from
 /// the live set, highest index first so the recorded indices stay
-/// valid.
+/// valid. Each retired session is closed first, releasing its
+/// backend-side decode state (per-stage KV slots on interleaving
+/// engines).
 fn settle_round(
     worker: usize,
     events: &Sender<WorkerEvent>,
+    backend: &mut dyn DecodeBackend,
     live: &mut Vec<Live>,
     mut retired: Vec<(usize, Option<String>)>,
 ) {
     retired.sort_by(|a, b| b.0.cmp(&a.0));
     for (i, err) in retired {
-        let l = live.remove(i);
+        let mut l = live.remove(i);
+        l.session.close(backend);
         match err {
             Some(error) => {
                 events

@@ -1,0 +1,466 @@
+//! Integration: multi-session pipelined serving must be
+//! **output-invisible**.
+//!
+//! Interleaving many decode sessions down the pipelined engine's stage
+//! chain (one session's deep-stage KV back-fill overlapping another's
+//! shallow-stage forward) must produce token-for-token and
+//! exit-layer-for-exit-layer the same streams as serial pipelined
+//! decoding and as the sequential engine — across exit policies
+//! (including the `Confidence{1.0}` and `Never` full-model baselines),
+//! with the prefix KV cache on or off, and under mid-flight admission.
+//! The overlap claim is separate and observable: a pipelined pool at
+//! `max_concurrent` >= 2 must record interleaved rounds with >= 2
+//! sessions in flight ([`ServeMetrics::interleave`] occupancy).
+//!
+//! [`ServeMetrics::interleave`]: eellm::serve::ServeMetrics
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{
+    shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
+};
+use eellm::inference::{
+    DecodeBackend, DecodeSession, ExitPolicy, ModelState, PipelinedEngine,
+    PrefixCacheStore, SequentialEngine, StepEvent,
+};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    BatchOutcome, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
+    ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so confidences are meaningful (same recipe as
+/// the sibling equivalence suites).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+type Streams = BTreeMap<u64, Vec<(i32, usize)>>;
+
+/// Serve `reqs` on a one-worker pool of `engine` workers and collect
+/// each request's (token, exit layer) stream from the live event feed.
+fn pooled_streams(
+    state: &ModelState,
+    engine: EngineKind,
+    policy: ExitPolicy,
+    reqs: Vec<ServeRequest>,
+    max_concurrent: usize,
+    prefix_cache_positions: usize,
+) -> (Streams, BatchOutcome) {
+    let mut pool = EnginePool::new(
+        state.clone(),
+        PoolConfig {
+            workers: 1,
+            engine,
+            policy,
+            sched: Policy::Fifo,
+            max_concurrent,
+            prefix_cache_positions,
+            lane_fusion: true,
+        },
+    );
+    let mut streams: Streams = BTreeMap::new();
+    let out = pool
+        .run_batch_streamed(reqs, |ev| {
+            if let ServeEvent::Token { id, token, exit_layer, .. } = ev {
+                streams.entry(*id).or_default().push((*token, *exit_layer));
+            }
+        })
+        .unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    (streams, out)
+}
+
+/// Drain one serial session, collecting its (token, exit layer) stream.
+fn serial_stream(
+    backend: &mut dyn DecodeBackend,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<(i32, usize)> {
+    let mut s = DecodeSession::new_text(backend, prompt, max_new).unwrap();
+    s.prefill(backend).unwrap();
+    let mut out = Vec::new();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    s.close(backend);
+    out
+}
+
+const PROMPTS: [&str; 6] = [
+    "the capital of ",
+    "question: what is the ",
+    "count: 3 4 5 ",
+    "abc: a b c d ",
+    "the color of ",
+    "fact: the capital ",
+];
+
+/// The acceptance grid: interleaved pipelined pool streams equal the
+/// serial (`max_concurrent` 1) pipelined pool, the serial pipelined
+/// engine, and the sequential engine, across >= 3 exit policies
+/// including the `Confidence{1.0}` and `Never` full-model baselines —
+/// and the interleaved runs demonstrably overlap >= 2 sessions in
+/// flight.
+#[test]
+fn interleaved_pool_matches_serial_pipelined_and_sequential() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policies = [
+        ExitPolicy::confidence(0.4),
+        ExitPolicy::confidence(1.0),
+        ExitPolicy::Never,
+        ExitPolicy::Entropy { max_nats: 1.0 },
+    ];
+    for policy in &policies {
+        let reqs: Vec<ServeRequest> = PROMPTS
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ServeRequest::new(i as u64, *p, 10))
+            .collect();
+        let (interleaved, m_on) = pooled_streams(
+            &state,
+            EngineKind::Pipelined,
+            policy.clone(),
+            reqs.clone(),
+            4,
+            0,
+        );
+        let (serial_pool, m_serial) = pooled_streams(
+            &state,
+            EngineKind::Pipelined,
+            policy.clone(),
+            reqs,
+            1,
+            0,
+        );
+        assert_eq!(
+            interleaved, serial_pool,
+            "policy {policy}: interleaved pipelined pool diverged from \
+             the serial pipelined pool"
+        );
+        let mut pipe =
+            PipelinedEngine::new(state.clone(), policy.clone()).unwrap();
+        let mut seq =
+            SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+        for (i, p) in PROMPTS.iter().enumerate() {
+            let want = serial_stream(&mut pipe, p, 10);
+            assert!(!want.is_empty(), "policy {policy}: empty stream");
+            assert_eq!(
+                interleaved[&(i as u64)],
+                want,
+                "policy {policy}, prompt {p:?}: interleaved pool diverged \
+                 from the serial pipelined engine"
+            );
+            assert_eq!(
+                serial_stream(&mut seq, p, 10),
+                want,
+                "policy {policy}, prompt {p:?}: pipelined diverged from \
+                 sequential"
+            );
+        }
+        pipe.shutdown();
+        // The overlap acceptance bar: >= 2 sessions demonstrably in
+        // flight on the chain at max_concurrent 4.
+        let il = &m_on.metrics.interleave;
+        assert!(il.rounds > 0, "policy {policy}: no interleaved rounds");
+        assert!(
+            il.occupancy.iter().any(|&(n, _)| n >= 2),
+            "policy {policy}: no round held >= 2 sessions in flight: \
+             {il:?}"
+        );
+        assert!(il.max_in_flight() >= 2, "policy {policy}: {il:?}");
+        // The serial pool never overlaps — the histogram says so.
+        assert!(
+            m_serial
+                .metrics
+                .interleave
+                .occupancy
+                .iter()
+                .all(|&(n, _)| n == 1),
+            "serial pool recorded overlap: {:?}",
+            m_serial.metrics.interleave
+        );
+    }
+}
+
+/// Prefix KV reuse on the pipelined engine: cache-on streams equal
+/// cache-off streams (and the sequential engine's cache-on streams),
+/// with real hits — the capability carve-out is gone end to end.
+#[test]
+fn prefix_cache_parity_on_pipelined_pool() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let max_seq = man.model.max_seq;
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let spec = SharedPrefixSpec {
+        seed: 11,
+        n_groups: 2,
+        requests_per_group: 4,
+        prefix_bytes: max_seq / 2,
+    };
+    let prompts = shared_prefix_prompts(&spec, &corpus.facts);
+    let reqs: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest::new(i as u64, p.as_str(), 8))
+        .collect();
+    let policy = ExitPolicy::confidence(0.6);
+    let mut all: Vec<Streams> = Vec::new();
+    for &engine in &[EngineKind::Pipelined, EngineKind::Sequential] {
+        for &budget in &[0usize, 8 * max_seq] {
+            let (streams, out) = pooled_streams(
+                &state,
+                engine,
+                policy.clone(),
+                reqs.clone(),
+                4,
+                budget,
+            );
+            if budget > 0 {
+                assert!(
+                    out.metrics.prefix.hits > 0,
+                    "{engine:?}: no prefix hits on shared prompts"
+                );
+                assert!(
+                    out.metrics.prefill_positions_saved() > 0,
+                    "{engine:?}: prefix hits saved no prefill positions"
+                );
+            }
+            all.push(streams);
+        }
+    }
+    for s in &all[1..] {
+        assert_eq!(
+            *s, all[0],
+            "streams diverged across engine x prefix-cache combinations"
+        );
+    }
+}
+
+/// Snapshots cross engines: a prefix snapshot drained from the
+/// pipelined engine's stage chain restores on the sequential engine and
+/// vice versa, with identical continuations — the host snapshot format
+/// is engine-agnostic.
+#[test]
+fn snapshots_roundtrip_across_engines() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policy = ExitPolicy::confidence(0.6);
+    let prompt = "fact: the capital of freedonia is ";
+    let budget = 8 * man.model.max_seq;
+    let mut pipe =
+        PipelinedEngine::new(state.clone(), policy.clone()).unwrap();
+    assert!(
+        DecodeBackend::supports_cache_snapshots(&pipe),
+        "the pipelined engine must support cache snapshots"
+    );
+    let mut seq =
+        SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+    let want = serial_stream(&mut pipe, prompt, 8);
+    assert_eq!(want, serial_stream(&mut seq, prompt, 8));
+
+    fn roundtrip(
+        donor: &mut dyn DecodeBackend,
+        restorer: &mut dyn DecodeBackend,
+        prompt: &str,
+        budget: usize,
+        want: &[(i32, usize)],
+    ) {
+        let store = PrefixCacheStore::new(budget);
+        let mut d = DecodeSession::new_text(donor, prompt, 8).unwrap();
+        d.prefill(donor).unwrap();
+        assert!(store.insert(d.prefix_snapshot(donor).unwrap()));
+        d.close(donor);
+        let mut r =
+            DecodeSession::new_text(restorer, prompt, 8).unwrap();
+        let rep = r.prefill_with_cache(restorer, &store).unwrap();
+        assert!(
+            rep.cached_tokens > 0 && rep.saved_positions > 0,
+            "restore missed: {rep:?}"
+        );
+        let mut got = Vec::new();
+        while !r.is_done() {
+            if let StepEvent::Token { token, exit_layer, .. } =
+                r.step(restorer).unwrap()
+            {
+                got.push((token, exit_layer));
+            }
+        }
+        r.close(restorer);
+        assert_eq!(
+            got, want,
+            "cross-engine restored continuation diverged"
+        );
+    }
+    // Pipelined snapshot -> sequential restore, and the reverse.
+    roundtrip(&mut pipe, &mut seq, prompt, budget, &want);
+    roundtrip(&mut seq, &mut pipe, prompt, budget, &want);
+    pipe.shutdown();
+}
+
+/// Mid-flight admission on the pipelined pool: more requests than live
+/// slots with staggered budgets, so sessions open on the chain while
+/// earlier ones are mid-generation. Streams must equal the serial
+/// pipelined pool exactly.
+#[test]
+fn mid_flight_admission_matches_serial_pipelined() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let reqs: Vec<ServeRequest> = (0..10)
+        .map(|i| {
+            let p = PROMPTS[i % PROMPTS.len()];
+            // Varied budgets stagger completions, forcing admissions
+            // into partially-drained rounds.
+            ServeRequest::new(i as u64, p, 6 + (i % 5))
+        })
+        .collect();
+    let policy = ExitPolicy::confidence(0.4);
+    let (on, m_on) = pooled_streams(
+        &state,
+        EngineKind::Pipelined,
+        policy.clone(),
+        reqs.clone(),
+        3,
+        0,
+    );
+    let (serial, _) =
+        pooled_streams(&state, EngineKind::Pipelined, policy, reqs, 1, 0);
+    assert_eq!(on, serial, "mid-flight admission diverged on the chain");
+    assert!(
+        m_on.metrics.interleave.occupancy.iter().any(|&(n, _)| n >= 2),
+        "no overlap under churn: {:?}",
+        m_on.metrics.interleave
+    );
+}
+
+/// Mixed per-request policies interleave on one chain: each session's
+/// policy is captured stage-side at admission, so mixed-policy rounds
+/// never leak policies across sessions — and the engine-resident policy
+/// is only swapped at admission, never per round.
+#[test]
+fn mixed_policy_sessions_share_the_chain() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policies = [
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::Never,
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::confidence(0.2),
+        ExitPolicy::Never,
+        ExitPolicy::confidence(0.6),
+    ];
+    let reqs: Vec<ServeRequest> = PROMPTS
+        .iter()
+        .zip(&policies)
+        .enumerate()
+        .map(|(i, (p, pol))| {
+            ServeRequest::new(i as u64, *p, 10).with_policy(pol.clone())
+        })
+        .collect();
+    // Pool default differs from every request: a leak shows up as a
+    // diverged stream.
+    let default = ExitPolicy::confidence(0.9);
+    let (on, m_on) = pooled_streams(
+        &state,
+        EngineKind::Pipelined,
+        default.clone(),
+        reqs.clone(),
+        6,
+        0,
+    );
+    let (serial, _) =
+        pooled_streams(&state, EngineKind::Pipelined, default, reqs, 1, 0);
+    assert_eq!(on, serial, "mixed-policy interleaving diverged");
+    for (i, (p, pol)) in PROMPTS.iter().zip(&policies).enumerate() {
+        let mut engine =
+            PipelinedEngine::new(state.clone(), pol.clone()).unwrap();
+        let want = serial_stream(&mut engine, p, 10);
+        engine.shutdown();
+        assert_eq!(
+            on[&(i as u64)],
+            want,
+            "request {i} (policy {pol}) diverged from serial"
+        );
+    }
+    // Interleaved rounds never swap the engine-resident policy; swaps
+    // are bounded by admissions, not decode steps.
+    let il = &m_on.metrics.interleave;
+    assert!(
+        m_on.metrics.lanes.policy_applies <= PROMPTS.len() as u64,
+        "per-round policy churn on the chain: {} applies over {} rounds",
+        m_on.metrics.lanes.policy_applies,
+        il.rounds
+    );
+    assert!(
+        il.occupancy.iter().any(|&(n, _)| n >= 2),
+        "mixed-policy sessions never overlapped: {il:?}"
+    );
+}

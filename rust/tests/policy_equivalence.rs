@@ -217,7 +217,7 @@ fn uniform_per_layer_equals_confidence() {
     for seed in [5u64, 11] {
         let state = ModelState::init(man.clone(), seed);
         // One pipelined engine per seed; policies swap between sessions
-        // (the stages adopt the new policy at the chain reset).
+        // (each session captures the policy set when it opens).
         let mut pipe =
             PipelinedEngine::new(state.clone(), ExitPolicy::Never).unwrap();
         for &tau in &[0.0f32, 0.3, 0.7, 1.0] {
@@ -240,8 +240,8 @@ fn uniform_per_layer_equals_confidence() {
                     "seed {seed}, tau {tau}, prompt {p:?}: sequential \
                      uniform PerLayer != Confidence"
                 );
-                // The pipelined engine admits one session at a time:
-                // drain the PerLayer session fully before Confidence.
+                // Each pipelined session decodes under the policy set
+                // at its open: swap, run PerLayer, swap, run Confidence.
                 pipe.set_policy(uniform.clone());
                 let qa = stream(&mut pipe, p, 10);
                 pipe.set_policy(ExitPolicy::confidence(tau));
