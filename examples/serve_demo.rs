@@ -94,8 +94,10 @@ fn main() -> anyhow::Result<()> {
             max_concurrent: concurrent,
             prefix_cache_positions: args.usize_or("prefix-cache", 0),
             // The demo serves the default hot path: fused lane decode
-            // whenever the manifest ships decode_lanes executables.
+            // over device-resident lane groups whenever the manifest
+            // ships decode_lanes executables.
             lane_fusion: true,
+            lane_residency: true,
         },
     );
 

@@ -20,6 +20,10 @@ Per config the artifact set is, for each pipeline stage s:
                    B independent width-1 windows, one per live session,
                    with lane-stacked KV caches and per-lane positions]
   s{s}_head{L}     (head_params, x)                      -> (logits,)
+  s{s}_head{L}_b{B}
+                   (head_params, x[B, H])                -> (logits[B, V],)
+                   [lane-batched exit head: one dispatch decides every
+                   lane in a fused group, one key per decode_lanes size]
 
 plus, for configs with emit_reference, a monolithic `full_loss_grads` /
 `full_eval` pair used by the Rust integration tests to verify that
@@ -170,6 +174,14 @@ def build_config(cfg, out_root):
             execs[hname] = w.emit(
                 f"s{s}_head{layer}", head_fn,
                 [_spec(specs[i].shape) for i in idx], _spec((h,)))
+            for lanes in sorted(set(cfg.decode_lanes)):
+                bhead_fn, bidx = decode.head_decode_batched_fn(
+                    cfg, s, layer, kind)
+                assert bidx == idx
+                execs[f"head{layer}_b{lanes}"] = w.emit(
+                    f"s{s}_head{layer}_b{lanes}", bhead_fn,
+                    [_spec(specs[i].shape) for i in bidx],
+                    _spec((lanes, h)))
             exit_meta.append({
                 "layer": layer,
                 "head": kind,

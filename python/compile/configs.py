@@ -114,8 +114,13 @@ class ModelConfig:
         for w in self.decode_widths:
             assert w >= 1 and w <= self.max_seq
         assert 1 in self.decode_widths, "width-1 decode is required"
+        # Lane sizes also key the batched exit-head executables
+        # (`s{s}_head{L}_b{B}`): one per exit per lane size, so a fused
+        # group's exit decisions cost one dispatch. Keep the ladder small
+        # and bounded — every entry multiplies the artifact count.
         for b in self.decode_lanes:
             assert b >= 2, f"lane count {b} < 2 fuses nothing"
+            assert b <= 64, f"lane count {b} > 64 blows up artifact size"
         assert len(set(self.decode_lanes)) == len(self.decode_lanes)
         return self
 

@@ -134,6 +134,24 @@ def head_decode_fn(cfg, s, layer, kind):
     return fn, idx
 
 
+def head_decode_batched_fn(cfg, s, layer, kind):
+    """fn(head_params, x (B, H)) -> logits (B, V): lane-batched exit head.
+
+    One exit-head call for a whole fused lane group — per-lane exit
+    decisions from a single XLA dispatch instead of B solo `head_decode_fn`
+    calls. Each lane is exactly the solo head (vmap over the lane axis),
+    so batched and solo exit decisions are interchangeable mid-generation,
+    the same contract `stage_decode_batched_fn` keeps for the body.
+    """
+    solo, idx = head_decode_fn(cfg, s, layer, kind)
+
+    def fn(head_params, x):
+        (logits,) = jax.vmap(lambda xi: solo(head_params, xi))(x)
+        return (logits,)
+
+    return fn, idx
+
+
 def head_param_indices(cfg, s, layer):
     """Stage-param indices feeding the exit head after `layer`."""
     all_specs = model.stage_param_specs(cfg, s)

@@ -195,6 +195,39 @@ def test_head_decode_matches_head_logits(rng):
                         rtol=1e-5)
 
 
+def test_batched_head_matches_solo_head_decode(rng):
+    """Lane-batched exit head == B solo `head_decode_fn` calls, and each
+    lane's logits ignore what rides in the other lanes.
+
+    This is the contract the Rust engine's device-resident lane groups
+    lean on: one `s{s}_head{L}_b{B}` dispatch decides every lane in a
+    fused group, and the decision per lane must be exactly the solo one
+    (fired lanes ride along as padding without perturbing the rest)."""
+    cfg, params, _ = _setup(rng)
+    s = 1  # ee-tiny: stage 1 owns the early exit (layer 2) + final (4)
+    B = 3
+    for layer, kind, _w in model.stage_exits(cfg, s):
+        solo, idx = decode.head_decode_fn(cfg, s, layer, kind)
+        batched, bidx = decode.head_decode_batched_fn(cfg, s, layer, kind)
+        assert bidx == idx
+        head_params = [params[s][i] for i in idx]
+        xs = jnp.asarray(rng.normal(0, 1, (B, cfg.hidden)), jnp.float32)
+        got = batched(head_params, xs)[0]
+        assert got.shape == (B, cfg.vocab)
+        for i in range(B):
+            want = solo(head_params, xs[i])[0]
+            assert_allclose(np.asarray(got[i]), np.asarray(want),
+                            atol=1e-5, rtol=1e-5,
+                            err_msg=f"layer {layer} lane {i}")
+        # Lane independence: perturbing lane 2 leaves lanes 0-1 intact.
+        xs2 = xs.at[2].set(-xs[2])
+        got2 = batched(head_params, xs2)[0]
+        assert_allclose(np.asarray(got2[:2]), np.asarray(got[:2]),
+                        atol=1e-6, err_msg=f"layer {layer} cross-lane bleed")
+        assert not np.allclose(np.asarray(got2[2]), np.asarray(got[2])), \
+            "lane 2 ignored its own hidden state"
+
+
 def test_exit_logits_equal_truncated_model(rng):
     """Early-exit logits == logits of a model truncated at the exit layer.
 

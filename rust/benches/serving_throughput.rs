@@ -59,6 +59,7 @@ fn main() {
                     // scaling alone; the lanes-on/off comparison below
                     // isolates fusion.
                     lane_fusion: false,
+                    lane_residency: true,
                 },
             );
             let out = pool.run_batch(reqs.clone()).expect("batch");
@@ -137,6 +138,7 @@ fn main() {
                 max_concurrent: 4,
                 prefix_cache_positions: budget,
                 lane_fusion: false,
+                lane_residency: true,
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");
@@ -194,6 +196,7 @@ fn main() {
                 max_concurrent: 4,
                 prefix_cache_positions: 0,
                 lane_fusion: fusion,
+                lane_residency: true,
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");
@@ -237,6 +240,106 @@ fn main() {
         lane_tput[1] / lane_tput[0].max(1e-9)
     );
 
+    // --- Device-resident lane groups vs per-step round-trips ---
+    // Shape checks: tokens are byte-identical with residency on vs off,
+    // warm group hits actually happen under residency, and resident
+    // steady-state decode moves **zero** per-step cache traffic — every
+    // gather is attributable to group formation (cold forms), while the
+    // round-trip run pays lane x stage gathers and scatters on every
+    // fused step.
+    let mut res_table = Table::new(
+        "Device-resident lane groups vs round-trip (shared-prefix \
+         workload, max_concurrent 4)",
+        &["resident", "tok/s", "warm hits", "cold forms", "gathers",
+          "scatters", "gather KiB", "scatter KiB"],
+    );
+    let mut res_outputs: Vec<Vec<Vec<i32>>> = Vec::new();
+    let mut res_tput = Vec::new();
+    let mut res_gathers = Vec::new();
+    for &residency in &[false, true] {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            PoolConfig {
+                workers: 1,
+                engine: EngineKind::Sequential,
+                policy: ExitPolicy::confidence(0.6),
+                sched: Policy::Fifo,
+                max_concurrent: 4,
+                prefix_cache_positions: 0,
+                lane_fusion: true,
+                lane_residency: residency,
+            },
+        );
+        let out = pool.run_batch(shared_reqs.clone()).expect("batch");
+        pool.shutdown().expect("shutdown");
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        let m = &out.metrics;
+        let l = &m.lanes;
+        res_table.row(vec![
+            if residency { "on".into() } else { "off".to_string() },
+            format!("{:.1}", m.throughput_tps()),
+            format!("{}", l.warm_group_hits),
+            format!("{}", l.cold_group_forms),
+            format!("{}", l.cache_gathers),
+            format!("{}", l.cache_scatters),
+            format!("{}", l.cache_gather_bytes / 1024),
+            format!("{}", l.cache_scatter_bytes / 1024),
+        ]);
+        assert!(l.fused_steps > 0, "no fused lane groups formed: {l:?}");
+        if residency {
+            assert!(
+                l.warm_group_hits > 0,
+                "residency on but no warm group hits: {l:?}"
+            );
+            // Zero per-step traffic at steady state: every gather must
+            // be part of a group formation, so total gathers are
+            // bounded by cold forms x widest lane group x stages.
+            let stages = state.man.stages.len() as u64;
+            let max_lane =
+                *state.man.decode_lanes.iter().max().unwrap_or(&0) as u64;
+            assert!(
+                l.cache_gathers <= l.cold_group_forms * max_lane * stages,
+                "resident decode gathered outside group formation: {l:?}"
+            );
+        } else {
+            assert_eq!(
+                l.warm_group_hits, 0,
+                "round-trip mode scored warm hits: {l:?}"
+            );
+            assert_eq!(
+                l.cold_group_forms, 0,
+                "round-trip mode formed resident groups: {l:?}"
+            );
+            // Round-trip decode pays at least one lane-cache gather per
+            // fused step (one per stage actually run).
+            assert!(
+                l.cache_gathers >= l.fused_steps,
+                "round-trip decode under-reported gathers: {l:?}"
+            );
+        }
+        res_tput.push(m.throughput_tps());
+        res_gathers.push(l.cache_gathers);
+        res_outputs.push(
+            out.responses.iter().map(|r| r.output.tokens.clone()).collect(),
+        );
+    }
+    res_table.emit("serving_throughput");
+    assert_eq!(
+        res_outputs[0], res_outputs[1],
+        "lane residency changed generated tokens"
+    );
+    assert!(
+        res_gathers[1] < res_gathers[0],
+        "residency did not reduce cache gathers: resident {} vs \
+         round-trip {}",
+        res_gathers[1],
+        res_gathers[0]
+    );
+    println!(
+        "lane residency throughput ratio (resident/round-trip): {:.2}x",
+        res_tput[1] / res_tput[0].max(1e-9)
+    );
+
     // --- Sequential vs pipelined engines on one serving workload ---
     // Shape checks: generated tokens are identical across engines,
     // pipelined pool workers actually interleave sessions on the stage
@@ -259,6 +362,7 @@ fn main() {
                 max_concurrent: 4,
                 prefix_cache_positions: 0,
                 lane_fusion: true,
+                lane_residency: true,
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");

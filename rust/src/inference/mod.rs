@@ -39,6 +39,19 @@
 //! fills another session's pipeline bubble. Both are the serving pool's
 //! hot paths, and both are output-invisible.
 //!
+//! Fused lane groups on the sequential engine are **device-resident**
+//! (`SequentialEngine::lane_residency`, on by default): a group's
+//! lane-stacked per-stage KV caches are gathered once at formation, held
+//! as device literals across rounds — a warm round is one XLA dispatch
+//! per stage plus one lane-batched exit-head dispatch per exit (the
+//! manifest's `s{s}_head{L}_b{B}` executables), with zero host cache
+//! traffic — and scattered back to per-session handles only when a lane
+//! departs (exit/deficit/close), the group is re-planned, or a snapshot
+//! needs host bytes. Member handles go stale while resident and lazily
+//! re-sync on their next engine touch (see [`SessionCaches::generation`]).
+//! Gather/scatter/warm-hit traffic is surfaced via
+//! [`DecodeBackend::lane_traffic`] ([`session::LaneTraffic`]).
+//!
 //! [`prefix_cache`] adds shared-prefix KV reuse on top of the sessions:
 //! a token-trie keyed store of immutable post-prefill cache snapshots
 //! (refcounted, LRU-evicted under a position budget), so sessions whose
@@ -69,5 +82,5 @@ pub use prefix_cache::{
 pub use sequential::SequentialEngine;
 pub use session::{
     CachedPrefill, DecodeBackend, DecodeSession, DoneReason, FusedStep,
-    LaneSlot, SessionCaches, StepEvent, WindowOutcome,
+    LaneSlot, LaneTraffic, SessionCaches, StepEvent, WindowOutcome,
 };

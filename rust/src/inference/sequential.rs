@@ -15,6 +15,17 @@
 //! already-healed positions: recomputation is idempotent (validated in
 //! python/tests/test_decode.py), so this only costs compute — the batching
 //! effect the paper relies on.
+//!
+//! Fused lane decode additionally keeps each group of co-stepping
+//! sessions **device-resident** (`lane_residency`, on by default): the
+//! lanes' per-stage KV caches are gathered into lane-stacked literals
+//! once at group formation, stepped in place every round — zero host
+//! cache traffic at steady state — and scattered back to per-session
+//! handles only when a lane departs (exit/deficit/close), the group is
+//! re-planned, or a snapshot needs host bytes. See
+//! [`SequentialEngine::run_lanes_resident`]'s lifecycle notes.
+
+use std::collections::HashMap;
 
 use anyhow::{ensure, Context, Result};
 
@@ -27,7 +38,8 @@ use super::common::{
 };
 use super::policy::{summarize_logits, ExitPolicy};
 use super::session::{
-    DecodeBackend, DecodeSession, LaneSlot, SessionCaches, WindowOutcome,
+    DecodeBackend, DecodeSession, LaneSlot, LaneTraffic, SessionCaches,
+    WindowOutcome,
 };
 
 /// Per-token probe record (Table 4): predictions + confidences at every
@@ -38,6 +50,19 @@ pub struct TokenProbe {
     /// (exit layer, predicted token, confidence), shallow to deep;
     /// the final exit is the last entry.
     pub exits: Vec<(usize, i32, f32)>,
+}
+
+/// A fused lane group whose lane-stacked per-stage KV caches live on
+/// device across rounds — the burn-fusion persistent-handle idiom applied
+/// to lane decode. Formed by one gather per stage, stepped with **zero**
+/// host cache traffic, and dissolved back to per-session caches only when
+/// a member departs (exit/deficit/close), snapshots, or the group is
+/// re-planned.
+struct LaneGroup {
+    /// Member session ids ([`SessionCaches::generation`]), in lane order.
+    members: Vec<u64>,
+    /// One lane-stacked `[B, ...cache_shape]` device literal per stage.
+    stacked: Vec<xla::Literal>,
 }
 
 pub struct SequentialEngine {
@@ -52,6 +77,27 @@ pub struct SequentialEngine {
     /// Fused-lane batch sizes with a `decode_b{B}_w1` executable on
     /// every stage (sorted; empty on manifests without lane fusion).
     lanes: Vec<usize>,
+    /// Lane sizes whose every exit on every stage also ships a
+    /// lane-batched head executable (`head{L}_b{B}`) — at these sizes a
+    /// fused group's exit decisions cost one dispatch per exit. Subset
+    /// of `lanes`; sizes missing here fall back to per-lane solo heads.
+    head_lanes: Vec<usize>,
+    /// Keep fused lane groups device-resident across rounds (gather once
+    /// at formation, scatter only on departure) instead of a per-step
+    /// host round-trip. On by default; turned off (`--no-resident`) the
+    /// engine reproduces the PR-5 gather/scatter path bit-for-bit for
+    /// comparison runs.
+    pub lane_residency: bool,
+    /// Device-resident fused lane groups, keyed by member session ids.
+    resident: Vec<LaneGroup>,
+    /// Per-stage caches of sessions scattered out of dissolved groups,
+    /// waiting for the owning session's next touch to sync its handle
+    /// (see [`SessionCaches::generation`] on the lazy-sync contract).
+    parked: HashMap<u64, Vec<xla::Literal>>,
+    /// Monotonic fused-decode host⇄device traffic counters.
+    traffic: LaneTraffic,
+    /// Source for [`SessionCaches::generation`] ids (never reused).
+    next_session: u64,
     /// Collect per-exit probes for every generated token (Table 4 mode).
     pub probe: bool,
     pub probes: Vec<TokenProbe>,
@@ -81,6 +127,16 @@ impl SequentialEngine {
             lanes.dedup();
             lanes
         };
+        // Batched exit heads are a capability per lane size: usable only
+        // when every exit on every stage ships one (and the size fuses).
+        let head_lanes: Vec<usize> = {
+            let manifest_head_lanes = state.man.head_lanes();
+            lanes
+                .iter()
+                .copied()
+                .filter(|b| manifest_head_lanes.contains(b))
+                .collect()
+        };
         for st in &state.man.stages {
             for w in &state.man.decode_widths {
                 let key = format!("decode_w{w}");
@@ -102,6 +158,13 @@ impl SequentialEngine {
                     &format!("s{}:{key}", st.index),
                     &state.man.exec_path(st.exec(&key)?),
                 )?;
+                for b in &head_lanes {
+                    let key = format!("head{}_b{b}", e.layer);
+                    rt.load(
+                        &format!("s{}:{key}", st.index),
+                        &state.man.exec_path(st.exec(&key)?),
+                    )?;
+                }
             }
         }
         let plits = state
@@ -117,6 +180,12 @@ impl SequentialEngine {
             policy,
             widths,
             lanes,
+            head_lanes,
+            lane_residency: true,
+            resident: Vec::new(),
+            parked: HashMap::new(),
+            traffic: LaneTraffic::default(),
+            next_session: 0,
             probe: false,
             probes: Vec::new(),
         })
@@ -141,6 +210,212 @@ impl SequentialEngine {
             .get(&format!("s{s}:head{layer}"))?
             .run(&args)?;
         Ok(HostTensor::from_literal(&out[0])?.data)
+    }
+
+    /// Per-lane logits for the exit at `layer` on stage `s`, over the
+    /// lane batch `xh` (shape `[B, H]`). One lane-batched `head{L}_b{B}`
+    /// dispatch when the manifest ships it for this lane count — the
+    /// whole batch is evaluated (fired lanes ride as padding; the head
+    /// is a per-lane vmap, so unconsumed rows perturb nothing) — else
+    /// per-lane solo head calls restricted to the lanes in `need`
+    /// (other entries come back empty).
+    fn head_logits_lanes(
+        &self,
+        s: usize,
+        layer: usize,
+        xh: &HostTensor,
+        need: &[bool],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = need.len();
+        let h = self.state.man.model.hidden;
+        if !self.head_lanes.contains(&b) {
+            return need
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    if n {
+                        self.head_logits(s, layer, &xh.data[i * h..(i + 1) * h])
+                    } else {
+                        Ok(Vec::new())
+                    }
+                })
+                .collect();
+        }
+        let st = &self.state.man.stages[s];
+        let e = st
+            .exits
+            .iter()
+            .find(|e| e.layer == layer)
+            .context("exit not on stage")?;
+        let xlit = xh.to_literal()?;
+        let mut args: Vec<&xla::Literal> = e
+            .head_param_idx
+            .iter()
+            .map(|&i| &self.plits[s][i])
+            .collect();
+        args.push(&xlit);
+        let out = self
+            .rt
+            .get(&format!("s{s}:head{layer}_b{b}"))?
+            .run(&args)?;
+        let t = HostTensor::from_literal(&out[0])?;
+        let v = self.state.man.model.vocab;
+        ensure!(
+            t.data.len() == b * v,
+            "batched head{layer}_b{b} returned {} logits, want {}",
+            t.data.len(),
+            b * v
+        );
+        Ok((0..b).map(|i| t.data[i * v..(i + 1) * v].to_vec()).collect())
+    }
+
+    /// Per-lane entry-exit decisions for stage `s` (Optimization-2
+    /// placement) over the batched hidden state, marking lanes that fire
+    /// in `fired` as (token, exit layer, stages run). Decision order and
+    /// gating match the solo path lane-for-lane: a lane that fires at a
+    /// shallower exit is excluded from deeper exits at the same entry.
+    fn entry_exit_lanes(
+        &self,
+        s: usize,
+        xh: &HostTensor,
+        lanes: &[LaneSlot<'_>],
+        fired: &mut [Option<(i32, usize, usize)>],
+    ) -> Result<()> {
+        let layers: Vec<usize> =
+            self.state.entry_exits(s).iter().map(|e| e.layer).collect();
+        for layer in layers {
+            if !self.policy.may_exit_at(layer) {
+                continue;
+            }
+            let need: Vec<bool> = (0..lanes.len())
+                .map(|i| fired[i].is_none() && lanes[i].allow_exit)
+                .collect();
+            if !need.iter().any(|&n| n) {
+                continue;
+            }
+            let logits = self.head_logits_lanes(s, layer, xh, &need)?;
+            for (i, &n) in need.iter().enumerate() {
+                if !n {
+                    continue;
+                }
+                let sum = summarize_logits(&logits[i]);
+                if self.policy.decide(layer, &sum).is_exit() {
+                    fired[i] = Some((sum.token, layer, s));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn stage_cache_elems(&self, s: usize) -> usize {
+        self.state.man.stages[s].cache_shape.iter().product()
+    }
+
+    /// Dissolve any resident lane group containing session `id`: every
+    /// member's lane is scattered out of the stacked device literals
+    /// into `parked` (stage order), except `drop_id`, whose state is
+    /// discarded without a scatter (a closing session needs none). This
+    /// — one scatter per parked lane per stage — is the departure
+    /// traffic the resident design pays instead of per-step round-trips.
+    fn dissolve_containing(
+        &mut self,
+        id: u64,
+        drop_id: Option<u64>,
+    ) -> Result<()> {
+        let Some(gi) =
+            self.resident.iter().position(|g| g.members.contains(&id))
+        else {
+            return Ok(());
+        };
+        let g = self.resident.swap_remove(gi);
+        for (s, lit) in g.stacked.iter().enumerate() {
+            let len = self.stage_cache_elems(s);
+            let t = HostTensor::from_literal(lit)?;
+            debug_assert_eq!(t.data.len(), g.members.len() * len);
+            let shape = &self.state.man.stages[s].cache_shape;
+            for (i, &m) in g.members.iter().enumerate() {
+                if Some(m) == drop_id {
+                    continue;
+                }
+                let lane = HostTensor::literal_from_slice(
+                    shape,
+                    &t.data[i * len..(i + 1) * len],
+                )?;
+                self.parked.entry(m).or_default().push(lane);
+            }
+        }
+        let kept =
+            g.members.iter().filter(|&&m| Some(m) != drop_id).count() as u64;
+        let stages = g.stacked.len() as u64;
+        self.traffic.cache_scatters += kept * stages;
+        for s in 0..g.stacked.len() {
+            self.traffic.scatter_bytes +=
+                kept * (self.stage_cache_elems(s) * 4) as u64;
+        }
+        Ok(())
+    }
+
+    /// Sync session `id`'s own caches handle with the engine-side truth:
+    /// dissolve its resident group (if any), then move its parked
+    /// literals back into the handle. No-op for ungrouped sessions, so
+    /// every mutable touch point (solo windows, group formation) calls
+    /// this unconditionally.
+    fn claim(&mut self, caches: &mut SessionCaches) -> Result<()> {
+        let id = caches.generation;
+        self.dissolve_containing(id, None)?;
+        if let Some(lits) = self.parked.remove(&id) {
+            caches.caches = lits;
+        }
+        Ok(())
+    }
+
+    /// The per-lane per-stage cache shape check, hoisted to group
+    /// formation (and once per round-trip fused pass) so the gather /
+    /// scatter hot loops carry only debug assertions. Cheap: reads
+    /// literal metadata, not data.
+    fn validate_lane_shapes(&self, lanes: &[LaneSlot<'_>]) -> Result<()> {
+        let stages = &self.state.man.stages;
+        for (i, lane) in lanes.iter().enumerate() {
+            ensure!(
+                lane.caches.caches.len() == stages.len(),
+                "lane {i} has {} stage caches, engine has {} stages",
+                lane.caches.caches.len(),
+                stages.len()
+            );
+            for (st, lit) in stages.iter().zip(&lane.caches.caches) {
+                let shape = lit.array_shape().context("lane cache shape")?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                ensure!(
+                    dims == st.cache_shape,
+                    "lane {i} stage {} cache shape {dims:?} != {:?}",
+                    st.index,
+                    st.cache_shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather the lanes' per-session caches into a fresh device-resident
+    /// group — the one host→device copy of the group's lifetime. Members
+    /// may still sit in stale resident groups (regroup) or parked from
+    /// dissolved ones; every handle is synced first.
+    fn form_group(
+        &mut self,
+        lanes: &mut [LaneSlot<'_>],
+        ids: &[u64],
+    ) -> Result<LaneGroup> {
+        for lane in lanes.iter_mut() {
+            self.claim(lane.caches)?;
+        }
+        self.validate_lane_shapes(lanes)?;
+        let mut stacked = Vec::with_capacity(self.state.man.stages.len());
+        for s in 0..self.state.man.stages.len() {
+            stacked.push(self.gather_lane_caches(lanes, s)?);
+        }
+        self.traffic.cold_forms += 1;
+        Ok(LaneGroup { members: ids.to_vec(), stacked })
     }
 
     /// Run one decode window pass.
@@ -241,30 +516,27 @@ impl SequentialEngine {
     }
 
     /// Stack the lanes' per-session stage-`s` caches into the fused
-    /// `[B, ...cache_shape]` layout one batched executable consumes.
+    /// `[B, ...cache_shape]` layout one batched executable consumes —
+    /// one host→device lane×stage copy per lane. Under residency this
+    /// runs once per group formation; with residency off it runs every
+    /// fused step (the PR-5 trade, kept as the measurable baseline).
+    /// Shape validation is hoisted to [`validate_lane_shapes`]; only a
+    /// debug assertion rides the hot loop.
     ///
-    /// Known cost: this is a host round-trip of each lane's full
-    /// fixed-shape cache per stage per fused step (the solo path keeps
-    /// caches device-resident, §L3-2), traded for correctness-first
-    /// group membership that may change every round. Keeping a
-    /// lane-stacked literal device-resident across a group's lifetime
-    /// is the ROADMAP next step; the serving benches report the
-    /// fused-vs-solo throughput ratio so the trade stays visible.
+    /// [`validate_lane_shapes`]: SequentialEngine::validate_lane_shapes
     fn gather_lane_caches(
-        &self,
+        &mut self,
         lanes: &[LaneSlot<'_>],
         s: usize,
     ) -> Result<xla::Literal> {
+        let len = self.stage_cache_elems(s);
+        self.traffic.cache_gathers += lanes.len() as u64;
+        self.traffic.gather_bytes += (lanes.len() * len * 4) as u64;
         let shape = &self.state.man.stages[s].cache_shape;
-        let len: usize = shape.iter().product();
         let mut data = Vec::with_capacity(lanes.len() * len);
         for lane in lanes {
             let t = HostTensor::from_literal(&lane.caches.caches[s])?;
-            ensure!(
-                t.shape == *shape,
-                "lane cache shape {:?} != stage {s} cache shape {shape:?}",
-                t.shape
-            );
+            debug_assert_eq!(t.shape, *shape, "lane cache shape drifted");
             data.extend_from_slice(&t.data);
         }
         let mut full = Vec::with_capacity(shape.len() + 1);
@@ -274,127 +546,194 @@ impl SequentialEngine {
     }
 
     /// Scatter a fused pass's updated stage-`s` caches back to their
-    /// sessions. Lanes with `skip[i]` set (already fired at an earlier
-    /// stage entry) keep their pre-pass literal: the solo path never
-    /// runs stages at or beyond an exit, and mirroring that here keeps
-    /// the per-session cache state — and therefore every downstream
-    /// deficit-heal window — bit-identical to unfused decoding.
+    /// sessions (round-trip mode only). Lanes with `skip[i]` set
+    /// (already fired at an earlier stage entry) keep their pre-pass
+    /// literal: the solo path never runs stages at or beyond an exit,
+    /// and mirroring that here keeps the per-session cache state — and
+    /// therefore every downstream deficit-heal window — bit-identical
+    /// to unfused decoding. Each kept lane's literal is built straight
+    /// from its slice of the host copy, no intermediate owned buffer.
     fn scatter_lane_caches(
-        &self,
+        &mut self,
         lanes: &mut [LaneSlot<'_>],
         s: usize,
         stacked: &xla::Literal,
         skip: &[bool],
     ) -> Result<()> {
+        let len = self.stage_cache_elems(s);
+        let moved = skip.iter().filter(|&&k| !k).count();
+        self.traffic.cache_scatters += moved as u64;
+        self.traffic.scatter_bytes += (moved * len * 4) as u64;
         let shape = &self.state.man.stages[s].cache_shape;
-        let len: usize = shape.iter().product();
         let t = HostTensor::from_literal(stacked)?;
-        ensure!(
-            t.data.len() == lanes.len() * len,
-            "fused stage {s} cache output has {} elements, want {}",
+        debug_assert_eq!(
             t.data.len(),
-            lanes.len() * len
+            lanes.len() * len,
+            "fused stage cache output size drifted"
         );
         for (i, lane) in lanes.iter_mut().enumerate() {
             if skip[i] {
                 continue;
             }
-            let chunk = t.data[i * len..(i + 1) * len].to_vec();
-            lane.caches.caches[s] =
-                HostTensor::new(shape.clone(), chunk).to_literal()?;
+            lane.caches.caches[s] = HostTensor::literal_from_slice(
+                shape,
+                &t.data[i * len..(i + 1) * len],
+            )?;
         }
         Ok(())
     }
 
-    /// Generate up to `max_new` tokens after `prompt` (token ids, BOS
-    /// prepended automatically) — a [`DecodeSession`] drained to
-    /// completion.
-    pub fn generate_tokens(
+    /// The device-resident fused pass: step an already-warm lane group
+    /// (or form one) with **zero** per-step host cache traffic. Where
+    /// the round-trip path gathers and scatters every lane's cache per
+    /// stage per step, this one looks up a resident [`LaneGroup`] whose
+    /// members are exactly these lanes in this order (a warm hit) or
+    /// gathers one (a cold form), steps it against the group's device
+    /// literals, and leaves every member's `SessionCaches` handle stale
+    /// until the session next touches the engine — a solo window,
+    /// snapshot, or close lazily scatters its lane back out
+    /// ([`SequentialEngine::claim`] / `dissolve_containing`).
+    ///
+    /// Output-invisibility vs. solo decode: an un-fired lane's row gets
+    /// exactly the solo cache update (the batched executables are
+    /// per-lane vmaps). A **fired** lane's deeper-stage rows receive the
+    /// batched pass's writes — which solo decode would skip — but only
+    /// at the lane's window position; firing gives that lane a recompute
+    /// deficit ≥ 1, it departs the group, and every subsequent healing
+    /// window covers the whole deficit tail and rewrites those positions
+    /// at every stage it runs before any read (the Section-4 masking
+    /// argument), so the divergence is unobservable in tokens, exit
+    /// layers, and every later cache read. Pinned by
+    /// `tests/resident_lanes_equivalence.rs`.
+    fn run_lanes_resident(
         &mut self,
-        prompt: &[i32],
-        max_new: usize,
-    ) -> Result<GenOutput> {
-        let mut session = DecodeSession::new(self, prompt, max_new)?;
-        session.drain(self)
+        lanes: &mut [LaneSlot<'_>],
+    ) -> Result<Vec<WindowOutcome>> {
+        let ids: Vec<u64> =
+            lanes.iter().map(|l| l.caches.generation).collect();
+        let mut group =
+            match self.resident.iter().position(|g| g.members == ids) {
+                Some(i) => {
+                    self.traffic.warm_hits += 1;
+                    self.resident.swap_remove(i)
+                }
+                None => self.form_group(lanes, &ids)?,
+            };
+        let outcome = self.resident_pass(&mut group, lanes);
+        // The group goes back on the resident list whatever happened —
+        // pre-round state on error (updates are committed only after a
+        // full pass, so the pool's solo retry claims what it would have
+        // seen before the round), post-round state on success. Dropping
+        // it would drop the members' only cache state.
+        self.resident.push(group);
+        outcome
     }
 
-    pub fn generate_text(
+    /// One fused pass over a formed group's device literals: the batched
+    /// decode per stage plus per-lane exit decisions from lane-batched
+    /// heads ([`SequentialEngine::head_logits_lanes`]). Updated stage
+    /// literals are committed to the group only after every fallible
+    /// step has succeeded.
+    fn resident_pass(
         &mut self,
-        prompt: &str,
-        max_new: usize,
-    ) -> Result<GenOutput> {
-        let ids = crate::data::tokenizer::ByteTokenizer.encode(prompt);
-        self.generate_tokens(&ids, max_new)
+        group: &mut LaneGroup,
+        lanes: &mut [LaneSlot<'_>],
+    ) -> Result<Vec<WindowOutcome>> {
+        let b = lanes.len();
+        let p = self.state.man.stages.len();
+        let mut fired: Vec<Option<(i32, usize, usize)>> = vec![None; b];
+        let pos_lit = IntTensor::new(
+            vec![b],
+            lanes.iter().map(|l| l.pos as i32).collect(),
+        )
+        .to_literal()?;
+        let mut x: Option<HostTensor> = None;
+        let mut pending: Vec<(usize, xla::Literal)> = Vec::new();
+        for s in 0..p {
+            if let Some(xh) = x.as_ref() {
+                self.entry_exit_lanes(s, xh, lanes, &mut fired)?;
+                if fired.iter().all(|f| f.is_some()) {
+                    // Every lane has fired: deeper stages would only
+                    // compute padding, and their stacked literals keep
+                    // pre-round values — exactly the stages solo decode
+                    // never ran.
+                    break;
+                }
+            }
+            let in_lit: xla::Literal = if s == 0 {
+                IntTensor::new(
+                    vec![b],
+                    lanes.iter().map(|l| l.token).collect(),
+                )
+                .to_literal()?
+            } else {
+                x.as_ref().unwrap().to_literal()?
+            };
+            let mut args: Vec<&xla::Literal> =
+                self.plits[s].iter().collect();
+            args.push(&in_lit);
+            args.push(&group.stacked[s]);
+            args.push(&pos_lit);
+            let out = self
+                .rt
+                .get(&format!("s{s}:decode_b{b}_w1"))?
+                .run(&args)?;
+            let mut it = out.into_iter();
+            x = Some(HostTensor::from_literal(&it.next().unwrap())?);
+            pending.push((s, it.next().unwrap()));
+        }
+        let fin_layer = self.state.final_exit().layer;
+        let mut outs = Vec::with_capacity(b);
+        let unfired: Vec<bool> =
+            fired.iter().map(|f| f.is_none()).collect();
+        let final_logits = if unfired.iter().any(|&n| n) {
+            let xh = x.as_ref().expect("un-fired lanes ran all stages");
+            self.head_logits_lanes(p - 1, fin_layer, xh, &unfired)?
+        } else {
+            Vec::new()
+        };
+        for (i, f) in fired.iter().enumerate() {
+            if let Some(&(token, layer, stage)) = f.as_ref() {
+                outs.push(WindowOutcome {
+                    token,
+                    exit_layer: layer,
+                    stages_run: stage,
+                });
+            } else {
+                let sum = summarize_logits(&final_logits[i]);
+                outs.push(WindowOutcome {
+                    token: sum.token,
+                    exit_layer: fin_layer,
+                    stages_run: p,
+                });
+            }
+        }
+        // Every fallible step is behind us: commit the device updates.
+        for (s, lit) in pending {
+            group.stacked[s] = lit;
+        }
+        Ok(outs)
     }
-}
 
-impl DecodeBackend for SequentialEngine {
-    /// One zeroed KV cache per stage, owned by the session — so many
-    /// sessions can be live on one engine (continuous batching).
-    fn fresh_caches(&mut self) -> Result<SessionCaches> {
-        Ok(SessionCaches {
-            caches: self
-                .state
-                .man
-                .stages
-                .iter()
-                .map(|st| HostTensor::zeros(&st.cache_shape).to_literal())
-                .collect::<Result<Vec<_>>>()?,
-            // All decode state is session-owned; generations are moot.
-            generation: 0,
-        })
-    }
-
-    fn run_window(
-        &mut self,
-        caches: &mut SessionCaches,
-        tokens: &[i32],
-        pos0: usize,
-        width: usize,
-        allow_exit: bool,
-        emit: bool,
-    ) -> Result<WindowOutcome> {
-        let (token, exit_layer, stages_run) = self.window_pass(
-            tokens,
-            pos0,
-            width,
-            &mut caches.caches,
-            allow_exit,
-            emit,
-        )?;
-        Ok(WindowOutcome { token, exit_layer, stages_run })
-    }
-
-    fn decode_widths(&self) -> &[usize] {
-        &self.widths
-    }
-
-    fn decode_lanes(&self) -> &[usize] {
-        &self.lanes
-    }
-
-    /// The lane-fused batched decode pass: one `decode_b{B}_w1` dispatch
-    /// per stage advances every lane's width-1 window at once, with
-    /// per-lane exit decisions at stage entries. Control flow and cache
-    /// effects mirror [`SequentialEngine::window_pass`] per lane exactly
-    /// — a fired lane reports `stages_run` at its exit and keeps its
-    /// deeper-stage caches untouched (it rides the batch as padding
-    /// until every lane has fired, at which point the remaining stages
-    /// are skipped) — so fused and solo stepping are interchangeable
-    /// mid-generation. Probe mode is a solo-path feature; fused passes
-    /// are only issued by the serving pool, which never probes.
-    fn run_lanes(
+    /// The PR-5 fused pass, kept bit-for-bit as the measurable baseline
+    /// (`lane_residency` off / serve-bench `--no-resident`): gather the
+    /// lanes' caches per stage, run the batched executable, scatter the
+    /// updates back — a full host round-trip per lane per stage per
+    /// step, with per-lane solo exit-head calls.
+    fn run_lanes_roundtrip(
         &mut self,
         lanes: &mut [LaneSlot<'_>],
     ) -> Result<Vec<WindowOutcome>> {
         let b = lanes.len();
-        ensure!(
-            self.lanes.contains(&b),
-            "no decode_b{b}_w1 executable (available lane sizes {:?})",
-            self.lanes
-        );
         let p = self.state.man.stages.len();
         let h = self.state.man.model.hidden;
+        // Sessions may arrive with stale handles if residency was live
+        // earlier on this engine; sync them (no-op otherwise), and do
+        // the hoisted shape validation once per pass.
+        for lane in lanes.iter_mut() {
+            self.claim(lane.caches)?;
+        }
+        self.validate_lane_shapes(lanes)?;
         // (token, exit layer, stages run) per fired lane.
         let mut fired: Vec<Option<(i32, usize, usize)>> = vec![None; b];
         let pos_lit = IntTensor::new(
@@ -491,6 +830,106 @@ impl DecodeBackend for SequentialEngine {
         Ok(outs)
     }
 
+    /// Generate up to `max_new` tokens after `prompt` (token ids, BOS
+    /// prepended automatically) — a [`DecodeSession`] drained to
+    /// completion.
+    pub fn generate_tokens(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        let mut session = DecodeSession::new(self, prompt, max_new)?;
+        session.drain(self)
+    }
+
+    pub fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<GenOutput> {
+        let ids = crate::data::tokenizer::ByteTokenizer.encode(prompt);
+        self.generate_tokens(&ids, max_new)
+    }
+}
+
+impl DecodeBackend for SequentialEngine {
+    /// One zeroed KV cache per stage, owned by the session — so many
+    /// sessions can be live on one engine (continuous batching). The
+    /// `generation` is a unique session id: lane residency keys
+    /// device-resident groups and parked caches by it, so ids are never
+    /// reused within an engine.
+    fn fresh_caches(&mut self) -> Result<SessionCaches> {
+        self.next_session += 1;
+        Ok(SessionCaches {
+            caches: self
+                .state
+                .man
+                .stages
+                .iter()
+                .map(|st| HostTensor::zeros(&st.cache_shape).to_literal())
+                .collect::<Result<Vec<_>>>()?,
+            generation: self.next_session,
+        })
+    }
+
+    fn run_window(
+        &mut self,
+        caches: &mut SessionCaches,
+        tokens: &[i32],
+        pos0: usize,
+        width: usize,
+        allow_exit: bool,
+        emit: bool,
+    ) -> Result<WindowOutcome> {
+        // A solo window on a session that was riding a resident fused
+        // group: lazily sync its handle first (no-op otherwise).
+        self.claim(caches)?;
+        let (token, exit_layer, stages_run) = self.window_pass(
+            tokens,
+            pos0,
+            width,
+            &mut caches.caches,
+            allow_exit,
+            emit,
+        )?;
+        Ok(WindowOutcome { token, exit_layer, stages_run })
+    }
+
+    fn decode_widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    fn decode_lanes(&self) -> &[usize] {
+        &self.lanes
+    }
+
+    /// The lane-fused batched decode pass: one `decode_b{B}_w1` dispatch
+    /// per stage advances every lane's width-1 window at once, with
+    /// per-lane exit decisions at stage entries. Control flow mirrors
+    /// [`SequentialEngine::window_pass`] per lane exactly — a fired lane
+    /// reports `stages_run` at its exit — so fused and solo stepping are
+    /// interchangeable mid-generation. With `lane_residency` on (the
+    /// default) the pass steps a device-resident [`LaneGroup`] with zero
+    /// per-step host cache traffic; off, it runs the gather/scatter
+    /// round-trip baseline. Probe mode is a solo-path feature; fused
+    /// passes are only issued by the serving pool, which never probes.
+    fn run_lanes(
+        &mut self,
+        lanes: &mut [LaneSlot<'_>],
+    ) -> Result<Vec<WindowOutcome>> {
+        let b = lanes.len();
+        ensure!(
+            self.lanes.contains(&b),
+            "no decode_b{b}_w1 executable (available lane sizes {:?})",
+            self.lanes
+        );
+        if self.lane_residency {
+            self.run_lanes_resident(lanes)
+        } else {
+            self.run_lanes_roundtrip(lanes)
+        }
+    }
+
     fn max_seq(&self) -> usize {
         self.state.man.model.max_seq
     }
@@ -527,9 +966,16 @@ impl DecodeBackend for SequentialEngine {
         caches: &SessionCaches,
         positions: usize,
     ) -> Result<Vec<HostTensor>> {
-        caches
-            .caches
-            .iter()
+        // The session may be riding a resident fused group, in which
+        // case its handle is stale; dissolve the group so the parked
+        // entry holds the truth. The handle itself can't be refreshed
+        // through the shared reference — it syncs on the session's next
+        // mutable touch (`run_window` / `run_lanes`) — so read from the
+        // parked entry when one exists.
+        self.dissolve_containing(caches.generation, None)?;
+        let lits =
+            self.parked.get(&caches.generation).unwrap_or(&caches.caches);
+        lits.iter()
             .zip(&self.state.man.stages)
             .map(|(lit, st)| {
                 let t = HostTensor::from_literal(lit)?;
@@ -563,7 +1009,24 @@ impl DecodeBackend for SequentialEngine {
             })
             .collect::<Result<Vec<_>>>()
             .context("restoring per-stage KV caches")?;
-        Ok(SessionCaches { caches, generation: 0 })
+        self.next_session += 1;
+        Ok(SessionCaches { caches, generation: self.next_session })
+    }
+
+    /// Scatter the session out of any resident fused group (dropping
+    /// its own lane — nobody will read it) and free its parked entry,
+    /// so closed sessions leak no engine-side state.
+    fn release_caches(&mut self, caches: &SessionCaches) -> Result<()> {
+        self.dissolve_containing(
+            caches.generation,
+            Some(caches.generation),
+        )?;
+        self.parked.remove(&caches.generation);
+        Ok(())
+    }
+
+    fn lane_traffic(&self) -> LaneTraffic {
+        self.traffic
     }
 }
 

@@ -42,12 +42,14 @@ pub struct SessionCaches {
     /// literal per stage). Backends whose decode state lives elsewhere
     /// (the pipelined engine's stage threads) leave this empty.
     pub caches: Vec<xla::Literal>,
-    /// Backend-assigned session id for engines whose decode state is
-    /// engine-resident: the pipelined engine keys every stage's KV-cache
-    /// slot (and every in-flight chain message) by this id, so many live
-    /// sessions interleave down one chain without touching each other.
-    /// Ids are never reused. Backends with fully session-owned state
-    /// ignore it.
+    /// Backend-assigned session id for engines with engine-resident
+    /// decode state: the pipelined engine keys every stage's KV-cache
+    /// slot (and every in-flight chain message) by this id, and the
+    /// sequential engine keys device-resident fused lane groups (and
+    /// the parked caches of dissolved ones) by it — so the `caches`
+    /// vector above may be stale while the session rides a resident
+    /// group, until the engine lazily syncs it on the next touch.
+    /// Ids are never reused.
     pub generation: u64,
 }
 
@@ -69,6 +71,48 @@ pub struct LaneSlot<'a> {
     /// Early-exit checks enabled for this lane (false under the forced
     /// full-model pass bookkeeping, exactly as in the solo path).
     pub allow_exit: bool,
+}
+
+/// Host⇄device KV-cache traffic attributable to fused lane decode,
+/// accumulated by the backend across its lifetime (monotonic; sample
+/// before/after a window of work and diff with [`LaneTraffic::since`]).
+///
+/// Gathers/scatters are counted in **lane × stage** units: one gather is
+/// one lane's cache for one stage crossing host→device into a
+/// lane-stacked literal, one scatter is the reverse. A device-resident
+/// backend reports traffic only at group formation (gathers) and lane
+/// departure / snapshot / preemption (scatters); a round-trip backend
+/// reports `lanes × stages` of each per fused step. `warm_hits` /
+/// `cold_forms` count fused passes served by an already-resident group
+/// vs. passes that had to (re)gather one.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneTraffic {
+    /// Lane×stage cache copies host→device (group formation).
+    pub cache_gathers: u64,
+    /// Lane×stage cache copies device→host (departure/snapshot/regroup).
+    pub cache_scatters: u64,
+    /// Bytes moved by gathers.
+    pub gather_bytes: u64,
+    /// Bytes moved by scatters.
+    pub scatter_bytes: u64,
+    /// Fused passes stepped against an already-resident lane group.
+    pub warm_hits: u64,
+    /// Fused passes that had to gather (form) their lane group.
+    pub cold_forms: u64,
+}
+
+impl LaneTraffic {
+    /// Delta of this (later) sample over an earlier one.
+    pub fn since(&self, base: &LaneTraffic) -> LaneTraffic {
+        LaneTraffic {
+            cache_gathers: self.cache_gathers - base.cache_gathers,
+            cache_scatters: self.cache_scatters - base.cache_scatters,
+            gather_bytes: self.gather_bytes - base.gather_bytes,
+            scatter_bytes: self.scatter_bytes - base.scatter_bytes,
+            warm_hits: self.warm_hits - base.warm_hits,
+            cold_forms: self.cold_forms - base.cold_forms,
+        }
+    }
 }
 
 /// Result of one fused [`DecodeSession::step_fused`] round.
@@ -192,6 +236,13 @@ pub trait DecodeBackend {
     ) -> Result<Vec<WindowOutcome>> {
         let _ = lanes;
         bail!("this backend does not support fused lane decode")
+    }
+
+    /// Monotonic host⇄device KV-cache traffic counters for fused lane
+    /// decode ([`LaneTraffic`]). Backends without lane fusion report
+    /// zeros (the default).
+    fn lane_traffic(&self) -> LaneTraffic {
+        LaneTraffic::default()
     }
 
     /// KV-cache capacity in positions.

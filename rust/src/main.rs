@@ -67,6 +67,9 @@ serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
            --no-lanes (disable lane-fused batched decode; by default
            same-policy live sessions are stepped through the manifest's
            decode_lanes executables, one batched XLA call per stage)
+           --no-resident (keep lane fusion but drop device residency:
+           every fused step pays the per-stage cache gather/scatter
+           round-trip instead of stepping a device-resident lane group)
            --json-out PATH (metrics JSON)
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
@@ -92,7 +95,10 @@ fn main() {
     }
     let cmd = argv[0].clone();
     let args =
-        Args::parse(&argv[1..], &["no-defer", "gpipe", "verbose", "no-lanes"]);
+        Args::parse(
+            &argv[1..],
+            &["no-defer", "gpipe", "verbose", "no-lanes", "no-resident"],
+        );
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
@@ -345,6 +351,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         if prefix_positions > 0 { "shared-prefix" } else { "tasks" },
     );
     let lane_fusion = !args.flag("no-lanes");
+    // `--no-resident` keeps lane fusion but drops device residency:
+    // every fused step pays the per-stage gather/scatter round-trip
+    // (the PR-5 baseline the resident path is judged against).
+    let lane_residency = !args.flag("no-resident");
     let corpus = standard_corpus(icfg.seed);
     let reqs = match workload.as_str() {
         "shared-prefix" => {
@@ -375,14 +385,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "[serve-bench] {n_req} requests ({workload} workload), engine \
          {kind:?}, sched {sched:?}, exit policy {}, {concurrent} live \
-         sessions/worker, prefix cache {}, lane fusion {}",
+         sessions/worker, prefix cache {}, lane fusion {}, lane \
+         residency {}",
         icfg.policy,
         if prefix_positions > 0 {
             format!("{prefix_positions} positions (pool-wide shared store)")
         } else {
             "off".to_string()
         },
-        if lane_fusion { "on" } else { "off" }
+        if lane_fusion { "on" } else { "off" },
+        if lane_residency { "on" } else { "off (round-trip)" }
     );
     let mut table = Table::new(
         &format!(
@@ -404,6 +416,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 max_concurrent: concurrent,
                 prefix_cache_positions: prefix_positions,
                 lane_fusion,
+                lane_residency,
             },
         );
         let out = pool.run_batch(reqs.clone())?;
@@ -457,6 +470,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 l.stages_skipped,
                 l.policy_applies
             );
+            println!(
+                "[serve-bench] pool {workers}: lane-cache traffic {} \
+                 gathers ({} KiB) / {} scatters ({} KiB), {} warm group \
+                 hits, {} cold forms",
+                l.cache_gathers,
+                l.cache_gather_bytes / 1024,
+                l.cache_scatters,
+                l.cache_scatter_bytes / 1024,
+                l.warm_group_hits,
+                l.cold_group_forms
+            );
         }
         if m.interleave.rounds > 0 {
             let il = &m.interleave;
@@ -496,6 +520,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         obj.insert(
             "lane_fusion".to_string(),
             Json::Num(if lane_fusion { 1.0 } else { 0.0 }),
+        );
+        obj.insert(
+            "lane_residency".to_string(),
+            Json::Num(if lane_residency { 1.0 } else { 0.0 }),
         );
         obj.insert("workload".to_string(), Json::Str(workload.clone()));
         obj.insert("pools".to_string(), Json::Arr(json_rows));
@@ -542,6 +570,12 @@ fn serve_metrics_json(
     num("decode_steps_per_dispatch", m.lanes.steps_per_dispatch());
     num("stages_skipped_all_fired", m.lanes.stages_skipped as f64);
     num("policy_applies", m.lanes.policy_applies as f64);
+    num("lane_cache_gathers", m.lanes.cache_gathers as f64);
+    num("lane_cache_scatters", m.lanes.cache_scatters as f64);
+    num("lane_cache_gather_bytes", m.lanes.cache_gather_bytes as f64);
+    num("lane_cache_scatter_bytes", m.lanes.cache_scatter_bytes as f64);
+    num("warm_group_hits", m.lanes.warm_group_hits as f64);
+    num("cold_group_forms", m.lanes.cold_group_forms as f64);
     num("interleaved_rounds", m.interleave.rounds as f64);
     num("interleaved_steps", m.interleave.steps as f64);
     num("mean_sessions_in_flight", m.interleave.mean_in_flight());

@@ -302,7 +302,51 @@ impl Manifest {
                 bail!("decode lane size {b} fuses nothing (need >= 2)");
             }
         }
+        // Lane-batched exit heads (`head{L}_b{B}`) are optional per lane
+        // size, but any that exist must ride a declared lane size — a
+        // stray B would never be dispatched and points at a manifest bug.
+        for st in &self.stages {
+            for e in &st.exits {
+                let prefix = format!("head{}_b", e.layer);
+                for key in st.executables.keys() {
+                    if let Some(b) = key.strip_prefix(&prefix) {
+                        let b: usize = b.parse().with_context(|| {
+                            format!("stage {}: bad lane suffix {key:?}",
+                                    st.index)
+                        })?;
+                        if !self.decode_lanes.contains(&b) {
+                            bail!(
+                                "stage {}: batched head {key:?} has no \
+                                 matching decode lane size",
+                                st.index
+                            );
+                        }
+                    }
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Lane sizes (a subset of `decode_lanes`) for which **every** stage
+    /// ships a lane-batched exit-head executable (`head{L}_b{B}`) for
+    /// **every** one of its exits — the sizes at which a fused lane
+    /// group's exit decisions collapse to one dispatch per exit. Engines
+    /// fall back to per-lane solo head calls for sizes missing here
+    /// (manifests predating batched heads return empty).
+    pub fn head_lanes(&self) -> Vec<usize> {
+        self.decode_lanes
+            .iter()
+            .copied()
+            .filter(|b| {
+                self.stages.iter().all(|st| {
+                    st.exits.iter().all(|e| {
+                        st.executables
+                            .contains_key(&format!("head{}_b{b}", e.layer))
+                    })
+                })
+            })
+            .collect()
     }
 
     pub fn exec_path(&self, file: &str) -> PathBuf {
@@ -365,6 +409,9 @@ mod tests {
         // ee-tiny: one early exit (layer 2) + final exit (layer 4).
         assert_eq!(man.exit_order().len(), 2);
         assert!(man.stages[1].exits.last().unwrap().is_final);
+        // Freshly built artifacts ship a lane-batched exit head for
+        // every exit at every declared lane size.
+        assert_eq!(man.head_lanes(), man.decode_lanes);
     }
 
     #[test]

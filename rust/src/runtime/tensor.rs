@@ -62,6 +62,29 @@ impl HostTensor {
         )?)
     }
 
+    /// Build an f32 literal straight from a borrowed slice — the
+    /// zero-extra-copy twin of [`HostTensor::to_literal`] for data that
+    /// lives inside a larger host buffer (one lane's rows of a
+    /// lane-stacked KV cache), so scattering a lane out of a fused group
+    /// skips the intermediate owned `Vec`.
+    pub fn literal_from_slice(
+        shape: &[usize],
+        data: &[f32],
+    ) -> Result<xla::Literal> {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                data.as_ptr() as *const u8,
+                data.len() * 4,
+            )
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            shape,
+            bytes,
+        )?)
+    }
+
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal shape")?;
         let dims: Vec<usize> =
@@ -187,5 +210,21 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn rejects_bad_shape() {
         HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn literal_from_slice_round_trips() {
+        let buf: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        // A slice out of the middle of a larger buffer, no owned copy.
+        let lit = HostTensor::literal_from_slice(&[2, 2], &buf[2..6]).unwrap();
+        let t = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data, &buf[2..6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn literal_from_slice_rejects_bad_shape() {
+        let _ = HostTensor::literal_from_slice(&[3], &[0.0; 2]);
     }
 }

@@ -5,7 +5,7 @@
 
 use std::sync::Mutex;
 
-use crate::inference::{ExitStats, PrefixCacheStats};
+use crate::inference::{ExitStats, LaneTraffic, PrefixCacheStats};
 pub use crate::metrics::percentile;
 
 use super::request::ServeResponse;
@@ -13,7 +13,10 @@ use super::request::ServeResponse;
 /// Lane-fusion activity of the decode hot path: how often the pool
 /// stepped sessions through fused batched passes vs solo windows — the
 /// "did compute batching actually happen" observability the fused
-/// decode work is judged by.
+/// decode work is judged by — plus the host⇄device KV-cache traffic the
+/// device-resident lane groups exist to eliminate ("did residency
+/// actually happen"): zero per-step gathers/scatters at steady state,
+/// with traffic only at group formation and lane departure.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LaneStats {
     /// Fused `run_lanes` invocations (each is one batched XLA dispatch
@@ -31,6 +34,22 @@ pub struct LaneStats {
     /// round, not by live sessions (the pre-lane loop swapped once per
     /// adjacent policy change, i.e. up to once per step).
     pub policy_applies: u64,
+    /// Host→device lane-cache copies (lane×stage units): group
+    /// formations under residency, every fused step without it.
+    pub cache_gathers: u64,
+    /// Device→host lane-cache copies (lane×stage units): group
+    /// dissolutions under residency, every fused step without it.
+    pub cache_scatters: u64,
+    /// Bytes moved host→device by `cache_gathers`.
+    pub cache_gather_bytes: u64,
+    /// Bytes moved device→host by `cache_scatters`.
+    pub cache_scatter_bytes: u64,
+    /// Fused rounds served by an already-resident lane group — the
+    /// steady-state fast path (no cache traffic at all).
+    pub warm_group_hits: u64,
+    /// Fused rounds that had to gather a fresh lane group (first round
+    /// of a new group, or the scheduler re-planned membership).
+    pub cold_group_forms: u64,
     /// Lane-occupancy histogram: (lane count B, fused calls at B).
     pub occupancy: Vec<(usize, u64)>,
 }
@@ -64,6 +83,12 @@ impl LaneStats {
         self.solo_steps += other.solo_steps;
         self.stages_skipped += other.stages_skipped;
         self.policy_applies += other.policy_applies;
+        self.cache_gathers += other.cache_gathers;
+        self.cache_scatters += other.cache_scatters;
+        self.cache_gather_bytes += other.cache_gather_bytes;
+        self.cache_scatter_bytes += other.cache_scatter_bytes;
+        self.warm_group_hits += other.warm_group_hits;
+        self.cold_group_forms += other.cold_group_forms;
         for &(w, c) in &other.occupancy {
             self.occupancy_add(w, c);
         }
@@ -86,6 +111,24 @@ impl LaneStats {
             policy_applies: self
                 .policy_applies
                 .saturating_sub(baseline.policy_applies),
+            cache_gathers: self
+                .cache_gathers
+                .saturating_sub(baseline.cache_gathers),
+            cache_scatters: self
+                .cache_scatters
+                .saturating_sub(baseline.cache_scatters),
+            cache_gather_bytes: self
+                .cache_gather_bytes
+                .saturating_sub(baseline.cache_gather_bytes),
+            cache_scatter_bytes: self
+                .cache_scatter_bytes
+                .saturating_sub(baseline.cache_scatter_bytes),
+            warm_group_hits: self
+                .warm_group_hits
+                .saturating_sub(baseline.warm_group_hits),
+            cold_group_forms: self
+                .cold_group_forms
+                .saturating_sub(baseline.cold_group_forms),
             occupancy: Vec::new(),
         };
         for &(w, c) in &self.occupancy {
@@ -209,6 +252,22 @@ impl LaneCounters {
     /// One engine-resident exit-policy swap.
     pub fn record_policy_apply(&self) {
         self.inner.lock().unwrap().policy_applies += 1;
+    }
+
+    /// Fold an engine's lane-cache traffic delta
+    /// ([`DecodeBackend::lane_traffic`] read minus the previous read)
+    /// into the pool counters. Workers call this once per round.
+    ///
+    /// [`DecodeBackend::lane_traffic`]:
+    /// crate::inference::DecodeBackend::lane_traffic
+    pub fn record_traffic(&self, d: &LaneTraffic) {
+        let mut s = self.inner.lock().unwrap();
+        s.cache_gathers += d.cache_gathers;
+        s.cache_scatters += d.cache_scatters;
+        s.cache_gather_bytes += d.gather_bytes;
+        s.cache_scatter_bytes += d.scatter_bytes;
+        s.warm_group_hits += d.warm_hits;
+        s.cold_group_forms += d.cold_forms;
     }
 
     /// Interleaved-round counter snapshot.
@@ -467,6 +526,58 @@ mod tests {
         let solo = LaneCounters::default();
         solo.record_solo();
         assert!((solo.stats().steps_per_dispatch() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_stats_fold_in_cache_traffic_deltas() {
+        let c = LaneCounters::default();
+        // A cold form (4 lanes x 2 stages gathered), two warm rounds,
+        // then one departure scatter — the resident steady-state shape.
+        c.record_traffic(&LaneTraffic {
+            cache_gathers: 8,
+            gather_bytes: 8 * 1024,
+            cold_forms: 1,
+            ..LaneTraffic::default()
+        });
+        c.record_traffic(&LaneTraffic {
+            warm_hits: 2,
+            ..LaneTraffic::default()
+        });
+        c.record_traffic(&LaneTraffic {
+            cache_scatters: 2,
+            scatter_bytes: 2 * 1024,
+            ..LaneTraffic::default()
+        });
+        let s = c.stats();
+        assert_eq!(s.cache_gathers, 8);
+        assert_eq!(s.cache_scatters, 2);
+        assert_eq!(s.cache_gather_bytes, 8 * 1024);
+        assert_eq!(s.cache_scatter_bytes, 2 * 1024);
+        assert_eq!(s.warm_group_hits, 2);
+        assert_eq!(s.cold_group_forms, 1);
+        // Delta attribution and merge round-trip, as run_batch uses them.
+        let base = s.clone();
+        c.record_traffic(&LaneTraffic {
+            warm_hits: 3,
+            ..LaneTraffic::default()
+        });
+        let d = c.stats().since(&base);
+        assert_eq!(d.warm_group_hits, 3);
+        assert_eq!(d.cache_gathers, 0);
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged, c.stats());
+        // The engine-side counter is monotonic; `LaneTraffic::since`
+        // produces the per-round delta workers feed in.
+        let t0 = LaneTraffic {
+            cache_gathers: 8,
+            warm_hits: 1,
+            ..LaneTraffic::default()
+        };
+        let t1 = LaneTraffic { cache_gathers: 8, warm_hits: 4, ..t0 };
+        let dt = t1.since(&t0);
+        assert_eq!(dt.cache_gathers, 0);
+        assert_eq!(dt.warm_hits, 3);
     }
 
     #[test]

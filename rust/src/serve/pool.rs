@@ -45,6 +45,18 @@
 //! decoding — and its activity (fused vs solo steps, lane occupancy,
 //! stages skipped) lands in [`ServeMetrics::lanes`].
 //!
+//! With [`PoolConfig::lane_residency`] (on by default, sequential
+//! engine), fused lane groups are **device-resident**: the engine keeps
+//! each group's lane-stacked KV caches on device across rounds, so a
+//! warm round costs zero host cache traffic. The planner cooperates via
+//! *stickiness* — each worker feeds last round's warm fused groups back
+//! into [`plan_round`], which keeps a warm membership intact while
+//! every member stays eligible (re-planning an identical group is a
+//! free warm hit; any membership change costs a dissolve + re-gather).
+//! Gather/scatter/warm-hit traffic lands in [`ServeMetrics::lanes`];
+//! `tests/resident_lanes_equivalence.rs` pins output-invisibility and
+//! the zero-steady-state-traffic property.
+//!
 //! **Interleaved pipelined serving**: on backends that interleave
 //! windows ([`DecodeBackend::interleaves_windows`] — the pipelined
 //! engine), a round submits every live session's width-1 window down
@@ -128,6 +140,15 @@ pub struct PoolConfig {
     /// executables this is a no-op; turning it off forces the solo path
     /// everywhere (the lanes-off baseline benches compare against).
     pub lane_fusion: bool,
+    /// Keep fused lane groups device-resident across rounds (sequential
+    /// engine): caches gathered once at group formation, stepped on
+    /// device, scattered back only on lane departure — plus round
+    /// stickiness in [`plan_round`], which keeps a warm group's
+    /// membership intact while every member stays eligible. Off
+    /// (serve-bench `--no-resident`), every fused step pays the full
+    /// per-stage gather/scatter round-trip (the measurable baseline).
+    /// No effect when `lane_fusion` is off or on interleaving engines.
+    pub lane_residency: bool,
 }
 
 /// The engine surface the pool needs: an exit-policy knob plus the
@@ -568,6 +589,13 @@ fn worker_main(
     // Engines read one resident policy; track it and re-apply before
     // touching a session that wants a different one.
     let mut current_policy = cfg.policy.clone();
+    // Fused groups that stepped successfully last round, by request id —
+    // fed back to `plan_round` as stickiness so device-resident lane
+    // groups stay warm across rounds instead of being greedily
+    // re-packed. The engine's traffic counter is monotonic; workers
+    // fold per-round deltas into the shared pool stats.
+    let mut warm: Vec<Vec<u64>> = Vec::new();
+    let mut traffic_base = engine.backend().lane_traffic();
     'serve: loop {
         // Admission: fill free slots. Block only when idle; poll with
         // `try_pop` while sessions are live, so queued requests join
@@ -699,11 +727,24 @@ fn worker_main(
             );
             plan
         } else {
-            plan_round(&classes, &fusable, &lanes)
+            // Map last round's warm groups from request ids to current
+            // live indices; a group with any departed member just
+            // drops out (plan_round re-validates the rest).
+            let sticky: Vec<Vec<usize>> = warm
+                .iter()
+                .filter_map(|g| {
+                    g.iter()
+                        .map(|id| live.iter().position(|l| l.id == *id))
+                        .collect::<Option<Vec<usize>>>()
+                })
+                .collect();
+            plan_round(&classes, &fusable, &lanes, &sticky)
         };
         // Sessions finished (Ok) or failed (Err(msg)) this round, by
         // live index.
         let mut retired: Vec<(usize, Option<String>)> = Vec::new();
+        // Fused groups that step successfully this round (request ids).
+        let mut next_warm: Vec<Vec<u64>> = Vec::new();
         // A worklist rather than a plain loop: a failed fused group is
         // re-queued as solo steps (see below).
         let mut queue: VecDeque<Vec<usize>> = plan.into_iter().collect();
@@ -924,6 +965,9 @@ fn worker_main(
                     Ok(Ok(fused)) => {
                         counters
                             .record_fused(group.len(), fused.stages_skipped);
+                        next_warm.push(
+                            members.iter().map(|(_, l)| l.id).collect(),
+                        );
                         let now = Instant::now();
                         for ((i, l), ev) in
                             members.iter_mut().zip(fused.events)
@@ -962,7 +1006,15 @@ fn worker_main(
         // Retire finished/failed sessions; their slots free up for the
         // next admission pass.
         settle_round(worker, &events, engine.backend(), &mut live, retired);
+        warm = next_warm;
+        // Attribute the round's lane-cache traffic (including departure
+        // scatters from the retirements above) to the pool counters.
+        let t = engine.backend().lane_traffic();
+        counters.record_traffic(&t.since(&traffic_base));
+        traffic_base = t;
     }
+    let t = engine.backend().lane_traffic();
+    counters.record_traffic(&t.since(&traffic_base));
     engine.finish();
 }
 
@@ -1017,7 +1069,12 @@ fn policy_classes(live: &[Live]) -> Vec<usize> {
 /// `i`'s policy class ([`policy_classes`]), `fusable[i]` whether it may
 /// join a fused lane group ([`DecodeSession::fusable`]); `lanes` is the
 /// backend's fused group-size ladder (sorted ascending; sizes < 2 are
-/// ignored, empty disables fusion).
+/// ignored, empty disables fusion). `sticky` holds last round's warm
+/// fused groups (live indices, lane order preserved): with
+/// device-resident lane groups, re-planning an identical membership is
+/// a free warm hit while any membership change costs a full dissolve +
+/// re-gather, so the planner keeps a sticky group intact whenever every
+/// member is still eligible, rather than greedily re-packing.
 ///
 /// Returns step groups covering every session exactly once. Invariants
 /// (property-tested below):
@@ -1026,18 +1083,39 @@ fn policy_classes(live: &[Live]) -> Vec<usize> {
 ///   first-appearance order — each distinct policy is applied once per
 ///   round instead of once per adjacent policy change;
 /// - a group of size > 1 is a fused lane group: its size is one of
-///   `lanes` (greedy, largest that fits the class's remaining fusable
-///   sessions), all members share a class and are fusable;
+///   `lanes`, all members share a class and are fusable;
+/// - a sticky group whose members are all fusable, same-class, and
+///   unclaimed by an earlier sticky group survives verbatim (emitted
+///   before its class's greedy groups); otherwise it dissolves and its
+///   members re-pack greedily (largest ladder size that fits);
 /// - non-fusable sessions (recompute deficit, capacity edge) always
 ///   step solo.
 pub fn plan_round(
     classes: &[usize],
     fusable: &[bool],
     lanes: &[usize],
+    sticky: &[Vec<usize>],
 ) -> Vec<Vec<usize>> {
     assert_eq!(classes.len(), fusable.len());
+    let n = classes.len();
     let lanes: Vec<usize> =
         lanes.iter().copied().filter(|&b| b >= 2).collect();
+    // Warm groups that survive re-validation: still a ladder size, every
+    // member present, fusable, policy-pure, and not claimed twice
+    // (overlapping sticky inputs keep first-come membership).
+    let mut claimed = vec![false; n];
+    let mut kept: Vec<Vec<usize>> = Vec::new();
+    for g in sticky {
+        let ok = lanes.contains(&g.len())
+            && g.iter().all(|&i| i < n && fusable[i] && !claimed[i])
+            && g.iter().all(|&i| classes[i] == classes[g[0]]);
+        if ok {
+            for &i in g {
+                claimed[i] = true;
+            }
+            kept.push(g.clone());
+        }
+    }
     let mut order: Vec<usize> = Vec::new();
     let mut by_class: Vec<Vec<usize>> = Vec::new();
     for (i, &c) in classes.iter().enumerate() {
@@ -1051,9 +1129,18 @@ pub fn plan_round(
     }
     let mut groups = Vec::new();
     for c in order {
+        // Warm groups first (in their class's slot, so each distinct
+        // policy is still applied exactly once per round)...
+        for g in kept.iter().filter(|g| classes[g[0]] == c) {
+            groups.push(g.clone());
+        }
+        // ...then greedy packing over the class's unclaimed remainder.
         let members = &by_class[c];
-        let eligible: Vec<usize> =
-            members.iter().copied().filter(|&i| fusable[i]).collect();
+        let eligible: Vec<usize> = members
+            .iter()
+            .copied()
+            .filter(|&i| fusable[i] && !claimed[i])
+            .collect();
         let mut k = 0;
         while k < eligible.len() {
             match lanes
@@ -1138,10 +1225,12 @@ fn build_engine(
     cfg: &PoolConfig,
 ) -> Result<Box<dyn PoolEngine>> {
     Ok(match cfg.engine {
-        EngineKind::Sequential => Box::new(
-            SequentialEngine::new(state, cfg.policy.clone())
-                .context("building sequential engine")?,
-        ),
+        EngineKind::Sequential => {
+            let mut e = SequentialEngine::new(state, cfg.policy.clone())
+                .context("building sequential engine")?;
+            e.lane_residency = cfg.lane_residency;
+            Box::new(e)
+        }
         EngineKind::Pipelined => Box::new(
             PipelinedEngine::new(state, cfg.policy.clone())
                 .context("building pipelined engine")?,
@@ -1175,17 +1264,67 @@ mod tests {
         // group, remainder solo.
         let classes = [0usize; 5];
         let fusable = [true; 5];
-        let plan = plan_round(&classes, &fusable, &[2, 4]);
+        let plan = plan_round(&classes, &fusable, &[2, 4], &[]);
         assert_eq!(plan, vec![vec![0, 1, 2, 3], vec![4]]);
         // Lanes off: everyone solo.
-        let plan = plan_round(&classes, &fusable, &[]);
+        let plan = plan_round(&classes, &fusable, &[], &[]);
         assert_eq!(plan.len(), 5);
         assert!(plan.iter().all(|g| g.len() == 1));
         // Deficit-carrying sessions (non-fusable) step solo even when a
         // lane would fit.
-        let plan =
-            plan_round(&classes, &[true, false, true, false, true], &[2, 4]);
+        let plan = plan_round(
+            &classes,
+            &[true, false, true, false, true],
+            &[2, 4],
+            &[],
+        );
         assert_eq!(plan, vec![vec![0, 2], vec![4], vec![1], vec![3]]);
+    }
+
+    /// Warm-group stickiness: a warm fused group whose members are all
+    /// still eligible survives verbatim — even when greedy packing
+    /// would have cut a different (larger) grouping — and an ineligible
+    /// member dissolves the group back to greedy packing.
+    #[test]
+    fn lane_plan_keeps_warm_groups_intact() {
+        let classes = [0usize; 5];
+        let fusable = [true; 5];
+        // Greedy alone would form [0,1,2,3]; the warm pair [1,3] (in
+        // its lane order) must survive instead, with the rest packed
+        // around it.
+        let plan =
+            plan_round(&classes, &fusable, &[2, 4], &[vec![1, 3]]);
+        assert_eq!(plan, vec![vec![1, 3], vec![0, 2], vec![4]]);
+        // A warm member that went non-fusable (deficit) dissolves the
+        // group: plain greedy packing takes over.
+        let plan = plan_round(
+            &classes,
+            &[true, true, true, false, true],
+            &[2, 4],
+            &[vec![1, 3]],
+        );
+        assert_eq!(plan, vec![vec![0, 1, 2, 4], vec![3]]);
+        // A warm group whose size fell off the ladder (member departed
+        // before the round; caller passes the survivors) re-packs too.
+        let plan =
+            plan_round(&classes, &fusable, &[2, 4], &[vec![1, 3, 4]]);
+        assert_eq!(plan, vec![vec![0, 1, 2, 3], vec![4]]);
+        // Overlapping warm groups: first claim wins, the loser re-packs.
+        let plan = plan_round(
+            &classes,
+            &fusable,
+            &[2, 4],
+            &[vec![1, 3], vec![3, 4]],
+        );
+        assert_eq!(plan, vec![vec![1, 3], vec![0, 2], vec![4]]);
+        // Mixed-policy warm groups never survive re-validation.
+        let plan = plan_round(
+            &[0, 0, 1, 1],
+            &[true; 4],
+            &[2],
+            &[vec![1, 2]],
+        );
+        assert_eq!(plan, vec![vec![0, 1], vec![2, 3]]);
     }
 
     /// Regression (policy churn): the pre-lane loop applied the engine
@@ -1217,10 +1356,13 @@ mod tests {
         }
     }
 
-    /// The ISSUE's lane-group invariants over random live sets: every
-    /// session planned exactly once, fused sizes come from the ladder
-    /// and never exceed it, groups are policy-pure, non-fusable
-    /// sessions always solo, and each policy is applied once per round.
+    /// The ISSUE's lane-group invariants over random live sets — now
+    /// with random sticky (warm) groups in play: every session planned
+    /// exactly once, fused sizes come from the ladder, groups are
+    /// policy-pure, non-fusable sessions always solo, each policy
+    /// applied once per round, and **a warm group is never broken while
+    /// all its lanes stay eligible** (it reappears verbatim in the
+    /// plan).
     #[test]
     fn lane_plan_invariants_hold_for_arbitrary_live_sets() {
         proptest::check("plan_round invariants", 256, |rng| {
@@ -1235,7 +1377,40 @@ mod tests {
                 .collect();
             lanes.sort_unstable();
             lanes.dedup();
-            let plan = plan_round(&classes, &fusable, &lanes);
+            // Random disjoint "warm groups from last round": how the
+            // worker feeds them, membership may have gone stale in any
+            // way (non-fusable members, off-ladder sizes after a
+            // departure, class drift after a policy override).
+            let mut sticky: Vec<Vec<usize>> = Vec::new();
+            if n > 0 {
+                let mut pool_idx: Vec<usize> = (0..n).collect();
+                for _ in 0..rng.range(0, 4) {
+                    let want = rng.range(1, 6);
+                    if pool_idx.len() < want {
+                        break;
+                    }
+                    let mut g = Vec::with_capacity(want);
+                    for _ in 0..want {
+                        let j = rng.below(pool_idx.len());
+                        g.push(pool_idx.swap_remove(j));
+                    }
+                    sticky.push(g);
+                }
+            }
+            let plan = plan_round(&classes, &fusable, &lanes, &sticky);
+            // Sticky groups that should survive: ladder-sized,
+            // all-fusable, policy-pure (disjoint by construction).
+            for g in &sticky {
+                let eligible = lanes.contains(&g.len())
+                    && g.iter().all(|&i| fusable[i])
+                    && g.iter().all(|&i| classes[i] == classes[g[0]]);
+                if eligible && !plan.contains(g) {
+                    return Err(format!(
+                        "warm group {g:?} broken while all lanes \
+                         eligible: plan {plan:?}"
+                    ));
+                }
+            }
             let mut seen = vec![0usize; n];
             for g in &plan {
                 if g.is_empty() {

@@ -96,6 +96,7 @@ fn pooled_streams(
             max_concurrent,
             prefix_cache_positions,
             lane_fusion,
+            lane_residency: true,
         },
     );
     let mut streams: Streams = BTreeMap::new();

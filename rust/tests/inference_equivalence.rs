@@ -192,6 +192,7 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 max_concurrent: 2,
                 prefix_cache_positions: 0,
                 lane_fusion: false,
+                lane_residency: true,
             },
         );
         let reqs: Vec<ServeRequest> = prompts
@@ -276,6 +277,7 @@ fn continuous_batching_streams_and_admits_mid_flight() {
             max_concurrent: 2,
             prefix_cache_positions: 0,
             lane_fusion: false,
+            lane_residency: true,
         },
     );
     let reqs: Vec<ServeRequest> = long
@@ -381,6 +383,7 @@ fn batch_reports_per_request_failures() {
             max_concurrent: 2,
             prefix_cache_positions: 0,
             lane_fusion: false,
+            lane_residency: true,
         },
     );
     let out = pool.run_batch(reqs).unwrap();

@@ -100,6 +100,7 @@ fn pooled_streams(
             max_concurrent,
             prefix_cache_positions,
             lane_fusion: true,
+            lane_residency: true,
         },
     );
     let mut streams: Streams = BTreeMap::new();

@@ -297,6 +297,7 @@ fn pooled_per_request_policies_match_serial() {
             max_concurrent: 2,
             prefix_cache_positions: 0,
             lane_fusion: false,
+            lane_residency: true,
         },
     );
     let reqs: Vec<ServeRequest> = PROMPTS

@@ -271,6 +271,7 @@ fn pooled_prefix_cache_matches_disabled_and_saves_prefill() {
                     max_concurrent: 2,
                     prefix_cache_positions: budget,
                     lane_fusion: false,
+                    lane_residency: true,
                 },
             );
             let reqs: Vec<ServeRequest> = prompts
@@ -361,6 +362,7 @@ fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
                     max_concurrent,
                     prefix_cache_positions: 16 * man.model.max_seq,
                     lane_fusion: false,
+                    lane_residency: true,
                 },
             );
             let stores: Vec<_> = pool.prefix_stores().to_vec();

@@ -1,0 +1,462 @@
+//! Integration: device-resident lane groups must be **output-invisible**
+//! and must actually kill the per-step host round-trip.
+//!
+//! The resident fused path (`lane_residency` on, the default) keeps each
+//! lane group's stage caches on device across rounds and scatters them
+//! back only at departures — lane exits, regroups, snapshots, or solo
+//! windows. This suite pins both halves of that claim:
+//!
+//! * equivalence — resident pooled streams equal the round-trip pool
+//!   (`lane_residency: false`, the PR-5 gather/scatter baseline) and solo
+//!   decoding token-for-token and exit-layer-for-exit-layer, across exit
+//!   policies, mid-flight admission with lane exits mid-group, and every
+//!   lanes x prefix-cache combination;
+//! * traffic — warm rounds move zero lane-cache bytes (the engine's
+//!   [`LaneTraffic`] deltas are exactly zero at steady state), cold
+//!   formation pays one gather per lane per stage, and a departure pays
+//!   one scatter per parked lane per stage, nothing per step.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{
+    shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
+};
+use eellm::inference::{
+    DecodeBackend, DecodeSession, ExitPolicy, FusedStep, LaneTraffic,
+    ModelState, SequentialEngine, StepEvent,
+};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    BatchOutcome, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
+    ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so confidences are meaningful (same recipe as
+/// the sibling equivalence suites).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+type Streams = BTreeMap<u64, Vec<(i32, usize)>>;
+
+/// Serve `reqs` on a one-worker lane-fused pool and collect each
+/// request's (token, exit layer) stream, toggling cache residency.
+fn pooled_streams(
+    state: &ModelState,
+    policy: ExitPolicy,
+    reqs: Vec<ServeRequest>,
+    max_concurrent: usize,
+    lane_residency: bool,
+    prefix_cache_positions: usize,
+) -> (Streams, BatchOutcome) {
+    let mut pool = EnginePool::new(
+        state.clone(),
+        PoolConfig {
+            workers: 1,
+            engine: EngineKind::Sequential,
+            policy,
+            sched: Policy::Fifo,
+            max_concurrent,
+            prefix_cache_positions,
+            lane_fusion: true,
+            lane_residency,
+        },
+    );
+    let mut streams: Streams = BTreeMap::new();
+    let out = pool
+        .run_batch_streamed(reqs, |ev| {
+            if let ServeEvent::Token { id, token, exit_layer, .. } = ev {
+                streams.entry(*id).or_default().push((*token, *exit_layer));
+            }
+        })
+        .unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    (streams, out)
+}
+
+/// Drain one serial session, collecting its (token, exit layer) stream.
+fn serial_stream(
+    backend: &mut dyn DecodeBackend,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<(i32, usize)> {
+    let mut s = DecodeSession::new_text(backend, prompt, max_new).unwrap();
+    s.prefill(backend).unwrap();
+    let mut out = Vec::new();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    out
+}
+
+const PROMPTS: [&str; 6] = [
+    "the capital of ",
+    "question: what is the ",
+    "count: 3 4 5 ",
+    "abc: a b c d ",
+    "the color of ",
+    "fact: the capital ",
+];
+
+/// The acceptance grid: resident pooled streams equal the round-trip
+/// pool and serial decoding across >= 3 exit policies, and the traffic
+/// counters split exactly as designed — the round-trip pool pays a
+/// gather per fused step and never forms a resident group; the resident
+/// pool's gathers are bounded by group formations, not steps.
+#[test]
+fn resident_matches_roundtrip_and_serial_across_policies() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    assert!(
+        !man.decode_lanes.is_empty(),
+        "ee-tiny manifest lists no decode_lanes; rebuild artifacts"
+    );
+    let state = trained_state(&man, 60);
+    let stages = man.stages.len() as u64;
+    let max_lane = *man.decode_lanes.iter().max().unwrap() as u64;
+    let policies = [
+        ExitPolicy::confidence(0.2),
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::Never,
+        ExitPolicy::Entropy { max_nats: 1.0 },
+    ];
+    for policy in &policies {
+        let reqs: Vec<ServeRequest> = PROMPTS
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ServeRequest::new(i as u64, *p, 12))
+            .collect();
+        let (res, m_res) = pooled_streams(
+            &state,
+            policy.clone(),
+            reqs.clone(),
+            4,
+            true,
+            0,
+        );
+        let (rt, m_rt) =
+            pooled_streams(&state, policy.clone(), reqs, 4, false, 0);
+        assert_eq!(
+            res, rt,
+            "policy {policy}: resident pool diverged from round-trip"
+        );
+        let mut serial =
+            SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+        for (i, p) in PROMPTS.iter().enumerate() {
+            let want = serial_stream(&mut serial, p, 12);
+            assert!(!want.is_empty(), "policy {policy}: empty stream");
+            assert_eq!(
+                res[&(i as u64)],
+                want,
+                "policy {policy}, prompt {p:?}: resident pool diverged \
+                 from serial"
+            );
+        }
+        // Traffic split. Resident: cache gathers happen at group
+        // formation only (<= forms x lanes x stages), never per step.
+        let l = &m_res.metrics.lanes;
+        assert!(l.fused_steps > 0, "policy {policy}: no fused steps");
+        assert!(
+            l.cold_group_forms > 0,
+            "policy {policy}: fused steps without a group formation: {l:?}"
+        );
+        assert!(
+            l.cache_gathers <= l.cold_group_forms * max_lane * stages,
+            "policy {policy}: resident gathers {} exceed formation bound \
+             ({} forms x {max_lane} lanes x {stages} stages): {l:?}",
+            l.cache_gathers,
+            l.cold_group_forms
+        );
+        // Round-trip: every fused step re-gathers its lanes; residency
+        // counters stay at zero.
+        let l = &m_rt.metrics.lanes;
+        assert!(l.fused_steps > 0, "policy {policy}: no round-trip fusion");
+        assert_eq!(
+            (l.warm_group_hits, l.cold_group_forms),
+            (0, 0),
+            "policy {policy}: round-trip pool formed resident groups: {l:?}"
+        );
+        assert!(
+            l.cache_gathers >= l.fused_steps,
+            "policy {policy}: round-trip gathers {} below fused steps {} \
+             (baseline must pay per step): {l:?}",
+            l.cache_gathers,
+            l.fused_steps
+        );
+        // Group stickiness under a policy that never breaks groups: the
+        // same members re-fuse round after round and hit warm.
+        if !policy.may_exit() {
+            let l = &m_res.metrics.lanes;
+            assert!(
+                l.warm_group_hits > 0,
+                "policy {policy}: no warm hits despite stable groups: {l:?}"
+            );
+        }
+    }
+}
+
+/// Mid-flight admission with lane exits mid-group: more requests than
+/// live slots and an exit-happy policy, so lanes fire at stage entries,
+/// depart with a deficit, heal solo, and regroup — the maximum-churn
+/// path for resident group dissolution. Streams must equal the
+/// round-trip pool exactly.
+#[test]
+fn admission_churn_and_exits_match_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let reqs: Vec<ServeRequest> = (0..10)
+        .map(|i| {
+            let p = PROMPTS[i % PROMPTS.len()];
+            // Varied budgets stagger completions, forcing admissions
+            // into partially-drained rounds.
+            ServeRequest::new(i as u64, p, 6 + (i % 5))
+        })
+        .collect();
+    let policy = ExitPolicy::confidence(0.4);
+    let (res, m_res) =
+        pooled_streams(&state, policy.clone(), reqs.clone(), 3, true, 0);
+    let (rt, _) = pooled_streams(&state, policy, reqs, 3, false, 0);
+    assert_eq!(res, rt, "admission churn diverged under residency");
+    assert!(m_res.metrics.lanes.fused_steps > 0, "no fusion under churn");
+}
+
+/// Prefix-cache interaction: snapshot restores seed sessions that then
+/// join resident groups, and post-prefill snapshots read through any
+/// group the session sits in (dissolve-on-snapshot). All four
+/// (residency x cache) combinations produce identical streams.
+#[test]
+fn prefix_cache_and_residency_compose() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let max_seq = man.model.max_seq;
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let spec = SharedPrefixSpec {
+        seed: 11,
+        n_groups: 2,
+        requests_per_group: 4,
+        prefix_bytes: max_seq / 2,
+    };
+    let prompts = shared_prefix_prompts(&spec, &corpus.facts);
+    let reqs: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest::new(i as u64, p.as_str(), 8))
+        .collect();
+    let policy = ExitPolicy::confidence(0.6);
+    let mut all: Vec<Streams> = Vec::new();
+    for &residency in &[false, true] {
+        for &budget in &[0usize, 8 * max_seq] {
+            let (streams, out) = pooled_streams(
+                &state,
+                policy.clone(),
+                reqs.clone(),
+                4,
+                residency,
+                budget,
+            );
+            if budget > 0 {
+                assert!(
+                    out.metrics.prefix.hits > 0,
+                    "residency {residency}: no prefix hits on shared \
+                     prompts"
+                );
+            }
+            all.push(streams);
+        }
+    }
+    for s in &all[1..] {
+        assert_eq!(
+            *s, all[0],
+            "streams diverged across residency x prefix-cache combinations"
+        );
+    }
+}
+
+/// Step exactly the sessions at `pick` (ascending) as one fused group.
+fn step_group(
+    eng: &mut SequentialEngine,
+    sessions: &mut [DecodeSession],
+    pick: &[usize],
+) -> FusedStep {
+    let mut group: Vec<&mut DecodeSession> = sessions
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| pick.contains(i))
+        .map(|(_, s)| s)
+        .collect();
+    DecodeSession::step_fused(eng, &mut group).unwrap()
+}
+
+/// The tentpole's traffic contract, pinned round by round on a bare
+/// engine: cold formation pays one gather per lane per stage; warm
+/// rounds move **zero** cache bytes; a departure (here: a lane running
+/// out of budget, shrinking the group) pays one scatter per parked lane
+/// per stage when the survivors re-form; solo windows over parked lanes
+/// are free (host-side moves, no device traffic).
+#[test]
+fn warm_rounds_move_zero_traffic_and_departures_scatter_once() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    if !man.decode_lanes.contains(&4) || !man.decode_lanes.contains(&2) {
+        eprintln!("skipping: ee-tiny lanes lack widths 2 and 4");
+        return;
+    }
+    let state = trained_state(&man, 60);
+    let stages = man.stages.len() as u64;
+    // Bytes of one lane's full stage-cache set (f32).
+    let lane_bytes: u64 = man
+        .stages
+        .iter()
+        .map(|st| st.cache_shape.iter().product::<usize>() as u64 * 4)
+        .sum();
+    // `Never` keeps every lane fusable (no exits, no deficit), so group
+    // membership changes only when a session exhausts its budget.
+    let mut eng =
+        SequentialEngine::new(state, ExitPolicy::Never).unwrap();
+    assert!(eng.lane_residency, "residency must default on");
+
+    // Session 0 gets a 3-token budget so it departs after round 3;
+    // the rest outlive the test.
+    let mut sessions: Vec<DecodeSession> = PROMPTS[..4]
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let max_new = if i == 0 { 3 } else { 8 };
+            let mut s =
+                DecodeSession::new_text(&mut eng, p, max_new).unwrap();
+            s.prefill(&mut eng).unwrap();
+            s
+        })
+        .collect();
+    // Prefill runs solo windows on never-resident handles: no traffic.
+    let mut base = DecodeBackend::lane_traffic(&eng);
+    assert_eq!(base, LaneTraffic::default(), "prefill moved cache bytes");
+
+    // Round 1: cold formation — one gather per lane per stage, nothing
+    // scattered.
+    step_group(&mut eng, &mut sessions, &[0, 1, 2, 3]);
+    let d = DecodeBackend::lane_traffic(&eng).since(&base);
+    assert_eq!(d.cold_forms, 1, "first fused round must form a group");
+    assert_eq!(d.warm_hits, 0);
+    assert_eq!(d.cache_gathers, 4 * stages, "formation gathers: {d:?}");
+    assert_eq!(d.gather_bytes, 4 * lane_bytes, "formation bytes: {d:?}");
+    assert_eq!(d.cache_scatters, 0, "formation must not scatter: {d:?}");
+    base = DecodeBackend::lane_traffic(&eng);
+
+    // Rounds 2-3: warm steady state — zero cache traffic, per round.
+    for round in 2..=3 {
+        step_group(&mut eng, &mut sessions, &[0, 1, 2, 3]);
+        let d = DecodeBackend::lane_traffic(&eng).since(&base);
+        assert_eq!(d.warm_hits, 1, "round {round} missed warm: {d:?}");
+        assert_eq!(
+            (d.cache_gathers, d.cache_scatters, d.gather_bytes,
+             d.scatter_bytes, d.cold_forms),
+            (0, 0, 0, 0, 0),
+            "round {round} moved cache traffic at steady state: {d:?}"
+        );
+        base = DecodeBackend::lane_traffic(&eng);
+    }
+    assert!(sessions[0].is_done(), "session 0 should exhaust its budget");
+
+    // Departure: the 4-group cannot re-form (3 survivors, lane ladder
+    // has no 3), so sessions 1+2 re-form as a pair. Forming it dissolves
+    // the stale 4-group — one scatter per parked lane per stage, once,
+    // not per step — then gathers the pair.
+    step_group(&mut eng, &mut sessions, &[1, 2]);
+    let d = DecodeBackend::lane_traffic(&eng).since(&base);
+    assert_eq!(d.cold_forms, 1, "pair must cold-form: {d:?}");
+    assert_eq!(
+        d.cache_scatters,
+        4 * stages,
+        "dissolving the stale group scatters each member once: {d:?}"
+    );
+    assert_eq!(d.scatter_bytes, 4 * lane_bytes, "departure bytes: {d:?}");
+    assert_eq!(d.cache_gathers, 2 * stages, "pair gathers: {d:?}");
+    base = DecodeBackend::lane_traffic(&eng);
+
+    // The left-over survivor steps solo from its parked literals:
+    // host-side moves only, no gather/scatter traffic.
+    if let StepEvent::Token { .. } = sessions[3].step(&mut eng).unwrap() {
+    } else {
+        panic!("survivor solo step emitted no token");
+    }
+    let d = DecodeBackend::lane_traffic(&eng).since(&base);
+    assert_eq!(
+        (d.cache_gathers, d.cache_scatters),
+        (0, 0),
+        "solo window over parked caches moved device traffic: {d:?}"
+    );
+    base = DecodeBackend::lane_traffic(&eng);
+
+    // And the pair is warm again: steady state restored.
+    step_group(&mut eng, &mut sessions, &[1, 2]);
+    let d = DecodeBackend::lane_traffic(&eng).since(&base);
+    assert_eq!(d.warm_hits, 1, "pair should re-hit warm: {d:?}");
+    assert_eq!(
+        (d.cache_gathers, d.cache_scatters),
+        (0, 0),
+        "post-departure steady state moved cache traffic: {d:?}"
+    );
+}
