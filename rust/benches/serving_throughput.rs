@@ -12,12 +12,14 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use eellm::data::synth::{shared_prefix_prompts, SharedPrefixSpec};
+use eellm::data::synth::{
+    bursty_traffic, shared_prefix_prompts, SharedPrefixSpec, TrafficSpec,
+};
 use eellm::data::tasks;
 use eellm::inference::ExitPolicy;
 use eellm::serve::{
-    requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
-    ServeRequest,
+    requests_from_tasks, ControlConfig, EngineKind, EnginePool, Policy,
+    PoolConfig, ServeRequest, ShedPolicy,
 };
 use eellm::util::table::Table;
 
@@ -60,6 +62,7 @@ fn main() {
                     // isolates fusion.
                     lane_fusion: false,
                     lane_residency: true,
+                    control: ControlConfig::default(),
                 },
             );
             let out = pool.run_batch(reqs.clone()).expect("batch");
@@ -139,6 +142,7 @@ fn main() {
                 prefix_cache_positions: budget,
                 lane_fusion: false,
                 lane_residency: true,
+                control: ControlConfig::default(),
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");
@@ -197,6 +201,7 @@ fn main() {
                 prefix_cache_positions: 0,
                 lane_fusion: fusion,
                 lane_residency: true,
+                control: ControlConfig::default(),
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");
@@ -268,6 +273,7 @@ fn main() {
                 prefix_cache_positions: 0,
                 lane_fusion: true,
                 lane_residency: residency,
+                control: ControlConfig::default(),
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");
@@ -363,6 +369,7 @@ fn main() {
                 prefix_cache_positions: 0,
                 lane_fusion: true,
                 lane_residency: true,
+                control: ControlConfig::default(),
             },
         );
         let out = pool.run_batch(shared_reqs.clone()).expect("batch");
@@ -401,6 +408,165 @@ fn main() {
     println!(
         "pipelined/sequential serving throughput ratio: {:.2}x",
         engine_tput[1] / engine_tput[0].max(1e-9)
+    );
+
+    // --- SLO control plane: preemption + shedding on vs off ---
+    // Bursty, diurnal, multi-tenant deadline traffic through a single
+    // worker with two live slots: without the control plane, long
+    // best-effort sessions hold the slots while deadlined requests
+    // queue past their budgets; with it, urgent requests preempt the
+    // lowest-value live session (parked, resumed later) and the queue
+    // sheds load it cannot serve in time. Shape checks: the control
+    // plane actually engages (sheds fire; every preempted session
+    // resumes), and its deadline-miss rate is no worse than the
+    // baseline's.
+    let mut traffic_spec = TrafficSpec {
+        seed: 29,
+        n_requests: if bench_util::fast() { 10 } else { 18 },
+        tenants: vec![3.0, 1.0],
+        period: 8,
+        burst_len: 3,
+        deadline_ms: (1, 2),
+        deadline_rate: 0.55,
+        max_new: (4, 12),
+        prompt_bytes: (32, (max_seq / 2).max(48)),
+    };
+    // Calibrate deadline bounds to the observed service time: run the
+    // same traffic deadline-free, then set deadlines spanning "tight
+    // enough to miss under queueing" to "comfortably loose".
+    let base_cfg = PoolConfig {
+        workers: 1,
+        engine: EngineKind::Sequential,
+        policy: ExitPolicy::confidence(0.6),
+        sched: Policy::Priority,
+        max_concurrent: 2,
+        prefix_cache_positions: 0,
+        lane_fusion: false,
+        lane_residency: true,
+        control: ControlConfig::default(),
+    };
+    let to_reqs = |traffic: &[eellm::data::synth::TrafficRequest],
+                   deadlines: bool| {
+        traffic
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut r =
+                    ServeRequest::new(i as u64, t.prompt.as_str(), t.max_new)
+                        .with_priority(t.priority)
+                        .with_tenant(t.tenant);
+                if deadlines {
+                    if let Some(ms) = t.deadline_ms {
+                        r = r.with_deadline(
+                            std::time::Duration::from_millis(ms),
+                        );
+                    }
+                }
+                r
+            })
+            .collect::<Vec<_>>()
+    };
+    let cal_traffic = bursty_traffic(&traffic_spec, &corpus.facts);
+    let mut cal_pool = EnginePool::new(state.clone(), base_cfg.clone());
+    let cal = cal_pool
+        .run_batch(to_reqs(&cal_traffic, false))
+        .expect("calibration batch");
+    cal_pool.shutdown().expect("shutdown");
+    let p50_ms = (cal.metrics.p50_latency_seconds * 1e3).max(1.0);
+    traffic_spec.deadline_ms =
+        ((p50_ms / 2.0).max(1.0) as u64, (p50_ms * 4.0).max(8.0) as u64);
+    let traffic = bursty_traffic(&traffic_spec, &corpus.facts);
+    let slo_reqs = to_reqs(&traffic, true);
+
+    let mut slo_table = Table::new(
+        "SLO control plane on bursty deadline traffic (1 worker, \
+         max_concurrent 2, priority sched)",
+        &["control", "tok/s", "deadlined", "misses", "miss rate",
+          "preempt", "resume", "shed", "parked peak"],
+    );
+    let mut miss_rates = Vec::new();
+    for &on in &[false, true] {
+        let mut cfg = base_cfg.clone();
+        if on {
+            cfg.control = ControlConfig {
+                preempt: true,
+                preempt_horizon: std::time::Duration::from_millis(
+                    (p50_ms * 4.0) as u64 + 8,
+                ),
+                park_capacity: 2,
+                shed: Some(ShedPolicy {
+                    max_queue_depth: traffic_spec.n_requests / 2,
+                    max_predicted_ttft: None,
+                    ..ShedPolicy::default()
+                }),
+                tenant_weights: traffic_spec.tenants.clone(),
+                fault: None,
+            };
+        }
+        let mut pool = EnginePool::new(state.clone(), cfg);
+        let out = pool.run_batch(slo_reqs.clone()).expect("batch");
+        pool.shutdown().expect("shutdown");
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        let m = &out.metrics;
+        let s = &m.slo;
+        slo_table.row(vec![
+            if on { "on".into() } else { "off".to_string() },
+            format!("{:.1}", m.throughput_tps()),
+            format!("{}", m.deadlined),
+            format!("{}", m.deadline_misses),
+            format!("{:.0}%", 100.0 * m.deadline_miss_rate()),
+            format!("{}", s.preemptions),
+            format!("{}", s.resumes),
+            format!("{}", s.shed),
+            format!("{}", s.parked_peak),
+        ]);
+        if on {
+            assert!(
+                s.preemptions + s.shed > 0,
+                "control plane on but never engaged: {s:?}"
+            );
+            assert_eq!(
+                s.resumes, s.preemptions,
+                "a preempted session never resumed: {s:?}"
+            );
+            assert_eq!(s.park_failures + s.resume_failures, 0, "{s:?}");
+            for t in &m.tenants {
+                println!(
+                    "tenant {} share: {} requests, {} tokens ({:.0}%)",
+                    t.tenant,
+                    t.requests,
+                    t.tokens,
+                    100.0 * t.share
+                );
+            }
+        } else {
+            assert_eq!(s.preemptions + s.shed, 0, "{s:?}");
+            assert!(
+                out.sheds.is_empty(),
+                "control plane off but requests were shed"
+            );
+        }
+        miss_rates.push(m.deadline_miss_rate());
+    }
+    slo_table.emit("serving_throughput");
+    if miss_rates[0] > 0.0 {
+        assert!(
+            miss_rates[1] <= miss_rates[0] + 1e-9,
+            "control plane worsened the deadline-miss rate: on \
+             {:.2} vs off {:.2}",
+            miss_rates[1],
+            miss_rates[0]
+        );
+    } else {
+        println!(
+            "baseline missed no deadlines at this speed; skipping the \
+             miss-rate comparison"
+        );
+    }
+    println!(
+        "SLO miss rate off {:.0}% -> on {:.0}%",
+        100.0 * miss_rates[0],
+        100.0 * miss_rates[1]
     );
     println!("serving_throughput shape checks OK");
 }

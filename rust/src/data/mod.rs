@@ -15,5 +15,7 @@ pub mod tasks;
 pub mod tokenizer;
 
 pub use dataset::{Dataset, TrainBatch};
-pub use synth::{Corpus, CorpusSpec};
+pub use synth::{
+    bursty_traffic, Corpus, CorpusSpec, TrafficRequest, TrafficSpec,
+};
 pub use tokenizer::{ByteTokenizer, BOS_ID, EOS_ID, PAD_ID, VOCAB_SIZE};

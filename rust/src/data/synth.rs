@@ -208,6 +208,141 @@ pub fn shared_prefix_prompts(
     prompts
 }
 
+/// Spec for the bursty, diurnal, multi-tenant serving workload the SLO
+/// control plane (preemption, shedding, weighted fairness) is
+/// exercised against.
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Per-tenant arrival weights (tenant `i`'s share of traffic);
+    /// empty = all traffic from tenant 0.
+    pub tenants: Vec<f64>,
+    /// Diurnal phase length in requests: urgency swings between a calm
+    /// trough and a peak every `period` requests (0 = flat).
+    pub period: usize,
+    /// Arrivals come in tenant-coherent bursts of this many requests
+    /// (1 = independent arrivals).
+    pub burst_len: usize,
+    /// Deadline bounds in milliseconds `(tight, loose)`: peak-phase
+    /// requests draw toward `tight`, calm-phase toward `loose`.
+    pub deadline_ms: (u64, u64),
+    /// Fraction of requests carrying a deadline at all.
+    pub deadline_rate: f64,
+    /// Generation-budget bounds `(lo, hi)`, inclusive.
+    pub max_new: (usize, usize),
+    /// Prompt byte-budget bounds `(lo, hi)`, inclusive — prompts are
+    /// QA questions over the fact KB padded with fact sentences, so
+    /// lengths spread over the range (exercises SPF and the KV
+    /// capacity edge).
+    pub prompt_bytes: (usize, usize),
+}
+
+impl Default for TrafficSpec {
+    fn default() -> TrafficSpec {
+        TrafficSpec {
+            seed: 17,
+            n_requests: 64,
+            tenants: vec![3.0, 1.0],
+            period: 16,
+            burst_len: 4,
+            deadline_ms: (40, 400),
+            deadline_rate: 0.6,
+            max_new: (4, 16),
+            prompt_bytes: (32, 160),
+        }
+    }
+}
+
+/// One request of the bursty workload, engine-agnostic: the serve CLI,
+/// benches, and tests convert these to `ServeRequest`s (the data layer
+/// must not depend on the serve layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficRequest {
+    pub prompt: String,
+    pub max_new: usize,
+    pub tenant: usize,
+    /// Scheduling priority (peak-phase traffic occasionally raises it).
+    pub priority: i32,
+    /// Relative deadline in milliseconds; `None` = best-effort.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Build the bursty, diurnal, multi-tenant request stream.
+/// Deterministic in the spec: tenants are drawn by weight once per
+/// burst (tenant-coherent clusters), urgency follows a cosine diurnal
+/// swing (peak-phase deadlines tighten toward the `tight` bound and
+/// priorities rise), and prompts are KB questions padded to a drawn
+/// byte budget.
+pub fn bursty_traffic(
+    spec: &TrafficSpec,
+    facts: &[Fact],
+) -> Vec<TrafficRequest> {
+    assert!(!facts.is_empty(), "bursty workload needs a fact KB");
+    let (dl_tight, dl_loose) = spec.deadline_ms;
+    assert!(dl_tight <= dl_loose, "deadline bounds inverted");
+    let (mn_lo, mn_hi) = spec.max_new;
+    assert!(0 < mn_lo && mn_lo <= mn_hi, "max_new bounds invalid");
+    let (pb_lo, pb_hi) = spec.prompt_bytes;
+    assert!(pb_lo <= pb_hi, "prompt byte bounds inverted");
+    let weights: Vec<f64> = if spec.tenants.is_empty() {
+        vec![1.0]
+    } else {
+        spec.tenants.clone()
+    };
+    let mut rng = Rng::new(spec.seed);
+    let burst = spec.burst_len.max(1);
+    let mut out = Vec::with_capacity(spec.n_requests);
+    let mut tenant = 0usize;
+    for i in 0..spec.n_requests {
+        if i % burst == 0 {
+            tenant = rng.weighted(&weights);
+        }
+        // Diurnal swing in [0, 1]: 0 = calm trough, 1 = peak.
+        let phase = if spec.period == 0 {
+            0.5
+        } else {
+            let t = (i % spec.period) as f64 / spec.period as f64;
+            0.5 - 0.5 * (t * std::f64::consts::TAU).cos()
+        };
+        let deadline_ms = if rng.uniform() < spec.deadline_rate {
+            let span = (dl_loose - dl_tight) as f64;
+            let jitter = rng.uniform() * 0.25;
+            let frac = (1.0 - phase + jitter).clamp(0.0, 1.0);
+            Some(dl_tight + (span * frac) as u64)
+        } else {
+            None
+        };
+        let priority =
+            if phase > 0.75 && rng.below(4) == 0 { 1 } else { 0 };
+        let max_new = rng.range(mn_lo, mn_hi + 1);
+        let budget = rng.range(pb_lo.max(1), pb_hi.max(pb_lo) + 1);
+        let f = &facts[rng.below(facts.len())];
+        let (q, _) = qa_pair(f);
+        let mut prompt = String::new();
+        while prompt.len() + q.len() < budget {
+            let pad = fact_sentence(
+                &facts[rng.below(facts.len())],
+                rng.below(3),
+            );
+            if prompt.len() + pad.len() + 1 + q.len() > budget {
+                break;
+            }
+            prompt.push_str(&pad);
+            prompt.push(' ');
+        }
+        prompt.push_str(&q);
+        out.push(TrafficRequest {
+            prompt,
+            max_new,
+            tenant,
+            priority,
+            deadline_ms,
+        });
+    }
+    out
+}
+
 impl Corpus {
     pub fn build(spec: &CorpusSpec) -> Corpus {
         let mut rng = Rng::new(spec.seed);
@@ -332,5 +467,103 @@ mod tests {
         for d in &c.docs {
             assert!(d.is_ascii());
         }
+    }
+
+    #[test]
+    fn bursty_traffic_is_deterministic_and_in_bounds() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 6,
+            n_entities: 10,
+            target_bytes: 5_000,
+        });
+        let spec = TrafficSpec { seed: 23, n_requests: 96, ..TrafficSpec::default() };
+        let a = bursty_traffic(&spec, &c.facts);
+        assert_eq!(a.len(), 96);
+        assert_eq!(a, bursty_traffic(&spec, &c.facts), "deterministic");
+        let (dl_lo, dl_hi) = spec.deadline_ms;
+        let (mn_lo, mn_hi) = spec.max_new;
+        for r in &a {
+            assert!(r.prompt.is_ascii());
+            assert!(r.prompt.ends_with("? answer:"), "{:?}", r.prompt);
+            assert!(r.prompt.len() <= spec.prompt_bytes.1, "{:?}", r.prompt);
+            assert!((mn_lo..=mn_hi).contains(&r.max_new));
+            assert!(r.tenant < spec.tenants.len());
+            assert!(r.priority == 0 || r.priority == 1);
+            if let Some(d) = r.deadline_ms {
+                assert!((dl_lo..=dl_hi).contains(&d), "deadline {d} out of bounds");
+            }
+        }
+        // The mix actually exercises the control plane: some deadlined,
+        // some best-effort, and more than one tenant present.
+        assert!(a.iter().any(|r| r.deadline_ms.is_some()));
+        assert!(a.iter().any(|r| r.deadline_ms.is_none()));
+        assert!(a.iter().any(|r| r.tenant == 0));
+        assert!(a.iter().any(|r| r.tenant == 1));
+    }
+
+    #[test]
+    fn bursty_traffic_bursts_are_tenant_coherent_and_weighted() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 7,
+            n_entities: 8,
+            target_bytes: 5_000,
+        });
+        let spec = TrafficSpec {
+            seed: 31,
+            n_requests: 400,
+            tenants: vec![3.0, 1.0],
+            burst_len: 4,
+            ..TrafficSpec::default()
+        };
+        let a = bursty_traffic(&spec, &c.facts);
+        // Tenant is constant within each burst of `burst_len` requests.
+        for chunk in a.chunks(spec.burst_len) {
+            assert!(chunk.iter().all(|r| r.tenant == chunk[0].tenant));
+        }
+        // Shares track the 3:1 weights coarsely (pinned seed, so the
+        // bound is loose but stable).
+        let t0 = a.iter().filter(|r| r.tenant == 0).count() as f64 / a.len() as f64;
+        assert!((0.55..=0.95).contains(&t0), "tenant-0 share {t0}");
+    }
+
+    #[test]
+    fn bursty_traffic_diurnal_peak_tightens_deadlines() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 8,
+            n_entities: 8,
+            target_bytes: 5_000,
+        });
+        let spec = TrafficSpec {
+            seed: 41,
+            n_requests: 512,
+            period: 16,
+            deadline_rate: 1.0,
+            ..TrafficSpec::default()
+        };
+        let a = bursty_traffic(&spec, &c.facts);
+        // Mean deadline near the diurnal peak (middle of the period) is
+        // tighter than near the trough (period boundary).
+        let mean = |pred: &dyn Fn(usize) -> bool| {
+            let v: Vec<f64> = a
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| pred(*i))
+                .filter_map(|(_, r)| r.deadline_ms.map(|d| d as f64))
+                .collect();
+            assert!(!v.is_empty());
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        let peak = mean(&|i| {
+            let t = i % spec.period;
+            (6..=9).contains(&t)
+        });
+        let trough = mean(&|i| {
+            let t = i % spec.period;
+            t <= 1 || t >= 14
+        });
+        assert!(
+            peak < trough,
+            "peak deadlines ({peak:.1} ms) should be tighter than trough ({trough:.1} ms)"
+        );
     }
 }

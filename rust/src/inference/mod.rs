@@ -82,5 +82,6 @@ pub use prefix_cache::{
 pub use sequential::SequentialEngine;
 pub use session::{
     CachedPrefill, DecodeBackend, DecodeSession, DoneReason, FusedStep,
-    LaneSlot, LaneTraffic, SessionCaches, StepEvent, WindowOutcome,
+    LaneSlot, LaneTraffic, ParkedSession, SessionCaches, StepEvent,
+    WindowOutcome,
 };

@@ -541,6 +541,51 @@ impl DecodeSession {
         })
     }
 
+    /// Park a mid-decode session: copy its per-stage KV caches to host
+    /// tensors, release the backend-side state, and return a plain-data
+    /// [`ParkedSession`] that can cross threads and later
+    /// [`ParkedSession::resume`] on either engine — the preemption
+    /// primitive of the serving control plane.
+    ///
+    /// Consumes the session; on error the backend state has still been
+    /// released (best-effort), so a failed park surfaces as a lost
+    /// request, never a leaked session slot. Any prefix-cache pin is
+    /// dropped — the snapshot is self-contained.
+    ///
+    /// Only valid on a prefilled, unfinished session of a backend whose
+    /// [`DecodeBackend::supports_cache_snapshots`] is true.
+    pub fn park(
+        mut self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<ParkedSession> {
+        ensure!(
+            self.prefilled && self.done.is_none(),
+            "park is only valid on a prefilled, unfinished session"
+        );
+        let caches = self
+            .caches
+            .take()
+            .context("parking a session without caches")?;
+        // KV entries exist for positions [0, len-1): prefill computes
+        // [0, l-1) and every step writes position n = len-1 before
+        // pushing its token (same slice rule as `prefix_snapshot`).
+        let positions = self.tokens.len().saturating_sub(1);
+        let snap = backend.snapshot_caches(&caches, positions);
+        // Win or lose, free the backend-side state: a failed snapshot
+        // must not leak a pipelined stage slot or a resident lane.
+        let _ = backend.release_caches(&caches);
+        let stage_caches = snap.context("parking session: cache snapshot")?;
+        Ok(ParkedSession {
+            tokens: std::mem::take(&mut self.tokens),
+            max_new: self.max_new,
+            deficit: self.deficit,
+            stats: std::mem::take(&mut self.stats),
+            generated: std::mem::take(&mut self.generated),
+            stage_caches,
+            started: self.started,
+        })
+    }
+
     /// Length of the prompt token buffer (BOS included).
     pub fn prompt_len(&self) -> usize {
         self.tokens.len() - self.generated.len()
@@ -852,6 +897,109 @@ impl DecodeSession {
                 self.started.elapsed().as_secs_f64()
             },
             stats: self.stats.clone(),
+        }
+    }
+}
+
+/// A mid-decode session parked to host memory by [`DecodeSession::park`]:
+/// the token buffer, recompute deficit, per-exit stats, and a per-stage
+/// host snapshot of the KV caches — plain data with no backend handles,
+/// so it is `Send` (unlike a live session, whose caches hold `!Send`
+/// device literals) and can sit in a shared park store until a worker
+/// resumes it.
+///
+/// Resuming restores the caches byte-for-byte and the deficit **verbatim**
+/// (no healing): healing the deficit tail with full-depth passes would
+/// change subsequent exit-eligibility decisions and diverge the stream
+/// from an uninterrupted run. The consequence is that a deficit-carrying
+/// snapshot can only resume on a deficit-tracking backend; deficit-free
+/// snapshots (including everything the pipelined engine parks) resume on
+/// either engine.
+pub struct ParkedSession {
+    tokens: Vec<i32>,
+    max_new: usize,
+    deficit: usize,
+    stats: ExitStats,
+    generated: Vec<i32>,
+    stage_caches: Vec<HostTensor>,
+    started: Instant,
+}
+
+// The whole point of parking is crossing the pool's worker threads;
+// assert it at compile time so a `!Send` field can never sneak in.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<ParkedSession>();
+};
+
+impl ParkedSession {
+    /// Rebuild a live [`DecodeSession`] from this snapshot on `backend`.
+    ///
+    /// The caller must re-apply the session's exit policy to the backend
+    /// *before* resuming (mirrors admission: the pipelined engine
+    /// captures the resident policy at `open_session`).
+    pub fn resume(
+        self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<DecodeSession> {
+        ensure!(
+            backend.supports_cache_snapshots(),
+            "resume on a backend without cache snapshots"
+        );
+        ensure!(
+            self.deficit == 0 || backend.tracks_deficit(),
+            "a deficit-carrying parked session ({} unhealed positions) \
+             can only resume on a deficit-tracking backend",
+            self.deficit
+        );
+        let caches = backend
+            .restore_caches(&self.stage_caches)
+            .context("resuming parked session: cache restore")?;
+        Ok(DecodeSession {
+            tokens: self.tokens,
+            max_new: self.max_new,
+            caches: Some(caches),
+            deficit: self.deficit,
+            stats: self.stats,
+            generated: self.generated,
+            done: None,
+            prefilled: true,
+            pin: None,
+            started: self.started,
+            seconds: 0.0,
+        })
+    }
+
+    /// Tokens generated before the session was parked.
+    pub fn generated(&self) -> &[i32] {
+        &self.generated
+    }
+
+    /// Total token-buffer length (prompt + generated).
+    pub fn buffered_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Bytes held by the host cache snapshot.
+    pub fn snapshot_bytes(&self) -> usize {
+        self.stage_caches
+            .iter()
+            .map(|t| t.data.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Test-only stub with empty caches, for exercising park-store
+    /// bookkeeping without an engine.
+    #[cfg(test)]
+    pub(crate) fn stub(tokens: Vec<i32>) -> ParkedSession {
+        ParkedSession {
+            tokens,
+            max_new: 8,
+            deficit: 0,
+            stats: ExitStats::default(),
+            generated: Vec::new(),
+            stage_caches: Vec::new(),
+            started: Instant::now(),
         }
     }
 }

@@ -15,7 +15,8 @@ use anyhow::{bail, Context, Result};
 use eellm::config::{InferenceConfig, TrainConfig};
 use eellm::data::dataset::{Dataset, TrainBatch};
 use eellm::data::synth::{
-    shared_prefix_prompts, Corpus, CorpusSpec, SharedPrefixSpec,
+    bursty_traffic, shared_prefix_prompts, Corpus, CorpusSpec,
+    SharedPrefixSpec, TrafficSpec,
 };
 use eellm::data::tasks;
 use eellm::eval::harness::evaluate_task;
@@ -29,8 +30,8 @@ use eellm::schedule::plan::{EeOptions, Plan};
 use eellm::schedule::report::render_timeline;
 use eellm::schedule::sim::Simulator;
 use eellm::serve::{
-    requests_from_tasks, EngineKind, EnginePool, Policy, PoolConfig,
-    ServeRequest,
+    requests_from_tasks, ControlConfig, EngineKind, EnginePool, Policy,
+    PoolConfig, ServeRequest, ShedPolicy,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 use eellm::util::cli::Args;
@@ -62,8 +63,23 @@ serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
            budget, one store shared by all workers; as a bare trailing
            flag the budget defaults to 8 * max_seq, but mid-line it must
            carry a value)
-           --workload tasks|shared-prefix (request set; defaults to
-           shared-prefix when the prefix cache is on, tasks otherwise)
+           --workload tasks|shared-prefix|bursty (request set; defaults
+           to shared-prefix when the prefix cache is on, tasks
+           otherwise; bursty = diurnal multi-tenant deadline traffic)
+           --preempt (SLO control plane: a full worker parks its
+           lowest-value live session to admit a queued request about to
+           blow its deadline; parked sessions resume when a slot frees)
+           --park-capacity N (pool-wide bound on parked session
+           snapshots, default 2)
+           --preempt-horizon-ms N (a queued deadline within this window
+           counts as urgent, default 25)
+           --shed DEPTH (admission control: shed incoming requests while
+           the queue holds at least DEPTH)
+           --shed-ttft-ms N (also shed when predicted TTFT — queue
+           depth x the observed service-time EMA — exceeds N ms)
+           --tenants W1,W2,... (weighted fair dispatch: requests tagged
+           tenant i get share W_i of service; the bursty workload draws
+           tenant traffic with the same weights)
            --no-lanes (disable lane-fused batched decode; by default
            same-policy live sessions are stepped through the manifest's
            decode_lanes executables, one batched XLA call per stage)
@@ -97,7 +113,10 @@ fn main() {
     let args =
         Args::parse(
             &argv[1..],
-            &["no-defer", "gpipe", "verbose", "no-lanes", "no-resident"],
+            &[
+                "no-defer", "gpipe", "verbose", "no-lanes",
+                "no-resident", "preempt",
+            ],
         );
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
@@ -355,6 +374,46 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // every fused step pays the per-stage gather/scatter round-trip
     // (the PR-5 baseline the resident path is judged against).
     let lane_residency = !args.flag("no-resident");
+    // SLO control plane: deadline-driven preemption, admission control
+    // / load shedding, weighted tenant fairness.
+    let preempt = args.flag("preempt");
+    let park_capacity = args.usize_or("park-capacity", 2);
+    let horizon_ms = args.usize_or("preempt-horizon-ms", 25);
+    let shed_depth = match args.get("shed") {
+        Some(v) => Some(
+            v.parse::<usize>().context("--shed wants a queue depth")?,
+        ),
+        None => None,
+    };
+    let shed_ttft_ms = match args.get("shed-ttft-ms") {
+        Some(v) => Some(
+            v.parse::<u64>().context("--shed-ttft-ms wants milliseconds")?,
+        ),
+        None => None,
+    };
+    let shed = if shed_depth.is_some() || shed_ttft_ms.is_some() {
+        Some(ShedPolicy {
+            max_queue_depth: shed_depth.unwrap_or(0),
+            max_predicted_ttft: shed_ttft_ms
+                .map(std::time::Duration::from_millis),
+            ..ShedPolicy::default()
+        })
+    } else {
+        None
+    };
+    let mut tenant_weights: Vec<f64> = match args.get("tenants") {
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().context("bad --tenants"))
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    // The bursty workload is multi-tenant by construction; give it the
+    // default 3:1 split when --tenants is not spelled out so fairness
+    // accounting has something to do.
+    if tenant_weights.is_empty() && workload == "bursty" {
+        tenant_weights = vec![3.0, 1.0];
+    }
     let corpus = standard_corpus(icfg.seed);
     let reqs = match workload.as_str() {
         "shared-prefix" => {
@@ -378,8 +437,38 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             let suite = tasks::all_tasks(&corpus, n_req, icfg.seed);
             requests_from_tasks(&suite, n_req, max_seq)
         }
+        "bursty" => {
+            // Bursty, diurnal, multi-tenant deadline traffic: the
+            // workload the SLO control plane is judged against.
+            let spec = TrafficSpec {
+                seed: icfg.seed,
+                n_requests: n_req,
+                tenants: tenant_weights.clone(),
+                prompt_bytes: (32, (max_seq / 2).max(48)),
+                ..TrafficSpec::default()
+            };
+            bursty_traffic(&spec, &corpus.facts)
+                .into_iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let mut r =
+                        ServeRequest::new(i as u64, t.prompt, t.max_new)
+                            .with_priority(t.priority)
+                            .with_tenant(t.tenant);
+                    if let Some(ms) = t.deadline_ms {
+                        r = r.with_deadline(
+                            std::time::Duration::from_millis(ms),
+                        );
+                    }
+                    r
+                })
+                .collect()
+        }
         other => {
-            bail!("unknown --workload {other:?} (tasks|shared-prefix)")
+            bail!(
+                "unknown --workload {other:?} \
+                 (tasks|shared-prefix|bursty)"
+            )
         }
     };
     println!(
@@ -396,6 +485,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         if lane_fusion { "on" } else { "off" },
         if lane_residency { "on" } else { "off (round-trip)" }
     );
+    if preempt || shed.is_some() || !tenant_weights.is_empty() {
+        println!(
+            "[serve-bench] control plane: preempt {} (horizon \
+             {horizon_ms} ms, park capacity {park_capacity}), shed \
+             {}, tenant weights {tenant_weights:?}",
+            if preempt { "on" } else { "off" },
+            match &shed {
+                Some(s) => format!(
+                    "depth>={} ttft<={:?}",
+                    s.max_queue_depth, s.max_predicted_ttft
+                ),
+                None => "off".to_string(),
+            }
+        );
+    }
     let mut table = Table::new(
         &format!(
             "Serving throughput under exit policy {} ({sched:?})",
@@ -417,12 +521,28 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 prefix_cache_positions: prefix_positions,
                 lane_fusion,
                 lane_residency,
+                control: ControlConfig {
+                    preempt,
+                    preempt_horizon: std::time::Duration::from_millis(
+                        horizon_ms as u64,
+                    ),
+                    park_capacity,
+                    shed: shed.clone(),
+                    tenant_weights: tenant_weights.clone(),
+                    fault: None,
+                },
             },
         );
         let out = pool.run_batch(reqs.clone())?;
         pool.shutdown()?;
         for f in &out.failures {
             eprintln!("[serve-bench] {f}");
+        }
+        for s in &out.sheds {
+            eprintln!(
+                "[serve-bench] request {} (tenant {}) shed: {}",
+                s.id, s.tenant, s.reason
+            );
         }
         let m = &out.metrics;
         table.row(vec![
@@ -453,8 +573,36 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         }
         if m.deadline_misses > 0 {
             println!(
-                "[serve-bench] pool {workers}: {} deadline misses",
-                m.deadline_misses
+                "[serve-bench] pool {workers}: {} deadline misses \
+                 ({:.0}% of {} deadlined)",
+                m.deadline_misses,
+                100.0 * m.deadline_miss_rate(),
+                m.deadlined
+            );
+        }
+        let s = &m.slo;
+        if s.preemptions + s.resumes + s.shed + s.degraded > 0 {
+            println!(
+                "[serve-bench] pool {workers}: {} preemptions / {} \
+                 resumes (parked peak {}, {} park faults, {} resume \
+                 faults), {} shed, {} degraded",
+                s.preemptions,
+                s.resumes,
+                s.parked_peak,
+                s.park_failures,
+                s.resume_failures,
+                s.shed,
+                s.degraded
+            );
+        }
+        for t in &m.tenants {
+            println!(
+                "[serve-bench] pool {workers}: tenant {} served {} \
+                 requests, {} tokens ({:.0}% share)",
+                t.tenant,
+                t.requests,
+                t.tokens,
+                100.0 * t.share
             );
         }
         if lane_fusion {
@@ -526,6 +674,18 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             Json::Num(if lane_residency { 1.0 } else { 0.0 }),
         );
         obj.insert("workload".to_string(), Json::Str(workload.clone()));
+        obj.insert(
+            "preempt".to_string(),
+            Json::Num(if preempt { 1.0 } else { 0.0 }),
+        );
+        obj.insert(
+            "shed_enabled".to_string(),
+            Json::Num(if shed.is_some() { 1.0 } else { 0.0 }),
+        );
+        obj.insert(
+            "tenant_weights".to_string(),
+            Json::Arr(tenant_weights.iter().map(|&w| Json::Num(w)).collect()),
+        );
         obj.insert("pools".to_string(), Json::Arr(json_rows));
         std::fs::write(path, Json::Obj(obj).to_string_pretty())
             .with_context(|| format!("writing --json-out {path}"))?;
@@ -556,8 +716,18 @@ fn serve_metrics_json(
     num("p50_token_gap_seconds", m.p50_token_gap_seconds);
     num("p95_token_gap_seconds", m.p95_token_gap_seconds);
     num("mean_queue_seconds", m.mean_queue_seconds);
+    num("p99_ttft_seconds", m.p99_ttft_seconds);
     num("early_fraction", m.early_fraction(n_layers));
     num("deadline_misses", m.deadline_misses as f64);
+    num("deadlined", m.deadlined as f64);
+    num("deadline_miss_rate", m.deadline_miss_rate());
+    num("preemptions", m.slo.preemptions as f64);
+    num("resumes", m.slo.resumes as f64);
+    num("park_failures", m.slo.park_failures as f64);
+    num("resume_failures", m.slo.resume_failures as f64);
+    num("shed", m.slo.shed as f64);
+    num("degraded", m.slo.degraded as f64);
+    num("parked_peak", m.slo.parked_peak as f64);
     num("prefix_hits", m.prefix.hits as f64);
     num("prefix_misses", m.prefix.misses as f64);
     num("prefix_hit_rate", m.prefix_hit_rate());
@@ -594,6 +764,19 @@ fn serve_metrics_json(
         .map(|&(n, c)| (n.to_string(), Json::Num(c as f64)))
         .collect();
     o.insert("interleave_occupancy".to_string(), Json::Obj(in_flight));
+    let tenants = m
+        .tenants
+        .iter()
+        .map(|t| {
+            let mut row = std::collections::BTreeMap::new();
+            row.insert("tenant".to_string(), Json::Num(t.tenant as f64));
+            row.insert("requests".to_string(), Json::Num(t.requests as f64));
+            row.insert("tokens".to_string(), Json::Num(t.tokens as f64));
+            row.insert("share".to_string(), Json::Num(t.share));
+            Json::Obj(row)
+        })
+        .collect();
+    o.insert("tenants".to_string(), Json::Arr(tenants));
     Json::Obj(o)
 }
 

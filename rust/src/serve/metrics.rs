@@ -218,6 +218,118 @@ impl InterleaveStats {
     }
 }
 
+/// Control-plane activity of the serving pool: preemptions (live
+/// sessions parked for an urgent deadlined request), resumes of parked
+/// sessions, park/resume fault counts, admission-control sheds and
+/// degrades, and the park store's occupancy peak — the "did the control
+/// plane actually act" observability the SLO features are judged by.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloStats {
+    /// Live sessions parked to admit an urgent deadlined request.
+    pub preemptions: u64,
+    /// Parked sessions resumed from their snapshots.
+    pub resumes: u64,
+    /// Park attempts whose cache snapshot failed (the request fails
+    /// typed; the batch keeps going).
+    pub park_failures: u64,
+    /// Resume attempts whose cache restore failed (ditto).
+    pub resume_failures: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Requests degraded (budget-clamped) by admission control.
+    pub degraded: u64,
+    /// Most sessions the park store held at once.
+    pub parked_peak: u64,
+}
+
+impl SloStats {
+    /// Accumulate another reading into this one (`parked_peak` takes the
+    /// max — it is an occupancy peak, not a flow).
+    pub fn merge(&mut self, other: &SloStats) {
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        self.park_failures += other.park_failures;
+        self.resume_failures += other.resume_failures;
+        self.shed += other.shed;
+        self.degraded += other.degraded;
+        self.parked_peak = self.parked_peak.max(other.parked_peak);
+    }
+
+    /// Counter delta `self - baseline` (saturating). `parked_peak`
+    /// carries the later reading through: a peak has no meaningful
+    /// per-window delta.
+    pub fn since(&self, baseline: &SloStats) -> SloStats {
+        SloStats {
+            preemptions: self
+                .preemptions
+                .saturating_sub(baseline.preemptions),
+            resumes: self.resumes.saturating_sub(baseline.resumes),
+            park_failures: self
+                .park_failures
+                .saturating_sub(baseline.park_failures),
+            resume_failures: self
+                .resume_failures
+                .saturating_sub(baseline.resume_failures),
+            shed: self.shed.saturating_sub(baseline.shed),
+            degraded: self.degraded.saturating_sub(baseline.degraded),
+            parked_peak: self.parked_peak,
+        }
+    }
+}
+
+/// Thread-safe control-plane counters shared by every worker of a pool
+/// (the SLO analogue of [`LaneCounters`]). Shed/degrade counts live on
+/// the scheduler and are folded in at metrics-assembly time.
+#[derive(Debug, Default)]
+pub struct SloCounters {
+    inner: Mutex<SloStats>,
+}
+
+impl SloCounters {
+    /// Counter snapshot.
+    pub fn stats(&self) -> SloStats {
+        *self.inner.lock().unwrap()
+    }
+
+    /// One live session parked to admit an urgent request.
+    pub fn record_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    /// One parked session resumed.
+    pub fn record_resume(&self) {
+        self.inner.lock().unwrap().resumes += 1;
+    }
+
+    /// One park whose snapshot failed.
+    pub fn record_park_failure(&self) {
+        self.inner.lock().unwrap().park_failures += 1;
+    }
+
+    /// One resume whose restore failed.
+    pub fn record_resume_failure(&self) {
+        self.inner.lock().unwrap().resume_failures += 1;
+    }
+
+    /// Observe the park store's current occupancy (keeps the max).
+    pub fn observe_parked(&self, parked: u64) {
+        let mut s = self.inner.lock().unwrap();
+        s.parked_peak = s.parked_peak.max(parked);
+    }
+}
+
+/// One tenant's slice of a batch: requests completed, tokens generated,
+/// and its fraction of all generated tokens — what the weighted-fairness
+/// accounting is checked against.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantShare {
+    pub tenant: usize,
+    pub requests: usize,
+    pub tokens: usize,
+    /// `tokens` over the batch's total generated tokens.
+    pub share: f64,
+}
+
 /// Thread-safe lane counters shared by every worker of a pool (the
 /// lane-fusion analogue of the shared [`PrefixCacheStore`] stats).
 ///
@@ -296,9 +408,11 @@ pub struct ServeMetrics {
     pub p95_latency_seconds: f64,
     /// Time-to-first-token percentiles across requests (queue + prefill +
     /// first decode step) — the streaming responsiveness metric
-    /// continuous batching exists to improve.
+    /// continuous batching exists to improve. p99 is the SLO-attainment
+    /// tail the control plane is judged by.
     pub p50_ttft_seconds: f64,
     pub p95_ttft_seconds: f64,
+    pub p99_ttft_seconds: f64,
     /// Steady-state per-token emission-gap percentiles, pooled over every
     /// generated token of every request *except* each request's first
     /// (whose gap includes prefill and is already reported as TTFT).
@@ -309,6 +423,9 @@ pub struct ServeMetrics {
     /// service vs. the request's relative deadline); deadline-less
     /// requests never miss.
     pub deadline_misses: usize,
+    /// Requests that carried a deadline at all — the denominator of
+    /// [`ServeMetrics::deadline_miss_rate`].
+    pub deadlined: usize,
     /// Per-exit usage merged across all requests.
     pub exits: ExitStats,
     /// Prefix KV-cache activity during the batch, read from the pool's
@@ -322,6 +439,13 @@ pub struct ServeMetrics {
     /// engine): rounds, steps, and the in-flight-sessions occupancy
     /// histogram (all zeros on non-interleaving engines).
     pub interleave: InterleaveStats,
+    /// Control-plane activity during the batch: preemptions, resumes,
+    /// park/resume faults, sheds, degrades, park-store peak (all zeros
+    /// with the control plane disabled).
+    pub slo: SloStats,
+    /// Per-tenant completion shares, ascending by tenant id (one entry,
+    /// tenant 0, when the batch never set tenants).
+    pub tenants: Vec<TenantShare>,
 }
 
 impl ServeMetrics {
@@ -343,18 +467,38 @@ impl ServeMetrics {
         for r in responses {
             exits.merge(&r.output.stats);
         }
+        let total_tokens: usize =
+            responses.iter().map(|r| r.output.tokens.len()).sum();
+        // Per-tenant completion shares, ascending by tenant id.
+        let mut tenants: Vec<TenantShare> = Vec::new();
+        for r in responses {
+            match tenants.iter_mut().find(|t| t.tenant == r.tenant) {
+                Some(t) => {
+                    t.requests += 1;
+                    t.tokens += r.output.tokens.len();
+                }
+                None => tenants.push(TenantShare {
+                    tenant: r.tenant,
+                    requests: 1,
+                    tokens: r.output.tokens.len(),
+                    share: 0.0,
+                }),
+            }
+        }
+        tenants.sort_by_key(|t| t.tenant);
+        for t in &mut tenants {
+            t.share = t.tokens as f64 / total_tokens.max(1) as f64;
+        }
         let n = responses.len().max(1) as f64;
         ServeMetrics {
             requests: responses.len(),
-            total_tokens: responses
-                .iter()
-                .map(|r| r.output.tokens.len())
-                .sum(),
+            total_tokens,
             wall_seconds,
             p50_latency_seconds: percentile(&lats, 0.50),
             p95_latency_seconds: percentile(&lats, 0.95),
             p50_ttft_seconds: percentile(&ttfts, 0.50),
             p95_ttft_seconds: percentile(&ttfts, 0.95),
+            p99_ttft_seconds: percentile(&ttfts, 0.99),
             p50_token_gap_seconds: percentile(&gaps, 0.50),
             p95_token_gap_seconds: percentile(&gaps, 0.95),
             mean_queue_seconds: responses
@@ -369,11 +513,23 @@ impl ServeMetrics {
                         .is_some_and(|d| r.total_seconds > d.as_secs_f64())
                 })
                 .count(),
+            deadlined: responses
+                .iter()
+                .filter(|r| r.deadline.is_some())
+                .count(),
             exits,
             prefix: PrefixCacheStats::default(),
             lanes: LaneStats::default(),
             interleave: InterleaveStats::default(),
+            slo: SloStats::default(),
+            tenants,
         }
+    }
+
+    /// Deadline misses over deadlined requests (0.0 when no request
+    /// carried a deadline) — the SLO-attainment headline number.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        self.deadline_misses as f64 / self.deadlined.max(1) as f64
     }
 
     /// Fraction of admissions that restored a cached prefix.
@@ -429,6 +585,7 @@ mod tests {
             token_seconds,
             total_seconds: total,
             deadline: None,
+            tenant: 0,
         }
     }
 
@@ -489,6 +646,77 @@ mod tests {
             1.0,
         );
         assert_eq!(m.deadline_misses, 1);
+        // Miss rate is over *deadlined* requests only: 1 of 2, not 1 of 3.
+        assert_eq!(m.deadlined, 2);
+        assert!((m.deadline_miss_rate() - 0.5).abs() < 1e-12);
+        // p99 TTFT sits at or above p95.
+        assert!(m.p99_ttft_seconds >= m.p95_ttft_seconds);
+    }
+
+    #[test]
+    fn metrics_report_tenant_shares() {
+        let mut a = resp(0, 6, 0.2, 0.0);
+        a.tenant = 1;
+        let mut b = resp(1, 2, 0.2, 0.0);
+        b.tenant = 0;
+        let mut c = resp(2, 2, 0.2, 0.0);
+        c.tenant = 1;
+        let m = ServeMetrics::from_responses(&[a, b, c], 1.0);
+        assert_eq!(m.tenants.len(), 2);
+        assert_eq!(m.tenants[0].tenant, 0);
+        assert_eq!(m.tenants[0].requests, 1);
+        assert_eq!(m.tenants[0].tokens, 2);
+        assert!((m.tenants[0].share - 0.2).abs() < 1e-12);
+        assert_eq!(m.tenants[1].tenant, 1);
+        assert_eq!(m.tenants[1].requests, 2);
+        assert_eq!(m.tenants[1].tokens, 8);
+        assert!((m.tenants[1].share - 0.8).abs() < 1e-12);
+        // Shares sum to 1 whenever tokens were generated.
+        let sum: f64 = m.tenants.iter().map(|t| t.share).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_counters_record_merge_and_since() {
+        let c = SloCounters::default();
+        assert_eq!(c.stats(), SloStats::default());
+        c.record_preemption();
+        c.record_preemption();
+        c.record_resume();
+        c.record_park_failure();
+        c.observe_parked(2);
+        c.observe_parked(1);
+        let s = c.stats();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.resumes, 1);
+        assert_eq!(s.park_failures, 1);
+        assert_eq!(s.resume_failures, 0);
+        assert_eq!(s.parked_peak, 2, "peak keeps the max, not the last");
+        // Delta attribution, as run_batch uses it.
+        let base = s;
+        c.record_resume();
+        c.record_resume_failure();
+        c.observe_parked(3);
+        let d = c.stats().since(&base);
+        assert_eq!(d.preemptions, 0);
+        assert_eq!(d.resumes, 1);
+        assert_eq!(d.resume_failures, 1);
+        assert_eq!(d.parked_peak, 3, "peak carries the later reading");
+        // Merge folds flows and maxes the peak.
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged.preemptions, 2);
+        assert_eq!(merged.resumes, 2);
+        assert_eq!(merged.parked_peak, 3);
+        // Scheduler-side sheds/degrades fold in at assembly time.
+        let mut with_sched = merged;
+        with_sched.merge(&SloStats {
+            shed: 4,
+            degraded: 2,
+            ..SloStats::default()
+        });
+        assert_eq!(with_sched.shed, 4);
+        assert_eq!(with_sched.degraded, 2);
     }
 
     #[test]

@@ -16,7 +16,13 @@
 //!   responses) and request-set builders over the eval task suite.
 //! - [`scheduler`] — the shared queue with FIFO, shortest-prompt-first,
 //!   and priority/earliest-deadline policies, plus the non-blocking
-//!   `try_pop` continuous batching admits through.
+//!   `try_pop` continuous batching admits through. The queue is also
+//!   the **admission-control** seam: a [`ShedPolicy`] bounds queue
+//!   depth and predicted TTFT at enqueue ([`Scheduler::submit`]
+//!   returns a typed [`Admission`] — queued, budget-degraded, shed
+//!   with reason, or closed), and a tenant-weight table turns dispatch
+//!   into weighted fairness over [`ServeRequest::tenant`] (per-tenant
+//!   virtual time; bursty tenants converge to their weights).
 //! - [`pool`] — [`EnginePool`]: N worker threads, each owning a
 //!   [`SequentialEngine`](crate::inference::SequentialEngine) or
 //!   [`PipelinedEngine`](crate::inference::PipelinedEngine) built
@@ -45,14 +51,28 @@
 //!   window is submitted down the stage chain before any token is
 //!   collected, overlapping sessions on the chain — output-invisibly too
 //!   (`tests/pipelined_serving_equivalence.rs`).
+//!   The pool's **SLO control plane** ([`ControlConfig`]) adds
+//!   deadline-driven preemption on top: a full worker parks its
+//!   lowest-value live session (a host-resident
+//!   [`ParkedSession`](crate::inference::ParkedSession) snapshot in a
+//!   strictly bounded pool-wide store) to admit a queued request about
+//!   to blow its deadline, and the parked session resumes — on any
+//!   worker — once a slot frees, with its original token stream intact
+//!   (`tests/slo_serving_equivalence.rs`). Shed requests surface as
+//!   typed [`BatchOutcome::sheds`] outcomes, park/resume faults as
+//!   per-request failures that never wipe a batch.
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
 //!   p50/p95 request latency, p50/p95 time-to-first-token, p50/p95
 //!   per-token gaps, queueing, deadline misses, merged per-exit usage,
 //!   prefix-cache hit-rate / prefill-positions-saved, lane-fusion
 //!   activity ([`LaneStats`]: fused vs solo steps, lane occupancy,
-//!   stages skipped, policy swaps), and interleaved-round activity
+//!   stages skipped, policy swaps), interleaved-round activity
 //!   ([`InterleaveStats`]: rounds, steps, and the in-flight-sessions
-//!   occupancy histogram that makes bubble-filling observable).
+//!   occupancy histogram that makes bubble-filling observable), and
+//!   the SLO surface: p99 TTFT, deadline-miss rate over deadlined
+//!   requests, control-plane counters ([`SloStats`]:
+//!   preempt/resume/park-fault/shed/degrade, park-store peak), and
+//!   per-tenant token shares ([`TenantShare`]).
 //!
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.
@@ -64,10 +84,13 @@ pub mod scheduler;
 
 pub use metrics::{
     percentile, InterleaveStats, LaneCounters, LaneStats, ServeMetrics,
+    SloCounters, SloStats, TenantShare,
 };
 pub use pool::{
-    plan_round, BatchOutcome, EngineKind, EnginePool, PoolConfig,
-    RequestFailure, ServeEvent,
+    plan_round, BatchOutcome, ControlConfig, ControlFault, EngineKind,
+    EnginePool, Outcome, PoolConfig, RequestFailure, ServeEvent, Shed,
 };
 pub use request::{requests_from_tasks, ServeRequest, ServeResponse};
-pub use scheduler::{Policy, Scheduler};
+pub use scheduler::{
+    Admission, Policy, SchedConfig, Scheduler, ShedPolicy, ShedReason,
+};

@@ -68,25 +68,45 @@
 //! admission), so mixed-policy sessions share rounds without
 //! engine-resident policy swaps, and per-round in-flight occupancy
 //! lands in [`ServeMetrics::interleave`].
+//!
+//! **SLO control plane** ([`PoolConfig::control`]): deadline-driven
+//! preemption parks the lowest-value live session — a host-resident
+//! [`ParkedSession`] snapshot in a strictly bounded pool-wide store —
+//! when a queued deadlined request is about to blow its deadline, and
+//! resumes it (on any worker) once a slot frees up; admission control
+//! sheds or degrades requests at enqueue ([`ShedPolicy`]), with typed
+//! [`ServeEvent::Shed`] events and [`BatchOutcome::sheds`] outcomes
+//! instead of silent drops; weighted per-tenant fairness
+//! ([`ControlConfig::tenant_weights`]) keeps bursty tenants at their
+//! configured shares. Preempt/park/resume counters, shed/degrade
+//! counts, p99 TTFT, deadline-miss rate, and per-tenant token shares
+//! land in [`ServeMetrics::slo`] and [`ServeMetrics::tenants`];
+//! `tests/slo_serving_equivalence.rs` pins park/resume
+//! output-invisibility and the fault-injection containment
+//! properties.
 
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::inference::{
-    DecodeBackend, DecodeSession, ExitPolicy, ModelState, PipelinedEngine,
-    PrefixCacheStats, PrefixCacheStore, SequentialEngine, StepEvent,
+    DecodeBackend, DecodeSession, ExitPolicy, ModelState, ParkedSession,
+    PipelinedEngine, PrefixCacheStats, PrefixCacheStore, SequentialEngine,
+    StepEvent,
 };
 
 use super::metrics::{
-    InterleaveStats, LaneCounters, LaneStats, ServeMetrics,
+    InterleaveStats, LaneCounters, LaneStats, ServeMetrics, SloCounters,
+    SloStats,
 };
 use super::request::{ServeRequest, ServeResponse};
-use super::scheduler::{Policy, Scheduler};
+use super::scheduler::{
+    Admission, Policy, SchedConfig, Scheduler, ShedPolicy, ShedReason,
+};
 
 /// Which engine each pool worker wraps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -149,6 +169,71 @@ pub struct PoolConfig {
     /// per-stage gather/scatter round-trip (the measurable baseline).
     /// No effect when `lane_fusion` is off or on interleaving engines.
     pub lane_residency: bool,
+    /// SLO control plane: deadline-driven preemption, admission
+    /// control / load shedding, per-tenant fairness. The default
+    /// disables all of it.
+    pub control: ControlConfig,
+}
+
+/// SLO control-plane configuration. [`ControlConfig::default`] turns
+/// every feature off, so the pool behaves exactly as a control-plane-
+/// free build.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Deadline-driven preemption: when a worker's live set is full
+    /// and a queued deadlined request is within
+    /// [`ControlConfig::preempt_horizon`] of its deadline, park the
+    /// lowest-value live session (snapshot its KV caches to host) and
+    /// admit the urgent request into the freed slot. Parked sessions
+    /// resume — on whichever worker frees a slot first — and complete
+    /// with their original token stream (park/resume is
+    /// output-invisible).
+    pub preempt: bool,
+    /// Urgency horizon: a queued deadlined request counts as urgent
+    /// once its remaining slack is at most this.
+    pub preempt_horizon: Duration,
+    /// Pool-wide bound on concurrently parked sessions; 0 disables
+    /// preemption outright. The bound is strict — a park slot is
+    /// reserved before the victim is snapshotted, and a parked
+    /// snapshot is never dropped.
+    pub park_capacity: usize,
+    /// Admission control: queue-depth and predicted-TTFT bounds
+    /// applied at enqueue ([`Scheduler::submit`]); `None` admits
+    /// everything.
+    pub shed: Option<ShedPolicy>,
+    /// Weighted per-tenant fairness
+    /// ([`crate::serve::ServeRequest::tenant`] indexes this table);
+    /// empty disables fairness accounting.
+    pub tenant_weights: Vec<f64>,
+    /// Inject a control-plane fault (fault-injection tests): the
+    /// selected seam fails with a typed error instead of running.
+    pub fault: Option<ControlFault>,
+}
+
+impl Default for ControlConfig {
+    fn default() -> ControlConfig {
+        ControlConfig {
+            preempt: false,
+            preempt_horizon: Duration::from_millis(25),
+            park_capacity: 2,
+            shed: None,
+            tenant_weights: Vec::new(),
+            fault: None,
+        }
+    }
+}
+
+/// Which control-plane seam [`ControlConfig::fault`] poisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlFault {
+    /// The KV-cache snapshot fails while parking a preemption victim:
+    /// the victim fails with a typed error, the urgent request still
+    /// gets the freed slot, and every other session keeps serving.
+    ParkSnapshot,
+    /// The KV-cache restore fails while resuming a parked session: the
+    /// resumed request fails with a typed error and the worker keeps
+    /// serving.
+    ResumeRestore,
 }
 
 /// The engine surface the pool needs: an exit-policy knob plus the
@@ -207,6 +292,19 @@ pub enum ServeEvent {
     Done { id: u64 },
     /// Request `id` failed; the error is in the batch failures.
     Failed { id: u64 },
+    /// Request `id` was rejected by admission control; its typed reason
+    /// is in the batch sheds ([`BatchOutcome::sheds`]).
+    Shed { id: u64 },
+}
+
+/// One request shed by admission control — a first-class outcome with a
+/// typed reason, not a failure: the caller can retry, degrade, or route
+/// elsewhere.
+#[derive(Debug, Clone)]
+pub struct Shed {
+    pub id: u64,
+    pub tenant: usize,
+    pub reason: ShedReason,
 }
 
 /// One failed request of a batch.
@@ -239,8 +337,44 @@ pub struct BatchOutcome {
     pub responses: Vec<ServeResponse>,
     /// Failed requests, sorted by request id.
     pub failures: Vec<RequestFailure>,
+    /// Requests rejected by admission control, sorted by request id.
+    pub sheds: Vec<Shed>,
     /// Aggregate metrics over the successful responses.
     pub metrics: ServeMetrics,
+}
+
+/// One request's terminal outcome, for callers that want a single
+/// id-ordered stream instead of the three sorted vectors of
+/// [`BatchOutcome`].
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Done(ServeResponse),
+    Failed(RequestFailure),
+    Shed(Shed),
+}
+
+impl Outcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            Outcome::Done(r) => r.id,
+            Outcome::Failed(f) => f.id,
+            Outcome::Shed(s) => s.id,
+        }
+    }
+}
+
+impl BatchOutcome {
+    /// All per-request outcomes merged into one id-sorted stream.
+    pub fn outcomes(&self) -> Vec<Outcome> {
+        let mut all: Vec<Outcome> = Vec::with_capacity(
+            self.responses.len() + self.failures.len() + self.sheds.len(),
+        );
+        all.extend(self.responses.iter().cloned().map(Outcome::Done));
+        all.extend(self.failures.iter().cloned().map(Outcome::Failed));
+        all.extend(self.sheds.iter().cloned().map(Outcome::Shed));
+        all.sort_by_key(|o| o.id());
+        all
+    }
 }
 
 /// A pool of engine workers multiplexing a shared request queue.
@@ -265,6 +399,12 @@ pub struct EnginePool {
     prefix_stores: Vec<Arc<PrefixCacheStore>>,
     /// Pool-wide lane-fusion counters, shared by every worker.
     lane_counters: Arc<LaneCounters>,
+    /// Pool-wide SLO control-plane counters (preempt/park/resume),
+    /// shared by every worker.
+    slo_counters: Arc<SloCounters>,
+    /// Bounded pool-wide store of preempted (parked) sessions — a
+    /// session parked by one worker may resume on any other.
+    park: Arc<ParkStore>,
     /// Workers that have not reported `Fatal`.
     alive: usize,
     /// Every live worker has reported `Ready`.
@@ -278,7 +418,11 @@ impl EnginePool {
     /// [`EnginePool::run_batch`].
     pub fn new(state: ModelState, cfg: PoolConfig) -> EnginePool {
         assert!(cfg.workers > 0, "pool needs at least one worker");
-        let sched = Arc::new(Scheduler::new(cfg.sched));
+        let sched = Arc::new(Scheduler::new_with(SchedConfig {
+            policy: cfg.sched,
+            shed: cfg.control.shed.clone(),
+            tenant_weights: cfg.control.tenant_weights.clone(),
+        }));
         let (tx, events) = channel::<WorkerEvent>();
         // One store for the whole pool: the store is `Sync` (internal
         // lock), so sharing it lets a prefix prefilled on one worker
@@ -293,6 +437,8 @@ impl EnginePool {
                 Vec::new()
             };
         let lane_counters = Arc::new(LaneCounters::default());
+        let slo_counters = Arc::new(SloCounters::default());
+        let park = Arc::new(ParkStore::new(cfg.control.park_capacity));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let sched = Arc::clone(&sched);
@@ -301,10 +447,15 @@ impl EnginePool {
             let cfg = cfg.clone();
             let store = prefix_stores.first().cloned();
             let counters = Arc::clone(&lane_counters);
+            let slo = Arc::clone(&slo_counters);
+            let park = Arc::clone(&park);
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
                 .spawn(move || {
-                    worker_main(w, state, cfg, sched, tx, store, counters)
+                    worker_main(
+                        w, state, cfg, sched, tx, store, counters, slo,
+                        park,
+                    )
                 })
                 .expect("spawn serve worker");
             workers.push(handle);
@@ -321,9 +472,23 @@ impl EnginePool {
             workers,
             prefix_stores,
             lane_counters,
+            slo_counters,
+            park,
             alive,
             ready: false,
         }
+    }
+
+    /// Lifetime SLO control-plane counters (per-batch deltas are in
+    /// [`ServeMetrics::slo`]; shed/degrade counts are folded in at
+    /// metrics-assembly time, so read batch metrics for those).
+    pub fn slo_stats(&self) -> SloStats {
+        self.slo_counters.stats()
+    }
+
+    /// Sessions currently parked (preempted, awaiting resume).
+    pub fn parked_sessions(&self) -> usize {
+        self.park.len()
     }
 
     /// Lifetime lane-fusion counters of the pool (per-batch deltas are
@@ -446,22 +611,48 @@ impl EnginePool {
             self.prefix_stores.iter().map(|s| s.stats()).collect();
         let lane_base = self.lane_counters.stats();
         let interleave_base = self.lane_counters.interleave_stats();
+        let slo_base = self.slo_counters.stats();
+        let shed_base = self.sched.shed_count();
+        let degraded_base = self.sched.degraded_count();
         let mut failures: Vec<RequestFailure> = Vec::new();
+        let mut sheds: Vec<Shed> = Vec::new();
         for r in reqs {
             let id = r.id;
-            if !self.submit(r) {
-                // The observer must see every failure, including ones
-                // that never reached a worker.
-                on_event(&ServeEvent::Failed { id });
-                failures.push(RequestFailure {
-                    id,
-                    worker: None,
-                    error: "request rejected: pool queue is closed".into(),
-                });
+            let tenant = r.tenant;
+            // Staggered arrivals: hold this submission until the
+            // request's offset from batch start elapses — workers keep
+            // draining already-queued work in parallel, so one batch
+            // can model a deadlined request arriving mid-flight.
+            if let Some(off) = r.start_after {
+                let elapsed = t0.elapsed();
+                if off > elapsed {
+                    std::thread::sleep(off - elapsed);
+                }
+            }
+            match self.sched.submit(r) {
+                Admission::Queued | Admission::Degraded { .. } => {}
+                Admission::Shed(reason) => {
+                    // Shedding is a first-class outcome, not a failure:
+                    // the observer sees it immediately, and the typed
+                    // reason lands in `BatchOutcome::sheds`.
+                    on_event(&ServeEvent::Shed { id });
+                    sheds.push(Shed { id, tenant, reason });
+                }
+                Admission::Closed => {
+                    // The observer must see every failure, including
+                    // ones that never reached a worker.
+                    on_event(&ServeEvent::Failed { id });
+                    failures.push(RequestFailure {
+                        id,
+                        worker: None,
+                        error: "request rejected: pool queue is closed"
+                            .into(),
+                    });
+                }
             }
         }
         let mut responses = Vec::with_capacity(n);
-        while responses.len() + failures.len() < n {
+        while responses.len() + failures.len() + sheds.len() < n {
             match self.next_event()? {
                 WorkerEvent::Token { id, worker, token, exit_layer } => {
                     on_event(&ServeEvent::Token {
@@ -500,6 +691,7 @@ impl EnginePool {
         let wall = t0.elapsed().as_secs_f64();
         responses.sort_by_key(|r| r.id);
         failures.sort_by_key(|f| f.id);
+        sheds.sort_by_key(|s| s.id);
         let mut metrics = ServeMetrics::from_responses(&responses, wall);
         for (store, base) in self.prefix_stores.iter().zip(&prefix_base) {
             metrics.prefix.merge(&store.stats().since(base));
@@ -509,7 +701,12 @@ impl EnginePool {
             .lane_counters
             .interleave_stats()
             .since(&interleave_base);
-        Ok(BatchOutcome { responses, failures, metrics })
+        metrics.slo = self.slo_counters.stats().since(&slo_base);
+        metrics.slo.shed =
+            self.sched.shed_count().saturating_sub(shed_base);
+        metrics.slo.degraded =
+            self.sched.degraded_count().saturating_sub(degraded_base);
+        Ok(BatchOutcome { responses, failures, sheds, metrics })
     }
 
     /// Close the queue, drain, and join every worker.
@@ -549,6 +746,11 @@ struct Live {
     /// The request's relative deadline, echoed into the response for
     /// deadline-miss accounting.
     deadline: Option<Duration>,
+    /// Scheduling priority, kept live so preemption can rank sessions
+    /// by value.
+    priority: i32,
+    /// Tenant id, echoed into the response for per-tenant shares.
+    tenant: usize,
     /// When the worker admitted (and prefilled) the request.
     admitted: Instant,
     /// Last token emission (admission before the first token).
@@ -557,9 +759,210 @@ struct Live {
     token_seconds: Vec<f64>,
 }
 
+/// A parked (preempted) session: everything needed to rebuild the
+/// request's `Live` entry on whichever worker resumes it. Holds only
+/// host-resident state ([`ParkedSession`]), so entries cross worker
+/// threads freely.
+struct ParkedEntry {
+    id: u64,
+    tenant: usize,
+    priority: i32,
+    /// Relative deadline (for the eventual response).
+    deadline: Option<Duration>,
+    /// Absolute deadline (for resume ordering).
+    due: Option<Instant>,
+    policy: ExitPolicy,
+    queue_seconds: f64,
+    admitted: Instant,
+    token_seconds: Vec<f64>,
+    parked: ParkedSession,
+}
+
+/// `a` outranks `b` for resume order: higher priority first, then
+/// deadlined before deadline-less, then earlier deadline, then lower
+/// id.
+fn higher_value(a: &ParkedEntry, b: &ParkedEntry) -> bool {
+    if a.priority != b.priority {
+        return a.priority > b.priority;
+    }
+    match (a.due, b.due) {
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        (Some(x), Some(y)) if x != y => x < y,
+        _ => a.id < b.id,
+    }
+}
+
+/// The pool-wide bounded store of preempted sessions. A slot is
+/// reserved *before* a victim is parked (inside the scheduler's urgent
+/// pop, so the room check cannot race another worker's preemption) and
+/// the insert itself is infallible — a parked snapshot is never
+/// dropped, and parked + reserved never exceeds capacity.
+struct ParkStore {
+    inner: Mutex<ParkState>,
+}
+
+#[derive(Default)]
+struct ParkState {
+    entries: Vec<ParkedEntry>,
+    reserved: usize,
+    capacity: usize,
+    peak: usize,
+}
+
+impl ParkStore {
+    fn new(capacity: usize) -> ParkStore {
+        ParkStore {
+            inner: Mutex::new(ParkState {
+                capacity,
+                ..ParkState::default()
+            }),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Most sessions parked at once over the store's lifetime.
+    #[cfg(test)]
+    fn peak(&self) -> usize {
+        self.inner.lock().unwrap().peak
+    }
+
+    /// Claim one slot ahead of parking; `false` when the store (parked
+    /// + outstanding reservations) is at capacity.
+    fn try_reserve(&self) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        if st.entries.len() + st.reserved < st.capacity {
+            st.reserved += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a reservation that will not be used (the park failed
+    /// before producing a snapshot).
+    fn cancel_reservation(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.reserved = st.reserved.saturating_sub(1);
+    }
+
+    /// Park into a previously reserved slot (infallible — the
+    /// reservation made room). Returns the store's occupancy after the
+    /// insert.
+    fn park_reserved(&self, e: ParkedEntry) -> usize {
+        let mut st = self.inner.lock().unwrap();
+        st.reserved = st.reserved.saturating_sub(1);
+        st.entries.push(e);
+        st.peak = st.peak.max(st.entries.len());
+        st.entries.len()
+    }
+
+    /// Remove and return the highest-value parked session
+    /// ([`higher_value`]).
+    fn take_best(&self) -> Option<ParkedEntry> {
+        let mut st = self.inner.lock().unwrap();
+        let mut best: Option<usize> = None;
+        for (i, e) in st.entries.iter().enumerate() {
+            best = Some(match best {
+                None => i,
+                Some(b) if higher_value(e, &st.entries[b]) => i,
+                Some(b) => b,
+            });
+        }
+        best.map(|i| st.entries.remove(i))
+    }
+}
+
+/// The value signals preemption reads from one live session.
+#[derive(Debug, Clone, Copy)]
+struct VictimInfo {
+    /// Scheduling priority (higher = more valuable).
+    priority: i32,
+    /// Absolute deadline, when the request has one.
+    due: Option<Instant>,
+}
+
+/// Reconstruct each live session's absolute deadline (submission time
+/// ≈ admission minus queue wait, plus the relative deadline).
+fn victim_infos(live: &[Live]) -> Vec<VictimInfo> {
+    live.iter()
+        .map(|l| VictimInfo {
+            priority: l.priority,
+            due: l.deadline.map(|d| {
+                let queued =
+                    Duration::from_secs_f64(l.queue_seconds.max(0.0));
+                l.admitted.checked_sub(queued).unwrap_or(l.admitted) + d
+            }),
+        })
+        .collect()
+}
+
+/// Pick the live session an urgent request may displace: the
+/// lowest-value *eligible* one, or `None`. A session is eligible only
+/// when it is strictly lower-value than the urgent request — lower
+/// priority, or equal priority with no deadline at stake, or equal
+/// priority with more than `horizon` of slack left (the urgent
+/// request, by construction of the urgent pop, has less). Among
+/// eligible sessions the lowest value loses its slot: lowest priority
+/// first, then deadline-less before deadlined, then the latest
+/// deadline (most slack to spare).
+fn preemption_victim(
+    live: &[VictimInfo],
+    urgent_priority: i32,
+    now: Instant,
+    horizon: Duration,
+) -> Option<usize> {
+    let eligible = |v: &VictimInfo| {
+        v.priority < urgent_priority
+            || (v.priority == urgent_priority
+                && match v.due {
+                    None => true,
+                    Some(due) => {
+                        due.saturating_duration_since(now) > horizon
+                    }
+                })
+    };
+    let mut best: Option<(usize, VictimInfo)> = None;
+    for (i, v) in live.iter().enumerate() {
+        if !eligible(v) {
+            continue;
+        }
+        let lower = match &best {
+            None => true,
+            Some((_, b)) => {
+                if v.priority != b.priority {
+                    v.priority < b.priority
+                } else {
+                    match (v.due, b.due) {
+                        (None, Some(_)) => true,
+                        (Some(x), Some(y)) => x > y,
+                        _ => false,
+                    }
+                }
+            }
+        };
+        if lower {
+            best = Some((i, *v));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// The continuous-batching worker loop: admit queued requests into free
 /// session slots (blocking only when fully idle), then give every live
 /// session one decode step, streaming each token as it is emitted.
+/// With preemption on, a full live set additionally yields its
+/// lowest-value session to any queued deadlined request inside its
+/// urgency horizon; parked sessions resume into free slots whenever the
+/// queue is momentarily drained.
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     worker: usize,
     state: ModelState,
@@ -568,6 +971,8 @@ fn worker_main(
     events: Sender<WorkerEvent>,
     store: Option<Arc<PrefixCacheStore>>,
     counters: Arc<LaneCounters>,
+    slo: Arc<SloCounters>,
+    park: Arc<ParkStore>,
 ) {
     let mut engine: Box<dyn PoolEngine> = match build_engine(state, &cfg) {
         Ok(e) => e,
@@ -596,93 +1001,229 @@ fn worker_main(
     // fold per-round deltas into the shared pool stats.
     let mut warm: Vec<Vec<u64>> = Vec::new();
     let mut traffic_base = engine.backend().lane_traffic();
+    // Preemption needs host snapshots; without them (or with a zero
+    // park budget) the control plane degrades to plain scheduling.
+    let preempt_on = cfg.control.preempt
+        && cfg.control.park_capacity > 0
+        && engine.backend().supports_cache_snapshots();
     'serve: loop {
         // Admission: fill free slots. Block only when idle; poll with
         // `try_pop` while sessions are live, so queued requests join
         // mid-flight between decode steps instead of at batch close.
+        // Parked sessions resume into slots the queue leaves free.
         while live.len() < max_live {
             let popped = if live.is_empty() {
-                sched.pop() // fully idle: block until work or close
+                if park.is_empty() {
+                    match sched.pop() {
+                        // Fully idle: block until work or close.
+                        Some(x) => Some(x),
+                        // Queue closed and drained: resume leftovers a
+                        // late parker may have added before exiting.
+                        None if park.is_empty() => break 'serve,
+                        None => None,
+                    }
+                } else {
+                    // Idle with parked work: resume instead of
+                    // blocking (every worker blocking on the queue
+                    // would strand the parked session forever).
+                    None
+                }
+            } else if cfg.lane_fusion
+                && !interleaving
+                && cfg.sched != Policy::Priority
+            {
+                // Mid-flight: never stall live sessions. Lane-aware
+                // admission — prefer requests whose effective policy
+                // joins a live session's lane group over ones that
+                // would open a fresh policy class, and within fresh
+                // classes prefer predicted-shallow (exit-capable)
+                // traffic, which packs into fused lanes. Skipped
+                // under `Policy::Priority`, where urgency order wins.
+                sched.try_pop_preferring(|r| {
+                    let p = r.policy.as_ref().unwrap_or(&cfg.policy);
+                    let joins_live =
+                        live.iter().any(|l| l.policy == *p);
+                    match (joins_live, p.may_exit()) {
+                        (true, _) => 0,
+                        (false, true) => 1,
+                        (false, false) => 2,
+                    }
+                })
             } else {
-                sched.try_pop() // mid-flight: never stall live sessions
+                sched.try_pop()
             };
             let Some((req, queue_seconds)) = popped else {
-                if live.is_empty() {
-                    break 'serve; // queue closed and drained
+                // Queue momentarily empty: pull parked work into the
+                // free slot instead.
+                match resume_parked(
+                    worker,
+                    engine.as_mut(),
+                    &cfg,
+                    &park,
+                    &events,
+                    &slo,
+                    &counters,
+                    &mut current_policy,
+                    &mut live,
+                ) {
+                    ResumeOutcome::Resumed => continue,
+                    ResumeOutcome::Empty if live.is_empty() => continue,
+                    ResumeOutcome::Empty => break,
+                    ResumeOutcome::Panicked { failed_id } => {
+                        retire(worker, &events, failed_id, &live);
+                        return;
+                    }
                 }
-                break; // nothing queued right now; keep stepping
             };
-            let policy =
-                req.policy.clone().unwrap_or_else(|| cfg.policy.clone());
-            if policy != current_policy {
-                engine.apply_policy(&policy);
-                current_policy = policy.clone();
-                counters.record_policy_apply();
+            if !admit_request(
+                worker,
+                engine.as_mut(),
+                &cfg,
+                store.as_deref(),
+                &counters,
+                &events,
+                &mut current_policy,
+                &mut live,
+                req,
+                queue_seconds,
+            ) {
+                return;
             }
-            let admitted = Instant::now();
-            // Every popped request must produce exactly one completion
-            // event, even if the engine panics — otherwise `run_batch`
-            // waits forever on the lost request.
-            let started = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                let be = engine.backend();
-                let mut s =
-                    DecodeSession::new_text(be, &req.prompt, req.max_new)?;
-                match store.as_deref() {
-                    Some(st) => {
-                        let cached = s.prefill_with_cache(be, st)?;
-                        // Extend the store with this prompt's full
-                        // prefix unless a resident entry already covers
-                        // it in full (then the hit refreshed its LRU
-                        // slot and a re-insert would only duplicate it).
-                        // `would_admit` skips the host-copy snapshot
-                        // when the store could only reject it, and a
-                        // failed snapshot merely logs — the request
-                        // already prefilled fine without the cache.
-                        if !s.is_done()
-                            && cached.cached_tokens < s.prompt_len()
-                            && st.would_admit(
-                                s.prompt_len().saturating_sub(1),
-                            )
-                        {
-                            match s.prefix_snapshot(be) {
-                                Ok(snap) => {
-                                    st.insert(snap);
-                                }
-                                Err(e) => eprintln!(
-                                    "[serve] worker {worker}: prefix \
-                                     snapshot failed (serving continues \
-                                     uncached): {e:#}"
-                                ),
-                            }
+        }
+        // Deadline-driven preemption: the live set is full, so a queued
+        // deadlined request inside its urgency horizon may displace the
+        // lowest-value live session. The park-store slot is reserved
+        // inside the scheduler's urgent pop, so the room check cannot
+        // race another worker's preemption, and a popped urgent request
+        // is guaranteed a victim (the live set is this thread's own).
+        if preempt_on && live.len() >= max_live && !live.is_empty() {
+            let infos = victim_infos(&live);
+            let now = Instant::now();
+            let horizon = cfg.control.preempt_horizon;
+            let urgent = sched.pop_urgent_when(horizon, |r| {
+                preemption_victim(&infos, r.priority, now, horizon)
+                    .is_some()
+                    && park.try_reserve()
+            });
+            if let Some((req, queue_seconds)) = urgent {
+                match preemption_victim(&infos, req.priority, now, horizon)
+                {
+                    None => {
+                        // Unreachable (the predicate above just held
+                        // over the same inputs) — but never strand the
+                        // request or the reservation.
+                        park.cancel_reservation();
+                        let id = req.id;
+                        if !sched.push(req) {
+                            events
+                                .send(WorkerEvent::Failed {
+                                    id,
+                                    worker,
+                                    error: "preemption aborted and the \
+                                            queue is closed"
+                                        .into(),
+                                })
+                                .ok();
                         }
                     }
-                    None => s.prefill(be)?,
-                }
-                Ok::<_, anyhow::Error>(s)
-            }));
-            match started {
-                Ok(Ok(session)) => live.push(Live {
-                    id: req.id,
-                    policy,
-                    session,
-                    queue_seconds,
-                    deadline: req.deadline,
-                    admitted,
-                    last_event: admitted,
-                    token_seconds: Vec::new(),
-                }),
-                Ok(Err(e)) => {
-                    events
-                        .send(WorkerEvent::Failed {
-                            id: req.id,
+                    Some(vi) => {
+                        let victim = live.remove(vi);
+                        let Live {
+                            id: vid,
+                            policy: vpolicy,
+                            session,
+                            queue_seconds: vqueue,
+                            deadline: vdeadline,
+                            priority: vprio,
+                            tenant: vtenant,
+                            admitted: vadmitted,
+                            last_event: _,
+                            token_seconds: vtokens,
+                        } = victim;
+                        let parked = if cfg.control.fault
+                            == Some(ControlFault::ParkSnapshot)
+                        {
+                            // Injected fault: release the victim's
+                            // backend state exactly as a real failed
+                            // snapshot would have.
+                            let mut s = session;
+                            s.close(engine.backend());
+                            Ok(Err(anyhow::anyhow!(
+                                "injected fault: cache snapshot failed \
+                                 during park"
+                            )))
+                        } else {
+                            std::panic::catch_unwind(AssertUnwindSafe(
+                                || session.park(engine.backend()),
+                            ))
+                        };
+                        match parked {
+                            Ok(Ok(p)) => {
+                                slo.record_preemption();
+                                let occupancy =
+                                    park.park_reserved(ParkedEntry {
+                                        id: vid,
+                                        tenant: vtenant,
+                                        priority: vprio,
+                                        deadline: vdeadline,
+                                        due: infos[vi].due,
+                                        policy: vpolicy,
+                                        queue_seconds: vqueue,
+                                        admitted: vadmitted,
+                                        token_seconds: vtokens,
+                                        parked: p,
+                                    });
+                                slo.observe_parked(occupancy as u64);
+                            }
+                            Ok(Err(e)) => {
+                                // Typed per-request failure: the victim
+                                // fails alone; the urgent request still
+                                // gets the slot and every other session
+                                // keeps serving.
+                                park.cancel_reservation();
+                                slo.record_park_failure();
+                                events
+                                    .send(WorkerEvent::Failed {
+                                        id: vid,
+                                        worker,
+                                        error: format!(
+                                            "park failed: {e:#}"
+                                        ),
+                                    })
+                                    .ok();
+                            }
+                            Err(_) => {
+                                park.cancel_reservation();
+                                slo.record_park_failure();
+                                events
+                                    .send(WorkerEvent::Failed {
+                                        id: req.id,
+                                        worker,
+                                        error: "admission aborted: \
+                                                worker panicked during \
+                                                park"
+                                            .into(),
+                                    })
+                                    .ok();
+                                retire(worker, &events, vid, &live);
+                                return;
+                            }
+                        }
+                        if !admit_request(
                             worker,
-                            error: format!("{e:#}"),
-                        })
-                        .ok();
-                }
-                Err(_) => {
-                    retire(worker, &events, req.id, &live);
-                    return;
+                            engine.as_mut(),
+                            &cfg,
+                            store.as_deref(),
+                            &counters,
+                            &events,
+                            &mut current_policy,
+                            &mut live,
+                            req,
+                            queue_seconds,
+                        ) {
+                            return;
+                        }
+                    }
                 }
             }
         }
@@ -793,6 +1334,7 @@ fn worker_main(
                             worker,
                             &events,
                             engine.backend(),
+                            &sched,
                             &mut live,
                             retired,
                         );
@@ -871,6 +1413,7 @@ fn worker_main(
                             worker,
                             &events,
                             engine.backend(),
+                            &sched,
                             &mut live,
                             retired,
                         );
@@ -936,6 +1479,7 @@ fn worker_main(
                             worker,
                             &events,
                             engine.backend(),
+                            &sched,
                             &mut live,
                             retired,
                         );
@@ -1005,7 +1549,14 @@ fn worker_main(
         }
         // Retire finished/failed sessions; their slots free up for the
         // next admission pass.
-        settle_round(worker, &events, engine.backend(), &mut live, retired);
+        settle_round(
+            worker,
+            &events,
+            engine.backend(),
+            &sched,
+            &mut live,
+            retired,
+        );
         warm = next_warm;
         // Attribute the round's lane-cache traffic (including departure
         // scatters from the retirements above) to the pool counters.
@@ -1018,16 +1569,209 @@ fn worker_main(
     engine.finish();
 }
 
+/// Admit one popped request into a free live slot: apply its policy,
+/// prefill (through the shared prefix cache when configured), and push
+/// the live session. Returns `false` when the engine panicked — the
+/// request and every live session were already failed and the caller
+/// must stop serving.
+#[allow(clippy::too_many_arguments)]
+fn admit_request(
+    worker: usize,
+    engine: &mut dyn PoolEngine,
+    cfg: &PoolConfig,
+    store: Option<&PrefixCacheStore>,
+    counters: &LaneCounters,
+    events: &Sender<WorkerEvent>,
+    current_policy: &mut ExitPolicy,
+    live: &mut Vec<Live>,
+    req: ServeRequest,
+    queue_seconds: f64,
+) -> bool {
+    let policy = req.policy.clone().unwrap_or_else(|| cfg.policy.clone());
+    if policy != *current_policy {
+        engine.apply_policy(&policy);
+        *current_policy = policy.clone();
+        counters.record_policy_apply();
+    }
+    let admitted = Instant::now();
+    // Every popped request must produce exactly one completion
+    // event, even if the engine panics — otherwise `run_batch`
+    // waits forever on the lost request.
+    let started = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let be = engine.backend();
+        let mut s = DecodeSession::new_text(be, &req.prompt, req.max_new)?;
+        match store {
+            Some(st) => {
+                let cached = s.prefill_with_cache(be, st)?;
+                // Extend the store with this prompt's full
+                // prefix unless a resident entry already covers
+                // it in full (then the hit refreshed its LRU
+                // slot and a re-insert would only duplicate it).
+                // `would_admit` skips the host-copy snapshot
+                // when the store could only reject it, and a
+                // failed snapshot merely logs — the request
+                // already prefilled fine without the cache.
+                if !s.is_done()
+                    && cached.cached_tokens < s.prompt_len()
+                    && st.would_admit(s.prompt_len().saturating_sub(1))
+                {
+                    match s.prefix_snapshot(be) {
+                        Ok(snap) => {
+                            st.insert(snap);
+                        }
+                        Err(e) => eprintln!(
+                            "[serve] worker {worker}: prefix \
+                             snapshot failed (serving continues \
+                             uncached): {e:#}"
+                        ),
+                    }
+                }
+            }
+            None => s.prefill(be)?,
+        }
+        Ok::<_, anyhow::Error>(s)
+    }));
+    match started {
+        Ok(Ok(session)) => {
+            live.push(Live {
+                id: req.id,
+                policy,
+                session,
+                queue_seconds,
+                deadline: req.deadline,
+                priority: req.priority,
+                tenant: req.tenant,
+                admitted,
+                last_event: admitted,
+                token_seconds: Vec::new(),
+            });
+            true
+        }
+        Ok(Err(e)) => {
+            events
+                .send(WorkerEvent::Failed {
+                    id: req.id,
+                    worker,
+                    error: format!("{e:#}"),
+                })
+                .ok();
+            true
+        }
+        Err(_) => {
+            retire(worker, events, req.id, live);
+            false
+        }
+    }
+}
+
+/// What [`resume_parked`] did with the park store's best entry.
+enum ResumeOutcome {
+    /// An entry was taken: either resumed into a live slot or its
+    /// failure reported. Re-check admission either way.
+    Resumed,
+    /// Nothing parked.
+    Empty,
+    /// The engine panicked during restore; the caller must retire,
+    /// failing `failed_id` along with the live set.
+    Panicked { failed_id: u64 },
+}
+
+/// Take the highest-value parked session and rebuild it as a live
+/// session on this worker. The entry's policy is applied *before* the
+/// restore — interleaving backends capture a session's policy at
+/// open/restore, so applying it afterwards would decode the wrong
+/// policy.
+#[allow(clippy::too_many_arguments)]
+fn resume_parked(
+    worker: usize,
+    engine: &mut dyn PoolEngine,
+    cfg: &PoolConfig,
+    park: &ParkStore,
+    events: &Sender<WorkerEvent>,
+    slo: &SloCounters,
+    counters: &LaneCounters,
+    current_policy: &mut ExitPolicy,
+    live: &mut Vec<Live>,
+) -> ResumeOutcome {
+    let Some(e) = park.take_best() else {
+        return ResumeOutcome::Empty;
+    };
+    let ParkedEntry {
+        id,
+        tenant,
+        priority,
+        deadline,
+        due: _,
+        policy,
+        queue_seconds,
+        admitted,
+        token_seconds,
+        parked,
+    } = e;
+    if policy != *current_policy {
+        engine.apply_policy(&policy);
+        *current_policy = policy.clone();
+        counters.record_policy_apply();
+    }
+    let restored = if cfg.control.fault == Some(ControlFault::ResumeRestore)
+    {
+        Ok(Err(anyhow::anyhow!(
+            "injected fault: cache restore failed during resume"
+        )))
+    } else {
+        std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parked.resume(engine.backend())
+        }))
+    };
+    match restored {
+        Ok(Ok(session)) => {
+            slo.record_resume();
+            live.push(Live {
+                id,
+                policy,
+                session,
+                queue_seconds,
+                deadline,
+                priority,
+                tenant,
+                admitted,
+                last_event: Instant::now(),
+                token_seconds,
+            });
+            ResumeOutcome::Resumed
+        }
+        Ok(Err(err)) => {
+            // Typed per-request failure: the resumed request fails
+            // alone; the worker and every other session keep serving.
+            slo.record_resume_failure();
+            events
+                .send(WorkerEvent::Failed {
+                    id,
+                    worker,
+                    error: format!("resume failed: {err:#}"),
+                })
+                .ok();
+            ResumeOutcome::Resumed
+        }
+        Err(_) => {
+            slo.record_resume_failure();
+            ResumeOutcome::Panicked { failed_id: id }
+        }
+    }
+}
+
 /// Deliver a round's deferred outcomes — `(live index, Some(error))`
 /// failures and `(live index, None)` completions — removing each from
 /// the live set, highest index first so the recorded indices stay
 /// valid. Each retired session is closed first, releasing its
 /// backend-side decode state (per-stage KV slots on interleaving
-/// engines).
+/// engines). Completions feed their service time back to the
+/// scheduler's predicted-TTFT estimator (admission control).
 fn settle_round(
     worker: usize,
     events: &Sender<WorkerEvent>,
     backend: &mut dyn DecodeBackend,
+    sched: &Scheduler,
     live: &mut Vec<Live>,
     mut retired: Vec<(usize, Option<String>)>,
 ) {
@@ -1041,7 +1785,10 @@ fn settle_round(
                     .send(WorkerEvent::Failed { id: l.id, worker, error })
                     .ok();
             }
-            None => complete(worker, events, l),
+            None => {
+                let service = complete(worker, events, l);
+                sched.note_done(service);
+            }
         }
     }
 }
@@ -1166,8 +1913,11 @@ pub fn plan_round(
     groups
 }
 
-/// Emit the `Done` event for a finished live session.
-fn complete(worker: usize, events: &Sender<WorkerEvent>, l: Live) {
+/// Emit the `Done` event for a finished live session, returning its
+/// service time (admission to completion — parked time included for
+/// preempted sessions; that is what the client observed) for the
+/// scheduler's service estimator.
+fn complete(worker: usize, events: &Sender<WorkerEvent>, l: Live) -> f64 {
     let output = l.session.output();
     let service_seconds = l.admitted.elapsed().as_secs_f64();
     let ttft_seconds = l.queue_seconds
@@ -1182,8 +1932,10 @@ fn complete(worker: usize, events: &Sender<WorkerEvent>, l: Live) {
             token_seconds: l.token_seconds,
             total_seconds: l.queue_seconds + service_seconds,
             deadline: l.deadline,
+            tenant: l.tenant,
         }))
         .ok();
+    service_seconds
 }
 
 /// The engine panicked: fail the panicking request and every other live
@@ -1339,7 +2091,7 @@ mod tests {
         let naive: Vec<Vec<usize>> = (0..6).map(|i| vec![i]).collect();
         assert_eq!(policy_swaps(&naive, &classes), 6);
         for lanes in [&[][..], &[2, 4][..]] {
-            let plan = plan_round(&classes, &fusable, lanes);
+            let plan = plan_round(&classes, &fusable, lanes, &[]);
             assert_eq!(
                 policy_swaps(&plan, &classes),
                 2,
@@ -1347,7 +2099,7 @@ mod tests {
             );
         }
         // Mixed-policy sessions never share a fused group.
-        let plan = plan_round(&classes, &fusable, &[2, 4]);
+        let plan = plan_round(&classes, &fusable, &[2, 4], &[]);
         for g in &plan {
             assert!(
                 g.iter().all(|&i| classes[i] == classes[g[0]]),
@@ -1451,6 +2203,205 @@ mod tests {
                     "policy applied more than once per round: plan \
                      {plan:?} classes {classes:?}"
                 ));
+            }
+            Ok(())
+        });
+    }
+
+    fn stub_entry(id: u64) -> ParkedEntry {
+        ParkedEntry {
+            id,
+            tenant: 0,
+            priority: 0,
+            deadline: None,
+            due: None,
+            policy: ExitPolicy::Never,
+            queue_seconds: 0.0,
+            admitted: Instant::now(),
+            token_seconds: Vec::new(),
+            parked: ParkedSession::stub(vec![1, 2, 3]),
+        }
+    }
+
+    /// Resume order: highest priority first; within a priority,
+    /// deadlined before deadline-less, earlier deadline first.
+    #[test]
+    fn park_store_resumes_highest_value_first() {
+        let store = ParkStore::new(4);
+        let now = Instant::now();
+        let mk = |id, priority, due: Option<Duration>| {
+            let mut e = stub_entry(id);
+            e.priority = priority;
+            e.due = due.map(|d| now + d);
+            e
+        };
+        for e in [
+            mk(0, 0, None),
+            mk(1, 1, None),
+            mk(2, 1, Some(Duration::from_millis(50))),
+            mk(3, 1, Some(Duration::from_millis(9))),
+        ] {
+            assert!(store.try_reserve());
+            store.park_reserved(e);
+        }
+        assert!(!store.try_reserve(), "store at capacity");
+        let order: Vec<u64> =
+            std::iter::from_fn(|| store.take_best().map(|e| e.id))
+                .collect();
+        assert_eq!(order, vec![3, 2, 1, 0]);
+        assert_eq!(store.peak(), 4);
+        assert!(store.is_empty());
+    }
+
+    /// The satellite invariant pair: across any interleaving of
+    /// reserve / park / take, parked + reserved never exceeds the
+    /// budget, a reservation is only refused at capacity, and every
+    /// parked entry is eventually taken — never silently dropped.
+    #[test]
+    fn prop_park_store_bounded_and_lossless() {
+        proptest::check("park store budget", 128, |rng| {
+            let capacity = rng.range(1, 5);
+            let store = ParkStore::new(capacity);
+            let mut next_id = 0u64;
+            let mut reserved = 0usize;
+            let mut inside = std::collections::BTreeSet::<u64>::new();
+            for _ in 0..rng.range(10, 60) {
+                match rng.below(3) {
+                    0 => {
+                        if store.try_reserve() {
+                            reserved += 1;
+                        } else if inside.len() + reserved < capacity {
+                            return Err(
+                                "reserve refused with room".into()
+                            );
+                        }
+                    }
+                    1 if reserved > 0 => {
+                        let id = next_id;
+                        next_id += 1;
+                        let n = store.park_reserved(stub_entry(id));
+                        reserved -= 1;
+                        inside.insert(id);
+                        if n > capacity {
+                            return Err(format!(
+                                "parked {n} > capacity {capacity}"
+                            ));
+                        }
+                    }
+                    _ => match store.take_best() {
+                        Some(e) => {
+                            if !inside.remove(&e.id) {
+                                return Err(format!(
+                                    "took unknown id {}",
+                                    e.id
+                                ));
+                            }
+                        }
+                        None => {
+                            if !inside.is_empty() {
+                                return Err(
+                                    "store lost parked entries".into()
+                                );
+                            }
+                        }
+                    },
+                }
+                if store.len() != inside.len() {
+                    return Err(format!(
+                        "len {} != model {}",
+                        store.len(),
+                        inside.len()
+                    ));
+                }
+                if store.len() + reserved > capacity {
+                    return Err("budget exceeded".into());
+                }
+            }
+            while let Some(e) = store.take_best() {
+                if !inside.remove(&e.id) {
+                    return Err(format!("drained unknown id {}", e.id));
+                }
+            }
+            if !inside.is_empty() {
+                return Err(format!(
+                    "entries lost at drain: {inside:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Preemption only ever displaces the lowest-value eligible
+    /// session — never one that is not strictly lower-value than the
+    /// urgent request, and never a higher-value one while a
+    /// lower-value candidate exists.
+    #[test]
+    fn prop_preemption_targets_lowest_value_only() {
+        proptest::check("preemption victim", 256, |rng| {
+            let now = Instant::now();
+            let horizon = Duration::from_millis(25);
+            let n = rng.range(0, 8);
+            let live: Vec<VictimInfo> = (0..n)
+                .map(|_| VictimInfo {
+                    priority: rng.range(0, 3) as i32,
+                    due: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(
+                            now + Duration::from_millis(
+                                rng.range(0, 200) as u64,
+                            ),
+                        )
+                    },
+                })
+                .collect();
+            let urgent_priority = rng.range(0, 3) as i32;
+            let eligible = |v: &VictimInfo| {
+                v.priority < urgent_priority
+                    || (v.priority == urgent_priority
+                        && match v.due {
+                            None => true,
+                            Some(d) => {
+                                d.saturating_duration_since(now) > horizon
+                            }
+                        })
+            };
+            match preemption_victim(&live, urgent_priority, now, horizon)
+            {
+                None => {
+                    if live.iter().any(eligible) {
+                        return Err(
+                            "no victim though one was eligible".into()
+                        );
+                    }
+                }
+                Some(i) => {
+                    let v = &live[i];
+                    if !eligible(v) {
+                        return Err(format!(
+                            "ineligible victim {v:?} for urgent \
+                             priority {urgent_priority}"
+                        ));
+                    }
+                    for (j, o) in live.iter().enumerate() {
+                        if j == i || !eligible(o) {
+                            continue;
+                        }
+                        let strictly_lower = o.priority < v.priority
+                            || (o.priority == v.priority
+                                && match (o.due, v.due) {
+                                    (None, Some(_)) => true,
+                                    (Some(a), Some(b)) => a > b,
+                                    _ => false,
+                                });
+                        if strictly_lower {
+                            return Err(format!(
+                                "victim {i} ({v:?}) not lowest-value: \
+                                 {j} ({o:?}) is lower"
+                            ));
+                        }
+                    }
+                }
             }
             Ok(())
         });

@@ -22,6 +22,19 @@ pub struct ServeRequest {
     /// in priority are served earliest-deadline-first; requests without a
     /// deadline queue behind any deadlined peer of the same priority.
     pub deadline: Option<Duration>,
+    /// Tenant id for weighted-fairness scheduling (default 0). When the
+    /// scheduler is configured with tenant weights, each tenant's share
+    /// of dispatched work tracks its weight even under bursty arrivals;
+    /// ids outside the configured weight table share tenant 0's
+    /// accounting.
+    pub tenant: usize,
+    /// Arrival offset relative to the batch start: the batch driver
+    /// holds this request's submission until the offset elapses, so one
+    /// batch can model staggered/bursty arrivals (a deadlined request
+    /// arriving while a long session already holds the only live slot
+    /// is what preemption exists for). Offsets are honored in request
+    /// order; a later request with a smaller offset submits immediately.
+    pub start_after: Option<Duration>,
 }
 
 impl ServeRequest {
@@ -37,6 +50,8 @@ impl ServeRequest {
             policy: None,
             priority: 0,
             deadline: None,
+            tenant: 0,
+            start_after: None,
         }
     }
 
@@ -60,6 +75,18 @@ impl ServeRequest {
 
     pub fn with_deadline(mut self, deadline: Duration) -> ServeRequest {
         self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: usize) -> ServeRequest {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Delay this request's submission by `offset` from batch start
+    /// (staggered-arrival modeling; see [`ServeRequest::start_after`]).
+    pub fn with_start_after(mut self, offset: Duration) -> ServeRequest {
+        self.start_after = Some(offset);
         self
     }
 }
@@ -87,6 +114,9 @@ pub struct ServeResponse {
     /// The request's relative deadline, echoed back so metrics can count
     /// deadline misses (`total_seconds` vs. this).
     pub deadline: Option<Duration>,
+    /// The request's tenant id, echoed back so metrics can report
+    /// per-tenant token shares.
+    pub tenant: usize,
 }
 
 /// Build an `n`-request set by cycling the task suite's prompts,
@@ -175,11 +205,21 @@ mod tests {
     fn priority_and_deadline_builders() {
         let r = ServeRequest::new(4, "hi", 8)
             .with_priority(3)
-            .with_deadline(std::time::Duration::from_millis(250));
+            .with_deadline(std::time::Duration::from_millis(250))
+            .with_tenant(2);
         assert_eq!(r.priority, 3);
         assert_eq!(
             r.deadline,
             Some(std::time::Duration::from_millis(250))
+        );
+        assert_eq!(r.tenant, 2);
+        assert_eq!(ServeRequest::new(5, "hi", 8).tenant, 0);
+        assert_eq!(ServeRequest::new(5, "hi", 8).start_after, None);
+        let r = ServeRequest::new(6, "hi", 8)
+            .with_start_after(std::time::Duration::from_millis(5));
+        assert_eq!(
+            r.start_after,
+            Some(std::time::Duration::from_millis(5))
         );
     }
 }

@@ -1,7 +1,26 @@
-//! The serving queue: submitted requests wait here until an engine worker
-//! pops them.
+//! The serving queue — and, since the SLO control plane landed, the
+//! place where the pool *acts* on load and deadlines instead of just
+//! measuring them:
 //!
-//! Three policies:
+//! - **Admission control + load shedding** ([`ShedPolicy`]): `submit`
+//!   rejects requests with a typed [`Admission::Shed`] when the queue is
+//!   past its depth bound or the predicted TTFT (queue depth × a service
+//!   -time EMA fed by [`Scheduler::note_done`]) exceeds its bound, and
+//!   *degrades* requests (clamping `max_new`) past a softer depth
+//!   threshold — bounded queues instead of unbounded latency.
+//! - **Weighted per-tenant fairness**: with tenant weights configured,
+//!   dispatch picks the tenant with the smallest weighted virtual time
+//!   (`v_t += max_new / weight_t` per pop, idle tenants clamped forward
+//!   on re-arrival so they cannot bank credit), then applies the base
+//!   policy within that tenant — one tenant's burst cannot starve the
+//!   rest.
+//! - **Deadline urgency** ([`Scheduler::pop_urgent_when`]): pool workers
+//!   pull the minimum-slack deadlined request past the normal order when
+//!   its slack is within the preemption horizon — the trigger for
+//!   parking a low-value live session.
+//!
+//! Three base policies order dispatch within a tenant (or globally, when
+//! fairness is off):
 //!
 //! - **FIFO** — arrival order; fair, and the baseline any latency claim
 //!   is measured against.
@@ -15,15 +34,17 @@
 
 use std::cmp::Reverse;
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::request::ServeRequest;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Policy {
+    #[default]
     Fifo,
     ShortestPromptFirst,
     Priority,
@@ -42,6 +63,91 @@ impl Policy {
     }
 }
 
+/// Admission-control bounds applied at [`Scheduler::submit`]. All bounds
+/// default off; a zero depth means unbounded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedPolicy {
+    /// Shed incoming requests while the queue holds at least this many
+    /// (0 = unbounded).
+    pub max_queue_depth: usize,
+    /// Shed incoming requests whose predicted TTFT — queue depth × the
+    /// service-time EMA fed by [`Scheduler::note_done`] — exceeds this
+    /// bound. Inactive until the first completion primes the EMA.
+    pub max_predicted_ttft: Option<Duration>,
+    /// Degrade (rather than shed) incoming requests while the queue
+    /// holds at least this many, clamping `max_new` to
+    /// `degrade_max_new` (0 = off).
+    pub degrade_depth: usize,
+    /// Token budget degraded requests are clamped to.
+    pub degrade_max_new: usize,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> ShedPolicy {
+        ShedPolicy {
+            max_queue_depth: 0,
+            max_predicted_ttft: None,
+            degrade_depth: 0,
+            degrade_max_new: 16,
+        }
+    }
+}
+
+/// Why a request was shed at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue was at or past [`ShedPolicy::max_queue_depth`].
+    QueueFull { depth: usize, limit: usize },
+    /// Predicted TTFT exceeded [`ShedPolicy::max_predicted_ttft`].
+    PredictedTtft { predicted_ms: u64, limit_ms: u64 },
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedReason::QueueFull { depth, limit } => {
+                write!(f, "queue full (depth {depth} >= limit {limit})")
+            }
+            ShedReason::PredictedTtft { predicted_ms, limit_ms } => write!(
+                f,
+                "predicted TTFT {predicted_ms}ms exceeds limit {limit_ms}ms"
+            ),
+        }
+    }
+}
+
+/// Typed outcome of [`Scheduler::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Queued as-is.
+    Queued,
+    /// Queued with `max_new` clamped to the degraded budget.
+    Degraded { max_new: usize },
+    /// Rejected by the shed policy; the request was not queued.
+    Shed(ShedReason),
+    /// Rejected because the queue is closed.
+    Closed,
+}
+
+impl Admission {
+    /// Whether the request was queued (possibly degraded).
+    pub fn accepted(&self) -> bool {
+        matches!(self, Admission::Queued | Admission::Degraded { .. })
+    }
+}
+
+/// Scheduler construction knobs; [`Scheduler::new`] is the all-defaults
+/// spelling (no shedding, no tenant fairness).
+#[derive(Debug, Clone, Default)]
+pub struct SchedConfig {
+    pub policy: Policy,
+    /// Admission-control bounds; `None` admits everything.
+    pub shed: Option<ShedPolicy>,
+    /// Per-tenant weights; empty disables fairness. Tenant ids at or
+    /// past the table length share tenant 0's accounting.
+    pub tenant_weights: Vec<f64>,
+}
+
 struct Queued {
     req: ServeRequest,
     enqueued: Instant,
@@ -51,20 +157,39 @@ struct Queued {
 struct State {
     pending: VecDeque<Queued>,
     closed: bool,
+    shed: u64,
+    degraded: u64,
+    /// EMA of per-request service seconds, fed by `note_done` — the
+    /// coarse signal behind predicted-TTFT shedding.
+    service_ema: f64,
+    /// Per-tenant weighted virtual time (fairness on only).
+    vtime: Vec<f64>,
+    /// Virtual time of the most recently dispatched tenant, used to
+    /// clamp idle tenants forward on re-arrival.
+    vnow: f64,
 }
 
 /// Thread-safe request queue shared between submitters and pool workers.
 pub struct Scheduler {
     policy: Policy,
+    shed: Option<ShedPolicy>,
+    weights: Vec<f64>,
     state: Mutex<State>,
     cv: Condvar,
 }
 
 impl Scheduler {
     pub fn new(policy: Policy) -> Scheduler {
+        Scheduler::new_with(SchedConfig { policy, ..SchedConfig::default() })
+    }
+
+    pub fn new_with(cfg: SchedConfig) -> Scheduler {
+        let vtime = vec![0.0; cfg.tenant_weights.len()];
         Scheduler {
-            policy,
-            state: Mutex::new(State::default()),
+            policy: cfg.policy,
+            shed: cfg.shed,
+            weights: cfg.tenant_weights,
+            state: Mutex::new(State { vtime, ..State::default() }),
             cv: Condvar::new(),
         }
     }
@@ -73,18 +198,98 @@ impl Scheduler {
         self.policy
     }
 
-    /// Enqueue a request. Returns `false` — rejecting the request — when
-    /// the queue has already been closed: submitting to a shut-down pool
-    /// is an error for the caller to handle, never a submitter panic.
-    #[must_use]
-    pub fn push(&self, req: ServeRequest) -> bool {
+    /// Whether weighted tenant fairness is configured.
+    pub fn fairness_enabled(&self) -> bool {
+        !self.weights.is_empty()
+    }
+
+    /// Requests shed by admission control so far.
+    pub fn shed_count(&self) -> u64 {
+        self.state.lock().unwrap().shed
+    }
+
+    /// Requests degraded (budget-clamped) by admission control so far.
+    pub fn degraded_count(&self) -> u64 {
+        self.state.lock().unwrap().degraded
+    }
+
+    /// Feed one completed request's service time into the EMA behind
+    /// predicted-TTFT shedding. Pool workers call this as requests
+    /// settle; tests can call it directly to prime the predictor.
+    pub fn note_done(&self, service_seconds: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.service_ema = if st.service_ema > 0.0 {
+            0.8 * st.service_ema + 0.2 * service_seconds
+        } else {
+            service_seconds
+        };
+    }
+
+    /// Enqueue a request through admission control. Requests may be
+    /// queued as-is, queued with a degraded token budget, shed with a
+    /// typed reason, or rejected because the queue is closed — a shed or
+    /// closed request is *not* queued and will never produce a worker
+    /// event.
+    pub fn submit(&self, mut req: ServeRequest) -> Admission {
         let mut st = self.state.lock().unwrap();
         if st.closed {
-            return false;
+            return Admission::Closed;
+        }
+        let depth = st.pending.len();
+        let mut admission = Admission::Queued;
+        if let Some(shed) = &self.shed {
+            if shed.max_queue_depth > 0 && depth >= shed.max_queue_depth {
+                st.shed += 1;
+                return Admission::Shed(ShedReason::QueueFull {
+                    depth,
+                    limit: shed.max_queue_depth,
+                });
+            }
+            if let Some(limit) = shed.max_predicted_ttft {
+                let predicted = depth as f64 * st.service_ema;
+                if st.service_ema > 0.0 && predicted > limit.as_secs_f64() {
+                    st.shed += 1;
+                    return Admission::Shed(ShedReason::PredictedTtft {
+                        predicted_ms: (predicted * 1e3) as u64,
+                        limit_ms: limit.as_millis() as u64,
+                    });
+                }
+            }
+            if shed.degrade_depth > 0
+                && depth >= shed.degrade_depth
+                && req.max_new > shed.degrade_max_new
+            {
+                req.max_new = shed.degrade_max_new;
+                st.degraded += 1;
+                admission = Admission::Degraded { max_new: req.max_new };
+            }
+        }
+        if !self.weights.is_empty() {
+            let t = self.tenant_of(&req);
+            let idle = !st
+                .pending
+                .iter()
+                .any(|q| self.tenant_of(&q.req) == t);
+            if idle {
+                // Catch-up clamp: a tenant that sat idle re-enters at the
+                // current virtual time instead of cashing in banked
+                // credit and monopolising dispatch.
+                st.vtime[t] = st.vtime[t].max(st.vnow);
+            }
         }
         st.pending.push_back(Queued { req, enqueued: Instant::now() });
         self.cv.notify_one();
-        true
+        admission
+    }
+
+    /// Enqueue a request. Returns `false` — rejecting the request — when
+    /// the queue has already been closed or admission control shed it:
+    /// submitting to a shut-down pool is an error for the caller to
+    /// handle, never a submitter panic. [`Scheduler::submit`] is the
+    /// typed spelling.
+    #[must_use]
+    pub fn push(&self, req: ServeRequest) -> bool {
+        self.submit(req).accepted()
     }
 
     /// Number of queued (not yet claimed) requests.
@@ -127,26 +332,160 @@ impl Scheduler {
         self.pop_locked(&mut st)
     }
 
+    /// Non-blocking pop biased by a caller-supplied score (lower is
+    /// better): among the fairness-selected tenant's pending requests,
+    /// take the best-scoring one, breaking score ties with the base
+    /// policy order. The pool's lane-aware admission scores requests by
+    /// lane-group compatibility (matching exit policy, predicted-shallow
+    /// traffic) so a warm group is completed before a solo is started.
+    pub fn try_pop_preferring<F>(
+        &self,
+        score: F,
+    ) -> Option<(ServeRequest, f64)>
+    where
+        F: Fn(&ServeRequest) -> i64,
+    {
+        let mut st = self.state.lock().unwrap();
+        let cands = self.candidates(&st);
+        if cands.is_empty() {
+            return None;
+        }
+        let best = cands
+            .iter()
+            .map(|&i| score(&st.pending[i].req))
+            .min()
+            .unwrap();
+        let narrowed: Vec<usize> = cands
+            .into_iter()
+            .filter(|&i| score(&st.pending[i].req) == best)
+            .collect();
+        let i = self.select_among(&st.pending, &narrowed)?;
+        self.take(&mut st, i)
+    }
+
+    /// Deadline-urgency pop, the preemption trigger: find the pending
+    /// deadlined request with the least slack; if that slack is within
+    /// `horizon` (or the deadline already passed) *and* `pred` approves
+    /// it (the pool checks "is there a parkable victim and park-store
+    /// room"), remove and return it. `None` otherwise — the request
+    /// stays queued for the normal dispatch path. Non-blocking; ignores
+    /// the base policy and fairness order deliberately (urgency), though
+    /// the popped tenant is still charged its virtual time.
+    pub fn pop_urgent_when<F>(
+        &self,
+        horizon: Duration,
+        mut pred: F,
+    ) -> Option<(ServeRequest, f64)>
+    where
+        F: FnMut(&ServeRequest) -> bool,
+    {
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        let mut best: Option<(Instant, usize)> = None;
+        for (i, q) in st.pending.iter().enumerate() {
+            if let Some(d) = q.req.deadline {
+                let due = q.enqueued + d;
+                let better = match best {
+                    None => true,
+                    Some((bd, _)) => due < bd,
+                };
+                if better {
+                    best = Some((due, i));
+                }
+            }
+        }
+        let (due, i) = best?;
+        if due.saturating_duration_since(now) > horizon {
+            return None;
+        }
+        if !pred(&st.pending[i].req) {
+            return None;
+        }
+        self.take(&mut st, i)
+    }
+
     /// Select-and-remove core shared by `pop` and `try_pop`.
     fn pop_locked(&self, st: &mut State) -> Option<(ServeRequest, f64)> {
-        let i = self.select(&st.pending)?;
+        let cands = self.candidates(st);
+        let i = self.select_among(&st.pending, &cands)?;
+        self.take(st, i)
+    }
+
+    /// Remove index `i`, charging tenant virtual time when fairness is
+    /// on (`v_t += max_new / w_t`; `max_new` is the service proxy).
+    fn take(&self, st: &mut State, i: usize) -> Option<(ServeRequest, f64)> {
         let q = st.pending.remove(i).unwrap();
+        if !self.weights.is_empty() {
+            let t = self.tenant_of(&q.req);
+            st.vnow = st.vtime[t];
+            st.vtime[t] +=
+                q.req.max_new.max(1) as f64 / self.weights[t].max(1e-9);
+        }
         Some((q.req, q.enqueued.elapsed().as_secs_f64()))
     }
 
-    /// Index of the next request under the configured policy.
-    fn select(&self, pending: &VecDeque<Queued>) -> Option<usize> {
-        if pending.is_empty() {
+    /// Candidate indices for the next dispatch: everything, or — with
+    /// fairness on — the pending requests of the minimum-virtual-time
+    /// tenant.
+    fn candidates(&self, st: &State) -> Vec<usize> {
+        if self.weights.is_empty() {
+            return (0..st.pending.len()).collect();
+        }
+        let Some(t) = self.pick_tenant(st) else {
+            return Vec::new();
+        };
+        (0..st.pending.len())
+            .filter(|&i| self.tenant_of(&st.pending[i].req) == t)
+            .collect()
+    }
+
+    /// The pending tenant with the smallest virtual time (ties to the
+    /// lower tenant id).
+    fn pick_tenant(&self, st: &State) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for q in &st.pending {
+            let t = self.tenant_of(&q.req);
+            let v = st.vtime[t];
+            let better = match best {
+                None => true,
+                Some((bv, bt)) => v < bv || (v == bv && t < bt),
+            };
+            if better {
+                best = Some((v, t));
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+
+    fn tenant_of(&self, r: &ServeRequest) -> usize {
+        if r.tenant < self.weights.len() {
+            r.tenant
+        } else {
+            0
+        }
+    }
+
+    /// Index of the next request under the configured policy, restricted
+    /// to `cands` (ascending pending indices).
+    fn select_among(
+        &self,
+        pending: &VecDeque<Queued>,
+        cands: &[usize],
+    ) -> Option<usize> {
+        if cands.is_empty() {
             return None;
         }
         match self.policy {
-            Policy::Fifo => Some(0),
+            // Candidates are ascending, so min index = earliest arrival.
+            Policy::Fifo => cands.first().copied(),
             // Ties break by arrival order (stable min over index).
-            Policy::ShortestPromptFirst => (0..pending.len())
+            Policy::ShortestPromptFirst => cands
+                .iter()
+                .copied()
                 .min_by_key(|&i| (pending[i].req.prompt.len(), i)),
             // Highest priority; then earliest absolute deadline, with
             // deadline-less requests last; then arrival order.
-            Policy::Priority => (0..pending.len()).min_by_key(|&i| {
+            Policy::Priority => cands.iter().copied().min_by_key(|&i| {
                 let q = &pending[i];
                 let due = q.req.deadline.map(|d| q.enqueued + d);
                 (
@@ -310,6 +649,7 @@ mod tests {
         assert!(s.push(req(0, "a")));
         s.close();
         assert!(!s.push(req(1, "b")), "push after close must be rejected");
+        assert_eq!(s.submit(req(2, "c")), Admission::Closed);
         assert_eq!(s.len(), 1, "rejected request must not be queued");
         assert_eq!(s.pop().unwrap().0.id, 0);
         assert!(s.pop().is_none());
@@ -362,5 +702,283 @@ mod tests {
         assert_eq!(Policy::parse("priority").unwrap(), Policy::Priority);
         assert_eq!(Policy::parse("edf").unwrap(), Policy::Priority);
         assert!(Policy::parse("lifo").is_err());
+    }
+
+    // ---- admission control / shedding ----
+
+    fn sched_with(shed: ShedPolicy, weights: &[f64]) -> Scheduler {
+        Scheduler::new_with(SchedConfig {
+            policy: Policy::Fifo,
+            shed: Some(shed),
+            tenant_weights: weights.to_vec(),
+        })
+    }
+
+    #[test]
+    fn queue_depth_bound_sheds_with_typed_reason() {
+        let s = sched_with(
+            ShedPolicy { max_queue_depth: 2, ..ShedPolicy::default() },
+            &[],
+        );
+        assert_eq!(s.submit(req(0, "a")), Admission::Queued);
+        assert_eq!(s.submit(req(1, "b")), Admission::Queued);
+        match s.submit(req(2, "c")) {
+            Admission::Shed(ShedReason::QueueFull { depth, limit }) => {
+                assert_eq!((depth, limit), (2, 2));
+            }
+            other => panic!("expected queue-full shed, got {other:?}"),
+        }
+        assert_eq!(s.len(), 2, "shed request must not be queued");
+        assert_eq!(s.shed_count(), 1);
+        // Draining makes room again.
+        assert!(s.try_pop().is_some());
+        assert_eq!(s.submit(req(3, "d")), Admission::Queued);
+    }
+
+    #[test]
+    fn predicted_ttft_bound_sheds_once_primed() {
+        let s = sched_with(
+            ShedPolicy {
+                max_predicted_ttft: Some(Duration::from_millis(1500)),
+                ..ShedPolicy::default()
+            },
+            &[],
+        );
+        // Unprimed EMA: everything admits regardless of depth.
+        for id in 0..3 {
+            assert_eq!(s.submit(req(id, "a")), Admission::Queued);
+        }
+        // Prime at 1s per request: depth 3 predicts 3s > 1.5s.
+        s.note_done(1.0);
+        match s.submit(req(3, "b")) {
+            Admission::Shed(ShedReason::PredictedTtft {
+                predicted_ms,
+                limit_ms,
+            }) => {
+                assert_eq!(limit_ms, 1500);
+                assert!(predicted_ms >= 2999, "{predicted_ms}");
+            }
+            other => panic!("expected TTFT shed, got {other:?}"),
+        }
+        // Drain to depth 1: predicted 1s <= 1.5s admits again.
+        assert!(s.try_pop().is_some());
+        assert!(s.try_pop().is_some());
+        assert_eq!(s.submit(req(4, "c")), Admission::Queued);
+    }
+
+    #[test]
+    fn degrade_clamps_budget_past_soft_depth() {
+        let s = sched_with(
+            ShedPolicy {
+                degrade_depth: 1,
+                degrade_max_new: 4,
+                ..ShedPolicy::default()
+            },
+            &[],
+        );
+        assert_eq!(s.submit(req(0, "a")), Admission::Queued);
+        assert_eq!(
+            s.submit(req(1, "b")),
+            Admission::Degraded { max_new: 4 }
+        );
+        // Already under the degraded budget: queued untouched.
+        assert_eq!(
+            s.submit(ServeRequest::new(2, "c", 2)),
+            Admission::Queued
+        );
+        assert_eq!(s.degraded_count(), 1);
+        let budgets: Vec<usize> =
+            std::iter::from_fn(|| s.try_pop().map(|(r, _)| r.max_new))
+                .collect();
+        assert_eq!(budgets, vec![8, 4, 2]);
+    }
+
+    /// Property: shedding is monotone in offered load — at a fixed depth
+    /// bound, submitting a prefix of the same arrival sequence never
+    /// sheds more than submitting the whole thing.
+    #[test]
+    fn prop_shedding_monotone_in_load() {
+        crate::util::proptest::check("shed monotone", 64, |rng| {
+            let limit = 1 + rng.below(6);
+            let total = 2 + rng.below(24);
+            let cut = rng.below(total + 1);
+            let shed_upto = |n: usize| -> u64 {
+                let s = sched_with(
+                    ShedPolicy {
+                        max_queue_depth: limit,
+                        ..ShedPolicy::default()
+                    },
+                    &[],
+                );
+                for id in 0..n {
+                    let _ = s.submit(req(id as u64, "x"));
+                }
+                s.shed_count()
+            };
+            let (partial, full) = (shed_upto(cut), shed_upto(total));
+            if partial > full {
+                return Err(format!(
+                    "{cut} arrivals shed {partial} but {total} shed {full} \
+                     (limit {limit})"
+                ));
+            }
+            // With no draining, the counts are exactly determined.
+            let want = total.saturating_sub(limit) as u64;
+            if full != want {
+                return Err(format!(
+                    "expected {want} sheds at depth limit {limit} over \
+                     {total} arrivals, got {full}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    // ---- weighted tenant fairness ----
+
+    #[test]
+    fn weighted_fairness_splits_backlogged_tenants_by_weight() {
+        let s = sched_with(ShedPolicy::default(), &[3.0, 1.0]);
+        for id in 0..40u64 {
+            assert!(s.push(req(id, "x").with_tenant((id % 2) as usize)));
+        }
+        // Both tenants stay backlogged for the first 20 pops: tenant 0
+        // (weight 3) should take ~3 of every 4 dispatches.
+        let mut counts = [0usize; 2];
+        for _ in 0..20 {
+            let (r, _) = s.try_pop().unwrap();
+            counts[r.tenant] += 1;
+        }
+        assert!(
+            (14..=16).contains(&counts[0]),
+            "weight-3 tenant took {} of 20",
+            counts[0]
+        );
+        // Everything still drains.
+        while s.try_pop().is_some() {}
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn idle_tenant_cannot_bank_credit() {
+        let s = sched_with(ShedPolicy::default(), &[1.0, 1.0]);
+        // Tenant 0 runs alone for a while.
+        for id in 0..10u64 {
+            assert!(s.push(req(id, "x").with_tenant(0)));
+        }
+        for _ in 0..10 {
+            assert!(s.try_pop().is_some());
+        }
+        // Tenant 1 arrives with a burst; both tenants now pending.
+        for id in 10..20u64 {
+            assert!(s.push(req(id, "x").with_tenant(1)));
+        }
+        for id in 20..30u64 {
+            assert!(s.push(req(id, "x").with_tenant(0)));
+        }
+        // Equal weights from here: the first 8 pops cannot all go to the
+        // returning tenant (the catch-up clamp erased its idle credit).
+        let mut counts = [0usize; 2];
+        for _ in 0..8 {
+            counts[s.try_pop().unwrap().0.tenant] += 1;
+        }
+        assert!(
+            counts[0] >= 3 && counts[1] >= 3,
+            "post-idle dispatch should interleave, got {counts:?}"
+        );
+    }
+
+    /// Property: under random bursty arrivals with both tenants kept
+    /// backlogged, dispatch shares converge to the configured weights.
+    #[test]
+    fn prop_weighted_shares_converge_under_bursts() {
+        crate::util::proptest::check("fairness converges", 32, |rng| {
+            let w0 = 1.0 + rng.below(4) as f64;
+            let w1 = 1.0 + rng.below(4) as f64;
+            let s = sched_with(ShedPolicy::default(), &[w0, w1]);
+            // Random interleaved bursts, everything enqueued up front so
+            // both tenants stay backlogged throughout the drain.
+            let mut id = 0u64;
+            let mut per_tenant = [0usize; 2];
+            while per_tenant[0] < 30 || per_tenant[1] < 30 {
+                let t = rng.below(2);
+                let burst = 1 + rng.below(6);
+                for _ in 0..burst {
+                    assert!(s.push(req(id, "x").with_tenant(t)));
+                    per_tenant[t] += 1;
+                    id += 1;
+                }
+            }
+            // Pop while both tenants still have pending work; count
+            // dispatches.
+            let mut served = [0usize; 2];
+            let mut pending = per_tenant;
+            while pending[0] > 0 && pending[1] > 0 {
+                let (r, _) = s.try_pop().unwrap();
+                served[r.tenant] += 1;
+                pending[r.tenant] -= 1;
+            }
+            let total = (served[0] + served[1]) as f64;
+            if total < 20.0 {
+                return Ok(()); // degenerate drain, too short to judge
+            }
+            let want0 = w0 / (w0 + w1);
+            let got0 = served[0] as f64 / total;
+            if (got0 - want0).abs() > 0.15 {
+                return Err(format!(
+                    "weights ({w0},{w1}): tenant0 share {got0:.3}, \
+                     want {want0:.3} (served {served:?})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    // ---- deadline urgency (the preemption trigger) ----
+
+    #[test]
+    fn pop_urgent_only_fires_within_horizon() {
+        let s = Scheduler::new(Policy::Fifo);
+        assert!(s.push(req(0, "no deadline")));
+        assert!(s.push(
+            req(1, "far").with_deadline(Duration::from_secs(600))
+        ));
+        // Nothing urgent: deadline-less and far-future requests stay.
+        assert!(s
+            .pop_urgent_when(Duration::from_millis(50), |_| true)
+            .is_none());
+        assert_eq!(s.len(), 2);
+        // A near deadline within the horizon pops past FIFO order.
+        assert!(s.push(
+            req(2, "soon").with_deadline(Duration::from_millis(10))
+        ));
+        let (r, _) = s
+            .pop_urgent_when(Duration::from_secs(1), |_| true)
+            .expect("urgent request");
+        assert_eq!(r.id, 2);
+        // The predicate can veto (no victim / no park room): request
+        // stays queued.
+        assert!(s.push(
+            req(3, "soon2").with_deadline(Duration::from_millis(10))
+        ));
+        assert!(s
+            .pop_urgent_when(Duration::from_secs(1), |_| false)
+            .is_none());
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn try_pop_preferring_biases_by_score_then_policy() {
+        let s = Scheduler::new(Policy::Fifo);
+        assert!(s.push(req(0, "a")));
+        assert!(s.push(req(1, "b")));
+        assert!(s.push(req(2, "c")));
+        // Prefer odd ids: 1 wins despite FIFO order; ties (0 vs 2) then
+        // fall back to FIFO.
+        let score = |r: &ServeRequest| if r.id % 2 == 1 { 0 } else { 1 };
+        assert_eq!(s.try_pop_preferring(score).unwrap().0.id, 1);
+        assert_eq!(s.try_pop_preferring(score).unwrap().0.id, 0);
+        assert_eq!(s.try_pop_preferring(score).unwrap().0.id, 2);
+        assert!(s.try_pop_preferring(score).is_none());
     }
 }

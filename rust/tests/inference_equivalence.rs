@@ -15,7 +15,8 @@ use eellm::inference::{
 };
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
+    ControlConfig, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
+    ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -193,6 +194,7 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 prefix_cache_positions: 0,
                 lane_fusion: false,
                 lane_residency: true,
+                control: ControlConfig::default(),
             },
         );
         let reqs: Vec<ServeRequest> = prompts
@@ -278,6 +280,7 @@ fn continuous_batching_streams_and_admits_mid_flight() {
             prefix_cache_positions: 0,
             lane_fusion: false,
             lane_residency: true,
+            control: ControlConfig::default(),
         },
     );
     let reqs: Vec<ServeRequest> = long
@@ -384,6 +387,7 @@ fn batch_reports_per_request_failures() {
             prefix_cache_positions: 0,
             lane_fusion: false,
             lane_residency: true,
+            control: ControlConfig::default(),
         },
     );
     let out = pool.run_batch(reqs).unwrap();

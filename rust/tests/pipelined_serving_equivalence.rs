@@ -28,8 +28,8 @@ use eellm::inference::{
 };
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    BatchOutcome, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
-    ServeRequest,
+    BatchOutcome, ControlConfig, EngineKind, EnginePool, Policy,
+    PoolConfig, ServeEvent, ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -101,6 +101,7 @@ fn pooled_streams(
             prefix_cache_positions,
             lane_fusion: true,
             lane_residency: true,
+            control: ControlConfig::default(),
         },
     );
     let mut streams: Streams = BTreeMap::new();

@@ -26,7 +26,8 @@ use eellm::inference::{
 };
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    EngineKind, EnginePool, Policy, PoolConfig, ServeRequest,
+    ControlConfig, EngineKind, EnginePool, Policy, PoolConfig,
+    ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -298,6 +299,7 @@ fn pooled_per_request_policies_match_serial() {
             prefix_cache_positions: 0,
             lane_fusion: false,
             lane_residency: true,
+            control: ControlConfig::default(),
         },
     );
     let reqs: Vec<ServeRequest> = PROMPTS

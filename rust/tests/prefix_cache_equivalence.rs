@@ -23,7 +23,8 @@ use eellm::inference::{
 };
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    EngineKind, EnginePool, Policy, PoolConfig, ServeEvent, ServeRequest,
+    ControlConfig, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
+    ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -272,6 +273,7 @@ fn pooled_prefix_cache_matches_disabled_and_saves_prefill() {
                     prefix_cache_positions: budget,
                     lane_fusion: false,
                     lane_residency: true,
+                    control: ControlConfig::default(),
                 },
             );
             let reqs: Vec<ServeRequest> = prompts
@@ -363,6 +365,7 @@ fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
                     prefix_cache_positions: 16 * man.model.max_seq,
                     lane_fusion: false,
                     lane_residency: true,
+                    control: ControlConfig::default(),
                 },
             );
             let stores: Vec<_> = pool.prefix_stores().to_vec();

@@ -30,8 +30,8 @@ use eellm::inference::{
 };
 use eellm::runtime::artifacts::Manifest;
 use eellm::serve::{
-    BatchOutcome, EngineKind, EnginePool, Policy, PoolConfig, ServeEvent,
-    ServeRequest,
+    BatchOutcome, ControlConfig, EngineKind, EnginePool, Policy,
+    PoolConfig, ServeEvent, ServeRequest,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 
@@ -103,6 +103,7 @@ fn pooled_streams(
             prefix_cache_positions,
             lane_fusion: true,
             lane_residency,
+            control: ControlConfig::default(),
         },
     );
     let mut streams: Streams = BTreeMap::new();

@@ -1,0 +1,684 @@
+//! Integration: the SLO control plane must be **lossless and typed**.
+//!
+//! Deadline-driven preemption parks a live [`DecodeSession`] as a host
+//! snapshot and resumes it later; that park/resume cycle must be
+//! output-invisible — token-for-token and exit-layer-for-exit-layer
+//! identical to an uninterrupted run — on both engines, across exit
+//! policies (including the `Confidence{1.0}` and `Never` full-model
+//! baselines), and on sessions restored from a prefix-cache hit. Park
+//! and resume faults must surface as typed per-request failures without
+//! deadlocking the pool or wiping the batch, admission control must
+//! surface sheds as first-class [`Outcome`]s, and under `Priority` +
+//! preemption the deadline-miss rate at fixed offered load must be
+//! strictly lower than the no-preemption baseline.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{bursty_traffic, Corpus, CorpusSpec, TrafficSpec};
+use eellm::inference::{
+    DecodeBackend, DecodeSession, ExitPolicy, ModelState, PipelinedEngine,
+    PrefixCacheStore, SequentialEngine, StepEvent,
+};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    BatchOutcome, ControlConfig, ControlFault, EngineKind, EnginePool,
+    Outcome, Policy, PoolConfig, ServeEvent, ServeRequest, ShedPolicy,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so confidences are meaningful (same recipe as
+/// the sibling equivalence suites).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+/// Drain one serial session, collecting its (token, exit layer) stream.
+fn serial_stream(
+    backend: &mut dyn DecodeBackend,
+    prompt: &str,
+    max_new: usize,
+) -> Vec<(i32, usize)> {
+    let mut s = DecodeSession::new_text(backend, prompt, max_new).unwrap();
+    s.prefill(backend).unwrap();
+    let mut out = Vec::new();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    s.close(backend);
+    out
+}
+
+/// Decode `prompt`, parking the session after `park_after` tokens and
+/// resuming it after a whole *other* session used the freed engine —
+/// returning the stitched stream, or `None` if the stream finished
+/// before the park point (nothing to prove there).
+fn park_resume_stream(
+    backend: &mut dyn DecodeBackend,
+    prompt: &str,
+    max_new: usize,
+    park_after: usize,
+    side_prompt: &str,
+) -> Option<Vec<(i32, usize)>> {
+    let mut s = DecodeSession::new_text(backend, prompt, max_new).unwrap();
+    s.prefill(backend).unwrap();
+    let mut out = Vec::new();
+    while out.len() < park_after && !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    if s.is_done() {
+        s.close(backend);
+        return None;
+    }
+    let parked = s.park(backend).unwrap();
+    // The freed slot is genuinely free: run a full unrelated session
+    // while the snapshot sits parked.
+    assert!(
+        !serial_stream(backend, side_prompt, 4).is_empty(),
+        "side session on the freed engine emitted nothing"
+    );
+    let mut s = parked.resume(backend).unwrap();
+    while !s.is_done() {
+        if let StepEvent::Token { token, exit_layer, .. } =
+            s.step(backend).unwrap()
+        {
+            out.push((token, exit_layer));
+        }
+    }
+    s.close(backend);
+    Some(out)
+}
+
+const PROMPTS: [&str; 6] = [
+    "the capital of ",
+    "question: what is the ",
+    "count: 3 4 5 ",
+    "abc: a b c d ",
+    "the color of ",
+    "fact: the capital ",
+];
+
+/// The headline bar: a session parked mid-decode and later resumed
+/// emits a stream identical to an uninterrupted run, on both engines,
+/// across >= 3 exit policies including the `Confidence{1.0}` and
+/// `Never` full-model baselines.
+#[test]
+fn parked_session_resumes_identical_stream_on_both_engines() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policies = [
+        ExitPolicy::confidence(0.4),
+        ExitPolicy::confidence(1.0),
+        ExitPolicy::Never,
+        ExitPolicy::Entropy { max_nats: 1.0 },
+    ];
+    fn check(backend: &mut dyn DecodeBackend, label: &str) {
+        let mut parked = 0;
+        for (i, p) in PROMPTS.iter().enumerate() {
+            let want = serial_stream(backend, p, 10);
+            assert!(!want.is_empty(), "{label}: empty stream for {p:?}");
+            let side = PROMPTS[(i + 1) % PROMPTS.len()];
+            if let Some(got) =
+                park_resume_stream(backend, p, 10, 2, side)
+            {
+                parked += 1;
+                assert_eq!(
+                    got, want,
+                    "{label}, prompt {p:?}: parked-and-resumed stream \
+                     diverged from the uninterrupted run"
+                );
+            }
+        }
+        assert!(parked > 0, "{label}: no prompt survived to the park point");
+    }
+    for policy in &policies {
+        let mut seq =
+            SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+        check(&mut seq, &format!("sequential/{policy}"));
+        let mut pipe =
+            PipelinedEngine::new(state.clone(), policy.clone()).unwrap();
+        check(&mut pipe, &format!("pipelined/{policy}"));
+        pipe.shutdown();
+    }
+}
+
+/// Park/resume composes with the prefix KV cache: a session restored
+/// from a cached prefix, parked mid-decode, and resumed still matches
+/// the uninterrupted cache-off stream, on both engines.
+#[test]
+fn parked_resume_with_prefix_cache_on() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policy = ExitPolicy::confidence(0.6);
+    let prefix = "fact: the capital of freedonia is ";
+    let prompt = format!("{prefix}a city called ");
+    fn check(
+        backend: &mut dyn DecodeBackend,
+        label: &str,
+        prefix: &str,
+        prompt: &str,
+        budget: usize,
+    ) {
+        let want = serial_stream(backend, prompt, 8);
+        assert!(!want.is_empty(), "{label}: empty reference stream");
+        let store = PrefixCacheStore::new(budget);
+        let mut d = DecodeSession::new_text(backend, prefix, 8).unwrap();
+        d.prefill(backend).unwrap();
+        assert!(store.insert(d.prefix_snapshot(backend).unwrap()));
+        d.close(backend);
+        let mut s = DecodeSession::new_text(backend, prompt, 8).unwrap();
+        let rep = s.prefill_with_cache(backend, &store).unwrap();
+        assert!(
+            rep.cached_tokens > 0 && rep.saved_positions > 0,
+            "{label}: prefix restore missed: {rep:?}"
+        );
+        let mut got = Vec::new();
+        while got.len() < 2 && !s.is_done() {
+            if let StepEvent::Token { token, exit_layer, .. } =
+                s.step(backend).unwrap()
+            {
+                got.push((token, exit_layer));
+            }
+        }
+        assert!(!s.is_done(), "{label}: stream ended before the park");
+        let parked = s.park(backend).unwrap();
+        let mut s = parked.resume(backend).unwrap();
+        while !s.is_done() {
+            if let StepEvent::Token { token, exit_layer, .. } =
+                s.step(backend).unwrap()
+            {
+                got.push((token, exit_layer));
+            }
+        }
+        s.close(backend);
+        assert_eq!(
+            got, want,
+            "{label}: cache-hit + park/resume diverged from the \
+             uninterrupted cache-off stream"
+        );
+    }
+    let budget = 8 * man.model.max_seq;
+    let mut seq =
+        SequentialEngine::new(state.clone(), policy.clone()).unwrap();
+    check(&mut seq, "sequential", prefix, &prompt, budget);
+    let mut pipe = PipelinedEngine::new(state.clone(), policy).unwrap();
+    check(&mut pipe, "pipelined", prefix, &prompt, budget);
+    pipe.shutdown();
+}
+
+const BLOCKER: &str = "abc: a b c d ";
+const URGENT: &str = "the capital of ";
+
+fn control_cfg(
+    engine: EngineKind,
+    sched: Policy,
+    preempt: bool,
+    fault: Option<ControlFault>,
+) -> PoolConfig {
+    PoolConfig {
+        workers: 1,
+        engine,
+        policy: ExitPolicy::confidence(0.4),
+        sched,
+        max_concurrent: 1,
+        prefix_cache_positions: 0,
+        lane_fusion: true,
+        lane_residency: true,
+        control: ControlConfig {
+            preempt,
+            // Any queued deadline counts as urgent — the tests pin
+            // urgency via the deadline, not the horizon.
+            preempt_horizon: Duration::from_secs(60),
+            park_capacity: 1,
+            shed: None,
+            tenant_weights: Vec::new(),
+            fault,
+        },
+    }
+}
+
+/// Time one solo decode on a fresh engine (after a warmup decode, so
+/// the measurement is serving time, not first-call setup).
+fn solo_seconds(state: &ModelState, prompt: &str, max_new: usize) -> f64 {
+    let mut eng = SequentialEngine::new(
+        state.clone(),
+        ExitPolicy::confidence(0.4),
+    )
+    .unwrap();
+    let _ = serial_stream(&mut eng, prompt, max_new);
+    let t0 = Instant::now();
+    let _ = serial_stream(&mut eng, prompt, max_new);
+    t0.elapsed().as_secs_f64()
+}
+
+/// A blocker holding the only live slot, then an urgent deadlined
+/// request arriving mid-decode: the pool must park the blocker, serve
+/// the urgent request, and resume the blocker — with BOTH streams
+/// identical to uninterrupted solo runs, on both engines.
+#[test]
+fn pool_preemption_is_output_invisible() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let t_b = solo_seconds(&state, BLOCKER, 24);
+    let offset = Duration::from_secs_f64((t_b / 8.0).max(0.002));
+    for &engine in &[EngineKind::Sequential, EngineKind::Pipelined] {
+        let policy = ExitPolicy::confidence(0.4);
+        let (want_blocker, want_urgent) = match engine {
+            EngineKind::Sequential => {
+                let mut e =
+                    SequentialEngine::new(state.clone(), policy.clone())
+                        .unwrap();
+                (serial_stream(&mut e, BLOCKER, 24),
+                 serial_stream(&mut e, URGENT, 4))
+            }
+            EngineKind::Pipelined => {
+                let mut e =
+                    PipelinedEngine::new(state.clone(), policy.clone())
+                        .unwrap();
+                let w = (serial_stream(&mut e, BLOCKER, 24),
+                         serial_stream(&mut e, URGENT, 4));
+                e.shutdown();
+                w
+            }
+        };
+        let reqs = vec![
+            ServeRequest::new(0, BLOCKER, 24),
+            ServeRequest::new(1, URGENT, 4)
+                .with_deadline(Duration::from_millis(1))
+                .with_start_after(offset),
+        ];
+        let mut pool = EnginePool::new(
+            state.clone(),
+            control_cfg(engine, Policy::Fifo, true, None),
+        );
+        let mut streams: BTreeMap<u64, Vec<(i32, usize)>> = BTreeMap::new();
+        let out = pool
+            .run_batch_streamed(reqs, |ev| {
+                if let ServeEvent::Token { id, token, exit_layer, .. } = ev
+                {
+                    streams
+                        .entry(*id)
+                        .or_default()
+                        .push((*token, *exit_layer));
+                }
+            })
+            .unwrap();
+        pool.shutdown().unwrap();
+        assert!(out.failures.is_empty(), "{engine:?}: {:?}", out.failures);
+        assert!(out.sheds.is_empty());
+        assert_eq!(out.responses.len(), 2, "{engine:?}");
+        let s = &out.metrics.slo;
+        assert_eq!(
+            s.preemptions, 1,
+            "{engine:?}: the urgent arrival did not preempt the \
+             blocker: {s:?}"
+        );
+        assert_eq!(s.resumes, 1, "{engine:?}: {s:?}");
+        assert_eq!(s.park_failures + s.resume_failures, 0, "{engine:?}");
+        assert_eq!(s.parked_peak, 1, "{engine:?}: {s:?}");
+        assert_eq!(
+            streams[&0], want_blocker,
+            "{engine:?}: preempted-and-resumed blocker stream diverged \
+             from its uninterrupted solo run"
+        );
+        assert_eq!(
+            streams[&1], want_urgent,
+            "{engine:?}: urgent stream diverged from its solo run"
+        );
+    }
+}
+
+/// Run a pool batch on its own thread with a watchdog: fault-injection
+/// bugs must surface as typed failures, never as a hung completion
+/// loop.
+fn run_with_watchdog(
+    state: ModelState,
+    cfg: PoolConfig,
+    reqs: Vec<ServeRequest>,
+) -> BatchOutcome {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let mut pool = EnginePool::new(state, cfg);
+        let out = pool.run_batch(reqs).expect("batch");
+        pool.shutdown().expect("shutdown");
+        let _ = tx.send(out);
+    });
+    let out = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("pool deadlocked under fault injection");
+    h.join().unwrap();
+    out
+}
+
+fn preemption_reqs(state: &ModelState) -> Vec<ServeRequest> {
+    let t_b = solo_seconds(state, BLOCKER, 24);
+    let offset = Duration::from_secs_f64((t_b / 8.0).max(0.002));
+    vec![
+        ServeRequest::new(0, BLOCKER, 24),
+        ServeRequest::new(1, URGENT, 4)
+            .with_deadline(Duration::from_millis(1))
+            .with_start_after(offset),
+    ]
+}
+
+/// An injected snapshot failure during park fails the *victim* request
+/// with a typed error; the urgent request is still admitted and served,
+/// and the pool neither deadlocks nor wipes the batch.
+#[test]
+fn park_fault_is_a_typed_failure_not_a_deadlock() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let reqs = preemption_reqs(&state);
+    let out = run_with_watchdog(
+        state.clone(),
+        control_cfg(
+            EngineKind::Sequential,
+            Policy::Fifo,
+            true,
+            Some(ControlFault::ParkSnapshot),
+        ),
+        reqs,
+    );
+    assert_eq!(out.failures.len(), 1, "{:?}", out.failures);
+    let f = &out.failures[0];
+    assert_eq!(f.id, 0, "the park fault must fail the victim");
+    assert!(
+        f.error.contains("park failed") && f.error.contains("injected"),
+        "untyped park failure: {f:?}"
+    );
+    assert_eq!(out.responses.len(), 1);
+    assert_eq!(out.responses[0].id, 1, "the urgent request must survive");
+    let s = &out.metrics.slo;
+    assert_eq!(s.park_failures, 1, "{s:?}");
+    assert_eq!(s.preemptions, 0, "a failed park is not a preemption");
+    assert_eq!(s.resumes, 0, "{s:?}");
+    // Typed outcomes cover the whole batch, in id order.
+    let outcomes = out.outcomes();
+    assert_eq!(outcomes.len(), 2);
+    assert!(matches!(outcomes[0], Outcome::Failed(_)));
+    assert!(matches!(outcomes[1], Outcome::Done(_)));
+}
+
+/// An injected restore failure during resume fails the parked request
+/// with a typed error after the urgent request completed; no deadlock,
+/// no batch wipe.
+#[test]
+fn resume_fault_is_a_typed_failure_not_a_deadlock() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let reqs = preemption_reqs(&state);
+    let out = run_with_watchdog(
+        state.clone(),
+        control_cfg(
+            EngineKind::Sequential,
+            Policy::Fifo,
+            true,
+            Some(ControlFault::ResumeRestore),
+        ),
+        reqs,
+    );
+    assert_eq!(out.failures.len(), 1, "{:?}", out.failures);
+    let f = &out.failures[0];
+    assert_eq!(f.id, 0, "the resume fault must fail the parked victim");
+    assert!(
+        f.error.contains("resume failed") && f.error.contains("injected"),
+        "untyped resume failure: {f:?}"
+    );
+    assert_eq!(out.responses.len(), 1);
+    assert_eq!(out.responses[0].id, 1);
+    let s = &out.metrics.slo;
+    assert_eq!(s.preemptions, 1, "the park itself must have succeeded");
+    assert_eq!(s.resume_failures, 1, "{s:?}");
+    assert_eq!(s.resumes, 0, "{s:?}");
+}
+
+/// The regression bar: under `Policy::Priority` at fixed offered load,
+/// preemption strictly lowers the deadline-miss rate versus the
+/// no-preemption baseline.
+#[test]
+fn contended_priority_preemption_strictly_lowers_miss_rate() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let t_u = solo_seconds(&state, URGENT, 2);
+    let t_b = solo_seconds(&state, BLOCKER, 24);
+    if t_b < 6.0 * t_u {
+        eprintln!(
+            "skipping: blocker/urgent service ratio too small for a \
+             crisp contrast ({t_b:.4}s vs {t_u:.4}s)"
+        );
+        return;
+    }
+    // The urgent request arrives while the blocker holds the only live
+    // slot; its deadline is far beyond its own service time but well
+    // inside the blocker's remaining runtime — so the baseline must
+    // miss it and the preempting pool must not.
+    let deadline = Duration::from_secs_f64(t_b / 2.0);
+    let offset = Duration::from_secs_f64((t_b / 8.0).max(0.002));
+    let reqs = vec![
+        ServeRequest::new(0, BLOCKER, 24),
+        ServeRequest::new(1, URGENT, 2)
+            .with_deadline(deadline)
+            .with_start_after(offset),
+    ];
+    let mut rates = Vec::new();
+    for &preempt in &[false, true] {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            control_cfg(
+                EngineKind::Sequential,
+                Policy::Priority,
+                preempt,
+                None,
+            ),
+        );
+        let out = pool.run_batch(reqs.clone()).unwrap();
+        pool.shutdown().unwrap();
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        assert_eq!(out.responses.len(), 2);
+        let m = &out.metrics;
+        assert_eq!(m.deadlined, 1);
+        if preempt {
+            assert!(
+                out.metrics.slo.preemptions >= 1,
+                "preemption enabled but never fired: {:?}",
+                out.metrics.slo
+            );
+        } else {
+            assert_eq!(out.metrics.slo.preemptions, 0);
+        }
+        rates.push(m.deadline_miss_rate());
+    }
+    assert!(
+        rates[0] > 0.0,
+        "baseline served the urgent request inside a deadline half the \
+         blocker's runtime — the load was not contended"
+    );
+    assert!(
+        rates[1] < rates[0],
+        "preemption did not strictly lower the deadline-miss rate: \
+         on {} vs off {}",
+        rates[1],
+        rates[0]
+    );
+}
+
+/// Bursty multi-tenant traffic through the full control plane: every
+/// request resolves to exactly one typed outcome (done / shed), shed
+/// events and counters agree, and per-tenant shares are reported with
+/// the heavier-weighted tenant ahead.
+#[test]
+fn bursty_traffic_yields_typed_outcomes_and_tenant_shares() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let spec = TrafficSpec {
+        seed: 13,
+        n_requests: 12,
+        tenants: vec![3.0, 1.0],
+        period: 6,
+        burst_len: 3,
+        deadline_ms: (20, 200),
+        deadline_rate: 0.6,
+        max_new: (2, 6),
+        prompt_bytes: (16, 64),
+    };
+    let traffic = bursty_traffic(&spec, &corpus.facts);
+    assert!(traffic.iter().any(|t| t.tenant == 1), "single-tenant draw");
+    let reqs: Vec<ServeRequest> = traffic
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut r =
+                ServeRequest::new(i as u64, t.prompt.as_str(), t.max_new)
+                    .with_priority(t.priority)
+                    .with_tenant(t.tenant);
+            if let Some(ms) = t.deadline_ms {
+                r = r.with_deadline(Duration::from_millis(ms));
+            }
+            r
+        })
+        .collect();
+    let mut cfg = control_cfg(
+        EngineKind::Sequential,
+        Policy::Priority,
+        true,
+        None,
+    );
+    cfg.max_concurrent = 2;
+    cfg.control.park_capacity = 2;
+    cfg.control.tenant_weights = spec.tenants.clone();
+
+    // Run A — shedding off: every request completes, so per-tenant
+    // accounting covers the full offered load.
+    let mut pool = EnginePool::new(state.clone(), cfg.clone());
+    let out = pool.run_batch(reqs.clone()).unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    assert!(out.sheds.is_empty());
+    assert_eq!(out.responses.len(), 12);
+    // Per-tenant accounting: both tenants reported, shares summing to
+    // ~1, with the 3x-weighted tenant (which also offers ~3x the
+    // traffic) ahead.
+    let tenants = &out.metrics.tenants;
+    assert_eq!(tenants.len(), 2, "{tenants:?}");
+    let total: f64 = tenants.iter().map(|t| t.share).sum();
+    assert!((total - 1.0).abs() < 1e-6, "{tenants:?}");
+    assert!(
+        tenants[0].share > tenants[1].share,
+        "tenant shares do not track 3:1 weights: {tenants:?}"
+    );
+    assert!(out.metrics.p99_ttft_seconds >= out.metrics.p50_ttft_seconds);
+
+    // Run B — a tight queue bound: the burst outruns one worker's
+    // admission by construction, so load is shed as typed outcomes that
+    // agree across events, counters, and the merged view.
+    cfg.control.shed = Some(ShedPolicy {
+        max_queue_depth: 2,
+        max_predicted_ttft: None,
+        ..ShedPolicy::default()
+    });
+    let mut pool = EnginePool::new(state.clone(), cfg);
+    let mut shed_events = 0usize;
+    let out = pool
+        .run_batch_streamed(reqs, |ev| {
+            if matches!(ev, ServeEvent::Shed { .. }) {
+                shed_events += 1;
+            }
+        })
+        .unwrap();
+    pool.shutdown().unwrap();
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    assert!(
+        !out.sheds.is_empty(),
+        "a 12-request burst against a depth-2 queue shed nothing"
+    );
+    assert_eq!(
+        out.responses.len() + out.sheds.len(),
+        12,
+        "a request vanished without a typed outcome"
+    );
+    assert_eq!(shed_events, out.sheds.len());
+    assert_eq!(out.metrics.slo.shed as usize, out.sheds.len());
+    // outcomes() is the merged, id-ordered view of the whole batch.
+    let outcomes = out.outcomes();
+    assert_eq!(outcomes.len(), 12);
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.id(), i as u64);
+        assert!(!matches!(o, Outcome::Failed(_)));
+    }
+}
