@@ -8,18 +8,25 @@
 //! early-exit fraction must grow as the threshold drops, and on the
 //! shared-system-prompt workload the prefix KV cache must score hits and
 //! save prefill positions without changing a single generated token.
+//! The tiered-store section requires the device tier to promote hot
+//! prefixes and serve device hits — again without changing tokens — and
+//! the conversational section requires every follow-up turn to restore
+//! its end-of-turn snapshot, so the positions actually prefilled at turn
+//! N are O(that turn's new text), with warm and cold-replay token
+//! streams identical on both engines.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
 use eellm::data::synth::{
-    bursty_traffic, shared_prefix_prompts, SharedPrefixSpec, TrafficSpec,
+    bursty_traffic, conversation_traffic, shared_prefix_prompts, ConvoSpec,
+    SharedPrefixSpec, TrafficSpec,
 };
 use eellm::data::tasks;
-use eellm::inference::ExitPolicy;
+use eellm::inference::{ExitPolicy, TierStats};
 use eellm::serve::{
-    requests_from_tasks, ControlConfig, EngineKind, EnginePool, Policy,
-    PoolConfig, ServeRequest, ShedPolicy,
+    requests_from_tasks, ControlConfig, ConvoStats, EngineKind, EnginePool,
+    Policy, PoolConfig, ServeRequest, ShedPolicy,
 };
 use eellm::util::table::Table;
 
@@ -57,6 +64,8 @@ fn main() {
                     sched: Policy::ShortestPromptFirst,
                     max_concurrent: 4,
                     prefix_cache_positions: 0,
+                    device_tier_positions: 0,
+                    convo_idle_ttl: std::time::Duration::from_secs(300),
                     // Lanes off here: this section measures worker-pool
                     // scaling alone; the lanes-on/off comparison below
                     // isolates fusion.
@@ -140,6 +149,8 @@ fn main() {
                 sched: Policy::Fifo,
                 max_concurrent: 4,
                 prefix_cache_positions: budget,
+                device_tier_positions: 0,
+                convo_idle_ttl: std::time::Duration::from_secs(300),
                 lane_fusion: false,
                 lane_residency: true,
                 control: ControlConfig::default(),
@@ -199,6 +210,8 @@ fn main() {
                 sched: Policy::Fifo,
                 max_concurrent: 4,
                 prefix_cache_positions: 0,
+                device_tier_positions: 0,
+                convo_idle_ttl: std::time::Duration::from_secs(300),
                 lane_fusion: fusion,
                 lane_residency: true,
                 control: ControlConfig::default(),
@@ -271,6 +284,8 @@ fn main() {
                 sched: Policy::Fifo,
                 max_concurrent: 4,
                 prefix_cache_positions: 0,
+                device_tier_positions: 0,
+                convo_idle_ttl: std::time::Duration::from_secs(300),
                 lane_fusion: true,
                 lane_residency: residency,
                 control: ControlConfig::default(),
@@ -367,6 +382,8 @@ fn main() {
                 sched: Policy::Fifo,
                 max_concurrent: 4,
                 prefix_cache_positions: 0,
+                device_tier_positions: 0,
+                convo_idle_ttl: std::time::Duration::from_secs(300),
                 lane_fusion: true,
                 lane_residency: true,
                 control: ControlConfig::default(),
@@ -441,6 +458,8 @@ fn main() {
         sched: Policy::Priority,
         max_concurrent: 2,
         prefix_cache_positions: 0,
+        device_tier_positions: 0,
+        convo_idle_ttl: std::time::Duration::from_secs(300),
         lane_fusion: false,
         lane_residency: true,
         control: ControlConfig::default(),
@@ -568,5 +587,272 @@ fn main() {
         100.0 * miss_rates[0],
         100.0 * miss_rates[1]
     );
+    // --- Tiered snapshot store: pinned device tier on vs off ---
+    // Three passes of the shared-prefix workload through one pool: the
+    // first seeds the host tier, repeat passes re-read every prefix, so
+    // hot entries cross the promotion threshold and later lookups land
+    // on the device tier. Shape checks: with a device budget the store
+    // promotes hot prefixes and serves device hits, with none it never
+    // does, and tier placement changes no generated token.
+    let mut tier_table = Table::new(
+        "Tiered snapshot store (shared-prefix workload, three passes)",
+        &["device tier", "device hits", "host hits", "promote", "demote",
+          "device hit rate"],
+    );
+    let mut tier_outputs: Vec<Vec<Vec<i32>>> = Vec::new();
+    for &device in &[0usize, 4 * max_seq] {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            PoolConfig {
+                workers: 1,
+                engine: EngineKind::Sequential,
+                policy: ExitPolicy::confidence(0.6),
+                sched: Policy::Fifo,
+                max_concurrent: 4,
+                prefix_cache_positions: 8 * max_seq,
+                device_tier_positions: device,
+                convo_idle_ttl: std::time::Duration::from_secs(300),
+                lane_fusion: false,
+                lane_residency: true,
+                control: ControlConfig::default(),
+            },
+        );
+        let mut tier = TierStats::default();
+        let mut toks: Vec<Vec<i32>> = Vec::new();
+        for _pass in 0..3 {
+            let out = pool.run_batch(shared_reqs.clone()).expect("batch");
+            assert!(out.failures.is_empty(), "{:?}", out.failures);
+            tier.merge(&out.metrics.tier);
+            let mut pass: Vec<(u64, Vec<i32>)> = out
+                .responses
+                .iter()
+                .map(|x| (x.id, x.output.tokens.clone()))
+                .collect();
+            pass.sort_by_key(|(id, _)| *id);
+            toks.extend(pass.into_iter().map(|(_, t)| t));
+        }
+        pool.shutdown().expect("shutdown");
+        tier_table.row(vec![
+            if device == 0 { "off".into() } else { format!("{device} pos") },
+            format!("{}", tier.device_hits),
+            format!("{}", tier.host_hits),
+            format!("{}", tier.promotions),
+            format!("{}", tier.demotions),
+            format!("{:.0}%", 100.0 * tier.device_hit_rate()),
+        ]);
+        assert!(
+            tier.device_hits + tier.host_hits > 0,
+            "shared prefixes scored no snapshot hits: {tier:?}"
+        );
+        if device == 0 {
+            assert_eq!(
+                tier.device_hits, 0,
+                "device tier off but served a hit: {tier:?}"
+            );
+            assert_eq!(
+                tier.promotions, 0,
+                "device tier off but promoted: {tier:?}"
+            );
+        } else {
+            assert!(
+                tier.promotions > 0,
+                "hot prefixes never promoted: {tier:?}"
+            );
+            assert!(
+                tier.device_hits > 0,
+                "promoted prefixes never served a device hit: {tier:?}"
+            );
+        }
+        tier_outputs.push(toks);
+    }
+    tier_table.emit("serving_throughput");
+    assert_eq!(
+        tier_outputs[0], tier_outputs[1],
+        "device tier changed generated tokens"
+    );
+
+    // --- Conversational serving: end-of-turn snapshots across turns ---
+    // A multi-turn chat workload through a snapshot-enabled pool: every
+    // completed turn stores its prompt-plus-generated KV state, and the
+    // conversation's next turn restores it, prefilling only its own new
+    // text. Shape checks, per engine at threshold 1.0 (deficit-free, so
+    // the accounting is exact): round 0 registers every conversation as
+    // a first turn; every later round restores a snapshot for every
+    // conversation (no misses) and the positions actually prefilled are
+    // bounded by the round's new user text plus a few tokens of slack
+    // per turn — turn-N prefill is O(new turn), not O(history). A cold
+    // replay of the byte-identical prompts through a snapshot-free pool
+    // must generate identical token streams.
+    let convo_spec = ConvoSpec {
+        seed: 17,
+        n_conversations: if bench_util::fast() { 3 } else { 5 },
+        turns: 3,
+        n_system: 2,
+        system_bytes: 48,
+        tenants: vec![1.0],
+        max_new: (2, 4),
+        think_ms: (0, 1),
+    };
+    let convos = conversation_traffic(&convo_spec, &corpus.facts);
+    let n_convos = convos.len();
+    let mut convo_table = Table::new(
+        "Conversational serving: warm snapshots vs cold replay",
+        &["engine", "mode", "turns", "restores", "prefill paid",
+          "new-text bound", "snapshots"],
+    );
+    for &kind in &[EngineKind::Sequential, EngineKind::Pipelined] {
+        let warm_cfg = PoolConfig {
+            workers: 1,
+            engine: kind,
+            policy: ExitPolicy::confidence(1.0),
+            sched: Policy::Fifo,
+            max_concurrent: 2,
+            prefix_cache_positions: 16 * max_seq,
+            device_tier_positions: 2 * max_seq,
+            convo_idle_ttl: std::time::Duration::from_secs(300),
+            lane_fusion: false,
+            lane_residency: true,
+            control: ControlConfig::default(),
+        };
+        let mut warm = EnginePool::new(state.clone(), warm_cfg.clone());
+        let mut history: Vec<String> = vec![String::new(); n_convos];
+        let mut plan: Vec<Vec<(u64, String, usize)>> = Vec::new();
+        let mut warm_streams: Vec<Vec<Vec<i32>>> =
+            vec![Vec::new(); n_convos];
+        let mut agg = ConvoStats::default();
+        let mut paid_total = 0u64;
+        let mut bound_total = 0u64;
+        for r in 0..convo_spec.turns {
+            let mut round: Vec<(u64, String, usize)> = Vec::new();
+            let mut reqs = Vec::new();
+            let mut new_text = 0usize;
+            for (c, track) in convos.iter().enumerate() {
+                let t = &track[r];
+                let prompt = format!("{}{}", history[c], t.user_text);
+                assert!(
+                    prompt.len() + t.max_new + 4 < max_seq,
+                    "conversation outgrew max_seq; shrink ConvoSpec"
+                );
+                new_text += t.user_text.len();
+                let id = (r * n_convos + c) as u64;
+                reqs.push(
+                    ServeRequest::new(id, prompt.as_str(), t.max_new)
+                        .with_conversation(c as u64),
+                );
+                round.push((id, prompt, t.max_new));
+            }
+            let out = warm.run_batch(reqs).expect("warm convo batch");
+            assert!(out.failures.is_empty(), "{:?}", out.failures);
+            let cv = &out.metrics.convo;
+            assert_eq!(cv.snapshot_failures, 0, "{kind:?}: {cv:?}");
+            assert_eq!(cv.snapshots_rejected, 0, "{kind:?}: {cv:?}");
+            assert_eq!(
+                cv.snapshots as usize, n_convos,
+                "{kind:?} round {r}: a turn finished unsnapshotted: {cv:?}"
+            );
+            let total_prompt: u64 =
+                round.iter().map(|(_, p, _)| p.len() as u64).sum();
+            if r == 0 {
+                assert_eq!(
+                    cv.first_turns as usize, n_convos,
+                    "{kind:?}: opening turns miscounted: {cv:?}"
+                );
+            } else {
+                assert_eq!(
+                    cv.restore_hits as usize, n_convos,
+                    "{kind:?} round {r}: follow-up turns missed their \
+                     snapshots: {cv:?}"
+                );
+                assert_eq!(cv.restore_misses, 0, "{kind:?}: {cv:?}");
+                // O(new turn): positions prefilled this round = prompt
+                // bytes minus restore savings.
+                assert!(cv.saved_positions <= total_prompt);
+                let paid = total_prompt - cv.saved_positions;
+                let bound = (new_text + 4 * n_convos) as u64;
+                assert!(
+                    paid <= bound,
+                    "{kind:?} round {r}: turn prefill is not O(new \
+                     turn): paid {paid} positions > bound {bound}"
+                );
+                paid_total += paid;
+                bound_total += bound;
+            }
+            agg.merge(cv);
+            for (id, prompt, _) in &round {
+                let rsp = out
+                    .responses
+                    .iter()
+                    .find(|x| x.id == *id)
+                    .expect("warm response");
+                let c = (*id as usize) % n_convos;
+                history[c] = format!("{prompt}{}", rsp.output.text);
+                warm_streams[c].push(rsp.output.tokens.clone());
+            }
+            plan.push(round);
+        }
+        warm.shutdown().expect("shutdown");
+        let follow = (convo_spec.turns - 1) * n_convos;
+        convo_table.row(vec![
+            format!("{kind:?}"),
+            "warm".into(),
+            format!("{}", agg.turns),
+            format!("{}/{follow}", agg.restore_hits),
+            format!("{paid_total} pos"),
+            format!("{bound_total} pos"),
+            format!("{}", agg.snapshots),
+        ]);
+
+        let mut cold = EnginePool::new(
+            state.clone(),
+            PoolConfig {
+                prefix_cache_positions: 0,
+                device_tier_positions: 0,
+                ..warm_cfg
+            },
+        );
+        let mut cold_streams: Vec<Vec<Vec<i32>>> =
+            vec![Vec::new(); n_convos];
+        for round in &plan {
+            let reqs: Vec<ServeRequest> = round
+                .iter()
+                .map(|(id, p, m)| ServeRequest::new(*id, p.as_str(), *m))
+                .collect();
+            let out = cold.run_batch(reqs).expect("cold convo batch");
+            assert!(out.failures.is_empty(), "{:?}", out.failures);
+            assert_eq!(
+                out.metrics.convo.turns, 0,
+                "untagged replay recorded conversation turns"
+            );
+            for (id, _, _) in round {
+                let rsp = out
+                    .responses
+                    .iter()
+                    .find(|x| x.id == *id)
+                    .expect("cold response");
+                cold_streams[(*id as usize) % n_convos]
+                    .push(rsp.output.tokens.clone());
+            }
+        }
+        cold.shutdown().expect("shutdown");
+        convo_table.row(vec![
+            format!("{kind:?}"),
+            "cold".into(),
+            "0".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "0".into(),
+        ]);
+        assert_eq!(
+            warm_streams, cold_streams,
+            "{kind:?}: conversation snapshots changed generated tokens"
+        );
+    }
+    convo_table.emit("serving_throughput");
+    println!(
+        "conversation snapshots: every follow-up turn restored; \
+         turn prefill bounded by new text on both engines"
+    );
+
     println!("serving_throughput shape checks OK");
 }

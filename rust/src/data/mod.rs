@@ -16,6 +16,7 @@ pub mod tokenizer;
 
 pub use dataset::{Dataset, TrainBatch};
 pub use synth::{
-    bursty_traffic, Corpus, CorpusSpec, TrafficRequest, TrafficSpec,
+    bursty_traffic, conversation_traffic, ConvoSpec, ConvoTurn, Corpus,
+    CorpusSpec, TrafficRequest, TrafficSpec,
 };
 pub use tokenizer::{ByteTokenizer, BOS_ID, EOS_ID, PAD_ID, VOCAB_SIZE};

@@ -343,6 +343,142 @@ pub fn bursty_traffic(
     out
 }
 
+/// Spec for the multi-turn conversational serving workload: sessions of
+/// several QA turns, each conversation opening with a system prompt
+/// shared across conversations, with think-time gaps between turns and
+/// mixed tenants — the traffic decode-time KV snapshots exist for.
+#[derive(Debug, Clone)]
+pub struct ConvoSpec {
+    pub seed: u64,
+    /// Conversations (chat sessions) in the workload.
+    pub n_conversations: usize,
+    /// Turns per conversation.
+    pub turns: usize,
+    /// Distinct system prompts; conversation `c` opens with system
+    /// prompt `c % n_system`, so several conversations share each one.
+    pub n_system: usize,
+    /// Byte budget per system prompt; the generated prompt always stays
+    /// strictly under it.
+    pub system_bytes: usize,
+    /// Per-tenant weights (a conversation keeps one tenant for all its
+    /// turns); empty = all traffic from tenant 0.
+    pub tenants: Vec<f64>,
+    /// Per-turn generation-budget bounds `(lo, hi)`, inclusive.
+    pub max_new: (usize, usize),
+    /// Think-time bounds in milliseconds `(lo, hi)`, inclusive — the
+    /// gap between a conversation's consecutive turns (0 on openers).
+    pub think_ms: (u64, u64),
+}
+
+impl Default for ConvoSpec {
+    fn default() -> ConvoSpec {
+        ConvoSpec {
+            seed: 29,
+            n_conversations: 6,
+            turns: 3,
+            n_system: 2,
+            system_bytes: 96,
+            tenants: vec![3.0, 1.0],
+            max_new: (4, 10),
+            think_ms: (5, 40),
+        }
+    }
+}
+
+/// One turn of the conversational workload, engine-agnostic (the data
+/// layer must not depend on the serve layer). `user_text` is this
+/// turn's *new* text only: the opening turn carries the system prompt,
+/// and the serving driver stitches each later turn's prompt as the
+/// conversation's running history — every earlier turn's prompt plus
+/// the response text the model actually generated — followed by
+/// `user_text`, which is what makes the previous turn's end-of-turn
+/// snapshot an exact prefix of it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvoTurn {
+    /// Conversation id, stable across the conversation's turns.
+    pub conversation: u64,
+    /// Turn index within the conversation (0 = opener).
+    pub turn: usize,
+    /// This turn's new text: `<system prompt> <question>` on the
+    /// opener, ` <question>` afterwards.
+    pub user_text: String,
+    pub max_new: usize,
+    pub tenant: usize,
+    /// Think-time gap since the conversation's previous turn completed,
+    /// in milliseconds (0 on the opener).
+    pub think_ms: u64,
+}
+
+/// Build the multi-turn workload: one inner vector per conversation,
+/// turns in order. Deterministic in the spec. Drivers typically serve
+/// round `r` of every conversation as one batch (turn `r+1`'s prompt
+/// needs turn `r`'s actual response), honoring `think_ms` via arrival
+/// offsets.
+pub fn conversation_traffic(
+    spec: &ConvoSpec,
+    facts: &[Fact],
+) -> Vec<Vec<ConvoTurn>> {
+    assert!(!facts.is_empty(), "conversation workload needs a fact KB");
+    let (mn_lo, mn_hi) = spec.max_new;
+    assert!(0 < mn_lo && mn_lo <= mn_hi, "max_new bounds invalid");
+    let (tk_lo, tk_hi) = spec.think_ms;
+    assert!(tk_lo <= tk_hi, "think-time bounds inverted");
+    let weights: Vec<f64> = if spec.tenants.is_empty() {
+        vec![1.0]
+    } else {
+        spec.tenants.clone()
+    };
+    let mut rng = Rng::new(spec.seed);
+    let n_system = spec.n_system.max(1);
+    let systems: Vec<String> = (0..n_system)
+        .map(|g| {
+            // The numbered tag keeps system prompts distinct even when
+            // the same facts are drawn.
+            let mut sys = format!("system {g}:");
+            loop {
+                let f = &facts[rng.below(facts.len())];
+                let s = fact_sentence(f, rng.below(3));
+                if sys.len() + s.len() + 1 >= spec.system_bytes {
+                    break;
+                }
+                sys.push(' ');
+                sys.push_str(&s);
+            }
+            sys
+        })
+        .collect();
+    (0..spec.n_conversations)
+        .map(|c| {
+            let tenant = rng.weighted(&weights);
+            let sys = &systems[c % n_system];
+            (0..spec.turns)
+                .map(|turn| {
+                    let f = &facts[rng.below(facts.len())];
+                    let (q, _) = qa_pair(f);
+                    let user_text = if turn == 0 {
+                        format!("{sys} {q}")
+                    } else {
+                        format!(" {q}")
+                    };
+                    ConvoTurn {
+                        conversation: c as u64,
+                        turn,
+                        user_text,
+                        max_new: rng.range(mn_lo, mn_hi + 1),
+                        tenant,
+                        think_ms: if turn == 0 {
+                            0
+                        } else {
+                            rng.range(tk_lo as usize, tk_hi as usize + 1)
+                                as u64
+                        },
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
 impl Corpus {
     pub fn build(spec: &CorpusSpec) -> Corpus {
         let mut rng = Rng::new(spec.seed);
@@ -565,5 +701,76 @@ mod tests {
             peak < trough,
             "peak deadlines ({peak:.1} ms) should be tighter than trough ({trough:.1} ms)"
         );
+    }
+
+    #[test]
+    fn conversation_traffic_is_deterministic_and_well_shaped() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 9,
+            n_entities: 10,
+            target_bytes: 5_000,
+        });
+        let spec = ConvoSpec { seed: 47, ..ConvoSpec::default() };
+        let convos = conversation_traffic(&spec, &c.facts);
+        assert_eq!(convos.len(), spec.n_conversations);
+        assert_eq!(convos, conversation_traffic(&spec, &c.facts));
+        let (mn_lo, mn_hi) = spec.max_new;
+        let (tk_lo, tk_hi) = spec.think_ms;
+        for (c_idx, turns) in convos.iter().enumerate() {
+            assert_eq!(turns.len(), spec.turns);
+            for (t_idx, t) in turns.iter().enumerate() {
+                assert_eq!(t.conversation, c_idx as u64);
+                assert_eq!(t.turn, t_idx);
+                assert!(t.user_text.is_ascii());
+                assert!(t.user_text.ends_with("? answer:"));
+                assert!((mn_lo..=mn_hi).contains(&t.max_new));
+                assert!(t.tenant < spec.tenants.len());
+                // The tenant is pinned for the whole conversation.
+                assert_eq!(t.tenant, turns[0].tenant);
+                if t_idx == 0 {
+                    let tag = format!("system {}:", c_idx % spec.n_system);
+                    assert!(t.user_text.starts_with(&tag), "{:?}", t.user_text);
+                    assert_eq!(t.think_ms, 0);
+                } else {
+                    // Follow-up turns carry only their new text, space-
+                    // prefixed so the stitched prompt stays well-formed.
+                    assert!(t.user_text.starts_with(" question:"));
+                    assert!((tk_lo..=tk_hi).contains(&t.think_ms));
+                }
+            }
+        }
+        // Mixed tenants actually appear under the 3:1 default weights.
+        assert!(convos.iter().any(|t| t[0].tenant == 0));
+        assert!(convos.iter().any(|t| t[0].tenant == 1));
+    }
+
+    #[test]
+    fn conversation_traffic_shares_system_prompts_across_conversations() {
+        let c = Corpus::build(&CorpusSpec {
+            seed: 10,
+            n_entities: 8,
+            target_bytes: 5_000,
+        });
+        let spec = ConvoSpec {
+            seed: 53,
+            n_conversations: 6,
+            n_system: 2,
+            system_bytes: 120,
+            ..ConvoSpec::default()
+        };
+        let convos = conversation_traffic(&spec, &c.facts);
+        let system_of = |turns: &[ConvoTurn]| {
+            let opener = &turns[0].user_text;
+            let q = opener.find(" question:").expect("opener has a question");
+            opener[..q].to_string()
+        };
+        for (c_idx, turns) in convos.iter().enumerate() {
+            let sys = system_of(turns);
+            assert!(sys.len() < spec.system_bytes, "system over budget");
+            // Conversations in the same group share the system prompt
+            // verbatim — that sharing is what the prefix trie exploits.
+            assert_eq!(sys, system_of(&convos[c_idx % spec.n_system]));
+        }
+        assert_ne!(system_of(&convos[0]), system_of(&convos[1]));
     }
 }

@@ -53,13 +53,18 @@
 //! [`DecodeBackend::lane_traffic`] ([`session::LaneTraffic`]).
 //!
 //! [`prefix_cache`] adds shared-prefix KV reuse on top of the sessions:
-//! a token-trie keyed store of immutable post-prefill cache snapshots
-//! (refcounted, LRU-evicted under a position budget), so sessions whose
-//! prompts share a prefix restore it and prefill only the suffix. Both
-//! engines participate ([`DecodeBackend::supports_cache_snapshots`]):
-//! sequential sessions own their caches outright, and the pipelined
-//! engine drains per-stage session slots over its chain's snapshot
-//! protocol.
+//! a token-trie keyed store of immutable cache snapshots (refcounted,
+//! LRU-evicted under a position budget), taken post-prefill
+//! ([`DecodeSession::prefix_snapshot`]) or at end-of-turn
+//! ([`DecodeSession::finish_snapshot`] — conversational reuse), so
+//! sessions whose prompts share a prefix restore it and prefill only the
+//! suffix. Both engines participate
+//! ([`DecodeBackend::supports_cache_snapshots`]): sequential sessions own
+//! their caches outright, and the pipelined engine drains per-stage
+//! session slots over its chain's snapshot protocol. [`tiered_store`]
+//! layers a small pinned device-resident tier on top
+//! ([`TieredStore`]), so hot system prompts and active conversations
+//! never leave the device.
 //!
 //! [`probe`] reproduces Table 4: per-exit predictions + confidences for
 //! every generated token.
@@ -71,13 +76,14 @@ pub mod prefix_cache;
 pub mod probe;
 pub mod sequential;
 pub mod session;
+pub mod tiered_store;
 
 pub use common::{ExitStats, GenOutput, ModelState};
 pub use pipelined::PipelinedEngine;
 pub use policy::{summarize_logits, ExitDecision, ExitPolicy, LogitsSummary};
 pub use prefix_cache::{
     CacheSnapshot, PinnedSnapshot, PrefixCacheStats, PrefixCacheStore,
-    PrefixHit,
+    PrefixHit, SnapshotSource,
 };
 pub use sequential::SequentialEngine;
 pub use session::{
@@ -85,3 +91,4 @@ pub use session::{
     LaneSlot, LaneTraffic, ParkedSession, SessionCaches, StepEvent,
     WindowOutcome,
 };
+pub use tiered_store::{TierStats, TieredStore};

@@ -3,11 +3,16 @@
 //! (templated / system-prompt traffic) pay prefill only for the suffix.
 //!
 //! The store holds [`CacheSnapshot`]s: host-side copies of a session's
-//! per-stage KV caches taken right after prefill, together with the token
-//! prefix they cover and the recompute deficit they carry (Section 4 /
-//! Appendix D.3 — trailing positions whose deep-layer KV entries an early
-//! exit left missing). Snapshots are immutable and handed out by `Arc`,
-//! so a restore never races an eviction.
+//! per-stage KV caches, together with the token prefix they cover and
+//! the recompute deficit they carry (Section 4 / Appendix D.3 — trailing
+//! positions whose deep-layer KV entries an early exit left missing).
+//! Snapshots come from two boundaries: right after prefill
+//! ([`DecodeSession::prefix_snapshot`], shared-prompt reuse) and at
+//! end-of-turn once decoding completes
+//! ([`DecodeSession::finish_snapshot`], conversational reuse — keyed
+//! under prompt ⧺ generated so the next turn restores the whole
+//! history and prefills only its own new text). Snapshots are immutable
+//! and handed out by `Arc`, so a restore never races an eviction.
 //!
 //! Semantics:
 //!
@@ -35,6 +40,8 @@
 //! identical to cache-off).
 //!
 //! [`ServeMetrics`]: crate::serve::ServeMetrics
+//! [`DecodeSession::prefix_snapshot`]: super::session::DecodeSession::prefix_snapshot
+//! [`DecodeSession::finish_snapshot`]: super::session::DecodeSession::finish_snapshot
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -222,6 +229,20 @@ pub struct PrefixHit {
     /// token key (>= 2). Restored KV entries are trustworthy below
     /// `matched.min(snapshot.healed_frontier())`.
     pub matched: usize,
+}
+
+/// What a decode session needs from a snapshot store at prefill time:
+/// a longest-common-prefix lookup plus saved-position attribution.
+/// Implemented by [`PrefixCacheStore`] (host tier) and by the tiered
+/// device+host store ([`TieredStore`]), so session code is agnostic to
+/// which one the pool wired in.
+///
+/// [`TieredStore`]: super::tiered_store::TieredStore
+pub trait SnapshotSource {
+    /// Longest-common-prefix lookup (see [`PrefixCacheStore::lookup`]).
+    fn lookup(&self, query: &[i32]) -> Option<PrefixHit>;
+    /// Attribute prefill positions skipped thanks to a hit.
+    fn record_saved(&self, positions: u64);
 }
 
 #[derive(Default)]
@@ -447,6 +468,35 @@ impl PrefixCacheStore {
         Self::evict_lru_locked(&mut self.inner.lock().unwrap())
     }
 
+    /// Remove the entry stored under exactly `tokens`, if present and
+    /// unpinned. Unlike eviction this is a deliberate drop (conversation
+    /// TTL expiry), so it is *not* counted in the eviction stats —
+    /// expiry must not masquerade as budget pressure.
+    pub fn remove(&self, tokens: &[i32]) -> bool {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        match inner.index.get(tokens) {
+            Some(e) if e.pins.load(Ordering::Acquire) == 0 => {}
+            _ => return false,
+        }
+        let entry = inner.index.remove(tokens).unwrap();
+        trie_remove(&mut inner.root, tokens);
+        inner.used_positions -= entry.snap.positions();
+        true
+    }
+
+    /// Host memory held by resident snapshots (the bytes-accurate
+    /// quantity the position budget is a proxy for).
+    pub fn used_bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .index
+            .values()
+            .map(|e| e.snap.bytes())
+            .sum()
+    }
+
     /// Positions held by entries with live pins (not reclaimable).
     fn pinned_positions_locked(inner: &Inner) -> usize {
         inner
@@ -470,6 +520,16 @@ impl PrefixCacheStore {
         inner.stats.evictions += 1;
         inner.stats.evicted_positions += entry.snap.positions() as u64;
         Some(victim)
+    }
+}
+
+impl SnapshotSource for PrefixCacheStore {
+    fn lookup(&self, query: &[i32]) -> Option<PrefixHit> {
+        PrefixCacheStore::lookup(self, query)
+    }
+
+    fn record_saved(&self, positions: u64) {
+        PrefixCacheStore::record_saved(self, positions)
     }
 }
 
@@ -619,6 +679,52 @@ mod tests {
         assert!(s.insert(snap(&[5, 6, 7, 8, 9, 10])));
         assert_eq!(s.stats().evictions, 1);
         assert_eq!(s.used_positions(), 8);
+    }
+
+    /// `remove` is the TTL-expiry drop: exact-key, pin-respecting, and
+    /// invisible to the eviction counters.
+    #[test]
+    fn remove_drops_exact_unpinned_keys_without_eviction_stats() {
+        let s = PrefixCacheStore::new(16);
+        assert!(s.insert(snap(&[1, 2, 3])));
+        assert!(s.insert(snap(&[1, 2, 3, 4])));
+        // Pinned entries stay put.
+        let pin = s.lookup(&[1, 2, 3]).expect("hit");
+        assert!(!s.remove(&[1, 2, 3]));
+        drop(pin);
+        // Exact key only — a prefix of a resident key is not removable.
+        assert!(!s.remove(&[1, 2]));
+        assert!(s.remove(&[1, 2, 3]));
+        assert!(!s.remove(&[1, 2, 3]), "already gone");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.used_positions(), 4);
+        // The surviving sibling is still reachable through the trie.
+        let hit = s.lookup(&[1, 2, 3, 4, 5]).expect("hit");
+        assert_eq!(hit.snapshot.tokens(), &[1, 2, 3, 4]);
+        assert_eq!(s.stats().evictions, 0, "removal is not eviction");
+        assert_eq!(s.stats().evicted_positions, 0);
+    }
+
+    #[test]
+    fn used_bytes_tracks_resident_tensors() {
+        let sized = |tokens: &[i32], held: usize| CacheSnapshot {
+            tokens: tokens.to_vec(),
+            stage_caches: vec![HostTensor::zeros(&[1, 2, held, 1, 1])],
+            deficit: 0,
+        };
+        let s = PrefixCacheStore::new(64);
+        assert_eq!(s.used_bytes(), 0);
+        let a = sized(&[1, 2, 3], 2);
+        let b = sized(&[4, 5, 6, 7], 3);
+        let (a_bytes, b_bytes) = (a.bytes(), b.bytes());
+        assert!(s.insert(a));
+        assert_eq!(s.used_bytes(), a_bytes);
+        assert!(s.insert(b));
+        assert_eq!(s.used_bytes(), a_bytes + b_bytes);
+        assert!(s.remove(&[1, 2, 3]));
+        assert_eq!(s.used_bytes(), b_bytes);
+        s.evict_one();
+        assert_eq!(s.used_bytes(), 0);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::common::{
     prefill_chunks_from, prompt_tokens, ExitStats, GenOutput,
 };
 use super::policy::ExitPolicy;
-use super::prefix_cache::{CacheSnapshot, PinnedSnapshot, PrefixCacheStore};
+use super::prefix_cache::{CacheSnapshot, PinnedSnapshot, SnapshotSource};
 
 /// Per-session decode state handed out by a backend.
 pub struct SessionCaches {
@@ -437,7 +437,7 @@ impl DecodeSession {
     pub fn prefill_with_cache(
         &mut self,
         backend: &mut dyn DecodeBackend,
-        store: &PrefixCacheStore,
+        store: &dyn SnapshotSource,
     ) -> Result<CachedPrefill> {
         self.prefill_inner(backend, Some(store))
     }
@@ -445,7 +445,7 @@ impl DecodeSession {
     fn prefill_inner(
         &mut self,
         backend: &mut dyn DecodeBackend,
-        store: Option<&PrefixCacheStore>,
+        store: Option<&dyn SnapshotSource>,
     ) -> Result<CachedPrefill> {
         let mut report = CachedPrefill::default();
         if self.prefilled || self.done.is_some() {
@@ -516,6 +516,7 @@ impl DecodeSession {
     /// [`step`] — the one point where "KV entries for the whole token
     /// buffer, deficit included" is a well-defined prefix state.
     ///
+    /// [`PrefixCacheStore`]: super::prefix_cache::PrefixCacheStore
     /// [`prefill`]: DecodeSession::prefill
     /// [`step`]: DecodeSession::step
     pub fn prefix_snapshot(
@@ -533,6 +534,43 @@ impl DecodeSession {
         // Prefill computed KV for positions [0, l-1); slice the host
         // copy there instead of hauling the full fixed-shape cache
         // (bytes-accurate budgeting — the store charges what is held).
+        let positions = self.tokens.len().saturating_sub(1);
+        Ok(CacheSnapshot {
+            tokens: self.tokens.clone(),
+            stage_caches: backend.snapshot_caches(caches, positions)?,
+            deficit: self.deficit,
+        })
+    }
+
+    /// Capture the end-of-turn state — prompt ⧺ generated, KV entries
+    /// included — as an immutable snapshot keyed under the full token
+    /// sequence, so a follow-up turn whose prompt extends this
+    /// conversation's history restores the whole thing and prefills only
+    /// its own new text. The decode-time counterpart of
+    /// [`prefix_snapshot`]: only valid once the session is done but
+    /// before [`close`] releases its caches.
+    ///
+    /// The recompute deficit is carried verbatim; a restorer re-runs the
+    /// unhealed tail via the snapshot's healed frontier, exactly as for
+    /// prefill-time snapshots.
+    ///
+    /// [`prefix_snapshot`]: DecodeSession::prefix_snapshot
+    /// [`close`]: DecodeSession::close
+    pub fn finish_snapshot(
+        &self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<CacheSnapshot> {
+        ensure!(
+            self.prefilled && self.done.is_some(),
+            "finish snapshots are only valid once decoding completes"
+        );
+        let caches = self
+            .caches
+            .as_ref()
+            .context("finish snapshot after session caches were released")?;
+        // Same slice rule as `prefix_snapshot` / `park`: KV entries
+        // exist for positions [0, len-1) — the last token (often the
+        // stop token) was emitted, never prefilled.
         let positions = self.tokens.len().saturating_sub(1);
         Ok(CacheSnapshot {
             tokens: self.tokens.clone(),

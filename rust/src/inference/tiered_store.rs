@@ -1,0 +1,694 @@
+//! Tiered snapshot store: a small pinned device-resident tier over the
+//! host-copy [`PrefixCacheStore`] tier, so hot shared prefixes (system
+//! prompts, active conversations) skip the host round-trip.
+//!
+//! The host tier owns every snapshot — the trie, the LRU, the position
+//! budget — exactly as before. The device tier is a *residency overlay*:
+//! it holds [`PinnedSnapshot`] guards on the hottest entries, which (a)
+//! marks them device-resident for restore-path accounting and (b) pins
+//! them in the host tier, so budget pressure there can never evict a
+//! device-resident entry out from under its residency. Consequently the
+//! device tier is always a subset of the host tier.
+//!
+//! Tier movement is frequency-driven and deterministic:
+//!
+//! - **Promotion** — an entry is promoted once it has been hit
+//!   [`PROMOTE_AFTER`] times and fits the device position budget.
+//! - **Demotion** — promotion under pressure demotes resident entries
+//!   that are strictly *colder* (fewer recorded hits; ties broken by
+//!   smaller token key) than the candidate, dropping their pins back to
+//!   plain host residency. A candidate never displaces an equally-hot
+//!   or hotter entry, and a promotion that cannot free enough room from
+//!   strictly-colder entries is skipped outright — no partial demotion.
+//! - A **device budget of 0** disables the overlay entirely: lookups,
+//!   inserts, and eviction behave byte-for-byte like the bare host
+//!   store (the tiered-vs-host-only parity configuration).
+//!
+//! Per-tier activity (device hits, host hits, misses, promotions,
+//! demotions) is counted in [`TierStats`], the tier analogue of
+//! [`PrefixCacheStats`]; host-tier counters remain on the wrapped
+//! store. Budget and subset invariants are enforced by the pinned-seed
+//! property tests at the bottom of this file.
+//!
+//! [`PrefixCacheStats`]: super::prefix_cache::PrefixCacheStats
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::prefix_cache::{
+    CacheSnapshot, PinnedSnapshot, PrefixCacheStore, PrefixCacheStats,
+    PrefixHit, SnapshotSource,
+};
+
+/// Hits an entry needs before it is promoted to the device tier.
+const PROMOTE_AFTER: u32 = 2;
+
+/// Cap on tracked per-key hit counts; once exceeded, cold non-resident
+/// keys are pruned so conversational churn cannot grow the map without
+/// bound.
+const MAX_TRACKED: usize = 1024;
+
+/// Activity counters of the device tier (monotonic; diff two readings
+/// with [`TierStats::since`] to attribute one batch).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Lookups served by a device-resident entry.
+    pub device_hits: u64,
+    /// Lookups served by the host tier only.
+    pub host_hits: u64,
+    /// Lookups with no usable shared prefix in either tier.
+    pub misses: u64,
+    /// Entries promoted host → device.
+    pub promotions: u64,
+    /// Entries demoted device → host (displaced by a hotter candidate).
+    pub demotions: u64,
+}
+
+impl TierStats {
+    /// Total lookups.
+    pub fn lookups(&self) -> u64 {
+        self.device_hits + self.host_hits + self.misses
+    }
+
+    /// Fraction of *hits* served from the device tier (0 when nothing
+    /// hit).
+    pub fn device_hit_rate(&self) -> f64 {
+        let hits = self.device_hits + self.host_hits;
+        self.device_hits as f64 / hits.max(1) as f64
+    }
+
+    /// Accumulate another reading into this one.
+    pub fn merge(&mut self, other: &TierStats) {
+        self.device_hits += other.device_hits;
+        self.host_hits += other.host_hits;
+        self.misses += other.misses;
+        self.promotions += other.promotions;
+        self.demotions += other.demotions;
+    }
+
+    /// Counter delta `self - baseline` (saturating): activity since an
+    /// earlier reading of the same store.
+    pub fn since(&self, baseline: &TierStats) -> TierStats {
+        TierStats {
+            device_hits: self
+                .device_hits
+                .saturating_sub(baseline.device_hits),
+            host_hits: self.host_hits.saturating_sub(baseline.host_hits),
+            misses: self.misses.saturating_sub(baseline.misses),
+            promotions: self.promotions.saturating_sub(baseline.promotions),
+            demotions: self.demotions.saturating_sub(baseline.demotions),
+        }
+    }
+}
+
+struct TierInner {
+    /// Device-resident entries: key → the pin that keeps the host entry
+    /// alive (and marks residency).
+    resident: BTreeMap<Vec<i32>, PinnedSnapshot>,
+    /// Positions held by `resident` (each entry's snapshot weight).
+    resident_positions: usize,
+    /// Per-key hit counts driving promotion/demotion order.
+    hits: BTreeMap<Vec<i32>, u32>,
+    stats: TierStats,
+}
+
+/// Thread-safe tiered device+host snapshot store; see the module docs.
+/// Drop-in for [`PrefixCacheStore`] wherever the pool consumed one —
+/// [`SnapshotSource`] covers the session prefill path, and the host
+/// tier's budget/occupancy accessors are delegated.
+pub struct TieredStore {
+    host: PrefixCacheStore,
+    device_positions: usize,
+    inner: Mutex<TierInner>,
+}
+
+impl TieredStore {
+    /// A store whose host tier may hold `host_positions` cached
+    /// positions and whose device tier may pin `device_positions` of
+    /// them resident. `device_positions == 0` disables the overlay.
+    pub fn new(host_positions: usize, device_positions: usize) -> TieredStore {
+        TieredStore {
+            host: PrefixCacheStore::new(host_positions),
+            device_positions,
+            inner: Mutex::new(TierInner {
+                resident: BTreeMap::new(),
+                resident_positions: 0,
+                hits: BTreeMap::new(),
+                stats: TierStats::default(),
+            }),
+        }
+    }
+
+    /// Longest-common-prefix lookup through both tiers. The host trie is
+    /// the single source of truth for *what* matches; this layer only
+    /// classifies the hit by residency, updates hit frequencies, and
+    /// promotes once an entry crosses the threshold.
+    pub fn lookup(&self, query: &[i32]) -> Option<PrefixHit> {
+        let hit = match self.host.lookup(query) {
+            Some(h) => h,
+            None => {
+                self.inner.lock().unwrap().stats.misses += 1;
+                return None;
+            }
+        };
+        let key = hit.snapshot.tokens().to_vec();
+        let need = hit.snapshot.snapshot().positions();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let count = {
+            let c = inner.hits.entry(key.clone()).or_insert(0);
+            *c = c.saturating_add(1);
+            *c
+        };
+        if inner.resident.contains_key(&key) {
+            inner.stats.device_hits += 1;
+        } else {
+            inner.stats.host_hits += 1;
+            if count >= PROMOTE_AFTER && need <= self.device_positions {
+                self.promote_locked(inner, &key, need, count, &hit);
+            }
+        }
+        if inner.hits.len() > MAX_TRACKED {
+            let resident = &inner.resident;
+            inner
+                .hits
+                .retain(|k, c| resident.contains_key(k) || *c >= PROMOTE_AFTER);
+        }
+        Some(hit)
+    }
+
+    /// Promote `key` into the device tier, demoting strictly-colder
+    /// residents (coldest first) as needed. Skips — and demotes nothing —
+    /// when colder residents cannot free enough room: a candidate never
+    /// displaces an equally-hot or hotter entry, and never partially.
+    fn promote_locked(
+        &self,
+        inner: &mut TierInner,
+        key: &[i32],
+        need: usize,
+        count: u32,
+        hit: &PrefixHit,
+    ) {
+        let mut free =
+            self.device_positions.saturating_sub(inner.resident_positions);
+        let mut planned: Vec<Vec<i32>> = Vec::new();
+        if free < need {
+            let mut order: Vec<(u32, Vec<i32>, usize)> = inner
+                .resident
+                .iter()
+                .map(|(k, pin)| {
+                    (
+                        inner.hits.get(k).copied().unwrap_or(0),
+                        k.clone(),
+                        pin.snapshot().positions(),
+                    )
+                })
+                .collect();
+            order.sort();
+            for (c, k, weight) in order {
+                if free >= need {
+                    break;
+                }
+                if c >= count {
+                    break;
+                }
+                free += weight;
+                planned.push(k);
+            }
+            if free < need {
+                return;
+            }
+        }
+        for k in planned {
+            let pin = inner.resident.remove(&k).expect("planned resident");
+            inner.resident_positions -= pin.snapshot().positions();
+            inner.stats.demotions += 1;
+        }
+        inner.resident.insert(key.to_vec(), hit.snapshot.clone());
+        inner.resident_positions += need;
+        inner.stats.promotions += 1;
+    }
+
+    /// Store a snapshot in the host tier (promotion happens on later
+    /// hits, never at insert — a snapshot nobody re-reads must not pin
+    /// device room).
+    pub fn insert(&self, snap: CacheSnapshot) -> bool {
+        self.host.insert(snap)
+    }
+
+    /// Whether the host tier could currently admit a snapshot of
+    /// `positions` (see [`PrefixCacheStore::would_admit`]).
+    pub fn would_admit(&self, positions: usize) -> bool {
+        self.host.would_admit(positions)
+    }
+
+    /// Evict the host tier's LRU unpinned entry. Device-resident entries
+    /// hold a pin and are therefore never eviction victims.
+    pub fn evict_one(&self) -> Option<Vec<i32>> {
+        self.host.evict_one()
+    }
+
+    /// Drop the entry stored under exactly `tokens` from both tiers (TTL
+    /// expiry). The device pin is released first so the host removal is
+    /// not blocked by our own residency; removal still fails while any
+    /// *other* pin (a decoding session) is live, leaving the entry
+    /// host-resident but no longer device-resident.
+    pub fn remove(&self, tokens: &[i32]) -> bool {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(pin) = inner.resident.remove(tokens) {
+                inner.resident_positions -= pin.snapshot().positions();
+            }
+            inner.hits.remove(tokens);
+        }
+        self.host.remove(tokens)
+    }
+
+    /// Attribute prefill positions skipped thanks to a hit.
+    pub fn record_saved(&self, positions: u64) {
+        self.host.record_saved(positions)
+    }
+
+    /// Host-tier counter snapshot.
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.host.stats()
+    }
+
+    /// Device-tier counter snapshot.
+    pub fn tier_stats(&self) -> TierStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Host-tier position budget.
+    pub fn max_positions(&self) -> usize {
+        self.host.max_positions()
+    }
+
+    /// Host-tier positions currently resident.
+    pub fn used_positions(&self) -> usize {
+        self.host.used_positions()
+    }
+
+    /// Host memory held by resident snapshots.
+    pub fn used_bytes(&self) -> usize {
+        self.host.used_bytes()
+    }
+
+    /// Resident host-tier snapshots.
+    pub fn len(&self) -> usize {
+        self.host.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.host.is_empty()
+    }
+
+    /// Host-tier snapshots with at least one live pin (device residency
+    /// counts as a pin).
+    pub fn pinned_entries(&self) -> usize {
+        self.host.pinned_entries()
+    }
+
+    /// Device-tier position budget.
+    pub fn device_budget(&self) -> usize {
+        self.device_positions
+    }
+
+    /// Positions pinned device-resident.
+    pub fn device_used_positions(&self) -> usize {
+        self.inner.lock().unwrap().resident_positions
+    }
+
+    /// Device-resident entries.
+    pub fn device_len(&self) -> usize {
+        self.inner.lock().unwrap().resident.len()
+    }
+
+    /// Bytes held by device-resident snapshots.
+    pub fn device_bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .resident
+            .values()
+            .map(|p| p.snapshot().bytes())
+            .sum()
+    }
+
+    /// Whether the entry stored under exactly `tokens` is
+    /// device-resident.
+    pub fn is_device_resident(&self, tokens: &[i32]) -> bool {
+        self.inner.lock().unwrap().resident.contains_key(tokens)
+    }
+}
+
+impl SnapshotSource for TieredStore {
+    fn lookup(&self, query: &[i32]) -> Option<PrefixHit> {
+        TieredStore::lookup(self, query)
+    }
+
+    fn record_saved(&self, positions: u64) {
+        self.host.record_saved(positions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    /// Snapshot with no tensors — the store never inspects them, so the
+    /// tier machinery can be tested without a model (weight = key len).
+    fn snap(tokens: &[i32]) -> CacheSnapshot {
+        CacheSnapshot {
+            tokens: tokens.to_vec(),
+            stage_caches: Vec::new(),
+            deficit: 0,
+        }
+    }
+
+    #[test]
+    fn promotion_needs_repeat_hits_and_budget() {
+        let s = TieredStore::new(32, 4);
+        assert!(s.insert(snap(&[1, 2, 3])));
+        assert!(s.insert(snap(&[7, 8, 9, 10, 11])));
+        // First hit: host tier only.
+        assert!(s.lookup(&[1, 2, 3]).is_some());
+        assert!(!s.is_device_resident(&[1, 2, 3]));
+        // Second hit crosses PROMOTE_AFTER: promoted.
+        assert!(s.lookup(&[1, 2, 3]).is_some());
+        assert!(s.is_device_resident(&[1, 2, 3]));
+        assert_eq!(s.device_used_positions(), 3);
+        // Third hit is a device hit.
+        assert!(s.lookup(&[1, 2, 3]).is_some());
+        // The 5-position entry can never fit the 4-position device
+        // budget, however hot.
+        for _ in 0..4 {
+            assert!(s.lookup(&[7, 8, 9, 10, 11]).is_some());
+        }
+        assert!(!s.is_device_resident(&[7, 8, 9, 10, 11]));
+        let t = s.tier_stats();
+        assert_eq!(t.device_hits, 1);
+        assert_eq!(t.host_hits, 6);
+        assert_eq!(t.promotions, 1);
+        assert_eq!(t.demotions, 0);
+        assert!((t.device_hit_rate() - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hotter_candidate_demotes_coldest_resident_only() {
+        let s = TieredStore::new(64, 5);
+        assert!(s.insert(snap(&[1, 2])));
+        assert!(s.insert(snap(&[3, 4, 5])));
+        assert!(s.insert(snap(&[6, 7])));
+        // Promote [1,2] (2 hits) and [3,4,5] (2 hits): device full (5/5).
+        for _ in 0..2 {
+            assert!(s.lookup(&[1, 2]).is_some());
+            assert!(s.lookup(&[3, 4, 5]).is_some());
+        }
+        assert_eq!(s.device_used_positions(), 5);
+        // [6,7] at 2 hits is not strictly hotter than either resident
+        // (both sit at 2 device-era hits... [1,2] and [3,4,5] have 2
+        // recorded hits each): promotion is skipped, nothing demoted.
+        assert!(s.lookup(&[6, 7]).is_some());
+        assert!(s.lookup(&[6, 7]).is_some());
+        assert!(!s.is_device_resident(&[6, 7]));
+        assert_eq!(s.tier_stats().demotions, 0);
+        // A third hit makes [6,7] strictly hotter (3 > 2): the coldest
+        // resident by (count, key) — [1,2] — is demoted to make room.
+        assert!(s.lookup(&[6, 7]).is_some());
+        assert!(s.is_device_resident(&[6, 7]));
+        assert!(!s.is_device_resident(&[1, 2]));
+        assert!(s.is_device_resident(&[3, 4, 5]));
+        assert_eq!(s.device_used_positions(), 5);
+        let t = s.tier_stats();
+        assert_eq!(t.promotions, 3);
+        assert_eq!(t.demotions, 1);
+    }
+
+    #[test]
+    fn device_residents_survive_host_pressure() {
+        // Host budget 8, device 4: promote [1,2,3,4], then pour in
+        // enough inserts to thrash the host LRU — the resident entry is
+        // pinned and must never be the victim.
+        let s = TieredStore::new(8, 4);
+        assert!(s.insert(snap(&[1, 2, 3, 4])));
+        assert!(s.lookup(&[1, 2, 3, 4]).is_some());
+        assert!(s.lookup(&[1, 2, 3, 4]).is_some());
+        assert!(s.is_device_resident(&[1, 2, 3, 4]));
+        for i in 0..6i32 {
+            s.insert(snap(&[10 + i, 20 + i, 30 + i]));
+        }
+        let hit = s.lookup(&[1, 2, 3, 4, 9]).expect("still resident");
+        assert_eq!(hit.snapshot.tokens(), &[1, 2, 3, 4]);
+        assert_eq!(hit.matched, 4);
+        assert!(s.used_positions() <= s.max_positions());
+        // Eviction can also never pick it.
+        while s.evict_one().is_some() {}
+        assert_eq!(s.len(), 1);
+        assert!(s.is_device_resident(&[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn remove_drops_both_tiers() {
+        let s = TieredStore::new(32, 8);
+        assert!(s.insert(snap(&[1, 2, 3])));
+        assert!(s.lookup(&[1, 2, 3]).is_some());
+        assert!(s.lookup(&[1, 2, 3]).is_some());
+        assert!(s.is_device_resident(&[1, 2, 3]));
+        assert!(s.remove(&[1, 2, 3]));
+        assert!(!s.is_device_resident(&[1, 2, 3]));
+        assert_eq!(s.device_used_positions(), 0);
+        assert!(s.is_empty());
+        // A live outside pin blocks the host removal but not the
+        // residency drop.
+        assert!(s.insert(snap(&[4, 5, 6])));
+        let pin = s.lookup(&[4, 5, 6]).expect("hit");
+        assert!(s.lookup(&[4, 5, 6]).is_some());
+        assert!(s.is_device_resident(&[4, 5, 6]));
+        assert!(!s.remove(&[4, 5, 6]), "session pin still live");
+        assert!(!s.is_device_resident(&[4, 5, 6]));
+        assert_eq!(s.len(), 1);
+        drop(pin);
+        assert!(s.remove(&[4, 5, 6]));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn zero_device_budget_is_host_only() {
+        let s = TieredStore::new(16, 0);
+        assert!(s.insert(snap(&[1, 2, 3])));
+        for _ in 0..5 {
+            assert!(s.lookup(&[1, 2, 3]).is_some());
+        }
+        assert!(!s.is_device_resident(&[1, 2, 3]));
+        assert_eq!(s.device_len(), 0);
+        assert_eq!(s.device_used_positions(), 0);
+        let t = s.tier_stats();
+        assert_eq!(t.promotions, 0);
+        assert_eq!(t.host_hits, 5);
+    }
+
+    /// ISSUE satellite: longest-prefix lookup stays maximal when
+    /// snapshots share mid-branch prefixes — system prompt ⊂ turn-1 ⊂
+    /// turn-2, the exact nesting conversational finish-snapshots create.
+    #[test]
+    fn conversational_nested_keys_lookup_stays_maximal() {
+        proptest::check("tiered nested-key lookup", 64, |rng| {
+            let s = TieredStore::new(4096, rng.range(0, 32));
+            // A chain of nested keys: each extends the previous.
+            let mut chain: Vec<Vec<i32>> = Vec::new();
+            let mut key: Vec<i32> =
+                (0..rng.range(2, 6)).map(|_| rng.below(4) as i32).collect();
+            for _ in 0..rng.range(2, 5) {
+                chain.push(key.clone());
+                for _ in 0..rng.range(1, 5) {
+                    key.push(rng.below(4) as i32);
+                }
+            }
+            chain.push(key);
+            // Insert in random order; every nested key must coexist.
+            let mut order: Vec<usize> = (0..chain.len()).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.below(i + 1));
+            }
+            for &i in &order {
+                if !s.insert(snap(&chain[i])) {
+                    return Err(format!("insert rejected {:?}", chain[i]));
+                }
+            }
+            // Random queries, some extending chain members: matched must
+            // equal the best lcp over all keys, and repeat lookups (which
+            // promote) must never change the answer.
+            for _ in 0..20 {
+                let base = &chain[rng.below(chain.len())];
+                let mut q = base.clone();
+                for _ in 0..rng.range(0, 4) {
+                    q.push(rng.below(4) as i32);
+                }
+                let want = chain
+                    .iter()
+                    .map(|k| {
+                        k.iter().zip(&q).take_while(|(a, b)| a == b).count()
+                    })
+                    .max()
+                    .unwrap();
+                match s.lookup(&q) {
+                    Some(h) if want >= 2 => {
+                        if h.matched != want {
+                            return Err(format!(
+                                "query {q:?}: matched {} != best lcp {want}",
+                                h.matched
+                            ));
+                        }
+                    }
+                    None if want < 2 => {}
+                    got => {
+                        return Err(format!(
+                            "query {q:?}: hit {} vs lcp {want}",
+                            got.is_some()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE satellite: eviction never orphans a pinned descendant —
+    /// with turn-2 device-resident (pinned), evicting its ancestors must
+    /// leave the descendant reachable through the trie at full depth.
+    #[test]
+    fn eviction_never_orphans_pinned_descendant() {
+        proptest::check("tiered pinned descendant", 64, |rng| {
+            let system: Vec<i32> =
+                (0..rng.range(2, 5)).map(|_| rng.below(3) as i32).collect();
+            let mut turn1 = system.clone();
+            turn1.extend((0..rng.range(1, 4)).map(|_| rng.below(3) as i32));
+            let mut turn2 = turn1.clone();
+            turn2.extend((0..rng.range(1, 4)).map(|_| rng.below(3) as i32));
+            let s = TieredStore::new(256, turn2.len());
+            for k in [&system, &turn1, &turn2] {
+                if !s.insert(snap(k)) {
+                    return Err(format!("insert rejected {k:?}"));
+                }
+            }
+            // Pin turn-2 into the device tier.
+            for _ in 0..PROMOTE_AFTER {
+                s.lookup(&turn2).ok_or("turn2 lookup missed")?;
+            }
+            if !s.is_device_resident(&turn2) {
+                return Err("turn2 was not promoted".into());
+            }
+            // Flush everything evictable (the ancestors).
+            while s.evict_one().is_some() {}
+            if s.len() != 1 {
+                return Err(format!(
+                    "expected only the pinned descendant, got {}",
+                    s.len()
+                ));
+            }
+            // The descendant is still reachable at full depth, through
+            // trie nodes its evicted ancestors once shared.
+            let mut q = turn2.clone();
+            q.push(99);
+            let hit = s.lookup(&q).ok_or("pinned descendant orphaned")?;
+            if hit.matched != turn2.len()
+                || hit.snapshot.tokens() != turn2.as_slice()
+            {
+                return Err(format!(
+                    "descendant mis-resolved: matched {} of {:?}",
+                    hit.matched,
+                    hit.snapshot.tokens()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE satellite: tier promotion/demotion preserves the
+    /// position/byte budget invariants under random op sequences —
+    /// device usage within budget, device ⊆ host, bytes consistent with
+    /// residents, host budget untouched by the overlay.
+    #[test]
+    fn tier_churn_preserves_budget_invariants() {
+        proptest::check("tiered budget invariants", 96, |rng| {
+            let host_budget = rng.range(8, 40);
+            let device_budget = rng.range(0, 12);
+            let s = TieredStore::new(host_budget, device_budget);
+            let mut keys: Vec<Vec<i32>> = Vec::new();
+            for _ in 0..rng.range(30, 100) {
+                match rng.below(5) {
+                    0 | 1 => {
+                        let key: Vec<i32> = (0..rng.range(2, 7))
+                            .map(|_| rng.below(4) as i32)
+                            .collect();
+                        if s.insert(snap(&key)) {
+                            keys.push(key);
+                        }
+                    }
+                    2 | 3 => {
+                        if let Some(k) =
+                            keys.get(rng.below(keys.len().max(1)))
+                        {
+                            s.lookup(k);
+                        }
+                    }
+                    _ => {
+                        if rng.below(2) == 0 {
+                            s.evict_one();
+                        } else if let Some(k) =
+                            keys.get(rng.below(keys.len().max(1)))
+                        {
+                            s.remove(k);
+                        }
+                    }
+                }
+                if s.device_used_positions() > device_budget {
+                    return Err(format!(
+                        "device budget exceeded: {} > {device_budget}",
+                        s.device_used_positions()
+                    ));
+                }
+                if s.used_positions() > host_budget {
+                    return Err(format!(
+                        "host budget exceeded: {} > {host_budget}",
+                        s.used_positions()
+                    ));
+                }
+                if s.device_len() > s.len() {
+                    return Err(format!(
+                        "device tier ({}) outgrew host tier ({})",
+                        s.device_len(),
+                        s.len()
+                    ));
+                }
+                if s.device_len() > 0 && s.pinned_entries() < s.device_len()
+                {
+                    return Err(
+                        "resident entries missing their pins".to_string()
+                    );
+                }
+            }
+            // Every device-resident key must still resolve exactly in
+            // the host tier (subset invariant).
+            for k in &keys {
+                if s.is_device_resident(k) {
+                    let hit =
+                        s.lookup(k).ok_or("resident key missing from host")?;
+                    if hit.snapshot.tokens() != k.as_slice() {
+                        return Err(format!(
+                            "resident {k:?} resolved to {:?}",
+                            hit.snapshot.tokens()
+                        ));
+                    }
+                }
+            }
+            // Tensor-less snapshots hold no bytes; the gauge must agree.
+            if s.device_bytes() != 0 {
+                return Err("phantom device bytes".to_string());
+            }
+            Ok(())
+        });
+    }
+}

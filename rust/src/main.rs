@@ -10,13 +10,13 @@
 //!
 //! Run `ee-llm help` for flags.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use eellm::config::{InferenceConfig, TrainConfig};
 use eellm::data::dataset::{Dataset, TrainBatch};
 use eellm::data::synth::{
-    bursty_traffic, shared_prefix_prompts, Corpus, CorpusSpec,
-    SharedPrefixSpec, TrafficSpec,
+    bursty_traffic, conversation_traffic, shared_prefix_prompts, ConvoSpec,
+    ConvoTurn, Corpus, CorpusSpec, SharedPrefixSpec, TrafficSpec,
 };
 use eellm::data::tasks;
 use eellm::eval::harness::evaluate_task;
@@ -31,7 +31,7 @@ use eellm::schedule::report::render_timeline;
 use eellm::schedule::sim::Simulator;
 use eellm::serve::{
     requests_from_tasks, ControlConfig, EngineKind, EnginePool, Policy,
-    PoolConfig, ServeRequest, ShedPolicy,
+    PoolConfig, ServeMetrics, ServeRequest, ShedPolicy,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 use eellm::util::cli::Args;
@@ -63,9 +63,18 @@ serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
            budget, one store shared by all workers; as a bare trailing
            flag the budget defaults to 8 * max_seq, but mid-line it must
            carry a value)
-           --workload tasks|shared-prefix|bursty (request set; defaults
-           to shared-prefix when the prefix cache is on, tasks
-           otherwise; bursty = diurnal multi-tenant deadline traffic)
+           --workload tasks|shared-prefix|bursty|convo (request set;
+           defaults to shared-prefix when the prefix cache is on, tasks
+           otherwise; bursty = diurnal multi-tenant deadline traffic;
+           convo = multi-turn chat: --requests conversations x --turns
+           turns served round-by-round with end-of-turn KV snapshots,
+           reported warm vs cold)
+           --turns N (convo workload: turns per conversation, default 3)
+           --device-tier POSITIONS (pinned device-resident tier of the
+           snapshot store: entries hit twice are promoted and stay on
+           device within the budget; default 0 = host-only)
+           --convo-ttl-ms N (expire conversations idle this long and
+           release their stored history, default 300000)
            --preempt (SLO control plane: a full worker parks its
            lowest-value live session to admit a queued request about to
            blow its deadline; parked sessions resume when a slot frees)
@@ -369,6 +378,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         "workload",
         if prefix_positions > 0 { "shared-prefix" } else { "tasks" },
     );
+    // Tiered snapshot store: positions the device-resident tier may pin.
+    let device_tier = args.usize_or("device-tier", 0);
+    let convo_ttl_ms = args.usize_or("convo-ttl-ms", 300_000) as u64;
     let lane_fusion = !args.flag("no-lanes");
     // `--no-resident` keeps lane fusion but drops device residency:
     // every fused step pays the per-stage gather/scatter round-trip
@@ -408,13 +420,40 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?,
         None => Vec::new(),
     };
-    // The bursty workload is multi-tenant by construction; give it the
-    // default 3:1 split when --tenants is not spelled out so fairness
-    // accounting has something to do.
-    if tenant_weights.is_empty() && workload == "bursty" {
+    // The bursty and convo workloads are multi-tenant by construction;
+    // give them the default 3:1 split when --tenants is not spelled out
+    // so fairness accounting has something to do.
+    if tenant_weights.is_empty()
+        && (workload == "bursty" || workload == "convo")
+    {
         tenant_weights = vec![3.0, 1.0];
     }
     let corpus = standard_corpus(icfg.seed);
+    if workload == "convo" {
+        // Multi-turn conversations need their own driver: turn N+1's
+        // prompt embeds turn N's actual response, so each round is one
+        // batch over a pool whose snapshot store persists between them.
+        return cmd_serve_bench_convo(
+            args,
+            &icfg,
+            state,
+            &corpus,
+            ConvoBenchOpts {
+                n_conversations: n_req.max(1),
+                turns: args.usize_or("turns", 3),
+                pool_sizes,
+                prefix_positions,
+                device_tier,
+                convo_ttl_ms,
+                lane_fusion,
+                lane_residency,
+                tenant_weights,
+                engine: kind,
+                sched,
+                concurrent,
+            },
+        );
+    }
     let reqs = match workload.as_str() {
         "shared-prefix" => {
             // Shared-system-prompt workload: the templated traffic
@@ -467,7 +506,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         other => {
             bail!(
                 "unknown --workload {other:?} \
-                 (tasks|shared-prefix|bursty)"
+                 (tasks|shared-prefix|bursty|convo)"
             )
         }
     };
@@ -519,6 +558,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 sched,
                 max_concurrent: concurrent,
                 prefix_cache_positions: prefix_positions,
+                device_tier_positions: device_tier,
+                convo_idle_ttl: std::time::Duration::from_millis(
+                    convo_ttl_ms,
+                ),
                 lane_fusion,
                 lane_residency,
                 control: ControlConfig {
@@ -569,6 +612,36 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 p.saved_positions,
                 p.insertions,
                 p.evictions
+            );
+        }
+        if device_tier > 0 {
+            let t = &m.tier;
+            println!(
+                "[serve-bench] pool {workers}: device tier {:.0}% of \
+                 hits on device ({} device / {} host), {} promotions, \
+                 {} demotions",
+                100.0 * t.device_hit_rate(),
+                t.device_hits,
+                t.host_hits,
+                t.promotions,
+                t.demotions
+            );
+        }
+        if prefix_positions > 0 || preempt {
+            let sm = &m.snapshot_memory;
+            println!(
+                "[serve-bench] pool {workers}: snapshot memory {} \
+                 cached ({} pos, {} KiB) + {} device-pinned ({} pos, \
+                 {} KiB) + {} parked ({} KiB) = {} KiB",
+                sm.cached_entries,
+                sm.cached_positions,
+                sm.cached_bytes / 1024,
+                sm.device_entries,
+                sm.device_positions,
+                sm.device_bytes / 1024,
+                sm.parked_entries,
+                sm.parked_bytes / 1024,
+                sm.total_bytes() / 1024
             );
         }
         if m.deadline_misses > 0 {
@@ -647,6 +720,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     table.emit("serve-bench");
     if let Some(path) = args.get("json-out") {
         let mut obj = std::collections::BTreeMap::new();
+        // Bump when emitted keys change shape or meaning; consumers
+        // should check it (see docs/serve-bench-json.md).
+        obj.insert("schema_version".to_string(), Json::Num(2.0));
         obj.insert("requests".to_string(), Json::Num(n_req as f64));
         obj.insert(
             "engine".to_string(),
@@ -664,6 +740,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         obj.insert(
             "prefix_cache_positions".to_string(),
             Json::Num(prefix_positions as f64),
+        );
+        obj.insert(
+            "device_tier_positions".to_string(),
+            Json::Num(device_tier as f64),
+        );
+        obj.insert(
+            "convo_idle_ttl_ms".to_string(),
+            Json::Num(convo_ttl_ms as f64),
         );
         obj.insert(
             "lane_fusion".to_string(),
@@ -750,6 +834,22 @@ fn serve_metrics_json(
     num("interleaved_steps", m.interleave.steps as f64);
     num("mean_sessions_in_flight", m.interleave.mean_in_flight());
     num("max_sessions_in_flight", m.interleave.max_in_flight() as f64);
+    num("convo_turns", m.convo.turns as f64);
+    num("convo_first_turns", m.convo.first_turns as f64);
+    num("convo_restore_hits", m.convo.restore_hits as f64);
+    num("convo_restore_misses", m.convo.restore_misses as f64);
+    num("convo_restore_hit_rate", m.convo.restore_hit_rate());
+    num("convo_saved_positions", m.convo.saved_positions as f64);
+    num("convo_snapshots", m.convo.snapshots as f64);
+    num("convo_snapshots_rejected", m.convo.snapshots_rejected as f64);
+    num("convo_snapshot_failures", m.convo.snapshot_failures as f64);
+    num("convo_expired", m.convo.expired as f64);
+    num("tier_device_hits", m.tier.device_hits as f64);
+    num("tier_host_hits", m.tier.host_hits as f64);
+    num("tier_misses", m.tier.misses as f64);
+    num("tier_promotions", m.tier.promotions as f64);
+    num("tier_demotions", m.tier.demotions as f64);
+    num("tier_device_hit_rate", m.tier.device_hit_rate());
     let occupancy = m
         .lanes
         .occupancy
@@ -764,6 +864,22 @@ fn serve_metrics_json(
         .map(|&(n, c)| (n.to_string(), Json::Num(c as f64)))
         .collect();
     o.insert("interleave_occupancy".to_string(), Json::Obj(in_flight));
+    let sm = &m.snapshot_memory;
+    let mut mem = std::collections::BTreeMap::new();
+    for (k, v) in [
+        ("cached_entries", sm.cached_entries),
+        ("cached_positions", sm.cached_positions),
+        ("cached_bytes", sm.cached_bytes),
+        ("device_entries", sm.device_entries),
+        ("device_positions", sm.device_positions),
+        ("device_bytes", sm.device_bytes),
+        ("parked_entries", sm.parked_entries),
+        ("parked_bytes", sm.parked_bytes),
+        ("total_bytes", sm.total_bytes()),
+    ] {
+        mem.insert(k.to_string(), Json::Num(v as f64));
+    }
+    o.insert("snapshot_memory".to_string(), Json::Obj(mem));
     let tenants = m
         .tenants
         .iter()
@@ -778,6 +894,388 @@ fn serve_metrics_json(
         .collect();
     o.insert("tenants".to_string(), Json::Arr(tenants));
     Json::Obj(o)
+}
+
+/// Options for the conversational serving bench (`--workload convo`).
+struct ConvoBenchOpts {
+    n_conversations: usize,
+    turns: usize,
+    pool_sizes: Vec<usize>,
+    /// Host-tier position budget; 0 picks the convo default.
+    prefix_positions: usize,
+    device_tier: usize,
+    convo_ttl_ms: u64,
+    lane_fusion: bool,
+    lane_residency: bool,
+    tenant_weights: Vec<f64>,
+    engine: EngineKind,
+    sched: Policy,
+    concurrent: usize,
+}
+
+/// Per-conversation token streams: one inner entry per served turn.
+type ConvoStreams = Vec<Vec<Vec<i32>>>;
+
+/// One turn as actually served: the stitched prompt (history ⧺ new
+/// text) plus the request attributes, recorded by the warm run so the
+/// cold comparison replays byte-identical prompts.
+struct PlannedTurn {
+    id: u64,
+    conversation: u64,
+    prompt: String,
+    max_new: usize,
+    tenant: usize,
+    think_ms: u64,
+}
+
+/// Fold one round's batch metrics into a multi-round aggregate:
+/// counters sum; gauges, percentiles, and tenant shares keep the latest
+/// round (the deepest-history one).
+fn merge_round(agg: &mut ServeMetrics, m: &ServeMetrics) {
+    agg.requests += m.requests;
+    agg.total_tokens += m.total_tokens;
+    agg.wall_seconds += m.wall_seconds;
+    agg.p50_latency_seconds = m.p50_latency_seconds;
+    agg.p95_latency_seconds = m.p95_latency_seconds;
+    agg.p50_ttft_seconds = m.p50_ttft_seconds;
+    agg.p95_ttft_seconds = m.p95_ttft_seconds;
+    agg.p99_ttft_seconds = m.p99_ttft_seconds;
+    agg.p50_token_gap_seconds = m.p50_token_gap_seconds;
+    agg.p95_token_gap_seconds = m.p95_token_gap_seconds;
+    agg.mean_queue_seconds = m.mean_queue_seconds;
+    agg.deadline_misses += m.deadline_misses;
+    agg.deadlined += m.deadlined;
+    agg.exits.merge(&m.exits);
+    agg.prefix.merge(&m.prefix);
+    agg.lanes.merge(&m.lanes);
+    agg.interleave.merge(&m.interleave);
+    agg.slo.merge(&m.slo);
+    agg.convo.merge(&m.convo);
+    agg.tier.merge(&m.tier);
+    agg.snapshot_memory = m.snapshot_memory;
+    agg.tenants = m.tenants.clone();
+}
+
+/// Serve the conversations round by round over one pool (turn `r` of
+/// every conversation is one batch), stitching each turn's prompt from
+/// the history plus the model's actual responses. Returns aggregated
+/// metrics, the plan of served turns (for the cold replay), and the
+/// per-conversation token streams.
+fn drive_convo_warm(
+    pool: &mut EnginePool,
+    convos: &[Vec<ConvoTurn>],
+    max_seq: usize,
+) -> Result<(ServeMetrics, Vec<Vec<PlannedTurn>>, ConvoStreams)> {
+    let n = convos.len();
+    let rounds = convos.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut history: Vec<String> = vec![String::new(); n];
+    let mut capped = vec![false; n];
+    let mut plan: Vec<Vec<PlannedTurn>> = Vec::new();
+    let mut streams: ConvoStreams = vec![Vec::new(); n];
+    let mut agg = ServeMetrics::default();
+    for r in 0..rounds {
+        let mut round: Vec<PlannedTurn> = Vec::new();
+        for (c, turns) in convos.iter().enumerate() {
+            let Some(t) = turns.get(r) else { continue };
+            if capped[c] {
+                continue;
+            }
+            let prompt = format!("{}{}", history[c], t.user_text);
+            // Byte tokenizer: prompt + generation budget + BOS/slack
+            // must fit the KV-cache capacity; a conversation that has
+            // outgrown it simply ends (its turns stop, nothing fails).
+            if prompt.len() + t.max_new + 4 >= max_seq {
+                capped[c] = true;
+                continue;
+            }
+            round.push(PlannedTurn {
+                id: (r * n + c) as u64,
+                conversation: t.conversation,
+                prompt,
+                max_new: t.max_new,
+                tenant: t.tenant,
+                think_ms: t.think_ms,
+            });
+        }
+        if round.is_empty() {
+            break;
+        }
+        let reqs: Vec<ServeRequest> = round
+            .iter()
+            .map(|p| {
+                ServeRequest::new(p.id, p.prompt.as_str(), p.max_new)
+                    .with_conversation(p.conversation)
+                    .with_tenant(p.tenant)
+                    .with_start_after(std::time::Duration::from_millis(
+                        p.think_ms,
+                    ))
+            })
+            .collect();
+        let out = pool.run_batch(reqs)?;
+        for f in &out.failures {
+            eprintln!("[serve-bench] {f}");
+        }
+        for p in &round {
+            let c = p.conversation as usize;
+            match out.responses.iter().find(|resp| resp.id == p.id) {
+                Some(resp) => {
+                    history[c] =
+                        format!("{}{}", p.prompt, resp.output.text);
+                    streams[c].push(resp.output.tokens.clone());
+                }
+                // A failed turn ends its conversation: later turns
+                // would stitch a history the model never generated.
+                None => capped[c] = true,
+            }
+        }
+        merge_round(&mut agg, &out.metrics);
+        plan.push(round);
+    }
+    Ok((agg, plan, streams))
+}
+
+/// Replay the warm run's plan — byte-identical prompts — without
+/// conversation tags on a snapshot-free pool: the cold baseline that
+/// re-prefills each turn's whole history.
+fn drive_convo_cold(
+    pool: &mut EnginePool,
+    plan: &[Vec<PlannedTurn>],
+    n_conversations: usize,
+) -> Result<(ServeMetrics, ConvoStreams)> {
+    let mut streams: ConvoStreams = vec![Vec::new(); n_conversations];
+    let mut agg = ServeMetrics::default();
+    for round in plan {
+        let reqs: Vec<ServeRequest> = round
+            .iter()
+            .map(|p| {
+                ServeRequest::new(p.id, p.prompt.as_str(), p.max_new)
+                    .with_tenant(p.tenant)
+                    .with_start_after(std::time::Duration::from_millis(
+                        p.think_ms,
+                    ))
+            })
+            .collect();
+        let out = pool.run_batch(reqs)?;
+        for f in &out.failures {
+            eprintln!("[serve-bench] {f}");
+        }
+        for p in round {
+            if let Some(resp) =
+                out.responses.iter().find(|resp| resp.id == p.id)
+            {
+                streams[p.conversation as usize]
+                    .push(resp.output.tokens.clone());
+            }
+        }
+        merge_round(&mut agg, &out.metrics);
+    }
+    Ok((agg, streams))
+}
+
+/// `serve-bench --workload convo`: multi-turn conversations served
+/// round by round (turn N+1's prompt embeds turn N's actual response),
+/// warm (end-of-turn snapshots + tiered store) vs cold (no snapshot
+/// store, full-history prefill) per pool size. The warm streams must be
+/// token-identical to the cold ones, and follow-up turns must restore
+/// history.
+fn cmd_serve_bench_convo(
+    args: &Args,
+    icfg: &InferenceConfig,
+    state: ModelState,
+    corpus: &Corpus,
+    o: ConvoBenchOpts,
+) -> Result<()> {
+    let n_layers = state.man.model.n_layers;
+    let max_seq = state.man.model.max_seq;
+    // The snapshot store is the point of this workload; give it the
+    // generous default when --prefix-cache was not spelled out.
+    let positions = if o.prefix_positions > 0 {
+        o.prefix_positions
+    } else {
+        8 * max_seq
+    };
+    let spec = ConvoSpec {
+        seed: icfg.seed,
+        n_conversations: o.n_conversations,
+        turns: o.turns,
+        n_system: 2.min(o.n_conversations),
+        system_bytes: 48,
+        tenants: o.tenant_weights.clone(),
+        max_new: (2, 5),
+        think_ms: (1, 4),
+    };
+    let convos = conversation_traffic(&spec, &corpus.facts);
+    println!(
+        "[serve-bench] convo workload: {} conversations x {} turns, \
+         store {positions} positions (device tier {}), idle TTL {} ms",
+        o.n_conversations, o.turns, o.device_tier, o.convo_ttl_ms
+    );
+    let mut table = Table::new(
+        "Conversational serving: end-of-turn snapshots (warm) vs \
+         full-history prefill (cold)",
+        &["pool", "mode", "turns", "tok/s", "restore rate",
+          "prefill saved", "snapshots", "p50 TTFT"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &workers in &o.pool_sizes {
+        let warm_cfg = PoolConfig {
+            workers,
+            engine: o.engine,
+            policy: icfg.policy.clone(),
+            sched: o.sched,
+            max_concurrent: o.concurrent,
+            prefix_cache_positions: positions,
+            device_tier_positions: o.device_tier,
+            convo_idle_ttl: std::time::Duration::from_millis(
+                o.convo_ttl_ms,
+            ),
+            lane_fusion: o.lane_fusion,
+            lane_residency: o.lane_residency,
+            control: ControlConfig {
+                tenant_weights: o.tenant_weights.clone(),
+                ..ControlConfig::default()
+            },
+        };
+        let mut pool = EnginePool::new(state.clone(), warm_cfg.clone());
+        let (warm, plan, warm_streams) =
+            drive_convo_warm(&mut pool, &convos, max_seq)?;
+        pool.shutdown()?;
+        let cold_cfg = PoolConfig {
+            prefix_cache_positions: 0,
+            device_tier_positions: 0,
+            ..warm_cfg
+        };
+        let mut pool = EnginePool::new(state.clone(), cold_cfg);
+        let (cold, cold_streams) =
+            drive_convo_cold(&mut pool, &plan, o.n_conversations)?;
+        pool.shutdown()?;
+        ensure!(
+            warm_streams == cold_streams,
+            "conversation snapshots changed generated tokens (pool \
+             {workers})"
+        );
+        let followups: usize =
+            plan.iter().skip(1).map(|r| r.len()).sum();
+        if followups > 0 {
+            ensure!(
+                warm.convo.restore_hits > 0,
+                "no follow-up turn restored its history (pool {workers})"
+            );
+        }
+        for (mode, m) in [("warm", &warm), ("cold", &cold)] {
+            table.row(vec![
+                format!("{workers}"),
+                mode.to_string(),
+                format!("{}", m.requests),
+                format!("{:.1}", m.throughput_tps()),
+                format!("{:.0}%", 100.0 * m.convo.restore_hit_rate()),
+                format!("{} pos", m.convo.saved_positions),
+                format!("{}", m.convo.snapshots),
+                format!("{:.0}ms", m.p50_ttft_seconds * 1e3),
+            ]);
+        }
+        println!(
+            "[serve-bench] pool {workers}: {} turns ({} opening), \
+             restore rate {:.0}% ({}/{} follow-ups), {} prefill \
+             positions saved ({:.1}/turn), {} snapshots ({} rejected, \
+             {} failed), {} expired",
+            warm.convo.turns,
+            warm.convo.first_turns,
+            100.0 * warm.convo.restore_hit_rate(),
+            warm.convo.restore_hits,
+            warm.convo.restore_hits + warm.convo.restore_misses,
+            warm.convo.saved_positions,
+            warm.convo.saved_per_turn(),
+            warm.convo.snapshots,
+            warm.convo.snapshots_rejected,
+            warm.convo.snapshot_failures,
+            warm.convo.expired
+        );
+        if o.device_tier > 0 {
+            let t = &warm.tier;
+            println!(
+                "[serve-bench] pool {workers}: device tier {:.0}% of \
+                 hits on device ({} device / {} host), {} promotions, \
+                 {} demotions",
+                100.0 * t.device_hit_rate(),
+                t.device_hits,
+                t.host_hits,
+                t.promotions,
+                t.demotions
+            );
+        }
+        let sm = &warm.snapshot_memory;
+        println!(
+            "[serve-bench] pool {workers}: snapshot memory {} cached \
+             ({} pos, {} KiB) + {} device-pinned ({} pos, {} KiB) + {} \
+             parked ({} KiB) = {} KiB",
+            sm.cached_entries,
+            sm.cached_positions,
+            sm.cached_bytes / 1024,
+            sm.device_entries,
+            sm.device_positions,
+            sm.device_bytes / 1024,
+            sm.parked_entries,
+            sm.parked_bytes / 1024,
+            sm.total_bytes() / 1024
+        );
+        println!(
+            "[serve-bench] pool {workers}: warm/cold throughput ratio \
+             {:.2}x",
+            warm.throughput_tps() / cold.throughput_tps().max(1e-9)
+        );
+        for (mode, m) in [("warm", &warm), ("cold", &cold)] {
+            let mut row = serve_metrics_json(workers, m, n_layers);
+            if let Json::Obj(map) = &mut row {
+                map.insert(
+                    "mode".to_string(),
+                    Json::Str(mode.to_string()),
+                );
+            }
+            json_rows.push(row);
+        }
+    }
+    table.emit("serve-bench");
+    if let Some(path) = args.get("json-out") {
+        let mut obj = std::collections::BTreeMap::new();
+        // Bump when emitted keys change shape or meaning; consumers
+        // should check it (see docs/serve-bench-json.md).
+        obj.insert("schema_version".to_string(), Json::Num(2.0));
+        obj.insert("workload".to_string(), Json::Str("convo".into()));
+        obj.insert(
+            "conversations".to_string(),
+            Json::Num(o.n_conversations as f64),
+        );
+        obj.insert("turns".to_string(), Json::Num(o.turns as f64));
+        obj.insert("policy".to_string(), Json::Str(icfg.policy.spec()));
+        obj.insert(
+            "engine".to_string(),
+            Json::Str(format!("{:?}", o.engine).to_lowercase()),
+        );
+        obj.insert(
+            "prefix_cache_positions".to_string(),
+            Json::Num(positions as f64),
+        );
+        obj.insert(
+            "device_tier_positions".to_string(),
+            Json::Num(o.device_tier as f64),
+        );
+        obj.insert(
+            "convo_idle_ttl_ms".to_string(),
+            Json::Num(o.convo_ttl_ms as f64),
+        );
+        obj.insert(
+            "tenant_weights".to_string(),
+            Json::Arr(
+                o.tenant_weights.iter().map(|&w| Json::Num(w)).collect(),
+            ),
+        );
+        obj.insert("pools".to_string(), Json::Arr(json_rows));
+        std::fs::write(path, Json::Obj(obj).to_string_pretty())
+            .with_context(|| format!("writing --json-out {path}"))?;
+        println!("[serve-bench] metrics JSON written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -5,7 +5,7 @@
 
 use std::sync::Mutex;
 
-use crate::inference::{ExitStats, LaneTraffic, PrefixCacheStats};
+use crate::inference::{ExitStats, LaneTraffic, PrefixCacheStats, TierStats};
 pub use crate::metrics::percentile;
 
 use super::request::ServeResponse;
@@ -318,6 +318,182 @@ impl SloCounters {
     }
 }
 
+/// Conversational-serving activity of the pool: turns served, history
+/// restores on follow-up turns, end-of-turn snapshots taken, and idle
+/// expiries — the "did multi-turn reuse actually happen" observability
+/// the conversation layer is judged by. A follow-up turn whose history
+/// restore hits pays prefill only for its own new text (O(new turn),
+/// not O(history)); `saved_positions` counts what the restores skipped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConvoStats {
+    /// Conversation-tagged requests completed (turns served).
+    pub turns: u64,
+    /// Opening turns admitted (no history to restore yet).
+    pub first_turns: u64,
+    /// Follow-up turns whose admission restored cached history.
+    pub restore_hits: u64,
+    /// Follow-up turns that re-prefilled their history cold.
+    pub restore_misses: u64,
+    /// Prefill positions conversation turns skipped thanks to restores.
+    pub saved_positions: u64,
+    /// End-of-turn snapshots stored for the next turn.
+    pub snapshots: u64,
+    /// End-of-turn snapshots the store refused (budget pressure).
+    pub snapshots_rejected: u64,
+    /// End-of-turn snapshot captures that errored (best-effort: the
+    /// turn's response is unaffected; the next turn prefills cold).
+    pub snapshot_failures: u64,
+    /// Conversations expired under the idle TTL (registry entry dropped
+    /// and stored history released).
+    pub expired: u64,
+}
+
+impl ConvoStats {
+    /// Follow-up turns that restored history over all follow-up turns
+    /// (0.0 before any follow-up turn).
+    pub fn restore_hit_rate(&self) -> f64 {
+        let followups = self.restore_hits + self.restore_misses;
+        self.restore_hits as f64 / followups.max(1) as f64
+    }
+
+    /// Mean prefill positions saved per served turn.
+    pub fn saved_per_turn(&self) -> f64 {
+        self.saved_positions as f64 / self.turns.max(1) as f64
+    }
+
+    /// Accumulate another reading into this one.
+    pub fn merge(&mut self, other: &ConvoStats) {
+        self.turns += other.turns;
+        self.first_turns += other.first_turns;
+        self.restore_hits += other.restore_hits;
+        self.restore_misses += other.restore_misses;
+        self.saved_positions += other.saved_positions;
+        self.snapshots += other.snapshots;
+        self.snapshots_rejected += other.snapshots_rejected;
+        self.snapshot_failures += other.snapshot_failures;
+        self.expired += other.expired;
+    }
+
+    /// Counter delta `self - baseline` (saturating): activity since an
+    /// earlier reading of the same counters.
+    pub fn since(&self, baseline: &ConvoStats) -> ConvoStats {
+        ConvoStats {
+            turns: self.turns.saturating_sub(baseline.turns),
+            first_turns: self
+                .first_turns
+                .saturating_sub(baseline.first_turns),
+            restore_hits: self
+                .restore_hits
+                .saturating_sub(baseline.restore_hits),
+            restore_misses: self
+                .restore_misses
+                .saturating_sub(baseline.restore_misses),
+            saved_positions: self
+                .saved_positions
+                .saturating_sub(baseline.saved_positions),
+            snapshots: self.snapshots.saturating_sub(baseline.snapshots),
+            snapshots_rejected: self
+                .snapshots_rejected
+                .saturating_sub(baseline.snapshots_rejected),
+            snapshot_failures: self
+                .snapshot_failures
+                .saturating_sub(baseline.snapshot_failures),
+            expired: self.expired.saturating_sub(baseline.expired),
+        }
+    }
+}
+
+/// Thread-safe conversation counters shared by every worker of a pool
+/// (the conversational analogue of [`SloCounters`]).
+#[derive(Debug, Default)]
+pub struct ConvoCounters {
+    inner: Mutex<ConvoStats>,
+}
+
+impl ConvoCounters {
+    /// Counter snapshot.
+    pub fn stats(&self) -> ConvoStats {
+        *self.inner.lock().unwrap()
+    }
+
+    /// One opening turn admitted.
+    pub fn record_first_turn(&self) {
+        self.inner.lock().unwrap().first_turns += 1;
+    }
+
+    /// One follow-up turn admitted: whether its history restore hit,
+    /// and how many prefill positions the restore skipped.
+    pub fn record_restore(&self, hit: bool, saved_positions: u64) {
+        let mut s = self.inner.lock().unwrap();
+        if hit {
+            s.restore_hits += 1;
+        } else {
+            s.restore_misses += 1;
+        }
+        s.saved_positions += saved_positions;
+    }
+
+    /// One conversation turn completed.
+    pub fn record_turn(&self) {
+        self.inner.lock().unwrap().turns += 1;
+    }
+
+    /// One end-of-turn snapshot capture: stored, or refused by the
+    /// store's budget.
+    pub fn record_snapshot(&self, stored: bool) {
+        let mut s = self.inner.lock().unwrap();
+        if stored {
+            s.snapshots += 1;
+        } else {
+            s.snapshots_rejected += 1;
+        }
+    }
+
+    /// One end-of-turn snapshot capture that errored.
+    pub fn record_snapshot_failure(&self) {
+        self.inner.lock().unwrap().snapshot_failures += 1;
+    }
+
+    /// `n` conversations expired under the idle TTL.
+    pub fn record_expired(&self, n: u64) {
+        self.inner.lock().unwrap().expired += n;
+    }
+}
+
+/// Point-in-time snapshot-memory gauges, sampled when a batch closes:
+/// every `CacheSnapshot` the serving stack holds, under one roof — the
+/// prefix/conversation store (host tier), its pinned device-resident
+/// tier, and the control plane's park store. Gauges, not flows: merge
+/// and delta semantics do not apply; each batch reports the occupancy
+/// it ended with.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotMemory {
+    /// Host-tier snapshots resident in the prefix/conversation store.
+    pub cached_entries: usize,
+    /// Positions those snapshots hold (the store's budget currency).
+    pub cached_positions: usize,
+    /// Host bytes those snapshots occupy.
+    pub cached_bytes: usize,
+    /// Entries pinned device-resident by the tiered store.
+    pub device_entries: usize,
+    /// Positions pinned device-resident.
+    pub device_positions: usize,
+    /// Bytes modeled device-resident.
+    pub device_bytes: usize,
+    /// Sessions parked in the control plane's park store.
+    pub parked_entries: usize,
+    /// Host bytes their cache snapshots occupy.
+    pub parked_bytes: usize,
+}
+
+impl SnapshotMemory {
+    /// All snapshot bytes the serving stack holds (host copies plus the
+    /// device-modeled tier).
+    pub fn total_bytes(&self) -> usize {
+        self.cached_bytes + self.device_bytes + self.parked_bytes
+    }
+}
+
 /// One tenant's slice of a batch: requests completed, tokens generated,
 /// and its fraction of all generated tokens — what the weighted-fairness
 /// accounting is checked against.
@@ -443,6 +619,19 @@ pub struct ServeMetrics {
     /// park/resume faults, sheds, degrades, park-store peak (all zeros
     /// with the control plane disabled).
     pub slo: SloStats,
+    /// Conversational-serving activity during the batch: turns served,
+    /// history-restore hit rate, prefill positions saved, end-of-turn
+    /// snapshots, TTL expiries (all zeros when no request carried a
+    /// conversation id).
+    pub convo: ConvoStats,
+    /// Device-tier activity of the tiered snapshot store during the
+    /// batch: device vs host hits, promotions, demotions (all zeros
+    /// with the device tier disabled).
+    pub tier: TierStats,
+    /// Snapshot-memory occupancy when the batch closed: prefix-store,
+    /// device-tier, and park-store entries/positions/bytes under one
+    /// block (a gauge, unlike the counter deltas above).
+    pub snapshot_memory: SnapshotMemory,
     /// Per-tenant completion shares, ascending by tenant id (one entry,
     /// tenant 0, when the batch never set tenants).
     pub tenants: Vec<TenantShare>,
@@ -522,6 +711,9 @@ impl ServeMetrics {
             lanes: LaneStats::default(),
             interleave: InterleaveStats::default(),
             slo: SloStats::default(),
+            convo: ConvoStats::default(),
+            tier: TierStats::default(),
+            snapshot_memory: SnapshotMemory::default(),
             tenants,
         }
     }
@@ -832,6 +1024,72 @@ mod tests {
         let mut merged = base;
         merged.merge(&d);
         assert_eq!(merged, c.interleave_stats());
+    }
+
+    #[test]
+    fn convo_counters_record_merge_and_since() {
+        let c = ConvoCounters::default();
+        assert_eq!(c.stats(), ConvoStats::default());
+        assert_eq!(c.stats().restore_hit_rate(), 0.0);
+        // Turn 1 opens; turns 2 and 3 restore; turn 4 misses.
+        c.record_first_turn();
+        c.record_restore(true, 40);
+        c.record_restore(true, 60);
+        c.record_restore(false, 0);
+        for _ in 0..4 {
+            c.record_turn();
+        }
+        c.record_snapshot(true);
+        c.record_snapshot(true);
+        c.record_snapshot(false);
+        c.record_snapshot_failure();
+        c.record_expired(2);
+        let s = c.stats();
+        assert_eq!(s.turns, 4);
+        assert_eq!(s.first_turns, 1);
+        assert_eq!(s.restore_hits, 2);
+        assert_eq!(s.restore_misses, 1);
+        assert_eq!(s.saved_positions, 100);
+        assert_eq!(s.snapshots, 2);
+        assert_eq!(s.snapshots_rejected, 1);
+        assert_eq!(s.snapshot_failures, 1);
+        assert_eq!(s.expired, 2);
+        assert!((s.restore_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.saved_per_turn() - 25.0).abs() < 1e-12);
+        // Delta attribution, as run_batch uses it.
+        let base = s;
+        c.record_restore(true, 10);
+        c.record_turn();
+        let d = c.stats().since(&base);
+        assert_eq!(d.turns, 1);
+        assert_eq!(d.restore_hits, 1);
+        assert_eq!(d.saved_positions, 10);
+        assert_eq!(d.first_turns, 0);
+        // since + merge round-trips to the later reading.
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged, c.stats());
+    }
+
+    #[test]
+    fn snapshot_memory_totals_all_tiers() {
+        let m = SnapshotMemory {
+            cached_entries: 3,
+            cached_positions: 40,
+            cached_bytes: 4096,
+            device_entries: 1,
+            device_positions: 12,
+            device_bytes: 1024,
+            parked_entries: 2,
+            parked_bytes: 2048,
+        };
+        assert_eq!(m.total_bytes(), 4096 + 1024 + 2048);
+        assert_eq!(SnapshotMemory::default().total_bytes(), 0);
+        // Fresh batch metrics carry empty gauges and convo counters.
+        let zero = ServeMetrics::from_responses(&[], 0.0);
+        assert_eq!(zero.snapshot_memory, SnapshotMemory::default());
+        assert_eq!(zero.convo, ConvoStats::default());
+        assert_eq!(zero.tier.lookups(), 0);
     }
 
     #[test]

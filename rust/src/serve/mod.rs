@@ -35,12 +35,22 @@
 //!   [`ServeEvent`] the moment it is emitted. Batches return per-request
 //!   outcomes ([`BatchOutcome`]): one poisoned prompt fails alone. With
 //!   [`PoolConfig::prefix_cache_positions`] set, the pool keeps one
-//!   [`PrefixCacheStore`](crate::inference::PrefixCacheStore) of
-//!   post-prefill KV snapshots **shared across all workers**, so
+//!   tiered snapshot store
+//!   ([`TieredStore`](crate::inference::TieredStore)) of post-prefill
+//!   and end-of-turn KV snapshots **shared across all workers**, so
 //!   admissions sharing a prompt prefix (system-prompt traffic) restore
 //!   it — whichever worker prefilled it — and prefill only the suffix,
 //!   on either engine (the pipelined engine snapshots and restores over
-//!   its stage chain's drain protocol).
+//!   its stage chain's drain protocol); within
+//!   [`PoolConfig::device_tier_positions`], the store's hottest entries
+//!   stay pinned device-resident.
+//!   **Conversational serving** ([`ServeRequest::with_conversation`]):
+//!   a completed turn's end-of-turn KV state (prompt ⧺ generated) is
+//!   snapshotted into the same store before its session closes, so the
+//!   conversation's next turn restores the whole history and prefills
+//!   only its own new text; a pool-wide registry expires conversations
+//!   idle past [`PoolConfig::convo_idle_ttl`], releasing their stored
+//!   history.
 //!   Workers step their live sessions in policy-ordered rounds with
 //!   **lane-fused batched decode** ([`PoolConfig::lane_fusion`]):
 //!   same-policy sessions with no recompute deficit advance through one
@@ -71,8 +81,13 @@
 //!   occupancy histogram that makes bubble-filling observable), and
 //!   the SLO surface: p99 TTFT, deadline-miss rate over deadlined
 //!   requests, control-plane counters ([`SloStats`]:
-//!   preempt/resume/park-fault/shed/degrade, park-store peak), and
-//!   per-tenant token shares ([`TenantShare`]).
+//!   preempt/resume/park-fault/shed/degrade, park-store peak),
+//!   per-tenant token shares ([`TenantShare`]), conversation counters
+//!   ([`ConvoStats`]: turns, restore hit rate, prefill positions saved,
+//!   end-of-turn snapshots, TTL expiries), device-tier activity
+//!   ([`crate::inference::TierStats`]), and the unified
+//!   [`SnapshotMemory`] gauge (prefix store + device tier + park store
+//!   under one block).
 //!
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.
@@ -83,8 +98,9 @@ pub mod request;
 pub mod scheduler;
 
 pub use metrics::{
-    percentile, InterleaveStats, LaneCounters, LaneStats, ServeMetrics,
-    SloCounters, SloStats, TenantShare,
+    percentile, ConvoCounters, ConvoStats, InterleaveStats, LaneCounters,
+    LaneStats, ServeMetrics, SloCounters, SloStats, SnapshotMemory,
+    TenantShare,
 };
 pub use pool::{
     plan_round, BatchOutcome, ControlConfig, ControlFault, EngineKind,

@@ -18,12 +18,29 @@
 //! uses.
 //!
 //! With [`PoolConfig::prefix_cache_positions`] set, the pool keeps **one**
-//! [`PrefixCacheStore`] of post-prefill KV snapshots shared by every
-//! worker (the store is `Sync`; a prefix prefilled by worker 0 serves
-//! admissions on worker 3): admissions restore the longest cached prefix
-//! of their prompt and prefill only the suffix (shared system-prompt
-//! traffic), with hit-rate and prefill-positions-saved surfaced in
-//! [`ServeMetrics`].
+//! tiered snapshot store ([`TieredStore`]) of KV snapshots shared by
+//! every worker (the store is `Sync`; a prefix prefilled by worker 0
+//! serves admissions on worker 3): admissions restore the longest cached
+//! prefix of their prompt and prefill only the suffix (shared
+//! system-prompt traffic), with hit-rate and prefill-positions-saved
+//! surfaced in [`ServeMetrics`]. Within
+//! [`PoolConfig::device_tier_positions`], the store pins its hottest
+//! entries device-resident; per-tier activity lands in
+//! [`ServeMetrics::tier`].
+//!
+//! **Conversational serving**
+//! ([`crate::serve::ServeRequest::with_conversation`]): when a
+//! conversation-tagged turn completes, its end-of-turn KV state —
+//! prompt ⧺ generated tokens — is snapshotted into the same store
+//! *before* the session closes, keyed under the conversation's full
+//! token history. The next turn's prompt textually extends that
+//! history, so its admission restores everything and prefills only its
+//! own new text (O(new turn), not O(history)). A pool-wide registry
+//! tracks per-conversation activity and releases a conversation's
+//! stored history once it idles past [`PoolConfig::convo_idle_ttl`]
+//! (swept at batch start); turn/restore/snapshot/expiry counters land
+//! in [`ServeMetrics::convo`], and store + device-tier + park-store
+//! occupancy under one [`ServeMetrics::snapshot_memory`] gauge block.
 //!
 //! Exit decisions are [`ExitPolicy`] values end-to-end: the pool default
 //! is [`PoolConfig::policy`], each request may override it
@@ -85,7 +102,7 @@
 //! output-invisibility and the fault-injection containment
 //! properties.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -95,13 +112,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::inference::{
     DecodeBackend, DecodeSession, ExitPolicy, ModelState, ParkedSession,
-    PipelinedEngine, PrefixCacheStats, PrefixCacheStore, SequentialEngine,
-    StepEvent,
+    PipelinedEngine, PrefixCacheStats, SequentialEngine, StepEvent,
+    TierStats, TieredStore,
 };
 
 use super::metrics::{
-    InterleaveStats, LaneCounters, LaneStats, ServeMetrics, SloCounters,
-    SloStats,
+    ConvoCounters, ConvoStats, InterleaveStats, LaneCounters, LaneStats,
+    ServeMetrics, SloCounters, SloStats, SnapshotMemory,
 };
 use super::request::{ServeRequest, ServeResponse};
 use super::scheduler::{
@@ -146,14 +163,27 @@ pub struct PoolConfig {
     /// session id.
     pub max_concurrent: usize,
     /// Pool-wide shared-prefix KV-cache budget in cached positions
-    /// (0 disables). When set, the pool keeps one [`PrefixCacheStore`]
-    /// of post-prefill snapshots shared across all workers: admissions
-    /// on any worker restore the longest cached prefix of their prompt
-    /// and prefill only the suffix. Both engines participate
-    /// ([`DecodeBackend::supports_cache_snapshots`]): sequential
-    /// sessions snapshot their own caches, and the pipelined engine
-    /// drains per-stage session slots over its snapshot protocol.
+    /// (0 disables). When set, the pool keeps one [`TieredStore`] of
+    /// post-prefill and end-of-turn snapshots shared across all
+    /// workers: admissions on any worker restore the longest cached
+    /// prefix of their prompt and prefill only the suffix. Both engines
+    /// participate ([`DecodeBackend::supports_cache_snapshots`]):
+    /// sequential sessions snapshot their own caches, and the pipelined
+    /// engine drains per-stage session slots over its snapshot
+    /// protocol.
     pub prefix_cache_positions: usize,
+    /// Device-resident tier budget of the snapshot store, in cached
+    /// positions: the store's hottest entries (repeat-hit system
+    /// prompts, active conversations) are pinned device-resident within
+    /// this budget ([`TieredStore`]), immune to host-tier LRU pressure.
+    /// 0 keeps the store host-only; no effect while
+    /// `prefix_cache_positions` is 0.
+    pub device_tier_positions: usize,
+    /// Conversations ([`crate::serve::ServeRequest::with_conversation`])
+    /// idle longer than this are expired: their registry entry and
+    /// stored end-of-turn snapshot are released. The TTL is swept at
+    /// batch start, so expiry takes effect between batches.
+    pub convo_idle_ttl: Duration,
     /// Fuse same-policy live sessions into batched decode lane groups
     /// (manifest `decode_lanes` executables) instead of stepping each
     /// with its own batch-1 pass. On engines or manifests without lane
@@ -393,10 +423,13 @@ pub struct EnginePool {
     /// arriving during the readiness wait); consumed before `recv`.
     stash: VecDeque<WorkerEvent>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    /// The pool-wide prefix KV-cache store shared by every worker (one
+    /// The pool-wide tiered snapshot store shared by every worker (one
     /// element; empty when the cache is disabled). The pool keeps the
     /// handle so batch metrics can read its counters.
-    prefix_stores: Vec<Arc<PrefixCacheStore>>,
+    prefix_stores: Vec<Arc<TieredStore>>,
+    /// Pool-wide conversation plane: the id registry plus the
+    /// turn/restore/expiry counters, shared by every worker.
+    convo: Arc<ConvoPlane>,
     /// Pool-wide lane-fusion counters, shared by every worker.
     lane_counters: Arc<LaneCounters>,
     /// Pool-wide SLO control-plane counters (preempt/park/resume),
@@ -428,10 +461,11 @@ impl EnginePool {
         // lock), so sharing it lets a prefix prefilled on one worker
         // serve admissions on every other, and the position budget
         // bounds the pool rather than budget x workers.
-        let prefix_stores: Vec<Arc<PrefixCacheStore>> =
+        let prefix_stores: Vec<Arc<TieredStore>> =
             if cfg.prefix_cache_positions > 0 {
-                vec![Arc::new(PrefixCacheStore::new(
+                vec![Arc::new(TieredStore::new(
                     cfg.prefix_cache_positions,
+                    cfg.device_tier_positions,
                 ))]
             } else {
                 Vec::new()
@@ -439,6 +473,7 @@ impl EnginePool {
         let lane_counters = Arc::new(LaneCounters::default());
         let slo_counters = Arc::new(SloCounters::default());
         let park = Arc::new(ParkStore::new(cfg.control.park_capacity));
+        let convo = Arc::new(ConvoPlane::new(cfg.convo_idle_ttl));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let sched = Arc::clone(&sched);
@@ -449,12 +484,13 @@ impl EnginePool {
             let counters = Arc::clone(&lane_counters);
             let slo = Arc::clone(&slo_counters);
             let park = Arc::clone(&park);
+            let convo = Arc::clone(&convo);
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
                 .spawn(move || {
                     worker_main(
                         w, state, cfg, sched, tx, store, counters, slo,
-                        park,
+                        park, convo,
                     )
                 })
                 .expect("spawn serve worker");
@@ -471,6 +507,7 @@ impl EnginePool {
             stash: VecDeque::new(),
             workers,
             prefix_stores,
+            convo,
             lane_counters,
             slo_counters,
             park,
@@ -507,21 +544,63 @@ impl EnginePool {
         &self.cfg
     }
 
-    /// The pool's shared prefix KV-cache store as a one-element slice
+    /// The pool's shared tiered snapshot store as a one-element slice
     /// (empty when the cache is disabled). Handles stay valid across
     /// [`EnginePool::shutdown`], so tests can assert pin/budget
     /// invariants after the workers exit.
-    pub fn prefix_stores(&self) -> &[Arc<PrefixCacheStore>] {
+    pub fn prefix_stores(&self) -> &[Arc<TieredStore>] {
         &self.prefix_stores
     }
 
-    /// Lifetime prefix KV-cache counters of the shared store.
+    /// Lifetime host-tier prefix KV-cache counters of the shared store.
     pub fn prefix_stats(&self) -> PrefixCacheStats {
         let mut agg = PrefixCacheStats::default();
         for st in &self.prefix_stores {
             agg.merge(&st.stats());
         }
         agg
+    }
+
+    /// Lifetime device-tier counters of the shared store (per-batch
+    /// deltas are in [`ServeMetrics::tier`]).
+    pub fn tier_stats(&self) -> TierStats {
+        let mut agg = TierStats::default();
+        for st in &self.prefix_stores {
+            agg.merge(&st.tier_stats());
+        }
+        agg
+    }
+
+    /// Lifetime conversation counters of the pool (per-batch deltas are
+    /// in [`ServeMetrics::convo`]).
+    pub fn convo_stats(&self) -> ConvoStats {
+        self.convo.counters.stats()
+    }
+
+    /// Conversations currently registered (served at least one turn and
+    /// not yet expired).
+    pub fn active_conversations(&self) -> usize {
+        self.convo.active()
+    }
+
+    /// Snapshot-memory occupancy right now: the prefix/conversation
+    /// store's host tier, its device-resident tier, and the preemption
+    /// park store, under one gauge block (what
+    /// [`ServeMetrics::snapshot_memory`] reports at batch close).
+    pub fn snapshot_memory(&self) -> SnapshotMemory {
+        let mut m = SnapshotMemory::default();
+        for st in &self.prefix_stores {
+            m.cached_entries += st.len();
+            m.cached_positions += st.used_positions();
+            m.cached_bytes += st.used_bytes();
+            m.device_entries += st.device_len();
+            m.device_positions += st.device_used_positions();
+            m.device_bytes += st.device_bytes();
+        }
+        let (parked_entries, parked_bytes) = self.park.usage();
+        m.parked_entries = parked_entries;
+        m.parked_bytes = parked_bytes;
+        m
     }
 
     /// Enqueue one request (non-blocking). Returns `false` when the pool
@@ -602,6 +681,12 @@ impl EnginePool {
         if self.alive == 0 {
             bail!("no live pool workers");
         }
+        // Conversations idle since the previous batch expire now,
+        // releasing their stored end-of-turn snapshots — the TTL is
+        // swept at batch boundaries, where no worker is mid-turn on an
+        // expiring id.
+        self.convo
+            .expire_idle(self.prefix_stores.first().map(|s| s.as_ref()));
         let n = reqs.len();
         let t0 = Instant::now();
         // Store counters are monotonic across batches; remember where
@@ -609,6 +694,9 @@ impl EnginePool {
         // activity.
         let prefix_base: Vec<PrefixCacheStats> =
             self.prefix_stores.iter().map(|s| s.stats()).collect();
+        let tier_base: Vec<TierStats> =
+            self.prefix_stores.iter().map(|s| s.tier_stats()).collect();
+        let convo_base = self.convo.counters.stats();
         let lane_base = self.lane_counters.stats();
         let interleave_base = self.lane_counters.interleave_stats();
         let slo_base = self.slo_counters.stats();
@@ -696,6 +784,11 @@ impl EnginePool {
         for (store, base) in self.prefix_stores.iter().zip(&prefix_base) {
             metrics.prefix.merge(&store.stats().since(base));
         }
+        for (store, base) in self.prefix_stores.iter().zip(&tier_base) {
+            metrics.tier.merge(&store.tier_stats().since(base));
+        }
+        metrics.convo = self.convo.counters.stats().since(&convo_base);
+        metrics.snapshot_memory = self.snapshot_memory();
         metrics.lanes = self.lane_counters.stats().since(&lane_base);
         metrics.interleave = self
             .lane_counters
@@ -751,6 +844,10 @@ struct Live {
     priority: i32,
     /// Tenant id, echoed into the response for per-tenant shares.
     tenant: usize,
+    /// Conversation id: on completion the session's end-of-turn KV
+    /// state is snapshotted into the pool store under this id's
+    /// registry entry.
+    conversation: Option<u64>,
     /// When the worker admitted (and prefilled) the request.
     admitted: Instant,
     /// Last token emission (admission before the first token).
@@ -772,6 +869,9 @@ struct ParkedEntry {
     /// Absolute deadline (for resume ordering).
     due: Option<Instant>,
     policy: ExitPolicy,
+    /// Conversation id, carried across park/resume so the resumed turn
+    /// still snapshots at completion.
+    conversation: Option<u64>,
     queue_seconds: f64,
     admitted: Instant,
     token_seconds: Vec<f64>,
@@ -828,6 +928,16 @@ impl ParkStore {
         self.len() == 0
     }
 
+    /// Occupancy gauge: parked entries and the host bytes their
+    /// snapshots hold.
+    fn usage(&self) -> (usize, usize) {
+        let st = self.inner.lock().unwrap();
+        (
+            st.entries.len(),
+            st.entries.iter().map(|e| e.parked.snapshot_bytes()).sum(),
+        )
+    }
+
     /// Most sessions parked at once over the store's lifetime.
     #[cfg(test)]
     fn peak(&self) -> usize {
@@ -877,6 +987,121 @@ impl ParkStore {
             });
         }
         best.map(|i| st.entries.remove(i))
+    }
+}
+
+/// One registered conversation: its activity clock plus the store key
+/// of its latest end-of-turn snapshot.
+struct ConvoEntry {
+    /// Last turn activity (admission or completion).
+    last_active: Instant,
+    /// Store key (prompt ⧺ generated tokens) of the latest end-of-turn
+    /// snapshot, kept so expiry — and replacement by the next turn's
+    /// snapshot — can release it.
+    last_key: Option<Vec<i32>>,
+}
+
+/// The pool-wide conversation plane: a registry of active conversation
+/// ids plus the counters batch metrics are cut from. Workers touch it
+/// at admission (restore accounting) and turn completion (end-of-turn
+/// snapshot bookkeeping); the pool sweeps the idle TTL at batch start.
+struct ConvoPlane {
+    registry: Mutex<BTreeMap<u64, ConvoEntry>>,
+    counters: ConvoCounters,
+    /// Conversations idle past this expire
+    /// ([`PoolConfig::convo_idle_ttl`]).
+    ttl: Duration,
+}
+
+impl ConvoPlane {
+    fn new(ttl: Duration) -> ConvoPlane {
+        ConvoPlane {
+            registry: Mutex::new(BTreeMap::new()),
+            counters: ConvoCounters::default(),
+            ttl,
+        }
+    }
+
+    /// Whether `id` already completed a turn (so this admission is a
+    /// follow-up), refreshing its activity clock when so.
+    fn touch(&self, id: u64) -> bool {
+        let mut reg = self.registry.lock().unwrap();
+        match reg.get_mut(&id) {
+            Some(e) => {
+                e.last_active = Instant::now();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Record a completed turn: register (or refresh) the conversation
+    /// and remember its latest snapshot key. The previous turn's
+    /// snapshot — a strict prefix of the new one, useless once the
+    /// deeper entry exists — is released from the store.
+    fn complete_turn(
+        &self,
+        id: u64,
+        key: Option<Vec<i32>>,
+        store: Option<&TieredStore>,
+    ) {
+        let now = Instant::now();
+        let prev = {
+            let mut reg = self.registry.lock().unwrap();
+            let e = reg.entry(id).or_insert_with(|| ConvoEntry {
+                last_active: now,
+                last_key: None,
+            });
+            e.last_active = now;
+            match key {
+                Some(k) if e.last_key.as_ref() != Some(&k) => {
+                    e.last_key.replace(k)
+                }
+                // No new snapshot stored (or the key did not change):
+                // the previous one stays the conversation's restore
+                // point.
+                _ => None,
+            }
+        };
+        if let (Some(prev), Some(st)) = (prev, store) {
+            st.remove(&prev);
+        }
+    }
+
+    /// Expire conversations idle past the TTL, releasing their stored
+    /// end-of-turn snapshots.
+    fn expire_idle(&self, store: Option<&TieredStore>) {
+        let now = Instant::now();
+        let expired: Vec<Vec<i32>> = {
+            let mut reg = self.registry.lock().unwrap();
+            let dead: Vec<u64> = reg
+                .iter()
+                .filter(|(_, e)| {
+                    now.duration_since(e.last_active) > self.ttl
+                })
+                .map(|(&id, _)| id)
+                .collect();
+            let mut keys = Vec::new();
+            for id in &dead {
+                if let Some(e) = reg.remove(id) {
+                    keys.extend(e.last_key);
+                }
+            }
+            if !dead.is_empty() {
+                self.counters.record_expired(dead.len() as u64);
+            }
+            keys
+        };
+        if let Some(st) = store {
+            for k in expired {
+                st.remove(&k);
+            }
+        }
+    }
+
+    /// Conversations currently registered.
+    fn active(&self) -> usize {
+        self.registry.lock().unwrap().len()
     }
 }
 
@@ -969,10 +1194,11 @@ fn worker_main(
     cfg: PoolConfig,
     sched: Arc<Scheduler>,
     events: Sender<WorkerEvent>,
-    store: Option<Arc<PrefixCacheStore>>,
+    store: Option<Arc<TieredStore>>,
     counters: Arc<LaneCounters>,
     slo: Arc<SloCounters>,
     park: Arc<ParkStore>,
+    convo: Arc<ConvoPlane>,
 ) {
     let mut engine: Box<dyn PoolEngine> = match build_engine(state, &cfg) {
         Ok(e) => e,
@@ -1080,6 +1306,7 @@ fn worker_main(
                 engine.as_mut(),
                 &cfg,
                 store.as_deref(),
+                &convo,
                 &counters,
                 &events,
                 &mut current_policy,
@@ -1136,6 +1363,7 @@ fn worker_main(
                             deadline: vdeadline,
                             priority: vprio,
                             tenant: vtenant,
+                            conversation: vconvo,
                             admitted: vadmitted,
                             last_event: _,
                             token_seconds: vtokens,
@@ -1168,6 +1396,7 @@ fn worker_main(
                                         deadline: vdeadline,
                                         due: infos[vi].due,
                                         policy: vpolicy,
+                                        conversation: vconvo,
                                         queue_seconds: vqueue,
                                         admitted: vadmitted,
                                         token_seconds: vtokens,
@@ -1214,6 +1443,7 @@ fn worker_main(
                             engine.as_mut(),
                             &cfg,
                             store.as_deref(),
+                            &convo,
                             &counters,
                             &events,
                             &mut current_policy,
@@ -1335,6 +1565,8 @@ fn worker_main(
                             &events,
                             engine.backend(),
                             &sched,
+                            store.as_deref(),
+                            &convo,
                             &mut live,
                             retired,
                         );
@@ -1414,6 +1646,8 @@ fn worker_main(
                             &events,
                             engine.backend(),
                             &sched,
+                            store.as_deref(),
+                            &convo,
                             &mut live,
                             retired,
                         );
@@ -1480,6 +1714,8 @@ fn worker_main(
                             &events,
                             engine.backend(),
                             &sched,
+                            store.as_deref(),
+                            &convo,
                             &mut live,
                             retired,
                         );
@@ -1554,6 +1790,8 @@ fn worker_main(
             &events,
             engine.backend(),
             &sched,
+            store.as_deref(),
+            &convo,
             &mut live,
             retired,
         );
@@ -1570,16 +1808,18 @@ fn worker_main(
 }
 
 /// Admit one popped request into a free live slot: apply its policy,
-/// prefill (through the shared prefix cache when configured), and push
-/// the live session. Returns `false` when the engine panicked — the
-/// request and every live session were already failed and the caller
-/// must stop serving.
+/// prefill (through the shared snapshot store when configured), and
+/// push the live session. Conversation-tagged requests are counted as
+/// opening or follow-up turns here (restore hit/miss, positions saved).
+/// Returns `false` when the engine panicked — the request and every
+/// live session were already failed and the caller must stop serving.
 #[allow(clippy::too_many_arguments)]
 fn admit_request(
     worker: usize,
     engine: &mut dyn PoolEngine,
     cfg: &PoolConfig,
-    store: Option<&PrefixCacheStore>,
+    store: Option<&TieredStore>,
+    convo: &ConvoPlane,
     counters: &LaneCounters,
     events: &Sender<WorkerEvent>,
     current_policy: &mut ExitPolicy,
@@ -1600,34 +1840,51 @@ fn admit_request(
     let started = std::panic::catch_unwind(AssertUnwindSafe(|| {
         let be = engine.backend();
         let mut s = DecodeSession::new_text(be, &req.prompt, req.max_new)?;
-        match store {
-            Some(st) => {
-                let cached = s.prefill_with_cache(be, st)?;
-                // Extend the store with this prompt's full
-                // prefix unless a resident entry already covers
-                // it in full (then the hit refreshed its LRU
-                // slot and a re-insert would only duplicate it).
-                // `would_admit` skips the host-copy snapshot
-                // when the store could only reject it, and a
-                // failed snapshot merely logs — the request
-                // already prefilled fine without the cache.
-                if !s.is_done()
-                    && cached.cached_tokens < s.prompt_len()
-                    && st.would_admit(s.prompt_len().saturating_sub(1))
-                {
-                    match s.prefix_snapshot(be) {
-                        Ok(snap) => {
-                            st.insert(snap);
-                        }
-                        Err(e) => eprintln!(
-                            "[serve] worker {worker}: prefix \
-                             snapshot failed (serving continues \
-                             uncached): {e:#}"
-                        ),
+        let cached = match store {
+            Some(st) => s.prefill_with_cache(be, st)?,
+            None => {
+                s.prefill(be)?;
+                Default::default()
+            }
+        };
+        if let Some(cid) = req.conversation {
+            // A registered id makes this a follow-up turn: its restore
+            // either hit the conversation's stored history or missed
+            // (evicted, expired between batches, or a cold store).
+            if convo.touch(cid) {
+                convo.counters.record_restore(
+                    cached.cached_tokens > 0,
+                    cached.saved_positions as u64,
+                );
+            } else {
+                convo.counters.record_first_turn();
+            }
+        } else if let Some(st) = store {
+            // Extend the store with this prompt's full
+            // prefix unless a resident entry already covers
+            // it in full (then the hit refreshed its LRU
+            // slot and a re-insert would only duplicate it).
+            // `would_admit` skips the host-copy snapshot
+            // when the store could only reject it, and a
+            // failed snapshot merely logs — the request
+            // already prefilled fine without the cache.
+            // Conversation turns skip this: their end-of-turn
+            // snapshot covers the prompt and more.
+            if !s.is_done()
+                && cached.cached_tokens < s.prompt_len()
+                && st.would_admit(s.prompt_len().saturating_sub(1))
+            {
+                match s.prefix_snapshot(be) {
+                    Ok(snap) => {
+                        st.insert(snap);
                     }
+                    Err(e) => eprintln!(
+                        "[serve] worker {worker}: prefix \
+                         snapshot failed (serving continues \
+                         uncached): {e:#}"
+                    ),
                 }
             }
-            None => s.prefill(be)?,
         }
         Ok::<_, anyhow::Error>(s)
     }));
@@ -1641,6 +1898,7 @@ fn admit_request(
                 deadline: req.deadline,
                 priority: req.priority,
                 tenant: req.tenant,
+                conversation: req.conversation,
                 admitted,
                 last_event: admitted,
                 token_seconds: Vec::new(),
@@ -1703,6 +1961,7 @@ fn resume_parked(
         deadline,
         due: _,
         policy,
+        conversation,
         queue_seconds,
         admitted,
         token_seconds,
@@ -1734,6 +1993,7 @@ fn resume_parked(
                 deadline,
                 priority,
                 tenant,
+                conversation,
                 admitted,
                 last_event: Instant::now(),
                 token_seconds,
@@ -1763,21 +2023,35 @@ fn resume_parked(
 /// Deliver a round's deferred outcomes — `(live index, Some(error))`
 /// failures and `(live index, None)` completions — removing each from
 /// the live set, highest index first so the recorded indices stay
-/// valid. Each retired session is closed first, releasing its
-/// backend-side decode state (per-stage KV slots on interleaving
-/// engines). Completions feed their service time back to the
-/// scheduler's predicted-TTFT estimator (admission control).
+/// valid. A completed conversation turn snapshots its end-of-turn KV
+/// state *before* the close releases the session's caches. Each retired
+/// session is then closed, releasing its backend-side decode state
+/// (per-stage KV slots on interleaving engines). Completions feed their
+/// service time back to the scheduler's predicted-TTFT estimator
+/// (admission control).
+#[allow(clippy::too_many_arguments)]
 fn settle_round(
     worker: usize,
     events: &Sender<WorkerEvent>,
     backend: &mut dyn DecodeBackend,
     sched: &Scheduler,
+    store: Option<&TieredStore>,
+    convo: &ConvoPlane,
     live: &mut Vec<Live>,
     mut retired: Vec<(usize, Option<String>)>,
 ) {
     retired.sort_by(|a, b| b.0.cmp(&a.0));
     for (i, err) in retired {
         let mut l = live.remove(i);
+        if err.is_none() {
+            if let Some(cid) = l.conversation {
+                let key = end_of_turn_snapshot(
+                    worker, backend, store, convo, &l.session,
+                );
+                convo.counters.record_turn();
+                convo.complete_turn(cid, key, store);
+            }
+        }
         l.session.close(backend);
         match err {
             Some(error) => {
@@ -1789,6 +2063,43 @@ fn settle_round(
                 let service = complete(worker, events, l);
                 sched.note_done(service);
             }
+        }
+    }
+}
+
+/// Capture a completed conversation turn's end-of-turn KV snapshot
+/// (prompt ⧺ generated tokens) into the store, returning the stored
+/// key. Budget refusals and capture errors only count and log — the
+/// turn itself already completed; its conversation merely restarts
+/// cold next turn.
+fn end_of_turn_snapshot(
+    worker: usize,
+    backend: &mut dyn DecodeBackend,
+    store: Option<&TieredStore>,
+    convo: &ConvoPlane,
+    session: &DecodeSession,
+) -> Option<Vec<i32>> {
+    let st = store?;
+    let positions = (session.prompt_len() + session.generated().len())
+        .saturating_sub(1);
+    if !st.would_admit(positions) {
+        convo.counters.record_snapshot(false);
+        return None;
+    }
+    match session.finish_snapshot(backend) {
+        Ok(snap) => {
+            let key = snap.tokens.clone();
+            let stored = st.insert(snap);
+            convo.counters.record_snapshot(stored);
+            stored.then_some(key)
+        }
+        Err(e) => {
+            convo.counters.record_snapshot_failure();
+            eprintln!(
+                "[serve] worker {worker}: end-of-turn snapshot failed \
+                 (conversation restarts cold): {e:#}"
+            );
+            None
         }
     }
 }
@@ -2216,11 +2527,53 @@ mod tests {
             deadline: None,
             due: None,
             policy: ExitPolicy::Never,
+            conversation: None,
             queue_seconds: 0.0,
             admitted: Instant::now(),
             token_seconds: Vec::new(),
             parked: ParkedSession::stub(vec![1, 2, 3]),
         }
+    }
+
+    /// Registry lifecycle: an unknown id opens (touch misses), a
+    /// completed turn registers it, the next turn's snapshot replaces —
+    /// and releases — the previous one, and the idle sweep expires the
+    /// conversation and its stored history.
+    #[test]
+    fn convo_plane_tracks_turns_and_expires_idle_history() {
+        use crate::inference::CacheSnapshot;
+
+        let snap = |tokens: &[i32]| CacheSnapshot {
+            tokens: tokens.to_vec(),
+            stage_caches: Vec::new(),
+            deficit: 0,
+        };
+        let plane = ConvoPlane::new(Duration::from_millis(0));
+        let store = TieredStore::new(64, 0);
+        assert!(!plane.touch(7), "unknown id is an opening turn");
+        // Turn 1 completes with its history stored.
+        assert!(store.insert(snap(&[1, 2, 3])));
+        plane.complete_turn(7, Some(vec![1, 2, 3]), Some(&store));
+        assert_eq!(plane.active(), 1);
+        assert!(plane.touch(7), "registered id is a follow-up turn");
+        // Turn 2's deeper snapshot replaces turn 1's, which is removed
+        // from the store.
+        assert!(store.insert(snap(&[1, 2, 3, 4, 5])));
+        plane.complete_turn(7, Some(vec![1, 2, 3, 4, 5]), Some(&store));
+        assert_eq!(store.len(), 1);
+        assert!(store.lookup(&[1, 2, 3, 4, 5]).is_some());
+        // A turn that failed to snapshot keeps the previous restore
+        // point.
+        plane.complete_turn(7, None, Some(&store));
+        assert_eq!(store.len(), 1);
+        // Zero TTL: the sweep expires the conversation and releases its
+        // stored history.
+        plane.expire_idle(Some(&store));
+        assert_eq!(plane.active(), 0);
+        assert!(store.is_empty());
+        assert_eq!(plane.counters.stats().expired, 1);
+        // Expired ids open again.
+        assert!(!plane.touch(7));
     }
 
     /// Resume order: highest priority first; within a priority,

@@ -35,6 +35,14 @@ pub struct ServeRequest {
     /// is what preemption exists for). Offsets are honored in request
     /// order; a later request with a smaller offset submits immediately.
     pub start_after: Option<Duration>,
+    /// Conversation id keying the pool's conversation registry. When
+    /// set, the pool snapshots the turn's end-of-turn KV state (prompt
+    /// ⧺ generated) into its snapshot store on completion, and a later
+    /// request with the same id whose prompt extends that history
+    /// restores it — prefilling only the new turn's text. Conversations
+    /// idle past the pool's TTL are expired and their stored history
+    /// released.
+    pub conversation: Option<u64>,
 }
 
 impl ServeRequest {
@@ -52,6 +60,7 @@ impl ServeRequest {
             deadline: None,
             tenant: 0,
             start_after: None,
+            conversation: None,
         }
     }
 
@@ -87,6 +96,15 @@ impl ServeRequest {
     /// (staggered-arrival modeling; see [`ServeRequest::start_after`]).
     pub fn with_start_after(mut self, offset: Duration) -> ServeRequest {
         self.start_after = Some(offset);
+        self
+    }
+
+    /// Serve this request as one turn of conversation `id`: its
+    /// end-of-turn KV state is snapshotted for the conversation's next
+    /// turn, and its own prefill restores whatever history the previous
+    /// turn left (see [`ServeRequest::conversation`]).
+    pub fn with_conversation(mut self, id: u64) -> ServeRequest {
+        self.conversation = Some(id);
         self
     }
 }
@@ -221,5 +239,8 @@ mod tests {
             r.start_after,
             Some(std::time::Duration::from_millis(5))
         );
+        assert_eq!(ServeRequest::new(7, "hi", 8).conversation, None);
+        let r = ServeRequest::new(7, "hi", 8).with_conversation(42);
+        assert_eq!(r.conversation, Some(42));
     }
 }

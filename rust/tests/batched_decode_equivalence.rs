@@ -95,6 +95,8 @@ fn pooled_streams(
             sched: Policy::Fifo,
             max_concurrent,
             prefix_cache_positions,
+            device_tier_positions: 0,
+            convo_idle_ttl: std::time::Duration::from_secs(300),
             lane_fusion,
             lane_residency: true,
             control: ControlConfig::default(),

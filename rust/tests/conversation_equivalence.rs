@@ -1,0 +1,415 @@
+//! Integration: conversational KV reuse must be *invisible* in the
+//! outputs. A multi-turn chat driven with end-of-turn snapshots (each
+//! follow-up turn restores its conversation's stored history and
+//! prefills only its own new text) must stream token-for-token and
+//! exit-layer-for-exit-layer identical results to a cold replay of the
+//! byte-identical prompts through a snapshot-free pool — on both
+//! engines, across exit policies including the full-model baseline,
+//! when the store budget evicts or rejects snapshots mid-conversation,
+//! and with the device tier pinned on vs. host-only.
+//!
+//! End-of-turn snapshots carry generated (not just prompt) KV entries
+//! plus deficit bookkeeping across turns, which is exactly the kind of
+//! state that corrupts outputs silently; hence this suite.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{
+    conversation_traffic, ConvoSpec, ConvoTurn, Corpus, CorpusSpec,
+};
+use eellm::inference::{ExitPolicy, ModelState};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    ControlConfig, ConvoStats, EngineKind, EnginePool, Policy, PoolConfig,
+    ServeEvent, ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+/// One request's (token, exit layer) emissions, in stream order.
+type Stream = Vec<(i32, usize)>;
+/// Per-conversation, per-turn streams.
+type Streams = Vec<Vec<Stream>>;
+/// Recorded turns: (request id, stitched prompt, max_new) per round.
+type Plan = Vec<Vec<(u64, String, usize)>>;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so exit confidences are meaningful (an untrained
+/// model has near-uniform logits and ties everywhere).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+fn small_corpus() -> Corpus {
+    Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 50_000,
+    })
+}
+
+fn pool_cfg(
+    engine: EngineKind,
+    policy: ExitPolicy,
+    positions: usize,
+    device: usize,
+) -> PoolConfig {
+    PoolConfig {
+        workers: 1,
+        engine,
+        policy,
+        sched: Policy::Fifo,
+        max_concurrent: 2,
+        prefix_cache_positions: positions,
+        device_tier_positions: device,
+        convo_idle_ttl: Duration::from_secs(300),
+        lane_fusion: false,
+        lane_residency: true,
+        control: ControlConfig::default(),
+    }
+}
+
+/// Drive the conversations round-by-round with `with_conversation`
+/// tagging, stitching each turn's prompt from the previous turns' actual
+/// responses. Returns the recorded plan (for cold replay), the streamed
+/// (token, exit layer) sequences per conversation turn, and the merged
+/// conversation counters.
+fn drive_warm(
+    pool: &mut EnginePool,
+    convos: &[Vec<ConvoTurn>],
+    max_seq: usize,
+) -> (Plan, Streams, ConvoStats) {
+    let n = convos.len();
+    let turns = convos[0].len();
+    let mut history: Vec<String> = vec![String::new(); n];
+    let mut plan: Plan = Vec::new();
+    let mut streams: Streams = vec![Vec::new(); n];
+    let mut agg = ConvoStats::default();
+    for r in 0..turns {
+        let mut round: Vec<(u64, String, usize)> = Vec::new();
+        let mut reqs = Vec::new();
+        for (c, track) in convos.iter().enumerate() {
+            let t = &track[r];
+            let prompt = format!("{}{}", history[c], t.user_text);
+            assert!(
+                prompt.len() + t.max_new + 4 < max_seq,
+                "conversation outgrew max_seq; shrink the spec"
+            );
+            let id = (r * n + c) as u64;
+            reqs.push(
+                ServeRequest::new(id, prompt.as_str(), t.max_new)
+                    .with_conversation(c as u64),
+            );
+            round.push((id, prompt, t.max_new));
+        }
+        let mut per: BTreeMap<u64, Stream> = BTreeMap::new();
+        let out = pool
+            .run_batch_streamed(reqs, |ev| {
+                if let ServeEvent::Token { id, token, exit_layer, .. } = ev {
+                    per.entry(*id).or_default().push((*token, *exit_layer));
+                }
+            })
+            .unwrap();
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        agg.merge(&out.metrics.convo);
+        for (id, prompt, _) in &round {
+            let rsp = out
+                .responses
+                .iter()
+                .find(|x| x.id == *id)
+                .expect("warm response");
+            let c = (*id as usize) % n;
+            history[c] = format!("{prompt}{}", rsp.output.text);
+            streams[c].push(per.remove(id).unwrap_or_default());
+        }
+        plan.push(round);
+    }
+    (plan, streams, agg)
+}
+
+/// Replay the recorded plan with *untagged* requests: no conversation
+/// registry, no restores, full prefill every turn.
+fn drive_cold(
+    pool: &mut EnginePool,
+    plan: &Plan,
+    n: usize,
+) -> (Streams, ConvoStats) {
+    let mut streams: Streams = vec![Vec::new(); n];
+    let mut agg = ConvoStats::default();
+    for round in plan {
+        let reqs: Vec<ServeRequest> = round
+            .iter()
+            .map(|(id, p, m)| ServeRequest::new(*id, p.as_str(), *m))
+            .collect();
+        let mut per: BTreeMap<u64, Stream> = BTreeMap::new();
+        let out = pool
+            .run_batch_streamed(reqs, |ev| {
+                if let ServeEvent::Token { id, token, exit_layer, .. } = ev {
+                    per.entry(*id).or_default().push((*token, *exit_layer));
+                }
+            })
+            .unwrap();
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        agg.merge(&out.metrics.convo);
+        for (id, _, _) in round {
+            streams[(*id as usize) % n]
+                .push(per.remove(id).unwrap_or_default());
+        }
+    }
+    (streams, agg)
+}
+
+/// The acceptance grid: both engines x >= 3 exit policies (including
+/// the tau = 1.0 full-model baseline). Every follow-up turn must restore
+/// its conversation snapshot (no misses under an ample budget) and the
+/// warm streams must equal the cold replay exactly.
+#[test]
+fn warm_conversation_equals_cold_replay_across_policies_and_engines() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let corpus = small_corpus();
+    let convos = conversation_traffic(
+        &ConvoSpec {
+            seed: 19,
+            n_conversations: 3,
+            turns: 3,
+            n_system: 2,
+            system_bytes: 48,
+            tenants: vec![1.0],
+            max_new: (2, 4),
+            think_ms: (0, 1),
+        },
+        &corpus.facts,
+    );
+    let n = convos.len();
+    let follow = (convos[0].len() - 1) * n;
+    let max_seq = man.model.max_seq;
+    let policies = [
+        ExitPolicy::confidence(1.0),
+        ExitPolicy::confidence(0.6),
+        ExitPolicy::confidence(0.0),
+    ];
+    for &kind in &[EngineKind::Sequential, EngineKind::Pipelined] {
+        for policy in &policies {
+            let mut warm = EnginePool::new(
+                state.clone(),
+                pool_cfg(kind, policy.clone(), 16 * max_seq, 0),
+            );
+            let (plan, warm_streams, ws) =
+                drive_warm(&mut warm, &convos, max_seq);
+            warm.shutdown().unwrap();
+            assert_eq!(
+                ws.first_turns as usize, n,
+                "{kind:?} {policy:?}: opening turns miscounted: {ws:?}"
+            );
+            assert_eq!(
+                ws.restore_hits as usize, follow,
+                "{kind:?} {policy:?}: a follow-up turn missed its \
+                 snapshot: {ws:?}"
+            );
+            assert_eq!(ws.restore_misses, 0, "{kind:?} {policy:?}: {ws:?}");
+            assert!(
+                ws.saved_positions > 0,
+                "{kind:?} {policy:?}: restores saved nothing: {ws:?}"
+            );
+            assert_eq!(
+                ws.snapshot_failures, 0,
+                "{kind:?} {policy:?}: {ws:?}"
+            );
+
+            let mut cold = EnginePool::new(
+                state.clone(),
+                pool_cfg(kind, policy.clone(), 0, 0),
+            );
+            let (cold_streams, cs) = drive_cold(&mut cold, &plan, n);
+            cold.shutdown().unwrap();
+            assert_eq!(
+                cs.turns, 0,
+                "untagged replay recorded conversation turns"
+            );
+            assert_eq!(
+                warm_streams, cold_streams,
+                "{kind:?} {policy:?}: conversation snapshots changed the \
+                 streamed tokens or exit layers"
+            );
+        }
+    }
+}
+
+/// A budget that fits one opening-turn snapshot but never two — and
+/// rejects the deeper turns outright — churns the store on every round:
+/// one conversation's history is evicted by the other's insert, so its
+/// next turn misses and must fall back to full prefill. Streams must
+/// still equal the cold replay. Untrained weights + threshold 0.0 maximise
+/// the recompute deficit the snapshots carry.
+#[test]
+fn eviction_mid_conversation_keeps_streams_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 9);
+    let corpus = small_corpus();
+    // n_system = 2 gives the two conversations *disjoint* system
+    // prompts: an evicted history cannot be partially served by the
+    // other conversation's entry, so the miss is a real full prefill.
+    let convos = conversation_traffic(
+        &ConvoSpec {
+            seed: 23,
+            n_conversations: 2,
+            turns: 3,
+            n_system: 2,
+            system_bytes: 48,
+            tenants: vec![1.0],
+            max_new: (2, 4),
+            think_ms: (0, 1),
+        },
+        &corpus.facts,
+    );
+    let n = convos.len();
+    let follow = (convos[0].len() - 1) * n;
+
+    let mut warm = EnginePool::new(
+        state.clone(),
+        pool_cfg(EngineKind::Sequential, ExitPolicy::confidence(0.0), 128, 0),
+    );
+    let (plan, warm_streams, ws) =
+        drive_warm(&mut warm, &convos, man.model.max_seq);
+    let store_stats = warm.prefix_stores()[0].stats();
+    warm.shutdown().unwrap();
+    assert_eq!(
+        (ws.restore_hits + ws.restore_misses) as usize,
+        follow,
+        "{ws:?}"
+    );
+    assert!(
+        ws.restore_misses > 0,
+        "the tiny budget never forced a restore miss: {ws:?}"
+    );
+    assert!(
+        ws.restore_hits > 0,
+        "the surviving entry was never restored: {ws:?}"
+    );
+    assert!(
+        store_stats.evictions > 0 || ws.snapshots_rejected > 0,
+        "the budget never churned the store: {store_stats:?} {ws:?}"
+    );
+
+    let mut cold = EnginePool::new(
+        state,
+        pool_cfg(EngineKind::Sequential, ExitPolicy::confidence(0.0), 0, 0),
+    );
+    let (cold_streams, _) = drive_cold(&mut cold, &plan, n);
+    cold.shutdown().unwrap();
+    assert_eq!(
+        warm_streams, cold_streams,
+        "mid-conversation eviction changed the streamed tokens or exit \
+         layers"
+    );
+}
+
+/// Device-tier parity: the same conversations through a host-only store
+/// and a store with a pinned device tier must restore identically —
+/// same streams, same restore hits, same positions saved.
+#[test]
+fn device_tier_is_invisible_to_conversation_streams() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = ModelState::init(man.clone(), 9);
+    let corpus = small_corpus();
+    let convos = conversation_traffic(
+        &ConvoSpec {
+            seed: 31,
+            n_conversations: 3,
+            turns: 3,
+            n_system: 2,
+            system_bytes: 48,
+            tenants: vec![1.0],
+            max_new: (2, 4),
+            think_ms: (0, 1),
+        },
+        &corpus.facts,
+    );
+    let n = convos.len();
+    let follow = (convos[0].len() - 1) * n;
+    let max_seq = man.model.max_seq;
+
+    let mut runs: Vec<(Streams, u64)> = Vec::new();
+    for &device in &[0usize, 4 * max_seq] {
+        let mut pool = EnginePool::new(
+            state.clone(),
+            pool_cfg(
+                EngineKind::Sequential,
+                ExitPolicy::confidence(0.6),
+                16 * max_seq,
+                device,
+            ),
+        );
+        let (_, streams, ws) = drive_warm(&mut pool, &convos, max_seq);
+        let tier = pool.prefix_stores()[0].tier_stats();
+        pool.shutdown().unwrap();
+        assert_eq!(ws.restore_misses, 0, "device {device}: {ws:?}");
+        assert_eq!(
+            ws.restore_hits as usize, follow,
+            "device {device}: {ws:?}"
+        );
+        assert!(
+            tier.lookups() > 0,
+            "device {device}: the tiered store was never consulted"
+        );
+        if device == 0 {
+            assert_eq!(tier.device_hits, 0, "{tier:?}");
+        }
+        runs.push((streams, ws.saved_positions));
+    }
+    assert_eq!(
+        runs[0], runs[1],
+        "the device tier changed conversation streams or savings"
+    );
+}

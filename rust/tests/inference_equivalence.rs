@@ -192,6 +192,8 @@ fn pooled_serving_matches_serial_at_threshold_one() {
                 sched: Policy::ShortestPromptFirst,
                 max_concurrent: 2,
                 prefix_cache_positions: 0,
+                device_tier_positions: 0,
+                convo_idle_ttl: std::time::Duration::from_secs(300),
                 lane_fusion: false,
                 lane_residency: true,
                 control: ControlConfig::default(),
@@ -278,6 +280,8 @@ fn continuous_batching_streams_and_admits_mid_flight() {
             sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
+            device_tier_positions: 0,
+            convo_idle_ttl: std::time::Duration::from_secs(300),
             lane_fusion: false,
             lane_residency: true,
             control: ControlConfig::default(),
@@ -385,6 +389,8 @@ fn batch_reports_per_request_failures() {
             sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
+            device_tier_positions: 0,
+            convo_idle_ttl: std::time::Duration::from_secs(300),
             lane_fusion: false,
             lane_residency: true,
             control: ControlConfig::default(),

@@ -297,6 +297,8 @@ fn pooled_per_request_policies_match_serial() {
             sched: Policy::Fifo,
             max_concurrent: 2,
             prefix_cache_positions: 0,
+            device_tier_positions: 0,
+            convo_idle_ttl: std::time::Duration::from_secs(300),
             lane_fusion: false,
             lane_residency: true,
             control: ControlConfig::default(),

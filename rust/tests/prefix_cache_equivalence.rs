@@ -271,6 +271,8 @@ fn pooled_prefix_cache_matches_disabled_and_saves_prefill() {
                     sched: Policy::Fifo,
                     max_concurrent: 2,
                     prefix_cache_positions: budget,
+                    device_tier_positions: 0,
+                    convo_idle_ttl: std::time::Duration::from_secs(300),
                     lane_fusion: false,
                     lane_residency: true,
                     control: ControlConfig::default(),
@@ -363,6 +365,8 @@ fn pinned_prefix_admission_stress_no_deadlock_or_double_release() {
                     sched: Policy::Fifo,
                     max_concurrent,
                     prefix_cache_positions: 16 * man.model.max_seq,
+                    device_tier_positions: 0,
+                    convo_idle_ttl: std::time::Duration::from_secs(300),
                     lane_fusion: false,
                     lane_residency: true,
                     control: ControlConfig::default(),

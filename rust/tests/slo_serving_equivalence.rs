@@ -278,6 +278,8 @@ fn control_cfg(
         sched,
         max_concurrent: 1,
         prefix_cache_positions: 0,
+        device_tier_positions: 0,
+        convo_idle_ttl: Duration::from_secs(300),
         lane_fusion: true,
         lane_residency: true,
         control: ControlConfig {
