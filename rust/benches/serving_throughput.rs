@@ -520,6 +520,7 @@ fn main() {
                 }),
                 tenant_weights: traffic_spec.tenants.clone(),
                 fault: None,
+                ..ControlConfig::default()
             };
         }
         let mut pool = EnginePool::new(state.clone(), cfg);

@@ -42,8 +42,9 @@
 
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -95,9 +96,10 @@ enum Work {
     /// window has been applied by the time a stage reads its slot.
     Snapshot { session: u64, positions: usize },
     Shutdown,
-    /// Test-only fault injection: the named stage fails on receipt,
-    /// everyone else forwards — the mid-chain-failure regression hook.
-    #[cfg(test)]
+    /// Fault injection: the named stage fails on receipt, everyone else
+    /// forwards — the mid-chain-failure regression hook, also used by
+    /// the serving pool's chaos harness
+    /// ([`PipelinedEngine::inject_stage_failure`]).
     Fail { stage: usize },
 }
 
@@ -112,6 +114,16 @@ enum ToLeader {
     /// leader fails fast instead of deadlocking on an ack that can never
     /// arrive.
     StageError { stage: usize, error: String },
+}
+
+/// A chain message the leader can act on. [`PipelinedEngine::recv_ok`]
+/// has already converted stage failures, hung-stage watchdog timeouts,
+/// and chain disconnects into typed errors, so match sites handle only
+/// the healthy protocol — there is no error variant to forget.
+enum ChainMsg {
+    Token { session: u64, token: i32, exit_layer: usize },
+    Closed { session: u64 },
+    SnapshotPart { session: u64, stage: usize, cache: HostTensor },
 }
 
 struct StageThread {
@@ -144,6 +156,12 @@ pub struct PipelinedEngine {
     /// First stage failure observed; once set, every chain operation
     /// fails fast instead of feeding a dead pipeline.
     chain_error: Option<String>,
+    /// Window deadline for leader-side chain waits
+    /// ([`PipelinedEngine::set_watchdog`]): a stage that produces no
+    /// message within this budget is declared hung and the chain
+    /// poisoned with a typed failure, instead of the leader stalling
+    /// indefinitely.
+    watchdog: Duration,
 }
 
 struct StageWorker {
@@ -195,7 +213,6 @@ impl StageWorker {
                     }
                     return Ok(());
                 }
-                #[cfg(test)]
                 Ok(Work::Fail { stage }) => {
                     if stage == self.s {
                         bail!("injected stage failure");
@@ -469,7 +486,46 @@ impl PipelinedEngine {
             next_session: 0,
             pending: HashMap::new(),
             chain_error: None,
+            watchdog: PipelinedEngine::DEFAULT_WATCHDOG,
         })
+    }
+
+    /// Default leader-side window deadline: generous enough for cold
+    /// XLA compilation on the first window, far below "stalled forever".
+    pub const DEFAULT_WATCHDOG: Duration = Duration::from_secs(60);
+
+    /// Set the leader's per-message window deadline. Waits on the chain
+    /// (token collects, close acks, snapshot parts) that exceed it
+    /// poison the engine with a typed hung-stage failure — the serving
+    /// supervisor then rebuilds the engine instead of hanging a worker.
+    pub fn set_watchdog(&mut self, deadline: Duration) {
+        self.watchdog = deadline;
+    }
+
+    /// The current leader-side window deadline.
+    pub fn watchdog(&self) -> Duration {
+        self.watchdog
+    }
+
+    /// Whether a stage failure (or watchdog timeout) has poisoned the
+    /// chain: every further chain operation fails fast. A poisoned
+    /// engine cannot heal itself — the serving supervisor tears it down
+    /// and rebuilds ([`crate::serve::EnginePool`]'s recovery path).
+    pub fn chain_down(&self) -> bool {
+        self.chain_error.is_some()
+    }
+
+    /// Kill stage `stage` on its next message receipt (chaos testing —
+    /// [`Work::Fail`]). The failure surfaces on the next chain wait as
+    /// a typed stage error, exactly like an organic stage death.
+    pub fn inject_stage_failure(&mut self, stage: usize) -> Result<()> {
+        self.check_chain()?;
+        let p = self.state.man.stages.len();
+        ensure!(stage < p, "stage {stage} out of range (chain has {p})");
+        self.to_first
+            .send(Work::Fail { stage })
+            .ok()
+            .context("stage chain gone")
     }
 
     /// Swap the exit policy for sessions opened from now on. Live
@@ -489,22 +545,41 @@ impl PipelinedEngine {
         Ok(())
     }
 
-    /// Receive one chain message, converting a stage failure into an
-    /// error (and poisoning the engine) instead of blocking forever on
-    /// an ack that can never arrive.
-    fn recv_ok(&mut self) -> Result<ToLeader> {
+    /// Poison the chain and fail with a typed chain-down error.
+    fn poison(&mut self, msg: String) -> anyhow::Error {
+        self.chain_error = Some(msg.clone());
+        anyhow!("pipelined stage chain is down: {msg}")
+    }
+
+    /// Receive one chain message, converting a stage failure, a chain
+    /// disconnect, or a hung stage (no message within the watchdog
+    /// deadline) into a typed error — and poisoning the engine —
+    /// instead of blocking forever on an ack that can never arrive.
+    /// Callers therefore only ever see healthy-protocol [`ChainMsg`]s.
+    fn recv_ok(&mut self) -> Result<ChainMsg> {
         self.check_chain()?;
-        match self.from_last.recv() {
-            Ok(ToLeader::StageError { stage, error }) => {
-                let msg = format!("stage {stage} failed: {error}");
-                self.chain_error = Some(msg.clone());
-                bail!("pipelined stage chain is down: {msg}");
+        match self.from_last.recv_timeout(self.watchdog) {
+            Ok(ToLeader::Token { session, token, exit_layer }) => {
+                Ok(ChainMsg::Token { session, token, exit_layer })
             }
-            Ok(m) => Ok(m),
-            Err(_) => {
-                let msg = "every stage thread exited".to_string();
-                self.chain_error = Some(msg.clone());
-                bail!("pipelined stage chain is down: {msg}");
+            Ok(ToLeader::Closed { session }) => {
+                Ok(ChainMsg::Closed { session })
+            }
+            Ok(ToLeader::SnapshotPart { session, stage, cache }) => {
+                Ok(ChainMsg::SnapshotPart { session, stage, cache })
+            }
+            Ok(ToLeader::StageError { stage, error }) => {
+                Err(self.poison(format!("stage {stage} failed: {error}")))
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let deadline = self.watchdog;
+                Err(self.poison(format!(
+                    "watchdog: no chain message within {deadline:?} \
+                     (hung stage)"
+                )))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(self.poison("every stage thread exited".to_string()))
             }
         }
     }
@@ -563,7 +638,7 @@ impl PipelinedEngine {
         let p = self.state.man.stages.len();
         loop {
             match self.recv_ok()? {
-                ToLeader::Token { session: s, token, exit_layer } => {
+                ChainMsg::Token { session: s, token, exit_layer } => {
                     // KV back-fill always completes through every stage,
                     // so no session ever accrues a deficit.
                     let out =
@@ -573,20 +648,19 @@ impl PipelinedEngine {
                     }
                     self.pending.insert(s, out);
                 }
-                ToLeader::Closed { session: s } => {
+                ChainMsg::Closed { session: s } => {
                     bail!(
                         "unexpected close ack for session {s} while \
                          awaiting a token for session {session}"
                     );
                 }
-                ToLeader::SnapshotPart { session: s, stage, .. } => {
+                ChainMsg::SnapshotPart { session: s, stage, .. } => {
                     bail!(
                         "unexpected snapshot part (session {s}, stage \
                          {stage}) while awaiting a token for session \
                          {session}"
                     );
                 }
-                ToLeader::StageError { .. } => unreachable!("recv_ok"),
             }
         }
     }
@@ -747,7 +821,7 @@ impl DecodeBackend for PipelinedEngine {
         let mut got = 0usize;
         while got < p {
             match self.recv_ok()? {
-                ToLeader::SnapshotPart { session: s, stage, cache } => {
+                ChainMsg::SnapshotPart { session: s, stage, cache } => {
                     ensure!(
                         s == session,
                         "snapshot part for session {s} while snapshotting \
@@ -763,19 +837,18 @@ impl DecodeBackend for PipelinedEngine {
                 }
                 // Tokens of other interleaved sessions may be in flight;
                 // park them for their own collect calls.
-                ToLeader::Token { session: s, token, exit_layer } => {
+                ChainMsg::Token { session: s, token, exit_layer } => {
                     self.pending.insert(
                         s,
                         WindowOutcome { token, exit_layer, stages_run: p },
                     );
                 }
-                ToLeader::Closed { session: s } => {
+                ChainMsg::Closed { session: s } => {
                     bail!(
                         "unexpected close ack for session {s} while \
                          snapshotting session {session}"
                     );
                 }
-                ToLeader::StageError { .. } => unreachable!("recv_ok"),
             }
         }
         Ok(parts
@@ -828,14 +901,14 @@ impl DecodeBackend for PipelinedEngine {
             .context("stage chain gone")?;
         loop {
             match self.recv_ok()? {
-                ToLeader::Closed { session: s } if s == session => break,
-                ToLeader::Closed { session: s } => {
+                ChainMsg::Closed { session: s } if s == session => break,
+                ChainMsg::Closed { session: s } => {
                     bail!(
                         "unexpected close ack for session {s} while \
                          closing session {session}"
                     );
                 }
-                ToLeader::Token { session: s, token, exit_layer } => {
+                ChainMsg::Token { session: s, token, exit_layer } => {
                     // Another session's token parks; a token of the
                     // closing session is stale and drops with it.
                     if s != session {
@@ -850,13 +923,12 @@ impl DecodeBackend for PipelinedEngine {
                         );
                     }
                 }
-                ToLeader::SnapshotPart { session: s, stage, .. } => {
+                ChainMsg::SnapshotPart { session: s, stage, .. } => {
                     bail!(
                         "unexpected snapshot part (session {s}, stage \
                          {stage}) while closing session {session}"
                     );
                 }
-                ToLeader::StageError { .. } => unreachable!("recv_ok"),
             }
         }
         self.pending.remove(&session);
@@ -939,28 +1011,88 @@ mod tests {
         let mut eng =
             PipelinedEngine::new(state, ExitPolicy::confidence(1.0)).unwrap();
         let fail_stage = eng.state.man.stages.len() - 1;
-        let (done_tx, done_rx) = channel::<bool>();
+        let (done_tx, done_rx) = channel::<Result<(), String>>();
         std::thread::spawn(move || {
             let mut caches = eng.fresh_caches().unwrap();
             // Kill a deeper stage, then ask for a token: the emitting
             // window chases the failure injection down the FIFO and the
             // collect must error out.
-            eng.to_first.send(Work::Fail { stage: fail_stage }).unwrap();
+            eng.inject_stage_failure(fail_stage).unwrap();
             let tokens = [1i32, 42];
             let stepped =
                 eng.run_window(&mut caches, &tokens, 1, 1, true, true);
             // Every later chain operation fails fast, including the
-            // close ack wait — none of them may hang.
+            // close ack wait — none of them may hang. The failures are
+            // *typed* stage errors propagated to the caller (regression
+            // for the old `unreachable!("recv_ok")` arms), and the
+            // engine reports itself down to the supervisor.
             let released = eng.release_caches(&caches);
-            done_tx.send(stepped.is_err() && released.is_err()).ok();
+            let verdict = match (&stepped, &released) {
+                (Err(a), Err(b)) => {
+                    let (a, b) = (format!("{a:#}"), format!("{b:#}"));
+                    if !a.contains("stage") || !a.contains("injected") {
+                        Err(format!("untyped step error: {a}"))
+                    } else if !b.contains("chain is down") {
+                        Err(format!("untyped release error: {b}"))
+                    } else if !eng.chain_down() {
+                        Err("engine does not report chain down".into())
+                    } else {
+                        Ok(())
+                    }
+                }
+                _ => Err("chain operations against a dead stage must \
+                          error"
+                    .into()),
+            };
+            done_tx.send(verdict).ok();
             eng.shutdown();
         });
-        assert!(
-            done_rx
-                .recv_timeout(Duration::from_secs(60))
-                .expect("leader hung on a dead mid-chain stage"),
-            "chain operations against a dead stage must error"
-        );
+        done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("leader hung on a dead mid-chain stage")
+            .unwrap();
+    }
+
+    /// Satellite (hung-stage watchdog): a chain wait that gets no
+    /// message within the configured window deadline must surface as a
+    /// typed hung-stage failure that poisons the engine — not the
+    /// pre-watchdog indefinite stall.
+    #[test]
+    fn watchdog_turns_hung_wait_into_typed_failure() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let man =
+            Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+        let state = ModelState::init(man, 1);
+        let mut eng =
+            PipelinedEngine::new(state, ExitPolicy::confidence(1.0)).unwrap();
+        assert_eq!(eng.watchdog(), PipelinedEngine::DEFAULT_WATCHDOG);
+        eng.set_watchdog(Duration::from_millis(200));
+        let (done_tx, done_rx) = channel::<String>();
+        std::thread::spawn(move || {
+            let mut caches = eng.fresh_caches().unwrap();
+            // Collect with no outstanding window: no token will ever
+            // arrive, which is indistinguishable from a hung stage.
+            let err = eng
+                .collect_window(&mut caches)
+                .expect_err("collect with nothing in flight must fail");
+            let mut msg = format!("{err:#}");
+            if !eng.chain_down() {
+                msg = format!("watchdog did not poison the chain ({msg})");
+            }
+            // Poisoned chain fails fast instead of waiting again.
+            if eng.release_caches(&caches).is_ok() {
+                msg = format!("poisoned chain accepted a close ({msg})");
+            }
+            eng.shutdown();
+            done_tx.send(msg).ok();
+        });
+        let msg = done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("watchdog never fired");
+        assert!(msg.contains("watchdog"), "untyped watchdog error: {msg}");
     }
 
     /// Two sessions stepped interleaved down one chain must reproduce

@@ -65,6 +65,14 @@ struct LaneGroup {
     stacked: Vec<xla::Literal>,
 }
 
+/// The KV-recompute decode engine ("recompute" on the CLI).
+///
+/// All engine-held serving state — resident lane groups, scattered lane
+/// caches, traffic counters — is a disposable acceleration layer over
+/// [`ModelState`]: the serving pool's supervisor rebuilds a panicked
+/// engine from its `ModelState` in place and re-admits the casualties
+/// from their decode-time checkpoints, so nothing here needs to survive
+/// a rebuild.
 pub struct SequentialEngine {
     pub state: ModelState,
     rt: StageRuntime,

@@ -579,6 +579,53 @@ impl DecodeSession {
         })
     }
 
+    /// Capture a decode-time micro-checkpoint: a [`ParkedSession`]
+    /// snapshot of this *live* session, without consuming it or
+    /// touching its backend-side state — the session keeps decoding
+    /// afterwards. The self-healing serving layer stores these at a
+    /// fixed token cadence so a later engine fault can
+    /// [`ParkedSession::resume`] the session and re-decode only the
+    /// tail since the checkpoint (deterministic decoding makes the
+    /// re-decoded tail token-identical, so recovery is invisible to the
+    /// stream).
+    ///
+    /// Same validity rules as [`park`]: a prefilled, unfinished session
+    /// on a backend whose [`DecodeBackend::supports_cache_snapshots`]
+    /// is true. Both engines' snapshot paths are non-destructive (the
+    /// pipelined chain's quiesce/snapshot protocol keeps the stage
+    /// slots), which is what makes a live-session snapshot safe.
+    ///
+    /// [`park`]: DecodeSession::park
+    pub fn checkpoint(
+        &self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<ParkedSession> {
+        ensure!(
+            self.prefilled && self.done.is_none(),
+            "checkpoints are only valid on a prefilled, unfinished \
+             session"
+        );
+        ensure!(
+            backend.supports_cache_snapshots(),
+            "checkpoint on a backend without cache snapshots"
+        );
+        let caches = self
+            .caches
+            .as_ref()
+            .context("checkpointing a session without caches")?;
+        // Same slice rule as `park`: KV entries exist for [0, len-1).
+        let positions = self.tokens.len().saturating_sub(1);
+        Ok(ParkedSession {
+            tokens: self.tokens.clone(),
+            max_new: self.max_new,
+            deficit: self.deficit,
+            stats: self.stats.clone(),
+            generated: self.generated.clone(),
+            stage_caches: backend.snapshot_caches(caches, positions)?,
+            started: self.started,
+        })
+    }
+
     /// Park a mid-decode session: copy its per-stage KV caches to host
     /// tensors, release the backend-side state, and return a plain-data
     /// [`ParkedSession`] that can cross threads and later
@@ -953,6 +1000,11 @@ impl DecodeSession {
 /// snapshot can only resume on a deficit-tracking backend; deficit-free
 /// snapshots (including everything the pipelined engine parks) resume on
 /// either engine.
+///
+/// `Clone` is deliberate: the self-healing layer's checkpoint store
+/// hands out *copies* for recovery attempts, keeping the stored
+/// snapshot intact in case the attempt itself fails.
+#[derive(Clone)]
 pub struct ParkedSession {
     tokens: Vec<i32>,
     max_new: usize,
@@ -1024,6 +1076,12 @@ impl ParkedSession {
             .iter()
             .map(|t| t.data.len() * std::mem::size_of::<f32>())
             .sum()
+    }
+
+    /// Full token sequence (prompt ⧺ generated) the snapshot covers —
+    /// the position a resumed session continues from.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
     }
 
     /// Test-only stub with empty caches, for exercising park-store

@@ -30,8 +30,9 @@ use eellm::schedule::plan::{EeOptions, Plan};
 use eellm::schedule::report::render_timeline;
 use eellm::schedule::sim::Simulator;
 use eellm::serve::{
-    requests_from_tasks, ControlConfig, EngineKind, EnginePool, Policy,
-    PoolConfig, ServeMetrics, ServeRequest, ShedPolicy,
+    requests_from_tasks, ControlConfig, EngineKind, EnginePool, FaultPlan,
+    FaultSite, HealConfig, Policy, PoolConfig, ServeMetrics, ServeRequest,
+    ShedPolicy,
 };
 use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
 use eellm::util::cli::Args;
@@ -95,6 +96,20 @@ serve-bench: --requests N --pool-sizes 1,2,4 --engine recompute|pipelined
            --no-resident (keep lane fusion but drop device residency:
            every fused step pays the per-stage cache gather/scatter
            round-trip instead of stepping a device-resident lane group)
+           --chaos SPEC (deterministic fault injection: a seeded
+           per-worker schedule firing at every serving seam; SPEC is
+           seed[:rate] or seed:site=rate,site=rate with sites
+           fused-dispatch|submit-window|collect-window|stage-panic|
+           snapshot|restore|prefix-restore|park|resume|decode;
+           enables recovery with 3 retries unless --heal-retries says
+           otherwise)
+           --checkpoint-interval N (decode-time micro-checkpoints: live
+           sessions snapshot every N generated tokens so recovery
+           re-decodes only the tail; default 4 under --chaos, else 0)
+           --checkpoint-capacity N (bound on stored micro-checkpoints
+           pool-wide, default 8)
+           --heal-retries N (recovery re-admissions per request before
+           giving up; 0 disables self-healing, default 3 under --chaos)
            --json-out PATH (metrics JSON)
 simulate:  --model 1.3B|7B|13B|30B --pp N --tp N --microbatches M
            --exits s0,s1,... --no-defer --gpipe --fill K
@@ -386,6 +401,35 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // every fused step pays the per-stage gather/scatter round-trip
     // (the PR-5 baseline the resident path is judged against).
     let lane_residency = !args.flag("no-resident");
+    // Self-healing serving: a pinned-seed chaos schedule plus
+    // micro-checkpoint recovery. `--chaos` alone turns recovery on
+    // (faults without healing would just fail the batch), while
+    // explicit `--heal-retries 0` keeps injected faults terminal.
+    let chaos = match args.get("chaos") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => None,
+    };
+    let checkpoint_interval = match args.get("checkpoint-interval") {
+        Some(v) => v
+            .parse::<usize>()
+            .context("--checkpoint-interval wants a token count")?,
+        None if chaos.is_some() => 4,
+        None => 0,
+    };
+    let heal_retries = match args.get("heal-retries") {
+        Some(v) => {
+            v.parse::<u32>().context("--heal-retries wants a count")?
+        }
+        None if chaos.is_some() => 3,
+        None => 0,
+    };
+    let heal = HealConfig {
+        checkpoint_interval,
+        checkpoint_capacity: args.usize_or("checkpoint-capacity", 8),
+        max_retries: heal_retries,
+        chaos: chaos.clone(),
+        ..HealConfig::default()
+    };
     // SLO control plane: deadline-driven preemption, admission control
     // / load shedding, weighted tenant fairness.
     let preempt = args.flag("preempt");
@@ -539,6 +583,22 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             }
         );
     }
+    if heal.enabled() || heal.chaos.is_some() {
+        println!(
+            "[serve-bench] self-healing: chaos {}, micro-checkpoint \
+             every {} tokens (capacity {}), {} retries, backoff {:?}, \
+             quarantine after {} flaps",
+            heal.chaos
+                .as_ref()
+                .map(|p| p.spec())
+                .unwrap_or_else(|| "off".to_string()),
+            heal.checkpoint_interval,
+            heal.checkpoint_capacity,
+            heal.max_retries,
+            heal.backoff,
+            heal.quarantine_after
+        );
+    }
     let mut table = Table::new(
         &format!(
             "Serving throughput under exit policy {} ({sched:?})",
@@ -573,6 +633,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     shed: shed.clone(),
                     tenant_weights: tenant_weights.clone(),
                     fault: None,
+                    heal: heal.clone(),
                 },
             },
         );
@@ -653,6 +714,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 m.deadlined
             );
         }
+        let f = &m.faults;
+        if f.injected_total() + f.observed_total() + f.checkpoints > 0 {
+            println!(
+                "[serve-bench] pool {workers}: {} faults injected / {} \
+                 observed, {} checkpoints ({} refused), {} recovery \
+                 attempts, {} recovered / {} failed, {} tokens \
+                 re-decoded, {} engine restarts, {} quarantined",
+                f.injected_total(),
+                f.observed_total(),
+                f.checkpoints,
+                f.checkpoint_failures,
+                f.retries,
+                f.recoveries,
+                f.recovery_failures,
+                f.redecoded_tokens,
+                f.restarts,
+                f.quarantines
+            );
+        }
         let s = &m.slo;
         if s.preemptions + s.resumes + s.shed + s.degraded > 0 {
             println!(
@@ -722,7 +802,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let mut obj = std::collections::BTreeMap::new();
         // Bump when emitted keys change shape or meaning; consumers
         // should check it (see docs/serve-bench-json.md).
-        obj.insert("schema_version".to_string(), Json::Num(2.0));
+        obj.insert("schema_version".to_string(), Json::Num(3.0));
         obj.insert("requests".to_string(), Json::Num(n_req as f64));
         obj.insert(
             "engine".to_string(),
@@ -765,6 +845,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         obj.insert(
             "shed_enabled".to_string(),
             Json::Num(if shed.is_some() { 1.0 } else { 0.0 }),
+        );
+        obj.insert(
+            "chaos".to_string(),
+            match &heal.chaos {
+                Some(p) => Json::Str(p.spec()),
+                None => Json::Str(String::new()),
+            },
+        );
+        obj.insert(
+            "heal_retries".to_string(),
+            Json::Num(heal.max_retries as f64),
+        );
+        obj.insert(
+            "checkpoint_interval".to_string(),
+            Json::Num(heal.checkpoint_interval as f64),
         );
         obj.insert(
             "tenant_weights".to_string(),
@@ -875,11 +970,44 @@ fn serve_metrics_json(
         ("device_bytes", sm.device_bytes),
         ("parked_entries", sm.parked_entries),
         ("parked_bytes", sm.parked_bytes),
+        ("checkpoint_entries", sm.checkpoint_entries),
+        ("checkpoint_bytes", sm.checkpoint_bytes),
         ("total_bytes", sm.total_bytes()),
     ] {
         mem.insert(k.to_string(), Json::Num(v as f64));
     }
     o.insert("snapshot_memory".to_string(), Json::Obj(mem));
+    let f = &m.faults;
+    let mut faults = std::collections::BTreeMap::new();
+    let mut injected = std::collections::BTreeMap::new();
+    let mut observed = std::collections::BTreeMap::new();
+    for site in FaultSite::ALL {
+        injected.insert(
+            site.as_str().to_string(),
+            Json::Num(f.injected[site.index()] as f64),
+        );
+        observed.insert(
+            site.as_str().to_string(),
+            Json::Num(f.observed[site.index()] as f64),
+        );
+    }
+    faults.insert("injected".to_string(), Json::Obj(injected));
+    faults.insert("observed".to_string(), Json::Obj(observed));
+    for (k, v) in [
+        ("injected_total", f.injected_total()),
+        ("observed_total", f.observed_total()),
+        ("checkpoints", f.checkpoints),
+        ("checkpoint_failures", f.checkpoint_failures),
+        ("retries", f.retries),
+        ("recoveries", f.recoveries),
+        ("recovery_failures", f.recovery_failures),
+        ("redecoded_tokens", f.redecoded_tokens),
+        ("engine_restarts", f.restarts),
+        ("quarantines", f.quarantines),
+    ] {
+        faults.insert(k.to_string(), Json::Num(v as f64));
+    }
+    o.insert("faults".to_string(), Json::Obj(faults));
     let tenants = m
         .tenants
         .iter()
@@ -952,6 +1080,7 @@ fn merge_round(agg: &mut ServeMetrics, m: &ServeMetrics) {
     agg.slo.merge(&m.slo);
     agg.convo.merge(&m.convo);
     agg.tier.merge(&m.tier);
+    agg.faults.merge(&m.faults);
     agg.snapshot_memory = m.snapshot_memory;
     agg.tenants = m.tenants.clone();
 }
@@ -1240,7 +1369,7 @@ fn cmd_serve_bench_convo(
         let mut obj = std::collections::BTreeMap::new();
         // Bump when emitted keys change shape or meaning; consumers
         // should check it (see docs/serve-bench-json.md).
-        obj.insert("schema_version".to_string(), Json::Num(2.0));
+        obj.insert("schema_version".to_string(), Json::Num(3.0));
         obj.insert("workload".to_string(), Json::Str("convo".into()));
         obj.insert(
             "conversations".to_string(),

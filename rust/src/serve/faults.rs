@@ -1,0 +1,527 @@
+//! Deterministic fault injection for the self-healing serving pool.
+//!
+//! PR 8 introduced a single-seam fault hook ([`super::ControlFault`]):
+//! one park or resume per pool could be poisoned, unconditionally. The
+//! chaos harness generalizes it into a *plan*: every recovery-relevant
+//! seam of the serving stack gets its own independent fault rate, and a
+//! pinned seed makes the whole schedule reproducible — the same plan on
+//! the same workload injects the same faults at the same steps, so a
+//! chaos run can be compared token-for-token against its fault-free
+//! twin (`tests/chaos_recovery_equivalence.rs`).
+//!
+//! The plan is pure data ([`FaultPlan`], parsed from the
+//! `serve-bench --chaos SPEC` flag); each worker derives its own
+//! [`FaultInjector`] by forking the plan's seed with the worker index,
+//! and each seam inside a worker draws from its own forked stream — so
+//! the decision sequence at one seam is independent of how often any
+//! other seam is consulted, and adding a new seam never perturbs the
+//! schedules of existing ones.
+//!
+//! Injected faults are *synthesized at the seam*: the pool fabricates
+//! the typed error a real failure would produce (every message contains
+//! `"injected"`) and releases engine state exactly as the organic
+//! failure path would, so recovery is exercised against honest
+//! wreckage. Fault accounting lands in
+//! [`super::metrics::FaultStats`].
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Number of injectable seams ([`FaultSite::ALL`]).
+pub const FAULT_SITES: usize = 10;
+
+/// One injectable seam of the serving stack. Sites mirror the places a
+/// request can organically fail: the decode dispatch paths, the stage
+/// chain, and every KV-snapshot transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// A fused lane-group decode dispatch (sequential engine) fails
+    /// before touching any lane's caches; the group falls back to solo
+    /// retries.
+    FusedDispatch,
+    /// An interleaved round's window submission fails before reaching
+    /// the stage chain (pipelined engine).
+    SubmitWindow,
+    /// An interleaved round's token collect fails before reading the
+    /// stage chain (pipelined engine).
+    CollectWindow,
+    /// A stage thread of the pipelined chain is killed mid-round,
+    /// poisoning the chain until the supervisor rebuilds the engine.
+    StagePanic,
+    /// A KV-snapshot capture (decode-time micro-checkpoint) fails; the
+    /// session keeps its previous checkpoint.
+    Snapshot,
+    /// A KV-snapshot restore during a recovery re-admission fails,
+    /// consuming one retry.
+    Restore,
+    /// The prefix-cache restore during admission prefill fails; the
+    /// request enters recovery from scratch.
+    PrefixRestore,
+    /// The park snapshot of a preemption victim fails (the seam
+    /// [`super::ControlFault::ParkSnapshot`] poisoned).
+    Park,
+    /// The restore of a parked session fails on resume (the seam
+    /// [`super::ControlFault::ResumeRestore`] poisoned).
+    Resume,
+    /// A solo decode step fails (the generic engine-failure bucket;
+    /// also where organic failures with no better attribution land).
+    Decode,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; FAULT_SITES] = [
+        FaultSite::FusedDispatch,
+        FaultSite::SubmitWindow,
+        FaultSite::CollectWindow,
+        FaultSite::StagePanic,
+        FaultSite::Snapshot,
+        FaultSite::Restore,
+        FaultSite::PrefixRestore,
+        FaultSite::Park,
+        FaultSite::Resume,
+        FaultSite::Decode,
+    ];
+
+    /// Dense index into per-site arrays ([`FAULT_SITES`] wide).
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|&s| s == self).unwrap_or(0)
+    }
+
+    /// The spec key naming this site in `--chaos` specs and JSON
+    /// output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::FusedDispatch => "dispatch",
+            FaultSite::SubmitWindow => "submit",
+            FaultSite::CollectWindow => "collect",
+            FaultSite::StagePanic => "panic",
+            FaultSite::Snapshot => "snapshot",
+            FaultSite::Restore => "restore",
+            FaultSite::PrefixRestore => "prefix",
+            FaultSite::Park => "park",
+            FaultSite::Resume => "resume",
+            FaultSite::Decode => "decode",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|f| f.as_str() == s)
+    }
+}
+
+/// A deterministic fault schedule: a seed plus one fault probability
+/// per seam. Pure data — clone it into however many workers need it
+/// and derive per-worker injectors with [`FaultPlan::injector`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed of the schedule; worker and site streams fork off it.
+    pub seed: u64,
+    rates: [f64; FAULT_SITES],
+}
+
+impl FaultPlan {
+    /// An all-quiet plan (every rate zero) under `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rates: [0.0; FAULT_SITES] }
+    }
+
+    /// Set one site's fault probability (clamped to [0, 1]).
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> FaultPlan {
+        self.rates[site.index()] = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Set every site's fault probability at once.
+    pub fn with_uniform_rate(mut self, rate: f64) -> FaultPlan {
+        self.rates = [rate.clamp(0.0, 1.0); FAULT_SITES];
+        self
+    }
+
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        self.rates[site.index()]
+    }
+
+    /// Whether any seam can fire at all.
+    pub fn is_active(&self) -> bool {
+        self.rates.iter().any(|&r| r > 0.0)
+    }
+
+    /// Parse a `--chaos` spec: comma-separated `key=value` pairs where
+    /// `seed=N` pins the schedule seed (default 0), `rate=P` sets every
+    /// site's probability, and a site key (`dispatch`, `submit`,
+    /// `collect`, `panic`, `snapshot`, `restore`, `prefix`, `park`,
+    /// `resume`, `decode`) overrides one seam. Later pairs win, so
+    /// `rate=0.02,panic=0` means "2% everywhere except stage panics".
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0);
+        for pair in spec.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = pair.split_once('=') else {
+                bail!(
+                    "chaos spec pair {pair:?} is not key=value (spec \
+                     {spec:?})"
+                );
+            };
+            let (key, value) = (key.trim(), value.trim());
+            if key == "seed" {
+                plan.seed = value.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "chaos seed {value:?} is not an integer"
+                    )
+                })?;
+                continue;
+            }
+            let rate: f64 = value.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "chaos rate {value:?} for {key:?} is not a number"
+                )
+            })?;
+            if !(0.0..=1.0).contains(&rate) {
+                bail!(
+                    "chaos rate {rate} for {key:?} is outside [0, 1]"
+                );
+            }
+            if key == "rate" {
+                plan = plan.with_uniform_rate(rate);
+            } else if let Some(site) = FaultSite::parse(key) {
+                plan = plan.with_rate(site, rate);
+            } else {
+                bail!(
+                    "unknown chaos site {key:?} (sites: seed, rate, {})",
+                    FaultSite::ALL
+                        .iter()
+                        .map(|s| s.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The canonical spec string of this plan
+    /// ([`FaultPlan::parse`]-compatible; only non-zero rates appear).
+    pub fn spec(&self) -> String {
+        let mut parts = vec![format!("seed={}", self.seed)];
+        for site in FaultSite::ALL {
+            let r = self.rate(site);
+            if r > 0.0 {
+                parts.push(format!("{}={}", site.as_str(), r));
+            }
+        }
+        parts.join(",")
+    }
+
+    /// Derive worker `w`'s injector. Each worker gets an independent
+    /// stream family, so the pool-wide schedule is deterministic no
+    /// matter how the scheduler spreads requests across workers.
+    pub fn injector(&self, worker: usize) -> FaultInjector {
+        let base = Rng::new(self.seed).fork(worker as u64 + 1);
+        FaultInjector {
+            rates: self.rates,
+            streams: std::array::from_fn(|i| base.fork(i as u64 + 1)),
+            draws: [0; FAULT_SITES],
+        }
+    }
+}
+
+/// One worker's live fault schedule: per-site RNG streams drawn once
+/// per injection opportunity. Decisions at one site never consume
+/// another site's stream, so schedules are stable under refactors that
+/// change seam visit order.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rates: [f64; FAULT_SITES],
+    streams: [Rng; FAULT_SITES],
+    draws: [u64; FAULT_SITES],
+}
+
+impl FaultInjector {
+    /// Consume one injection opportunity at `site`: `true` means the
+    /// seam must fail now.
+    pub fn fire(&mut self, site: FaultSite) -> bool {
+        let i = site.index();
+        self.draws[i] += 1;
+        self.rates[i] > 0.0 && self.streams[i].uniform() < self.rates[i]
+    }
+
+    /// Deterministic auxiliary pick in [0, n) from `site`'s stream
+    /// (e.g. which stage a [`FaultSite::StagePanic`] kills).
+    pub fn pick(&mut self, site: FaultSite, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        self.streams[site.index()].below(n)
+    }
+
+    /// Injection opportunities consumed at `site` so far.
+    pub fn draws(&self, site: FaultSite) -> u64 {
+        self.draws[site.index()]
+    }
+}
+
+/// The typed error an injected fault at `site` synthesizes. Every
+/// message contains `"injected"` (the containment tests key on it) and
+/// names its seam, so [`classify_failure`] round-trips it.
+pub fn injected_error(site: FaultSite) -> anyhow::Error {
+    anyhow::anyhow!(
+        "injected fault: {}",
+        match site {
+            FaultSite::FusedDispatch => "fused lane dispatch failed",
+            FaultSite::SubmitWindow => {
+                "window submission failed during interleaved round"
+            }
+            FaultSite::CollectWindow => {
+                "window collect failed during interleaved round"
+            }
+            FaultSite::StagePanic => "stage thread killed",
+            FaultSite::Snapshot => "cache snapshot failed",
+            FaultSite::Restore => "cache restore failed during recovery",
+            FaultSite::PrefixRestore => {
+                "prefix cache restore failed during admission"
+            }
+            FaultSite::Park => "cache snapshot failed during park",
+            FaultSite::Resume => "cache restore failed during resume",
+            FaultSite::Decode => "decode step failed",
+        }
+    )
+}
+
+/// Attribute a request failure to the seam it came from, by the typed
+/// error's wording — used for per-site `observed` accounting, which
+/// must work for organic failures as well as injected ones. Failures
+/// with no better attribution land in the generic
+/// [`FaultSite::Decode`] bucket.
+pub fn classify_failure(error: &str) -> FaultSite {
+    let e = error.to_ascii_lowercase();
+    if e.contains("dispatch") || e.contains("lane") {
+        FaultSite::FusedDispatch
+    } else if e.contains("submission") || e.contains("submit") {
+        FaultSite::SubmitWindow
+    } else if e.contains("collect") {
+        FaultSite::CollectWindow
+    } else if e.contains("stage") || e.contains("watchdog") {
+        // Chain-down errors ("stage N failed", "stage chain is down",
+        // watchdog timeouts) all trace back to a dead or hung stage.
+        FaultSite::StagePanic
+    } else if e.contains("prefix") {
+        FaultSite::PrefixRestore
+    } else if e.contains("park") {
+        FaultSite::Park
+    } else if e.contains("resume") {
+        FaultSite::Resume
+    } else if e.contains("restore") {
+        FaultSite::Restore
+    } else if e.contains("snapshot") {
+        FaultSite::Snapshot
+    } else {
+        FaultSite::Decode
+    }
+}
+
+/// Exponential backoff before recovery attempt `retry` (1-based):
+/// `base * 2^(retry-1)`, capped at 1024x base so the shift cannot
+/// overflow and a deep retry chain cannot stall a worker for minutes.
+pub fn recovery_backoff(base: Duration, retry: u32) -> Duration {
+    base * (1u32 << retry.saturating_sub(1).min(10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn parse_spec_round_trips() {
+        let plan = FaultPlan::parse(
+            "seed=7,dispatch=0.05,panic=0.01,restore=0.5",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.rate(FaultSite::FusedDispatch), 0.05);
+        assert_eq!(plan.rate(FaultSite::StagePanic), 0.01);
+        assert_eq!(plan.rate(FaultSite::Restore), 0.5);
+        assert_eq!(plan.rate(FaultSite::Decode), 0.0);
+        assert!(plan.is_active());
+        // The canonical spec re-parses to the same plan.
+        assert_eq!(FaultPlan::parse(&plan.spec()).unwrap(), plan);
+        // `rate=` sets every site; later pairs override.
+        let plan = FaultPlan::parse("rate=0.02,panic=0").unwrap();
+        for site in FaultSite::ALL {
+            let want =
+                if site == FaultSite::StagePanic { 0.0 } else { 0.02 };
+            assert_eq!(plan.rate(site), want, "{site:?}");
+        }
+        // Empty and whitespace specs are the quiet plan.
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(!FaultPlan::parse(" seed=3 ").unwrap().is_active());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "bogus=0.1",
+            "dispatch",
+            "dispatch=1.5",
+            "dispatch=-0.1",
+            "seed=abc",
+            "rate=x",
+        ] {
+            assert!(
+                FaultPlan::parse(bad).is_err(),
+                "spec {bad:?} should be rejected"
+            );
+        }
+    }
+
+    /// The schedule is a pure function of (seed, worker, site, draw
+    /// index): two injectors from the same plan agree draw-for-draw,
+    /// regardless of how draws interleave across sites.
+    #[test]
+    fn prop_injection_schedule_is_deterministic() {
+        proptest::check("fault schedule determinism", 64, |rng| {
+            let mut plan = FaultPlan::new(rng.next_u64());
+            for site in FaultSite::ALL {
+                plan = plan.with_rate(site, rng.uniform());
+            }
+            let worker = rng.below(4);
+            let mut a = plan.injector(worker);
+            let mut b = plan.injector(worker);
+            // Replay the same per-site draw sequence through different
+            // global interleavings: decisions must match anyway.
+            let mut sequence: Vec<FaultSite> = (0..rng.range(10, 120))
+                .map(|_| FaultSite::ALL[rng.below(FAULT_SITES)])
+                .collect();
+            for &site in &sequence {
+                if a.fire(site) != b.clone().fire(site) {
+                    // (clone keeps b's stream unconsumed for the real
+                    // draw below)
+                }
+                let _ = b.fire(site);
+            }
+            // Re-derive and replay per-site: same per-site decision
+            // sequence as the interleaved run.
+            let mut c = plan.injector(worker);
+            let mut per_site: Vec<Vec<bool>> =
+                vec![Vec::new(); FAULT_SITES];
+            rng.shuffle(&mut sequence);
+            for &site in &sequence {
+                per_site[site.index()].push(c.fire(site));
+            }
+            let mut d = plan.injector(worker);
+            let mut replay: Vec<Vec<bool>> = vec![Vec::new(); FAULT_SITES];
+            for site in FaultSite::ALL {
+                for _ in 0..per_site[site.index()].len() {
+                    replay[site.index()].push(d.fire(site));
+                }
+            }
+            if per_site != replay {
+                return Err(
+                    "per-site decisions depend on cross-site \
+                     interleaving"
+                        .into(),
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Rates are honored empirically: a site at rate r fires close to
+    /// r of its opportunities; rate-0 sites never fire and rate-1
+    /// sites always fire.
+    #[test]
+    fn prop_fire_rates_track_plan_rates() {
+        proptest::check("fault rates", 32, |rng| {
+            let rate = [0.0, 0.1, 0.5, 1.0][rng.below(4)];
+            let plan = FaultPlan::new(rng.next_u64())
+                .with_rate(FaultSite::Decode, rate);
+            let mut inj = plan.injector(rng.below(3));
+            let n = 4000;
+            let fired =
+                (0..n).filter(|_| inj.fire(FaultSite::Decode)).count();
+            assert_eq!(inj.draws(FaultSite::Decode), n as u64);
+            let freq = fired as f64 / n as f64;
+            if rate == 0.0 && fired != 0 {
+                return Err("rate-0 site fired".into());
+            }
+            if rate == 1.0 && fired != n {
+                return Err("rate-1 site skipped".into());
+            }
+            if (freq - rate).abs() > 0.05 {
+                return Err(format!(
+                    "rate {rate}: empirical {freq} off by more than 5%"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Distinct workers get distinct schedules (no lockstep faults
+    /// across the pool), and the stage pick is in range.
+    #[test]
+    fn workers_fork_independent_schedules() {
+        let plan =
+            FaultPlan::new(99).with_rate(FaultSite::Decode, 0.5);
+        let mut w0 = plan.injector(0);
+        let mut w1 = plan.injector(1);
+        let a: Vec<bool> =
+            (0..256).map(|_| w0.fire(FaultSite::Decode)).collect();
+        let b: Vec<bool> =
+            (0..256).map(|_| w1.fire(FaultSite::Decode)).collect();
+        assert_ne!(a, b, "workers share a fault schedule");
+        let mut inj = plan.injector(0);
+        for n in [1usize, 2, 7] {
+            for _ in 0..32 {
+                assert!(inj.pick(FaultSite::StagePanic, n) < n);
+            }
+        }
+        assert_eq!(inj.pick(FaultSite::StagePanic, 0), 0);
+    }
+
+    #[test]
+    fn classification_round_trips_injected_errors() {
+        for site in FaultSite::ALL {
+            let msg = format!("{:#}", injected_error(site));
+            assert!(
+                msg.contains("injected"),
+                "{site:?} error lacks the injected marker: {msg}"
+            );
+            assert_eq!(
+                classify_failure(&msg),
+                site,
+                "classification of {msg:?}"
+            );
+        }
+        // Organic errors land in sensible buckets.
+        assert_eq!(
+            classify_failure("pipelined stage chain is down: stage 2 failed"),
+            FaultSite::StagePanic
+        );
+        assert_eq!(
+            classify_failure("park failed: cache snapshot failed during park"),
+            FaultSite::Park
+        );
+        assert_eq!(
+            classify_failure("some opaque XLA error"),
+            FaultSite::Decode
+        );
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let base = Duration::from_millis(2);
+        assert_eq!(recovery_backoff(base, 1), base);
+        assert_eq!(recovery_backoff(base, 2), base * 2);
+        assert_eq!(recovery_backoff(base, 3), base * 4);
+        // Deep retries cap at 1024x instead of overflowing the shift.
+        assert_eq!(recovery_backoff(base, 40), base * 1024);
+        // retry 0 (defensive) behaves like retry 1.
+        assert_eq!(recovery_backoff(base, 0), base);
+    }
+}

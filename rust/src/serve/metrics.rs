@@ -8,6 +8,7 @@ use std::sync::Mutex;
 use crate::inference::{ExitStats, LaneTraffic, PrefixCacheStats, TierStats};
 pub use crate::metrics::percentile;
 
+use super::faults::{FaultSite, FAULT_SITES};
 use super::request::ServeResponse;
 
 /// Lane-fusion activity of the decode hot path: how often the pool
@@ -318,6 +319,187 @@ impl SloCounters {
     }
 }
 
+/// Self-healing activity of the serving pool: faults injected by the
+/// chaos plan and observed organically, micro-checkpoints captured,
+/// recovery attempts and their outcomes, re-decoded tokens, engine
+/// restarts, and worker quarantines — the "did recovery actually work"
+/// observability the self-healing layer is judged by.
+///
+/// Accounting invariant (asserted by the chaos suite): every
+/// recovery-*triggering* failure increments exactly one `observed` slot
+/// and is later resolved as exactly one of `recoveries` (the session
+/// was re-admitted and lived) or `recovery_failures` (its retry budget
+/// ran out), so `recoveries == observed_total() - recovery_failures`
+/// once a batch drains. Failures *inside* a recovery episode (e.g. a
+/// restore that fails on re-admission) consume `retries`, not
+/// `observed`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults the chaos plan injected, per seam
+    /// ([`FaultSite::index`]-indexed; [`FaultSite::ALL`] order).
+    pub injected: [u64; FAULT_SITES],
+    /// Recovery-triggering failures observed, per seam — injected or
+    /// organic, attributed by
+    /// [`classify_failure`](super::faults::classify_failure).
+    pub observed: [u64; FAULT_SITES],
+    /// Decode-time micro-checkpoints captured into the bounded store.
+    pub checkpoints: u64,
+    /// Checkpoint captures that errored or were refused by the store's
+    /// capacity (best-effort: the session keeps its previous
+    /// checkpoint).
+    pub checkpoint_failures: u64,
+    /// Recovery re-admission attempts (every episode consumes at least
+    /// one; failed attempts retry with exponential backoff).
+    pub retries: u64,
+    /// Recovery episodes that ended with the session live again.
+    pub recoveries: u64,
+    /// Recovery episodes that exhausted their retry budget (the request
+    /// fails typed, carrying its retry count).
+    pub recovery_failures: u64,
+    /// Tokens re-decoded between a restored checkpoint and the failure
+    /// point — suppressed from the stream, so recovery stays invisible
+    /// to the client.
+    pub redecoded_tokens: u64,
+    /// Engines torn down and rebuilt by the supervisor (poisoned stage
+    /// chain or worker panic).
+    pub restarts: u64,
+    /// Workers quarantined after too many consecutive engine failures
+    /// (capacity shrinks; the shed/degrade path absorbs the load).
+    pub quarantines: u64,
+}
+
+impl FaultStats {
+    /// Faults injected across all seams.
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+
+    /// Recovery-triggering failures observed across all seams.
+    pub fn observed_total(&self) -> u64 {
+        self.observed.iter().sum()
+    }
+
+    /// Accumulate another reading into this one.
+    pub fn merge(&mut self, other: &FaultStats) {
+        for i in 0..FAULT_SITES {
+            self.injected[i] += other.injected[i];
+            self.observed[i] += other.observed[i];
+        }
+        self.checkpoints += other.checkpoints;
+        self.checkpoint_failures += other.checkpoint_failures;
+        self.retries += other.retries;
+        self.recoveries += other.recoveries;
+        self.recovery_failures += other.recovery_failures;
+        self.redecoded_tokens += other.redecoded_tokens;
+        self.restarts += other.restarts;
+        self.quarantines += other.quarantines;
+    }
+
+    /// Counter delta `self - baseline` (saturating): activity since an
+    /// earlier reading of the same counters.
+    pub fn since(&self, baseline: &FaultStats) -> FaultStats {
+        let mut out = FaultStats {
+            checkpoints: self
+                .checkpoints
+                .saturating_sub(baseline.checkpoints),
+            checkpoint_failures: self
+                .checkpoint_failures
+                .saturating_sub(baseline.checkpoint_failures),
+            retries: self.retries.saturating_sub(baseline.retries),
+            recoveries: self.recoveries.saturating_sub(baseline.recoveries),
+            recovery_failures: self
+                .recovery_failures
+                .saturating_sub(baseline.recovery_failures),
+            redecoded_tokens: self
+                .redecoded_tokens
+                .saturating_sub(baseline.redecoded_tokens),
+            restarts: self.restarts.saturating_sub(baseline.restarts),
+            quarantines: self
+                .quarantines
+                .saturating_sub(baseline.quarantines),
+            ..FaultStats::default()
+        };
+        for i in 0..FAULT_SITES {
+            out.injected[i] =
+                self.injected[i].saturating_sub(baseline.injected[i]);
+            out.observed[i] =
+                self.observed[i].saturating_sub(baseline.observed[i]);
+        }
+        out
+    }
+}
+
+/// Thread-safe self-healing counters shared by every worker of a pool
+/// (the fault analogue of [`SloCounters`]).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    inner: Mutex<FaultStats>,
+}
+
+impl FaultCounters {
+    /// Counter snapshot.
+    pub fn stats(&self) -> FaultStats {
+        *self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FaultStats> {
+        // Counter state is plain-old-data: a panic mid-update cannot
+        // leave it torn, so a poisoned lock is safe to adopt (the
+        // supervisor keeps recording through worker panics).
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// One fault injected by the chaos plan at `site`.
+    pub fn record_injected(&self, site: FaultSite) {
+        self.lock().injected[site.index()] += 1;
+    }
+
+    /// One recovery-triggering failure observed at `site`.
+    pub fn record_observed(&self, site: FaultSite) {
+        self.lock().observed[site.index()] += 1;
+    }
+
+    /// One micro-checkpoint capture: stored, or refused/errored.
+    pub fn record_checkpoint(&self, stored: bool) {
+        let mut s = self.lock();
+        if stored {
+            s.checkpoints += 1;
+        } else {
+            s.checkpoint_failures += 1;
+        }
+    }
+
+    /// One recovery re-admission attempt.
+    pub fn record_retry(&self) {
+        self.lock().retries += 1;
+    }
+
+    /// One recovery episode resolved with the session live again.
+    pub fn record_recovery(&self) {
+        self.lock().recoveries += 1;
+    }
+
+    /// One recovery episode resolved by an exhausted retry budget.
+    pub fn record_recovery_failure(&self) {
+        self.lock().recovery_failures += 1;
+    }
+
+    /// `n` checkpoint-tail tokens re-decoded invisibly.
+    pub fn record_redecoded(&self, n: u64) {
+        self.lock().redecoded_tokens += n;
+    }
+
+    /// One engine torn down and rebuilt by the supervisor.
+    pub fn record_restart(&self) {
+        self.lock().restarts += 1;
+    }
+
+    /// One worker quarantined after consecutive engine failures.
+    pub fn record_quarantine(&self) {
+        self.lock().quarantines += 1;
+    }
+}
+
 /// Conversational-serving activity of the pool: turns served, history
 /// restores on follow-up turns, end-of-turn snapshots taken, and idle
 /// expiries — the "did multi-turn reuse actually happen" observability
@@ -484,13 +666,21 @@ pub struct SnapshotMemory {
     pub parked_entries: usize,
     /// Host bytes their cache snapshots occupy.
     pub parked_bytes: usize,
+    /// Live sessions with a decode-time micro-checkpoint in the
+    /// self-healing store.
+    pub checkpoint_entries: usize,
+    /// Host bytes those micro-checkpoints occupy.
+    pub checkpoint_bytes: usize,
 }
 
 impl SnapshotMemory {
     /// All snapshot bytes the serving stack holds (host copies plus the
     /// device-modeled tier).
     pub fn total_bytes(&self) -> usize {
-        self.cached_bytes + self.device_bytes + self.parked_bytes
+        self.cached_bytes
+            + self.device_bytes
+            + self.parked_bytes
+            + self.checkpoint_bytes
     }
 }
 
@@ -628,9 +818,15 @@ pub struct ServeMetrics {
     /// batch: device vs host hits, promotions, demotions (all zeros
     /// with the device tier disabled).
     pub tier: TierStats,
+    /// Self-healing activity during the batch: injected/observed faults
+    /// per seam, micro-checkpoints, recovery retries and outcomes,
+    /// re-decoded tokens, engine restarts, quarantines (all zeros with
+    /// chaos and recovery off).
+    pub faults: FaultStats,
     /// Snapshot-memory occupancy when the batch closed: prefix-store,
-    /// device-tier, and park-store entries/positions/bytes under one
-    /// block (a gauge, unlike the counter deltas above).
+    /// device-tier, park-store, and checkpoint-store
+    /// entries/positions/bytes under one block (a gauge, unlike the
+    /// counter deltas above).
     pub snapshot_memory: SnapshotMemory,
     /// Per-tenant completion shares, ascending by tenant id (one entry,
     /// tenant 0, when the batch never set tenants).
@@ -713,6 +909,7 @@ impl ServeMetrics {
             slo: SloStats::default(),
             convo: ConvoStats::default(),
             tier: TierStats::default(),
+            faults: FaultStats::default(),
             snapshot_memory: SnapshotMemory::default(),
             tenants,
         }
@@ -778,6 +975,7 @@ mod tests {
             total_seconds: total,
             deadline: None,
             tenant: 0,
+            retries: 0,
         }
     }
 
@@ -1082,14 +1280,70 @@ mod tests {
             device_bytes: 1024,
             parked_entries: 2,
             parked_bytes: 2048,
+            checkpoint_entries: 1,
+            checkpoint_bytes: 512,
         };
-        assert_eq!(m.total_bytes(), 4096 + 1024 + 2048);
+        assert_eq!(m.total_bytes(), 4096 + 1024 + 2048 + 512);
         assert_eq!(SnapshotMemory::default().total_bytes(), 0);
         // Fresh batch metrics carry empty gauges and convo counters.
         let zero = ServeMetrics::from_responses(&[], 0.0);
         assert_eq!(zero.snapshot_memory, SnapshotMemory::default());
         assert_eq!(zero.convo, ConvoStats::default());
         assert_eq!(zero.tier.lookups(), 0);
+    }
+
+    #[test]
+    fn fault_counters_record_merge_and_since() {
+        let c = FaultCounters::default();
+        assert_eq!(c.stats(), FaultStats::default());
+        c.record_injected(FaultSite::StagePanic);
+        c.record_injected(FaultSite::Decode);
+        c.record_observed(FaultSite::StagePanic);
+        c.record_checkpoint(true);
+        c.record_checkpoint(true);
+        c.record_checkpoint(false);
+        c.record_retry();
+        c.record_retry();
+        c.record_recovery();
+        c.record_redecoded(5);
+        c.record_restart();
+        let s = c.stats();
+        assert_eq!(s.injected_total(), 2);
+        assert_eq!(s.injected[FaultSite::StagePanic.index()], 1);
+        assert_eq!(s.injected[FaultSite::Decode.index()], 1);
+        assert_eq!(s.observed_total(), 1);
+        assert_eq!(s.checkpoints, 2);
+        assert_eq!(s.checkpoint_failures, 1);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.recoveries, 1);
+        assert_eq!(s.recovery_failures, 0);
+        assert_eq!(s.redecoded_tokens, 5);
+        assert_eq!(s.restarts, 1);
+        assert_eq!(s.quarantines, 0);
+        // The chaos acceptance identity on a drained batch: every
+        // observed fault resolved as a recovery or an exhausted budget.
+        assert_eq!(
+            s.recoveries,
+            s.observed_total() - s.recovery_failures
+        );
+        // Delta attribution, as run_batch uses it.
+        let base = s;
+        c.record_observed(FaultSite::Resume);
+        c.record_recovery_failure();
+        c.record_quarantine();
+        let d = c.stats().since(&base);
+        assert_eq!(d.injected_total(), 0);
+        assert_eq!(d.observed[FaultSite::Resume.index()], 1);
+        assert_eq!(d.recovery_failures, 1);
+        assert_eq!(d.quarantines, 1);
+        assert_eq!(d.recoveries, 0);
+        // since + merge round-trips to the later reading.
+        let mut merged = base;
+        merged.merge(&d);
+        assert_eq!(merged, c.stats());
+        // Fresh batch metrics carry an all-zero faults block.
+        let zero = ServeMetrics::from_responses(&[], 0.0);
+        assert_eq!(zero.faults, FaultStats::default());
     }
 
     #[test]

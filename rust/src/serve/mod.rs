@@ -71,6 +71,20 @@
 //!   (`tests/slo_serving_equivalence.rs`). Shed requests surface as
 //!   typed [`BatchOutcome::sheds`] outcomes, park/resume faults as
 //!   per-request failures that never wipe a batch.
+//!   **Self-healing serving** ([`HealConfig`], [`faults`]): a
+//!   deterministic per-worker chaos schedule ([`FaultPlan`],
+//!   `serve-bench --chaos`) injects faults at every serving seam; live
+//!   sessions capture decode-time micro-checkpoints at a fixed token
+//!   cadence, failed requests re-admit from them (bounded retries,
+//!   exponential backoff) with already-streamed tokens suppressed on
+//!   replay — recovered streams are identical to fault-free runs
+//!   (`tests/chaos_recovery_equivalence.rs`) — and a panicked or
+//!   chain-poisoned engine is rebuilt in place, quarantining the
+//!   worker after repeated flaps.
+//! - [`faults`] — the fault-injection plan/injector
+//!   ([`FaultSite`]/[`FaultPlan`]/[`FaultInjector`]): pinned-seed,
+//!   per-worker, per-site deterministic schedules, plus failure
+//!   classification and the recovery backoff curve.
 //! - [`metrics`] — aggregate serving metrics: throughput tokens/s,
 //!   p50/p95 request latency, p50/p95 time-to-first-token, p50/p95
 //!   per-token gaps, queueing, deadline misses, merged per-exit usage,
@@ -92,19 +106,25 @@
 //! Entry points: `ee-llm serve-bench` (CLI), the `serving_throughput`
 //! bench, and `examples/serve_demo.rs`.
 
+pub mod faults;
 pub mod metrics;
 pub mod pool;
 pub mod request;
 pub mod scheduler;
 
+pub use faults::{
+    classify_failure, injected_error, recovery_backoff, FaultInjector,
+    FaultPlan, FaultSite, FAULT_SITES,
+};
 pub use metrics::{
-    percentile, ConvoCounters, ConvoStats, InterleaveStats, LaneCounters,
-    LaneStats, ServeMetrics, SloCounters, SloStats, SnapshotMemory,
-    TenantShare,
+    percentile, ConvoCounters, ConvoStats, FaultCounters, FaultStats,
+    InterleaveStats, LaneCounters, LaneStats, ServeMetrics, SloCounters,
+    SloStats, SnapshotMemory, TenantShare,
 };
 pub use pool::{
     plan_round, BatchOutcome, ControlConfig, ControlFault, EngineKind,
-    EnginePool, Outcome, PoolConfig, RequestFailure, ServeEvent, Shed,
+    EnginePool, HealConfig, Outcome, PoolConfig, RequestFailure,
+    ServeEvent, Shed,
 };
 pub use request::{requests_from_tasks, ServeRequest, ServeResponse};
 pub use scheduler::{

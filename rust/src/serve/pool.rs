@@ -101,6 +101,28 @@
 //! `tests/slo_serving_equivalence.rs` pins park/resume
 //! output-invisibility and the fault-injection containment
 //! properties.
+//!
+//! **Self-healing serving** ([`ControlConfig::heal`]): a deterministic
+//! chaos schedule ([`crate::serve::FaultPlan`], `serve-bench --chaos`)
+//! can fire injected faults at every serving seam — fused lane
+//! dispatch, interleaved submit/collect, stage threads, snapshot/
+//! restore, prefix-cache restore, park/resume, solo decode. Live
+//! sessions capture decode-time micro-checkpoints
+//! ([`DecodeSession::checkpoint`]) into a bounded pool-wide store at a
+//! fixed token cadence; a failed request opens a *recovery episode*
+//! instead of failing: a backoff-delayed [`RecoveryTicket`] re-admits
+//! it (on any worker) from its newest checkpoint — or from scratch —
+//! with the already-streamed token prefix suppressed at re-emission,
+//! so a recovered stream is token- and exit-layer-identical to a
+//! fault-free run. A panicked or chain-poisoned engine is rebuilt in
+//! place by the worker's supervisor (its sessions ride tickets onto
+//! healthy engines); a worker flapping through
+//! [`HealConfig::quarantine_after`] consecutive rebuilds quarantines,
+//! shrinking pool capacity into the shed/degrade path. Injection,
+//! observation, retry, recovery, checkpoint, restart, and quarantine
+//! counters land in [`ServeMetrics::faults`];
+//! `tests/chaos_recovery_equivalence.rs` pins the recovered-stream
+//! equality and bounded-retry properties on both engines.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::AssertUnwindSafe;
@@ -116,9 +138,14 @@ use crate::inference::{
     TierStats, TieredStore,
 };
 
+use super::faults::{
+    classify_failure, injected_error, recovery_backoff, FaultInjector,
+    FaultPlan, FaultSite,
+};
 use super::metrics::{
-    ConvoCounters, ConvoStats, InterleaveStats, LaneCounters, LaneStats,
-    ServeMetrics, SloCounters, SloStats, SnapshotMemory,
+    ConvoCounters, ConvoStats, FaultCounters, FaultStats,
+    InterleaveStats, LaneCounters, LaneStats, ServeMetrics, SloCounters,
+    SloStats, SnapshotMemory,
 };
 use super::request::{ServeRequest, ServeResponse};
 use super::scheduler::{
@@ -238,6 +265,11 @@ pub struct ControlConfig {
     /// Inject a control-plane fault (fault-injection tests): the
     /// selected seam fails with a typed error instead of running.
     pub fault: Option<ControlFault>,
+    /// Self-healing serving: decode-time micro-checkpoints, bounded
+    /// recovery retries, engine supervision, and the deterministic
+    /// chaos schedule driving fault-injection benches. The default
+    /// turns all of it off.
+    pub heal: HealConfig,
 }
 
 impl Default for ControlConfig {
@@ -249,7 +281,61 @@ impl Default for ControlConfig {
             shed: None,
             tenant_weights: Vec::new(),
             fault: None,
+            heal: HealConfig::default(),
         }
+    }
+}
+
+/// Self-healing configuration ([`ControlConfig::heal`]). The default
+/// disables checkpointing, recovery, and chaos injection, so the pool
+/// behaves exactly as a healing-free build: failures stay terminal
+/// typed `Failed` outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealConfig {
+    /// Capture a live session's KV micro-checkpoint every this many
+    /// generated tokens (0 disables checkpointing; recovery then
+    /// re-admits from scratch). Checkpoints ride the same
+    /// [`ParkedSession`] host-snapshot path preemption parks use, and
+    /// are non-destructive — the session keeps decoding.
+    pub checkpoint_interval: usize,
+    /// Bound on concurrently stored checkpoints (newest per request);
+    /// a new request's capture is refused — not evicting others —
+    /// once the store is full.
+    pub checkpoint_capacity: usize,
+    /// Re-admission attempts a failed request may consume before its
+    /// recovery episode fails for good. 0 disables recovery entirely.
+    pub max_retries: u32,
+    /// Backoff before the first re-admission attempt, doubled per
+    /// consumed retry ([`recovery_backoff`]).
+    pub backoff: Duration,
+    /// Quarantine a worker (it stops serving; capacity shrinks into
+    /// the shed/degrade path) after this many consecutive engine
+    /// rebuilds without a clean round in between.
+    pub quarantine_after: u32,
+    /// Deterministic chaos schedule (`serve-bench --chaos`): each
+    /// worker derives independent per-site fault streams from the
+    /// plan's pinned seed ([`FaultPlan::injector`]).
+    pub chaos: Option<FaultPlan>,
+}
+
+impl Default for HealConfig {
+    fn default() -> HealConfig {
+        HealConfig {
+            checkpoint_interval: 0,
+            checkpoint_capacity: 8,
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+            quarantine_after: 3,
+            chaos: None,
+        }
+    }
+}
+
+impl HealConfig {
+    /// Whether failed requests open recovery episodes instead of
+    /// failing terminally.
+    pub fn enabled(&self) -> bool {
+        self.max_retries > 0
     }
 }
 
@@ -273,6 +359,17 @@ trait PoolEngine {
     fn backend(&mut self) -> &mut dyn DecodeBackend;
     /// Tear down engine-owned resources (threads), if any.
     fn finish(self: Box<Self>) {}
+    /// Whether the engine can still serve rounds. A pipelined engine
+    /// with a poisoned stage chain reports false; the supervisor then
+    /// rebuilds it instead of letting every future round fail fast.
+    fn healthy(&self) -> bool {
+        true
+    }
+    /// Chaos hook: kill one engine-internal worker (a pipelined stage
+    /// thread), returning whether the engine supports the fault.
+    fn poison_stage(&mut self, _stage: usize) -> bool {
+        false
+    }
 }
 
 impl PoolEngine for SequentialEngine {
@@ -297,6 +394,14 @@ impl PoolEngine for PipelinedEngine {
     fn finish(self: Box<Self>) {
         (*self).shutdown();
     }
+
+    fn healthy(&self) -> bool {
+        !self.chain_down()
+    }
+
+    fn poison_stage(&mut self, stage: usize) -> bool {
+        self.inject_stage_failure(stage).is_ok()
+    }
 }
 
 enum WorkerEvent {
@@ -305,8 +410,10 @@ enum WorkerEvent {
     /// One token emitted for a live request (streamed mid-generation).
     Token { id: u64, worker: usize, token: i32, exit_layer: usize },
     Done(ServeResponse),
-    /// One request failed; the worker keeps serving.
-    Failed { id: u64, worker: usize, error: String },
+    /// One request failed; the worker keeps serving. `retries` echoes
+    /// how many recovery re-admissions the request consumed before
+    /// the terminal failure (0 without healing).
+    Failed { id: u64, worker: usize, error: String, retries: u32 },
     /// The worker itself died (engine construction failed or it panicked).
     Fatal { worker: usize, error: String },
 }
@@ -345,6 +452,9 @@ pub struct RequestFailure {
     /// reached one (e.g. rejected by a closed queue).
     pub worker: Option<usize>,
     pub error: String,
+    /// Recovery re-admissions consumed before the episode gave up
+    /// (0 without healing — the failure was terminal on first touch).
+    pub retries: u32,
 }
 
 impl std::fmt::Display for RequestFailure {
@@ -438,6 +548,11 @@ pub struct EnginePool {
     /// Bounded pool-wide store of preempted (parked) sessions — a
     /// session parked by one worker may resume on any other.
     park: Arc<ParkStore>,
+    /// Pool-wide self-healing plane: micro-checkpoints plus the
+    /// recovery tickets of open episodes, shared by every worker.
+    heal: Arc<HealPlane>,
+    /// Pool-wide fault/recovery counters, shared by every worker.
+    fault_counters: Arc<FaultCounters>,
     /// Workers that have not reported `Fatal`.
     alive: usize,
     /// Every live worker has reported `Ready`.
@@ -473,6 +588,10 @@ impl EnginePool {
         let lane_counters = Arc::new(LaneCounters::default());
         let slo_counters = Arc::new(SloCounters::default());
         let park = Arc::new(ParkStore::new(cfg.control.park_capacity));
+        let heal_plane = Arc::new(HealPlane::new(
+            cfg.control.heal.checkpoint_capacity,
+        ));
+        let fault_counters = Arc::new(FaultCounters::default());
         let convo = Arc::new(ConvoPlane::new(cfg.convo_idle_ttl));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -484,13 +603,15 @@ impl EnginePool {
             let counters = Arc::clone(&lane_counters);
             let slo = Arc::clone(&slo_counters);
             let park = Arc::clone(&park);
+            let heal = Arc::clone(&heal_plane);
+            let faults = Arc::clone(&fault_counters);
             let convo = Arc::clone(&convo);
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
                 .spawn(move || {
                     worker_main(
                         w, state, cfg, sched, tx, store, counters, slo,
-                        park, convo,
+                        park, heal, faults, convo,
                     )
                 })
                 .expect("spawn serve worker");
@@ -511,9 +632,18 @@ impl EnginePool {
             lane_counters,
             slo_counters,
             park,
+            heal: heal_plane,
+            fault_counters,
             alive,
             ready: false,
         }
+    }
+
+    /// Lifetime self-healing counters of the pool — injections,
+    /// observed faults, retries, recoveries, checkpoints, restarts,
+    /// quarantines (per-batch deltas are in [`ServeMetrics::faults`]).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault_counters.stats()
     }
 
     /// Lifetime SLO control-plane counters (per-batch deltas are in
@@ -600,6 +730,9 @@ impl EnginePool {
         let (parked_entries, parked_bytes) = self.park.usage();
         m.parked_entries = parked_entries;
         m.parked_bytes = parked_bytes;
+        let (checkpoint_entries, checkpoint_bytes) = self.heal.usage();
+        m.checkpoint_entries = checkpoint_entries;
+        m.checkpoint_bytes = checkpoint_bytes;
         m
     }
 
@@ -700,6 +833,7 @@ impl EnginePool {
         let lane_base = self.lane_counters.stats();
         let interleave_base = self.lane_counters.interleave_stats();
         let slo_base = self.slo_counters.stats();
+        let fault_base = self.fault_counters.stats();
         let shed_base = self.sched.shed_count();
         let degraded_base = self.sched.degraded_count();
         let mut failures: Vec<RequestFailure> = Vec::new();
@@ -735,6 +869,7 @@ impl EnginePool {
                         worker: None,
                         error: "request rejected: pool queue is closed"
                             .into(),
+                        retries: 0,
                     });
                 }
             }
@@ -754,12 +889,13 @@ impl EnginePool {
                     on_event(&ServeEvent::Done { id: r.id });
                     responses.push(r);
                 }
-                WorkerEvent::Failed { id, worker, error } => {
+                WorkerEvent::Failed { id, worker, error, retries } => {
                     on_event(&ServeEvent::Failed { id });
                     failures.push(RequestFailure {
                         id,
                         worker: Some(worker),
                         error,
+                        retries,
                     });
                 }
                 WorkerEvent::Fatal { worker, error } => {
@@ -795,6 +931,8 @@ impl EnginePool {
             .interleave_stats()
             .since(&interleave_base);
         metrics.slo = self.slo_counters.stats().since(&slo_base);
+        metrics.faults =
+            self.fault_counters.stats().since(&fault_base);
         metrics.slo.shed =
             self.sched.shed_count().saturating_sub(shed_base);
         metrics.slo.degraded =
@@ -854,6 +992,21 @@ struct Live {
     last_event: Instant,
     /// Per-token emission gaps; `[0]` spans admission to first token.
     token_seconds: Vec<f64>,
+    /// Prompt and budget, kept host-side so a recovery ticket can
+    /// re-admit the request from scratch after an engine loss.
+    prompt: String,
+    max_new: usize,
+    /// Tokens already streamed to the client (drives replay
+    /// suppression after a recovery).
+    emitted: usize,
+    /// Replayed tokens still to swallow: a recovery restored a state
+    /// older than what the client saw, and the re-decoded prefix must
+    /// not be emitted twice ([`stream_token`]).
+    suppress: usize,
+    /// Recovery re-admissions this request has consumed.
+    retries: u32,
+    /// Generated-token count at the last stored micro-checkpoint.
+    last_checkpoint: usize,
 }
 
 /// A parked (preempted) session: everything needed to rebuild the
@@ -875,6 +1028,12 @@ struct ParkedEntry {
     queue_seconds: f64,
     admitted: Instant,
     token_seconds: Vec<f64>,
+    /// Prompt, budget, stream position, and consumed retries, carried
+    /// so a failed resume can still open a recovery episode.
+    prompt: String,
+    max_new: usize,
+    emitted: usize,
+    retries: u32,
     parked: ParkedSession,
 }
 
@@ -987,6 +1146,151 @@ impl ParkStore {
             });
         }
         best.map(|i| st.entries.remove(i))
+    }
+}
+
+/// Everything needed to re-admit a failed request on a healthy
+/// engine: the original request's identity and accounting, plus how
+/// many tokens its client has already seen (`emitted` — the replayed
+/// prefix is suppressed at re-emission) and how many re-admission
+/// attempts its episode has consumed (`retries`). Host-resident only,
+/// so tickets cross worker threads freely; the matching KV
+/// micro-checkpoint, if one was captured, lives in the [`HealPlane`]
+/// checkpoint store.
+struct RecoveryTicket {
+    id: u64,
+    tenant: usize,
+    priority: i32,
+    deadline: Option<Duration>,
+    policy: ExitPolicy,
+    conversation: Option<u64>,
+    queue_seconds: f64,
+    admitted: Instant,
+    token_seconds: Vec<f64>,
+    prompt: String,
+    max_new: usize,
+    /// Tokens already streamed to the client before the fault.
+    emitted: usize,
+    /// Re-admission attempts consumed so far.
+    retries: u32,
+    /// Exponential-backoff gate: the ticket is not due before this.
+    not_before: Instant,
+}
+
+/// What [`HealPlane::take_due`] found.
+enum TicketPoll {
+    /// The earliest-due ticket, removed from the plane.
+    Due(RecoveryTicket),
+    /// Tickets pending, none due yet: the earliest is this far away.
+    Waiting(Duration),
+    Empty,
+}
+
+/// The pool-wide self-healing plane: decode-time micro-checkpoints
+/// (bounded, newest per request) plus the recovery tickets of open
+/// episodes. Shared by every worker — a session checkpointed on one
+/// worker re-admits on whichever worker frees a slot first, the same
+/// topology as the park store.
+struct HealPlane {
+    inner: Mutex<HealState>,
+}
+
+#[derive(Default)]
+struct HealState {
+    checkpoints: BTreeMap<u64, ParkedSession>,
+    capacity: usize,
+    pending: Vec<RecoveryTicket>,
+}
+
+impl HealPlane {
+    fn new(capacity: usize) -> HealPlane {
+        HealPlane {
+            inner: Mutex::new(HealState {
+                capacity,
+                ..HealState::default()
+            }),
+        }
+    }
+
+    /// Poison-tolerant lock: the plane only ever runs collection ops
+    /// under the lock, so a worker that panicked while holding it left
+    /// consistent state — recovery must not lose the healing layer to
+    /// the very fault it exists to absorb.
+    fn lock(&self) -> std::sync::MutexGuard<'_, HealState> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Store (or refresh) request `id`'s newest micro-checkpoint.
+    /// Refreshing an existing entry is always allowed; a new id is
+    /// refused once `capacity` checkpoints are held (strict bound,
+    /// no eviction of other requests' restore points). Returns
+    /// whether the checkpoint was kept.
+    fn store_checkpoint(&self, id: u64, snap: ParkedSession) -> bool {
+        let mut st = self.lock();
+        if !st.checkpoints.contains_key(&id)
+            && st.checkpoints.len() >= st.capacity
+        {
+            return false;
+        }
+        st.checkpoints.insert(id, snap);
+        true
+    }
+
+    /// A copy of `id`'s latest checkpoint: recovery attempts may run
+    /// more than once, so the stored entry survives until the request
+    /// reaches a terminal outcome.
+    fn checkpoint(&self, id: u64) -> Option<ParkedSession> {
+        self.lock().checkpoints.get(&id).cloned()
+    }
+
+    /// The request reached a terminal outcome: release its checkpoint.
+    fn drop_checkpoint(&self, id: u64) {
+        self.lock().checkpoints.remove(&id);
+    }
+
+    fn submit(&self, t: RecoveryTicket) {
+        self.lock().pending.push(t);
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.lock().pending.is_empty()
+    }
+
+    /// Remove and return the earliest-due ticket at `now`, or report
+    /// how long until one becomes due.
+    fn take_due(&self, now: Instant) -> TicketPoll {
+        let mut st = self.lock();
+        if st.pending.is_empty() {
+            return TicketPoll::Empty;
+        }
+        let mut best = 0;
+        for i in 1..st.pending.len() {
+            if st.pending[i].not_before < st.pending[best].not_before {
+                best = i;
+            }
+        }
+        let due = st.pending[best].not_before;
+        if due <= now {
+            TicketPoll::Due(st.pending.swap_remove(best))
+        } else {
+            TicketPoll::Waiting(due - now)
+        }
+    }
+
+    /// Remove every pending ticket (quarantine: the caller fails each
+    /// with a terminal event, so no episode is left open).
+    fn drain_pending(&self) -> Vec<RecoveryTicket> {
+        std::mem::take(&mut self.lock().pending)
+    }
+
+    /// Occupancy gauge: checkpoints held and the host bytes their
+    /// snapshots pin.
+    fn usage(&self) -> (usize, usize) {
+        let st = self.lock();
+        (
+            st.checkpoints.len(),
+            st.checkpoints.values().map(|p| p.snapshot_bytes()).sum(),
+        )
     }
 }
 
@@ -1180,13 +1484,55 @@ fn preemption_victim(
     best.map(|(i, _)| i)
 }
 
+/// Per-worker bundle of the self-healing layer: the shared heal plane
+/// and fault counters, plus this worker's deterministic chaos
+/// schedule (an independent per-site [`FaultInjector`] stream per
+/// worker) and its supervision flap counter.
+struct HealRuntime {
+    cfg: HealConfig,
+    plane: Arc<HealPlane>,
+    counters: Arc<FaultCounters>,
+    chaos: Option<FaultInjector>,
+    /// Engine rebuilds without a clean round in between; quarantine
+    /// trips when this exceeds [`HealConfig::quarantine_after`].
+    consecutive_failures: u32,
+}
+
+impl HealRuntime {
+    /// Whether failures open recovery episodes.
+    fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Roll the chaos schedule at `site`; a firing draw is counted as
+    /// injected.
+    fn fire(&mut self, site: FaultSite) -> bool {
+        match self.chaos.as_mut() {
+            Some(inj) if inj.fire(site) => {
+                self.counters.record_injected(site);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Which stage a fired [`FaultSite::StagePanic`] kills.
+    fn pick_stage(&mut self, n_stages: usize) -> usize {
+        self.chaos
+            .as_mut()
+            .map(|inj| inj.pick(FaultSite::StagePanic, n_stages))
+            .unwrap_or(0)
+    }
+}
+
 /// The continuous-batching worker loop: admit queued requests into free
 /// session slots (blocking only when fully idle), then give every live
 /// session one decode step, streaming each token as it is emitted.
 /// With preemption on, a full live set additionally yields its
 /// lowest-value session to any queued deadlined request inside its
 /// urgency horizon; parked sessions resume into free slots whenever the
-/// queue is momentarily drained.
+/// queue is momentarily drained, and due recovery tickets re-admit
+/// after them.
 #[allow(clippy::too_many_arguments)]
 fn worker_main(
     worker: usize,
@@ -1198,17 +1544,35 @@ fn worker_main(
     counters: Arc<LaneCounters>,
     slo: Arc<SloCounters>,
     park: Arc<ParkStore>,
+    heal_plane: Arc<HealPlane>,
+    faults: Arc<FaultCounters>,
     convo: Arc<ConvoPlane>,
 ) {
-    let mut engine: Box<dyn PoolEngine> = match build_engine(state, &cfg) {
-        Ok(e) => e,
-        Err(e) => {
-            events
-                .send(WorkerEvent::Fatal { worker, error: format!("{e:#}") })
-                .ok();
-            return;
-        }
+    let mut heal = HealRuntime {
+        cfg: cfg.control.heal.clone(),
+        plane: heal_plane,
+        counters: faults,
+        chaos: cfg
+            .control
+            .heal
+            .chaos
+            .as_ref()
+            .map(|p| p.injector(worker)),
+        consecutive_failures: 0,
     };
+    let mut engine: Box<dyn PoolEngine> =
+        match build_engine(state.clone(), &cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                events
+                    .send(WorkerEvent::Fatal {
+                        worker,
+                        error: format!("{e:#}"),
+                    })
+                    .ok();
+                return;
+            }
+        };
     events.send(WorkerEvent::Ready { worker }).ok();
     let max_live =
         cfg.max_concurrent.max(1).min(engine.backend().max_live_sessions());
@@ -1239,20 +1603,25 @@ fn worker_main(
         // Parked sessions resume into slots the queue leaves free.
         while live.len() < max_live {
             let popped = if live.is_empty() {
-                if park.is_empty() {
+                if park.is_empty() && !heal.plane.has_pending() {
                     match sched.pop() {
                         // Fully idle: block until work or close.
                         Some(x) => Some(x),
                         // Queue closed and drained: resume leftovers a
-                        // late parker may have added before exiting.
-                        None if park.is_empty() => break 'serve,
+                        // late parker (or a recovery ticket) may have
+                        // added before exiting.
+                        None if park.is_empty()
+                            && !heal.plane.has_pending() =>
+                        {
+                            break 'serve
+                        }
                         None => None,
                     }
                 } else {
-                    // Idle with parked work: resume instead of
-                    // blocking (every worker blocking on the queue
-                    // would strand the parked session forever).
-                    None
+                    // Idle with parked or recovering work: never block
+                    // on the queue (every worker blocking would strand
+                    // the parked session or ticket forever).
+                    sched.try_pop()
                 }
             } else if cfg.lane_fusion
                 && !interleaving
@@ -1280,7 +1649,7 @@ fn worker_main(
             };
             let Some((req, queue_seconds)) = popped else {
                 // Queue momentarily empty: pull parked work into the
-                // free slot instead.
+                // free slot first, then due recovery tickets.
                 match resume_parked(
                     worker,
                     engine.as_mut(),
@@ -1289,19 +1658,80 @@ fn worker_main(
                     &events,
                     &slo,
                     &counters,
+                    &mut heal,
                     &mut current_policy,
                     &mut live,
                 ) {
                     ResumeOutcome::Resumed => continue,
-                    ResumeOutcome::Empty if live.is_empty() => continue,
-                    ResumeOutcome::Empty => break,
                     ResumeOutcome::Panicked { failed_id } => {
                         retire(worker, &events, failed_id, &live);
                         return;
                     }
+                    ResumeOutcome::EngineSuspect => {
+                        if !supervise(
+                            worker,
+                            &mut engine,
+                            &state,
+                            &cfg,
+                            &events,
+                            &mut heal,
+                            &mut current_policy,
+                            &mut live,
+                            None,
+                            "worker panicked during resume restore",
+                        ) {
+                            return;
+                        }
+                        warm.clear();
+                        traffic_base = engine.backend().lane_traffic();
+                        continue;
+                    }
+                    ResumeOutcome::Empty => {}
+                }
+                match recover_pending(
+                    worker,
+                    engine.as_mut(),
+                    &events,
+                    &mut heal,
+                    &mut current_policy,
+                    &counters,
+                    &mut live,
+                ) {
+                    RecoverOutcome::Recovered => continue,
+                    RecoverOutcome::EngineSuspect => {
+                        if !supervise(
+                            worker,
+                            &mut engine,
+                            &state,
+                            &cfg,
+                            &events,
+                            &mut heal,
+                            &mut current_policy,
+                            &mut live,
+                            None,
+                            "worker panicked during recovery restore",
+                        ) {
+                            return;
+                        }
+                        warm.clear();
+                        traffic_base = engine.backend().lane_traffic();
+                        continue;
+                    }
+                    RecoverOutcome::Waiting(d) if live.is_empty() => {
+                        // Nothing to serve until a ticket matures:
+                        // sleep in short slices so queue work (or a
+                        // close) is still noticed promptly.
+                        std::thread::sleep(
+                            d.min(Duration::from_millis(5)),
+                        );
+                        continue;
+                    }
+                    RecoverOutcome::Waiting(_) => break,
+                    RecoverOutcome::Empty if live.is_empty() => continue,
+                    RecoverOutcome::Empty => break,
                 }
             };
-            if !admit_request(
+            match admit_request(
                 worker,
                 engine.as_mut(),
                 &cfg,
@@ -1309,12 +1739,35 @@ fn worker_main(
                 &convo,
                 &counters,
                 &events,
+                &mut heal,
                 &mut current_policy,
                 &mut live,
                 req,
                 queue_seconds,
             ) {
-                return;
+                AdmitOutcome::Continue => {}
+                AdmitOutcome::EngineSuspect { panicked_id } => {
+                    if !heal.enabled() {
+                        retire(worker, &events, panicked_id, &live);
+                        return;
+                    }
+                    if !supervise(
+                        worker,
+                        &mut engine,
+                        &state,
+                        &cfg,
+                        &events,
+                        &mut heal,
+                        &mut current_policy,
+                        &mut live,
+                        None,
+                        "worker panicked during admission",
+                    ) {
+                        return;
+                    }
+                    warm.clear();
+                    traffic_base = engine.backend().lane_traffic();
+                }
             }
         }
         // Deadline-driven preemption: the live set is full, so a queued
@@ -1349,6 +1802,7 @@ fn worker_main(
                                     error: "preemption aborted and the \
                                             queue is closed"
                                         .into(),
+                                    retries: 0,
                                 })
                                 .ok();
                         }
@@ -1367,19 +1821,23 @@ fn worker_main(
                             admitted: vadmitted,
                             last_event: _,
                             token_seconds: vtokens,
+                            prompt: vprompt,
+                            max_new: vmax_new,
+                            emitted: vemitted,
+                            suppress: _,
+                            retries: vretries,
+                            last_checkpoint: _,
                         } = victim;
-                        let parked = if cfg.control.fault
+                        let park_fault = cfg.control.fault
                             == Some(ControlFault::ParkSnapshot)
-                        {
+                            || heal.fire(FaultSite::Park);
+                        let parked = if park_fault {
                             // Injected fault: release the victim's
                             // backend state exactly as a real failed
                             // snapshot would have.
                             let mut s = session;
                             s.close(engine.backend());
-                            Ok(Err(anyhow::anyhow!(
-                                "injected fault: cache snapshot failed \
-                                 during park"
-                            )))
+                            Ok(Err(injected_error(FaultSite::Park)))
                         } else {
                             std::panic::catch_unwind(AssertUnwindSafe(
                                 || session.park(engine.backend()),
@@ -1400,30 +1858,124 @@ fn worker_main(
                                         queue_seconds: vqueue,
                                         admitted: vadmitted,
                                         token_seconds: vtokens,
+                                        prompt: vprompt,
+                                        max_new: vmax_new,
+                                        emitted: vemitted,
+                                        retries: vretries,
                                         parked: p,
                                     });
                                 slo.observe_parked(occupancy as u64);
                             }
                             Ok(Err(e)) => {
-                                // Typed per-request failure: the victim
-                                // fails alone; the urgent request still
-                                // gets the slot and every other session
-                                // keeps serving.
+                                // Typed per-request failure (or, with
+                                // healing on, a recovery episode): the
+                                // victim fails or recovers alone; the
+                                // urgent request still gets the slot
+                                // and every other session keeps
+                                // serving.
                                 park.cancel_reservation();
                                 slo.record_park_failure();
-                                events
-                                    .send(WorkerEvent::Failed {
+                                fail_or_ticket(
+                                    worker,
+                                    &events,
+                                    &mut heal,
+                                    RecoveryTicket {
                                         id: vid,
-                                        worker,
-                                        error: format!(
-                                            "park failed: {e:#}"
-                                        ),
-                                    })
-                                    .ok();
+                                        tenant: vtenant,
+                                        priority: vprio,
+                                        deadline: vdeadline,
+                                        policy: vpolicy,
+                                        conversation: vconvo,
+                                        queue_seconds: vqueue,
+                                        admitted: vadmitted,
+                                        token_seconds: vtokens,
+                                        prompt: vprompt,
+                                        max_new: vmax_new,
+                                        emitted: vemitted,
+                                        retries: vretries,
+                                        not_before: Instant::now(),
+                                    },
+                                    &format!("park failed: {e:#}"),
+                                );
                             }
                             Err(_) => {
                                 park.cancel_reservation();
                                 slo.record_park_failure();
+                                if heal.enabled() {
+                                    // Both casualties ride tickets;
+                                    // the suspect engine is rebuilt
+                                    // before serving on.
+                                    fail_or_ticket(
+                                        worker,
+                                        &events,
+                                        &mut heal,
+                                        RecoveryTicket {
+                                            id: vid,
+                                            tenant: vtenant,
+                                            priority: vprio,
+                                            deadline: vdeadline,
+                                            policy: vpolicy,
+                                            conversation: vconvo,
+                                            queue_seconds: vqueue,
+                                            admitted: vadmitted,
+                                            token_seconds: vtokens,
+                                            prompt: vprompt,
+                                            max_new: vmax_new,
+                                            emitted: vemitted,
+                                            retries: vretries,
+                                            not_before: Instant::now(),
+                                        },
+                                        "park failed: worker panicked \
+                                         during snapshot",
+                                    );
+                                    fail_or_ticket(
+                                        worker,
+                                        &events,
+                                        &mut heal,
+                                        RecoveryTicket {
+                                            id: req.id,
+                                            tenant: req.tenant,
+                                            priority: req.priority,
+                                            deadline: req.deadline,
+                                            policy: req
+                                                .policy
+                                                .clone()
+                                                .unwrap_or_else(|| {
+                                                    cfg.policy.clone()
+                                                }),
+                                            conversation: req
+                                                .conversation,
+                                            queue_seconds,
+                                            admitted: Instant::now(),
+                                            token_seconds: Vec::new(),
+                                            prompt: req.prompt.clone(),
+                                            max_new: req.max_new,
+                                            emitted: 0,
+                                            retries: 0,
+                                            not_before: Instant::now(),
+                                        },
+                                        "admission aborted: worker \
+                                         panicked during park",
+                                    );
+                                    if !supervise(
+                                        worker,
+                                        &mut engine,
+                                        &state,
+                                        &cfg,
+                                        &events,
+                                        &mut heal,
+                                        &mut current_policy,
+                                        &mut live,
+                                        None,
+                                        "worker panicked during park",
+                                    ) {
+                                        return;
+                                    }
+                                    warm.clear();
+                                    traffic_base =
+                                        engine.backend().lane_traffic();
+                                    continue 'serve;
+                                }
                                 events
                                     .send(WorkerEvent::Failed {
                                         id: req.id,
@@ -1432,13 +1984,14 @@ fn worker_main(
                                                 worker panicked during \
                                                 park"
                                             .into(),
+                                        retries: 0,
                                     })
                                     .ok();
                                 retire(worker, &events, vid, &live);
                                 return;
                             }
                         }
-                        if !admit_request(
+                        match admit_request(
                             worker,
                             engine.as_mut(),
                             &cfg,
@@ -1446,12 +1999,42 @@ fn worker_main(
                             &convo,
                             &counters,
                             &events,
+                            &mut heal,
                             &mut current_policy,
                             &mut live,
                             req,
                             queue_seconds,
                         ) {
-                            return;
+                            AdmitOutcome::Continue => {}
+                            AdmitOutcome::EngineSuspect {
+                                panicked_id,
+                            } => {
+                                if !heal.enabled() {
+                                    retire(
+                                        worker, &events, panicked_id,
+                                        &live,
+                                    );
+                                    return;
+                                }
+                                if !supervise(
+                                    worker,
+                                    &mut engine,
+                                    &state,
+                                    &cfg,
+                                    &events,
+                                    &mut heal,
+                                    &mut current_policy,
+                                    &mut live,
+                                    None,
+                                    "worker panicked during admission",
+                                ) {
+                                    return;
+                                }
+                                warm.clear();
+                                traffic_base =
+                                    engine.backend().lane_traffic();
+                                continue 'serve;
+                            }
                         }
                     }
                 }
@@ -1536,26 +2119,49 @@ fn worker_main(
                 // window, then collect every token — members overlap on
                 // the chain, and the occupancy histogram records how
                 // many were in flight together.
+                // Chaos seam: a stage-thread "panic" poisons a pinned
+                // stage of the chain before the round runs, so the
+                // failure surfaces through the same typed path a real
+                // stage death would take. Submit/collect-window faults
+                // are synthesized as round errors before the backend is
+                // touched, keeping every member's cache state intact.
+                if heal.fire(FaultSite::StagePanic) {
+                    let stage =
+                        heal.pick_stage(engine.backend().n_stages());
+                    engine.poison_stage(stage);
+                }
+                let injected = if heal.fire(FaultSite::SubmitWindow) {
+                    Some(injected_error(FaultSite::SubmitWindow))
+                } else if heal.fire(FaultSite::CollectWindow) {
+                    Some(injected_error(FaultSite::CollectWindow))
+                } else {
+                    None
+                };
                 let mut members: Vec<(usize, &mut Live)> = live
                     .iter_mut()
                     .enumerate()
                     .filter(|(i, _)| group.contains(i))
                     .collect();
-                let stepped = {
-                    let mut sess: Vec<&mut DecodeSession> = members
-                        .iter_mut()
-                        .map(|(_, l)| &mut l.session)
-                        .collect();
-                    let be = engine.backend();
-                    std::panic::catch_unwind(AssertUnwindSafe(|| {
-                        DecodeSession::step_interleaved(be, &mut sess)
-                    }))
+                let stepped = match injected {
+                    Some(e) => Ok(Err(e)),
+                    None => {
+                        let mut sess: Vec<&mut DecodeSession> = members
+                            .iter_mut()
+                            .map(|(_, l)| &mut l.session)
+                            .collect();
+                        let be = engine.backend();
+                        std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            DecodeSession::step_interleaved(be, &mut sess)
+                        }))
+                    }
                 };
                 match stepped {
                     Err(_) => {
                         // As in the solo panic arm: deliver the round's
                         // deferred outcomes, then fail the group and
-                        // every other live session.
+                        // every other live session — or, when healing
+                        // is on, ticket every casualty and rebuild the
+                        // suspect engine in place.
                         drop(members);
                         let i = group[0];
                         let below =
@@ -1567,11 +2173,32 @@ fn worker_main(
                             &sched,
                             store.as_deref(),
                             &convo,
+                            &mut heal,
                             &mut live,
                             retired,
                         );
-                        let id = live.remove(i - below).id;
-                        retire(worker, &events, id, &live);
+                        let failed = live.remove(i - below);
+                        if heal.enabled() {
+                            if !supervise(
+                                worker,
+                                &mut engine,
+                                &state,
+                                &cfg,
+                                &events,
+                                &mut heal,
+                                &mut current_policy,
+                                &mut live,
+                                Some(failed),
+                                "worker panicked during decode",
+                            ) {
+                                return;
+                            }
+                            warm.clear();
+                            traffic_base =
+                                engine.backend().lane_traffic();
+                            continue 'serve;
+                        }
+                        retire(worker, &events, failed.id, &live);
                         return;
                     }
                     Ok(Err(e)) => {
@@ -1604,19 +2231,15 @@ fn worker_main(
                                 retired.push((*i, None));
                                 continue;
                             };
-                            l.token_seconds.push(
-                                now.duration_since(l.last_event)
-                                    .as_secs_f64(),
+                            stream_token(
+                                worker,
+                                &events,
+                                &heal.counters,
+                                l,
+                                now,
+                                token,
+                                exit_layer,
                             );
-                            l.last_event = now;
-                            events
-                                .send(WorkerEvent::Token {
-                                    id: l.id,
-                                    worker,
-                                    token,
-                                    exit_layer,
-                                })
-                                .ok();
                             if done.is_some() {
                                 retired.push((*i, None));
                             }
@@ -1625,7 +2248,14 @@ fn worker_main(
                 }
             } else if group.len() == 1 {
                 let i = group[0];
-                let stepped = {
+                // Chaos seam: a solo decode fault is synthesized before
+                // the backend runs, so the session's cache state stays
+                // exactly as its last emitted token left it — the
+                // micro-checkpoint (or a from-scratch re-run) replays
+                // the suppressed tail bit-identically.
+                let stepped = if heal.fire(FaultSite::Decode) {
+                    Ok(Err(injected_error(FaultSite::Decode)))
+                } else {
                     let l = &mut live[i];
                     let be = engine.backend();
                     std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -1636,9 +2266,12 @@ fn worker_main(
                     Err(_) => {
                         // The engine may be in a corrupt state: fail
                         // the stepped request and every other live one,
-                        // then retire the worker. Outcomes that predate
-                        // the panic still count — deliver the round's
-                        // deferred completions/failures first.
+                        // then retire the worker — unless healing is
+                        // on, in which case every casualty rides a
+                        // recovery ticket and the engine is rebuilt.
+                        // Outcomes that predate the panic still count —
+                        // deliver the round's deferred
+                        // completions/failures first.
                         let below =
                             retired.iter().filter(|(j, _)| *j < i).count();
                         settle_round(
@@ -1648,11 +2281,32 @@ fn worker_main(
                             &sched,
                             store.as_deref(),
                             &convo,
+                            &mut heal,
                             &mut live,
                             retired,
                         );
-                        let id = live.remove(i - below).id;
-                        retire(worker, &events, id, &live);
+                        let failed = live.remove(i - below);
+                        if heal.enabled() {
+                            if !supervise(
+                                worker,
+                                &mut engine,
+                                &state,
+                                &cfg,
+                                &events,
+                                &mut heal,
+                                &mut current_policy,
+                                &mut live,
+                                Some(failed),
+                                "worker panicked during decode",
+                            ) {
+                                return;
+                            }
+                            warm.clear();
+                            traffic_base =
+                                engine.backend().lane_traffic();
+                            continue 'serve;
+                        }
+                        retire(worker, &events, failed.id, &live);
                         return;
                     }
                     Ok(Err(e)) => {
@@ -1661,19 +2315,15 @@ fn worker_main(
                     Ok(Ok(StepEvent::Token { token, exit_layer, done })) => {
                         counters.record_solo();
                         let now = Instant::now();
-                        let l = &mut live[i];
-                        l.token_seconds.push(
-                            now.duration_since(l.last_event).as_secs_f64(),
+                        stream_token(
+                            worker,
+                            &events,
+                            &heal.counters,
+                            &mut live[i],
+                            now,
+                            token,
+                            exit_layer,
                         );
-                        l.last_event = now;
-                        events
-                            .send(WorkerEvent::Token {
-                                id: l.id,
-                                worker,
-                                token,
-                                exit_layer,
-                            })
-                            .ok();
                         if done.is_some() {
                             retired.push((i, None));
                         }
@@ -1684,13 +2334,19 @@ fn worker_main(
                 }
             } else {
                 // Fused lane group: every member advances one token in
-                // a single batched pass per stage.
+                // a single batched pass per stage. Chaos seam: a fused
+                // dispatch fault fails the batched pass before it runs;
+                // the per-lane solo fallback below is itself the
+                // recovery, so the episode opens and closes in place.
+                let fused_fault = heal.fire(FaultSite::FusedDispatch);
                 let mut members: Vec<(usize, &mut Live)> = live
                     .iter_mut()
                     .enumerate()
                     .filter(|(i, _)| group.contains(i))
                     .collect();
-                let stepped = {
+                let stepped = if fused_fault {
+                    Ok(Err(injected_error(FaultSite::FusedDispatch)))
+                } else {
                     let mut sess: Vec<&mut DecodeSession> = members
                         .iter_mut()
                         .map(|(_, l)| &mut l.session)
@@ -1704,7 +2360,8 @@ fn worker_main(
                     Err(_) => {
                         // As in the solo panic arm: deliver the round's
                         // deferred outcomes, then fail the group and
-                        // every other live session.
+                        // every other live session — or ticket them all
+                        // and rebuild when healing is on.
                         drop(members);
                         let i = group[0];
                         let below =
@@ -1716,11 +2373,32 @@ fn worker_main(
                             &sched,
                             store.as_deref(),
                             &convo,
+                            &mut heal,
                             &mut live,
                             retired,
                         );
-                        let id = live.remove(i - below).id;
-                        retire(worker, &events, id, &live);
+                        let failed = live.remove(i - below);
+                        if heal.enabled() {
+                            if !supervise(
+                                worker,
+                                &mut engine,
+                                &state,
+                                &cfg,
+                                &events,
+                                &mut heal,
+                                &mut current_policy,
+                                &mut live,
+                                Some(failed),
+                                "worker panicked during decode",
+                            ) {
+                                return;
+                            }
+                            warm.clear();
+                            traffic_base =
+                                engine.backend().lane_traffic();
+                            continue 'serve;
+                        }
+                        retire(worker, &events, failed.id, &live);
                         return;
                     }
                     Ok(Err(e)) => {
@@ -1732,7 +2410,15 @@ fn worker_main(
                         // path this round, so a poisoned session fails
                         // alone instead of wiping the group — the
                         // PR-2 isolation property, kept under fusion.
+                        // The solo fallback IS the recovery for a
+                        // failed dispatch: the episode closes here
+                        // without a ticket or retry-budget draw.
                         drop(members);
+                        if heal.enabled() {
+                            heal.counters
+                                .record_observed(FaultSite::FusedDispatch);
+                            heal.counters.record_recovery();
+                        }
                         eprintln!(
                             "[serve] worker {worker}: fused lane group \
                              of {} failed; retrying solo: {e:#}",
@@ -1762,19 +2448,15 @@ fn worker_main(
                                 retired.push((*i, None));
                                 continue;
                             };
-                            l.token_seconds.push(
-                                now.duration_since(l.last_event)
-                                    .as_secs_f64(),
+                            stream_token(
+                                worker,
+                                &events,
+                                &heal.counters,
+                                l,
+                                now,
+                                token,
+                                exit_layer,
                             );
-                            l.last_event = now;
-                            events
-                                .send(WorkerEvent::Token {
-                                    id: l.id,
-                                    worker,
-                                    token,
-                                    exit_layer,
-                                })
-                                .ok();
                             if done.is_some() {
                                 retired.push((*i, None));
                             }
@@ -1792,9 +2474,36 @@ fn worker_main(
             &sched,
             store.as_deref(),
             &convo,
+            &mut heal,
             &mut live,
             retired,
         );
+        if heal.enabled() && !engine.healthy() {
+            // A poisoned stage chain fails every future round; rebuild
+            // now, while the round's casualties are already ticketed,
+            // instead of limping into guaranteed failures.
+            if !supervise(
+                worker,
+                &mut engine,
+                &state,
+                &cfg,
+                &events,
+                &mut heal,
+                &mut current_policy,
+                &mut live,
+                None,
+                "stage chain poisoned",
+            ) {
+                return;
+            }
+            warm.clear();
+            traffic_base = engine.backend().lane_traffic();
+            continue;
+        }
+        // A fully-served round on a healthy engine resets the flap
+        // counter — quarantine is for consecutive failures only.
+        heal.consecutive_failures = 0;
+        checkpoint_live(worker, engine.as_mut(), &mut heal, &mut live);
         warm = next_warm;
         // Attribute the round's lane-cache traffic (including departure
         // scatters from the retirements above) to the pool counters.
@@ -1807,12 +2516,22 @@ fn worker_main(
     engine.finish();
 }
 
+/// What [`admit_request`] did with the popped request.
+enum AdmitOutcome {
+    /// Admitted, failed typed, or ticketed for recovery — either way
+    /// the worker keeps serving.
+    Continue,
+    /// The engine panicked during prefill. With healing off the caller
+    /// must retire, failing `panicked_id` along with the live set; with
+    /// healing on the request already rides a recovery ticket and the
+    /// caller should supervise (rebuild) the engine.
+    EngineSuspect { panicked_id: u64 },
+}
+
 /// Admit one popped request into a free live slot: apply its policy,
 /// prefill (through the shared snapshot store when configured), and
 /// push the live session. Conversation-tagged requests are counted as
 /// opening or follow-up turns here (restore hit/miss, positions saved).
-/// Returns `false` when the engine panicked — the request and every
-/// live session were already failed and the caller must stop serving.
 #[allow(clippy::too_many_arguments)]
 fn admit_request(
     worker: usize,
@@ -1822,11 +2541,12 @@ fn admit_request(
     convo: &ConvoPlane,
     counters: &LaneCounters,
     events: &Sender<WorkerEvent>,
+    heal: &mut HealRuntime,
     current_policy: &mut ExitPolicy,
     live: &mut Vec<Live>,
     req: ServeRequest,
     queue_seconds: f64,
-) -> bool {
+) -> AdmitOutcome {
     let policy = req.policy.clone().unwrap_or_else(|| cfg.policy.clone());
     if policy != *current_policy {
         engine.apply_policy(&policy);
@@ -1834,12 +2554,19 @@ fn admit_request(
         counters.record_policy_apply();
     }
     let admitted = Instant::now();
+    // Chaos seam: a prefix-cache restore fault fails the prefill before
+    // the store is consulted, so the snapshot store's state is exactly
+    // what the fault-free run would have seen.
+    let prefix_fault = store.is_some() && heal.fire(FaultSite::PrefixRestore);
     // Every popped request must produce exactly one completion
     // event, even if the engine panics — otherwise `run_batch`
     // waits forever on the lost request.
     let started = std::panic::catch_unwind(AssertUnwindSafe(|| {
         let be = engine.backend();
         let mut s = DecodeSession::new_text(be, &req.prompt, req.max_new)?;
+        if prefix_fault {
+            return Err(injected_error(FaultSite::PrefixRestore));
+        }
         let cached = match store {
             Some(st) => s.prefill_with_cache(be, st)?,
             None => {
@@ -1902,36 +2629,85 @@ fn admit_request(
                 admitted,
                 last_event: admitted,
                 token_seconds: Vec::new(),
+                prompt: req.prompt,
+                max_new: req.max_new,
+                emitted: 0,
+                suppress: 0,
+                retries: 0,
+                last_checkpoint: 0,
             });
-            true
+            AdmitOutcome::Continue
         }
         Ok(Err(e)) => {
-            events
-                .send(WorkerEvent::Failed {
+            fail_or_ticket(
+                worker,
+                events,
+                heal,
+                RecoveryTicket {
                     id: req.id,
-                    worker,
-                    error: format!("{e:#}"),
-                })
-                .ok();
-            true
+                    tenant: req.tenant,
+                    priority: req.priority,
+                    deadline: req.deadline,
+                    policy,
+                    conversation: req.conversation,
+                    queue_seconds,
+                    admitted,
+                    token_seconds: Vec::new(),
+                    prompt: req.prompt,
+                    max_new: req.max_new,
+                    emitted: 0,
+                    retries: 0,
+                    not_before: admitted,
+                },
+                &format!("{e:#}"),
+            );
+            AdmitOutcome::Continue
         }
         Err(_) => {
-            retire(worker, events, req.id, live);
-            false
+            if heal.enabled() {
+                fail_or_ticket(
+                    worker,
+                    events,
+                    heal,
+                    RecoveryTicket {
+                        id: req.id,
+                        tenant: req.tenant,
+                        priority: req.priority,
+                        deadline: req.deadline,
+                        policy,
+                        conversation: req.conversation,
+                        queue_seconds,
+                        admitted,
+                        token_seconds: Vec::new(),
+                        prompt: req.prompt,
+                        max_new: req.max_new,
+                        emitted: 0,
+                        retries: 0,
+                        not_before: admitted,
+                    },
+                    "worker panicked during prefill",
+                );
+            }
+            AdmitOutcome::EngineSuspect { panicked_id: req.id }
         }
     }
 }
 
 /// What [`resume_parked`] did with the park store's best entry.
 enum ResumeOutcome {
-    /// An entry was taken: either resumed into a live slot or its
-    /// failure reported. Re-check admission either way.
+    /// An entry was taken: either resumed into a live slot, its failure
+    /// reported, or a recovery ticket filed. Re-check admission either
+    /// way.
     Resumed,
     /// Nothing parked.
     Empty,
-    /// The engine panicked during restore; the caller must retire,
-    /// failing `failed_id` along with the live set.
+    /// The engine panicked during restore with healing off; the caller
+    /// must retire, failing `failed_id` along with the live set.
     Panicked { failed_id: u64 },
+    /// The engine panicked during restore with healing on; the entry
+    /// already rides a recovery ticket and the caller should supervise
+    /// (rebuild) the engine.
+    EngineSuspect,
 }
 
 /// Take the highest-value parked session and rebuild it as a live
@@ -1948,6 +2724,7 @@ fn resume_parked(
     events: &Sender<WorkerEvent>,
     slo: &SloCounters,
     counters: &LaneCounters,
+    heal: &mut HealRuntime,
     current_policy: &mut ExitPolicy,
     live: &mut Vec<Live>,
 ) -> ResumeOutcome {
@@ -1965,6 +2742,10 @@ fn resume_parked(
         queue_seconds,
         admitted,
         token_seconds,
+        prompt,
+        max_new,
+        emitted,
+        retries,
         parked,
     } = e;
     if policy != *current_policy {
@@ -1972,11 +2753,10 @@ fn resume_parked(
         *current_policy = policy.clone();
         counters.record_policy_apply();
     }
-    let restored = if cfg.control.fault == Some(ControlFault::ResumeRestore)
-    {
-        Ok(Err(anyhow::anyhow!(
-            "injected fault: cache restore failed during resume"
-        )))
+    let inject = cfg.control.fault == Some(ControlFault::ResumeRestore)
+        || heal.fire(FaultSite::Resume);
+    let restored = if inject {
+        Ok(Err(injected_error(FaultSite::Resume)))
     } else {
         std::panic::catch_unwind(AssertUnwindSafe(|| {
             parked.resume(engine.backend())
@@ -1985,6 +2765,7 @@ fn resume_parked(
     match restored {
         Ok(Ok(session)) => {
             slo.record_resume();
+            let generated = session.generated().len();
             live.push(Live {
                 id,
                 policy,
@@ -1997,24 +2778,74 @@ fn resume_parked(
                 admitted,
                 last_event: Instant::now(),
                 token_seconds,
+                prompt,
+                max_new,
+                // A parked session resumes exactly where it left off,
+                // so nothing re-decodes; the suppress window is only
+                // non-zero if a recovery preceded the park.
+                suppress: emitted.saturating_sub(generated),
+                emitted,
+                retries,
+                last_checkpoint: generated,
             });
             ResumeOutcome::Resumed
         }
         Ok(Err(err)) => {
-            // Typed per-request failure: the resumed request fails
+            // Typed per-request failure (or a recovery episode when
+            // healing is on): the resumed request fails or recovers
             // alone; the worker and every other session keep serving.
             slo.record_resume_failure();
-            events
-                .send(WorkerEvent::Failed {
+            fail_or_ticket(
+                worker,
+                events,
+                heal,
+                RecoveryTicket {
                     id,
-                    worker,
-                    error: format!("resume failed: {err:#}"),
-                })
-                .ok();
+                    tenant,
+                    priority,
+                    deadline,
+                    policy,
+                    conversation,
+                    queue_seconds,
+                    admitted,
+                    token_seconds,
+                    prompt,
+                    max_new,
+                    emitted,
+                    retries,
+                    not_before: Instant::now(),
+                },
+                &format!("resume failed: {err:#}"),
+            );
             ResumeOutcome::Resumed
         }
         Err(_) => {
             slo.record_resume_failure();
+            if heal.enabled() {
+                fail_or_ticket(
+                    worker,
+                    events,
+                    heal,
+                    RecoveryTicket {
+                        id,
+                        tenant,
+                        priority,
+                        deadline,
+                        policy,
+                        conversation,
+                        queue_seconds,
+                        admitted,
+                        token_seconds,
+                        prompt,
+                        max_new,
+                        emitted,
+                        retries,
+                        not_before: Instant::now(),
+                    },
+                    "resume failed: worker panicked during restore",
+                );
+                return ResumeOutcome::EngineSuspect;
+            }
             ResumeOutcome::Panicked { failed_id: id }
         }
     }
@@ -2037,6 +2868,7 @@ fn settle_round(
     sched: &Scheduler,
     store: Option<&TieredStore>,
     convo: &ConvoPlane,
+    heal: &mut HealRuntime,
     live: &mut Vec<Live>,
     mut retired: Vec<(usize, Option<String>)>,
 ) {
@@ -2055,11 +2887,12 @@ fn settle_round(
         l.session.close(backend);
         match err {
             Some(error) => {
-                events
-                    .send(WorkerEvent::Failed { id: l.id, worker, error })
-                    .ok();
+                fail_or_ticket(worker, events, heal, live_ticket(l), &error);
             }
             None => {
+                // A finished request's micro-checkpoint can never be
+                // needed again; release its bytes eagerly.
+                heal.plane.drop_checkpoint(l.id);
                 let service = complete(worker, events, l);
                 sched.note_done(service);
             }
@@ -2244,6 +3077,7 @@ fn complete(worker: usize, events: &Sender<WorkerEvent>, l: Live) -> f64 {
             total_seconds: l.queue_seconds + service_seconds,
             deadline: l.deadline,
             tenant: l.tenant,
+            retries: l.retries,
         }))
         .ok();
     service_seconds
@@ -2262,6 +3096,7 @@ fn retire(
             id: panicked_id,
             worker,
             error: "worker panicked during decode".into(),
+            retries: 0,
         })
         .ok();
     for l in live {
@@ -2272,6 +3107,7 @@ fn retire(
                 error: "worker retired mid-generation (engine panicked \
                         on another request)"
                     .into(),
+                retries: l.retries,
             })
             .ok();
     }
@@ -2299,6 +3135,391 @@ fn build_engine(
                 .context("building pipelined engine")?,
         ),
     })
+}
+
+/// Emit one decoded token to the client stream — or swallow it when the
+/// session is replaying a recovered tail. The suppress window covers
+/// exactly the tokens the client already saw before the fault, so a
+/// recovered stream is token- and exit-layer-identical to a fault-free
+/// run; swallowed replays are counted as re-decoded work.
+fn stream_token(
+    worker: usize,
+    events: &Sender<WorkerEvent>,
+    faults: &FaultCounters,
+    l: &mut Live,
+    now: Instant,
+    token: i32,
+    exit_layer: usize,
+) {
+    if l.suppress > 0 {
+        l.suppress -= 1;
+        l.last_event = now;
+        faults.record_redecoded(1);
+        return;
+    }
+    l.token_seconds
+        .push(now.duration_since(l.last_event).as_secs_f64());
+    l.last_event = now;
+    l.emitted += 1;
+    events
+        .send(WorkerEvent::Token { id: l.id, worker, token, exit_layer })
+        .ok();
+}
+
+/// Turn a (failed) live session into a recovery ticket, carrying the
+/// request identity, accumulated timing, and stream position. The
+/// session itself is dropped — callers close it (best-effort) first.
+fn live_ticket(l: Live) -> RecoveryTicket {
+    RecoveryTicket {
+        id: l.id,
+        tenant: l.tenant,
+        priority: l.priority,
+        deadline: l.deadline,
+        policy: l.policy,
+        conversation: l.conversation,
+        queue_seconds: l.queue_seconds,
+        admitted: l.admitted,
+        token_seconds: l.token_seconds,
+        prompt: l.prompt,
+        max_new: l.max_new,
+        emitted: l.emitted,
+        retries: l.retries,
+        not_before: l.last_event,
+    }
+}
+
+/// Route a failed request: with healing off, fail it typed exactly as
+/// before this layer existed; with healing on, open a recovery episode
+/// — count the fault against its seam, and either file the ticket
+/// (backoff applied) or give up typed once its retry budget is spent.
+/// Every episode opened here closes with exactly one recovery or one
+/// recovery failure, so `recoveries == observed - recovery_failures`
+/// holds by construction.
+fn fail_or_ticket(
+    worker: usize,
+    events: &Sender<WorkerEvent>,
+    heal: &mut HealRuntime,
+    mut t: RecoveryTicket,
+    error: &str,
+) {
+    if !heal.enabled() {
+        events
+            .send(WorkerEvent::Failed {
+                id: t.id,
+                worker,
+                error: error.to_string(),
+                retries: t.retries,
+            })
+            .ok();
+        return;
+    }
+    heal.counters.record_observed(classify_failure(error));
+    if t.retries >= heal.cfg.max_retries {
+        heal.counters.record_recovery_failure();
+        heal.plane.drop_checkpoint(t.id);
+        events
+            .send(WorkerEvent::Failed {
+                id: t.id,
+                worker,
+                error: format!(
+                    "giving up after {} recovery attempts: {error}",
+                    t.retries
+                ),
+                retries: t.retries,
+            })
+            .ok();
+        return;
+    }
+    t.not_before =
+        Instant::now() + recovery_backoff(heal.cfg.backoff, t.retries + 1);
+    heal.plane.submit(t);
+}
+
+/// A recovery attempt itself failed: consume one retry and re-file (or
+/// give up typed). Unlike [`fail_or_ticket`] this does *not* count a
+/// new observed fault — the episode is already open; attempts inside it
+/// only consume budget.
+fn retry_ticket(
+    worker: usize,
+    events: &Sender<WorkerEvent>,
+    heal: &mut HealRuntime,
+    mut t: RecoveryTicket,
+    error: &str,
+) {
+    t.retries += 1;
+    if t.retries >= heal.cfg.max_retries {
+        heal.counters.record_recovery_failure();
+        heal.plane.drop_checkpoint(t.id);
+        events
+            .send(WorkerEvent::Failed {
+                id: t.id,
+                worker,
+                error: format!(
+                    "giving up after {} recovery attempts: {error}",
+                    t.retries
+                ),
+                retries: t.retries,
+            })
+            .ok();
+        return;
+    }
+    t.not_before =
+        Instant::now() + recovery_backoff(heal.cfg.backoff, t.retries + 1);
+    heal.plane.submit(t);
+}
+
+/// What [`recover_pending`] did with the heal plane's ticket queue.
+enum RecoverOutcome {
+    /// A due ticket was taken: restored into a live slot, re-filed
+    /// after a typed failure, or failed for good. Re-check admission.
+    Recovered,
+    /// Tickets exist but none is due yet; the earliest matures in the
+    /// given duration.
+    Waiting(Duration),
+    /// No pending tickets.
+    Empty,
+    /// The engine panicked during the restore; the ticket was re-filed
+    /// and the caller should supervise (rebuild) the engine.
+    EngineSuspect,
+}
+
+/// Re-admit one due recovery ticket: restore the request's session from
+/// its micro-checkpoint when one is stored (only the tail since the
+/// checkpoint re-decodes), or re-run it from scratch. Tokens the client
+/// already saw are suppressed on replay ([`stream_token`]), so the
+/// recovered stream is identical to a fault-free run.
+fn recover_pending(
+    worker: usize,
+    engine: &mut dyn PoolEngine,
+    events: &Sender<WorkerEvent>,
+    heal: &mut HealRuntime,
+    current_policy: &mut ExitPolicy,
+    counters: &LaneCounters,
+    live: &mut Vec<Live>,
+) -> RecoverOutcome {
+    let t = match heal.plane.take_due(Instant::now()) {
+        TicketPoll::Due(t) => t,
+        TicketPoll::Waiting(d) => return RecoverOutcome::Waiting(d),
+        TicketPoll::Empty => return RecoverOutcome::Empty,
+    };
+    heal.counters.record_retry();
+    // Apply the ticket's policy *before* the restore — interleaving
+    // backends capture a session's policy at open/restore.
+    if t.policy != *current_policy {
+        engine.apply_policy(&t.policy);
+        *current_policy = t.policy.clone();
+        counters.record_policy_apply();
+    }
+    let checkpoint = heal.plane.checkpoint(t.id);
+    // Chaos seam: a restore fault fails the attempt before the backend
+    // is touched (the checkpoint stays stored for the next attempt).
+    let fault = heal.fire(FaultSite::Restore);
+    let attempt = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        if fault {
+            return Err(injected_error(FaultSite::Restore));
+        }
+        let be = engine.backend();
+        match checkpoint {
+            Some(p) => p.resume(be),
+            None => {
+                let mut s =
+                    DecodeSession::new_text(be, &t.prompt, t.max_new)?;
+                s.prefill(be)?;
+                Ok(s)
+            }
+        }
+    }));
+    match attempt {
+        Ok(Ok(session)) => {
+            heal.counters.record_recovery();
+            let generated = session.generated().len();
+            live.push(Live {
+                id: t.id,
+                policy: t.policy,
+                session,
+                queue_seconds: t.queue_seconds,
+                deadline: t.deadline,
+                priority: t.priority,
+                tenant: t.tenant,
+                conversation: t.conversation,
+                admitted: t.admitted,
+                last_event: Instant::now(),
+                token_seconds: t.token_seconds,
+                prompt: t.prompt,
+                max_new: t.max_new,
+                suppress: t.emitted.saturating_sub(generated),
+                emitted: t.emitted,
+                retries: t.retries + 1,
+                last_checkpoint: generated,
+            });
+            RecoverOutcome::Recovered
+        }
+        Ok(Err(e)) => {
+            retry_ticket(worker, events, heal, t, &format!("{e:#}"));
+            RecoverOutcome::Recovered
+        }
+        Err(_) => {
+            retry_ticket(
+                worker,
+                events,
+                heal,
+                t,
+                "worker panicked during recovery restore",
+            );
+            RecoverOutcome::EngineSuspect
+        }
+    }
+}
+
+/// The engine is suspect (panicked worker, poisoned stage chain): fail
+/// or ticket every stranded live session, then rebuild the engine in
+/// place so checkpointed work re-admits onto healthy state. Returns
+/// `false` when the worker flapped past its quarantine budget or the
+/// rebuild itself failed — the worker is then quarantined and must stop
+/// serving; the shrunken capacity feeds the shed/degrade path exactly
+/// like a retired worker always has.
+#[allow(clippy::too_many_arguments)]
+fn supervise(
+    worker: usize,
+    engine: &mut Box<dyn PoolEngine>,
+    state: &ModelState,
+    cfg: &PoolConfig,
+    events: &Sender<WorkerEvent>,
+    heal: &mut HealRuntime,
+    current_policy: &mut ExitPolicy,
+    live: &mut Vec<Live>,
+    casualty: Option<Live>,
+    error: &str,
+) -> bool {
+    // Every stranded session rides a ticket (or fails typed once its
+    // retry budget is spent). The suspect engine's state is going away
+    // with the rebuild, so closing sessions is best-effort only.
+    for l in casualty.into_iter().chain(live.drain(..)) {
+        let mut l = l;
+        let be = engine.backend();
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            l.session.close(be);
+        }));
+        fail_or_ticket(worker, events, heal, live_ticket(l), error);
+    }
+    heal.consecutive_failures += 1;
+    let flaps = heal.consecutive_failures;
+    if flaps > heal.cfg.quarantine_after {
+        let msg = format!(
+            "{flaps} consecutive engine failures (last: {error})"
+        );
+        quarantine(worker, events, heal, &msg);
+        return false;
+    }
+    match build_engine(state.clone(), cfg) {
+        Ok(fresh) => {
+            heal.counters.record_restart();
+            let old = std::mem::replace(engine, fresh);
+            // The old engine's teardown may itself panic or block on a
+            // dead stage chain; never let it take the fresh engine (or
+            // this worker) down with it.
+            let _ = std::panic::catch_unwind(AssertUnwindSafe(move || {
+                let mut old = old;
+                old.finish();
+            }));
+            *current_policy = cfg.policy.clone();
+            true
+        }
+        Err(e) => {
+            let msg = format!("engine rebuild failed: {e:#}");
+            quarantine(worker, events, heal, &msg);
+            false
+        }
+    }
+}
+
+/// Quarantine a flapping worker: abandon every pending recovery ticket
+/// as a typed failure (exactly one terminal event per request — nothing
+/// strands, even if this was the last worker), then report the worker
+/// dead so capacity accounting sees the shrunken pool. Tickets another
+/// live worker has already taken are unaffected.
+fn quarantine(
+    worker: usize,
+    events: &Sender<WorkerEvent>,
+    heal: &mut HealRuntime,
+    reason: &str,
+) {
+    heal.counters.record_quarantine();
+    for t in heal.plane.drain_pending() {
+        heal.counters.record_recovery_failure();
+        heal.plane.drop_checkpoint(t.id);
+        events
+            .send(WorkerEvent::Failed {
+                id: t.id,
+                worker,
+                error: format!(
+                    "recovery abandoned (worker quarantined: {reason})"
+                ),
+                retries: t.retries,
+            })
+            .ok();
+    }
+    events
+        .send(WorkerEvent::Fatal {
+            worker,
+            error: format!("quarantined: {reason}"),
+        })
+        .ok();
+}
+
+/// Sweep the live set for sessions due a micro-checkpoint: every
+/// `checkpoint_interval` generated tokens, capture a non-consuming
+/// snapshot into the heal plane's bounded store. A failed or refused
+/// capture only counts and logs — the session keeps serving; its
+/// recovery would simply re-run from scratch (or an older checkpoint).
+fn checkpoint_live(
+    worker: usize,
+    engine: &mut dyn PoolEngine,
+    heal: &mut HealRuntime,
+    live: &mut Vec<Live>,
+) {
+    let interval = heal.cfg.checkpoint_interval;
+    if interval == 0
+        || !heal.enabled()
+        || !engine.backend().supports_cache_snapshots()
+    {
+        return;
+    }
+    for l in live.iter_mut() {
+        let generated = l.session.generated().len();
+        if generated < l.last_checkpoint + interval || l.session.is_done() {
+            continue;
+        }
+        l.last_checkpoint = generated;
+        let fault = heal.fire(FaultSite::Snapshot);
+        let snap = if fault {
+            Err(injected_error(FaultSite::Snapshot))
+        } else {
+            let be = engine.backend();
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                l.session.checkpoint(be)
+            }))
+            .unwrap_or_else(|_| {
+                Err(anyhow::anyhow!(
+                    "worker panicked during checkpoint snapshot"
+                ))
+            })
+        };
+        match snap {
+            Ok(p) => {
+                let stored = heal.plane.store_checkpoint(l.id, p);
+                heal.counters.record_checkpoint(stored);
+            }
+            Err(e) => {
+                heal.counters.record_checkpoint(false);
+                eprintln!(
+                    "[serve] worker {worker}: micro-checkpoint failed \
+                     (request {} recovers from scratch): {e:#}",
+                    l.id
+                );
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -2531,8 +3752,87 @@ mod tests {
             queue_seconds: 0.0,
             admitted: Instant::now(),
             token_seconds: Vec::new(),
+            prompt: String::new(),
+            max_new: 8,
+            emitted: 0,
+            retries: 0,
             parked: ParkedSession::stub(vec![1, 2, 3]),
         }
+    }
+
+    fn stub_ticket(id: u64, not_before: Instant) -> RecoveryTicket {
+        RecoveryTicket {
+            id,
+            tenant: 0,
+            priority: 0,
+            deadline: None,
+            policy: ExitPolicy::Never,
+            conversation: None,
+            queue_seconds: 0.0,
+            admitted: Instant::now(),
+            token_seconds: Vec::new(),
+            prompt: String::new(),
+            max_new: 8,
+            emitted: 0,
+            retries: 0,
+            not_before,
+        }
+    }
+
+    /// Micro-checkpoint store: capacity bounds new ids, refreshing an
+    /// already-stored id always succeeds (a live session's newer
+    /// checkpoint supersedes its older one, never competing with other
+    /// requests for room), and dropping frees the slot.
+    #[test]
+    fn heal_plane_checkpoints_bounded_and_replaceable() {
+        let plane = HealPlane::new(2);
+        assert!(plane.store_checkpoint(1, ParkedSession::stub(vec![1])));
+        assert!(plane.store_checkpoint(2, ParkedSession::stub(vec![2])));
+        // Full: a third id is refused, its request recovers from
+        // scratch instead of evicting someone else's checkpoint.
+        assert!(!plane.store_checkpoint(3, ParkedSession::stub(vec![3])));
+        assert!(plane.checkpoint(3).is_none());
+        // Refreshing id 1 with a longer tail succeeds at capacity, and
+        // reads are non-consuming clones (retries can re-read).
+        assert!(plane
+            .store_checkpoint(1, ParkedSession::stub(vec![1, 4, 5])));
+        assert_eq!(plane.checkpoint(1).unwrap().tokens(), &[1, 4, 5]);
+        assert!(plane.checkpoint(1).is_some());
+        let (entries, bytes) = plane.usage();
+        assert_eq!(entries, 2);
+        // Stub snapshots carry no stage caches, so they pin no bytes.
+        assert_eq!(bytes, 0);
+        plane.drop_checkpoint(1);
+        assert!(plane.checkpoint(1).is_none());
+        assert!(plane.store_checkpoint(3, ParkedSession::stub(vec![3])));
+    }
+
+    /// Ticket queue: empty poll, earliest-due-first release, a
+    /// not-yet-due queue reports the wait to maturity, and quarantine's
+    /// drain takes everything left.
+    #[test]
+    fn heal_plane_tickets_release_earliest_due_first() {
+        let plane = HealPlane::new(2);
+        let now = Instant::now();
+        assert!(!plane.has_pending());
+        assert!(matches!(plane.take_due(now), TicketPoll::Empty));
+        plane.submit(stub_ticket(1, now + Duration::from_secs(60)));
+        plane.submit(stub_ticket(2, now));
+        assert!(plane.has_pending());
+        match plane.take_due(now) {
+            TicketPoll::Due(t) => assert_eq!(t.id, 2),
+            _ => panic!("expected the due ticket"),
+        }
+        match plane.take_due(now) {
+            TicketPoll::Waiting(d) => {
+                assert!(d <= Duration::from_secs(60));
+            }
+            _ => panic!("expected a maturing ticket"),
+        }
+        let drained = plane.drain_pending();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].id, 1);
+        assert!(!plane.has_pending());
     }
 
     /// Registry lifecycle: an unknown id opens (touch misses), a

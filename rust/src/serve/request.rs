@@ -135,6 +135,12 @@ pub struct ServeResponse {
     /// The request's tenant id, echoed back so metrics can report
     /// per-tenant token shares.
     pub tenant: usize,
+    /// Recovery re-admission attempts this request survived (0 for the
+    /// common fault-free case). A non-zero count means the self-healing
+    /// layer restored the session from a micro-checkpoint (or re-ran it
+    /// from scratch) after a fault — invisibly: the stream is identical
+    /// to a fault-free run.
+    pub retries: u32,
 }
 
 /// Build an `n`-request set by cycling the task suite's prompts,

@@ -1,0 +1,401 @@
+//! Integration: self-healing serving must be **output-invisible**.
+//!
+//! A pinned-seed chaos schedule ([`FaultPlan`]) fires injected faults at
+//! every serving seam — fused dispatch, interleaved submit/collect
+//! windows, solo decode, stage-thread panics, snapshot/restore, prefix
+//! restore — while decode-time micro-checkpoints plus bounded-retry
+//! recovery re-admit every casualty. The bar: on both engines, across
+//! exit policies, with the prefix cache on and off, every request under
+//! chaos completes with a (token, exit-layer) stream **identical** to
+//! its fault-free run; retries stay within budget; the recovery ledger
+//! balances (`recoveries + recovery_failures == observed_total()`); and
+//! bursty multi-tenant traffic under chaos terminates with zero
+//! deadlocks and zero dropped requests.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use eellm::config::{LossWeightSchedule, LrSchedule};
+use eellm::data::dataset::{Dataset, TrainBatch};
+use eellm::data::synth::{bursty_traffic, Corpus, CorpusSpec, TrafficSpec};
+use eellm::inference::{ExitPolicy, ModelState};
+use eellm::runtime::artifacts::Manifest;
+use eellm::serve::{
+    BatchOutcome, ControlConfig, EngineKind, EnginePool, FaultPlan,
+    FaultSite, HealConfig, Outcome, Policy, PoolConfig, ServeEvent,
+    ServeRequest,
+};
+use eellm::training::trainer::{PipelineTrainer, TrainerOptions};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("ee-tiny").join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+/// Train ee-tiny briefly so confidences are meaningful (same recipe as
+/// the sibling equivalence suites).
+fn trained_state(man: &Manifest, steps: usize) -> ModelState {
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let mut ds =
+        Dataset::from_corpus(&corpus, man.model.seq, man.model.microbatch, 3);
+    let mut trainer = PipelineTrainer::new(
+        man.clone(),
+        TrainerOptions {
+            seed: 42,
+            lr: LrSchedule::cosine(3e-3, 5, steps),
+            grad_clip: 1.0,
+            loss_weights: LossWeightSchedule::Constant,
+            total_steps: steps,
+            bubble_fill: 0,
+            bf_ratio: 2.0,
+        },
+    )
+    .unwrap();
+    for _ in 0..steps {
+        let batches: Vec<TrainBatch> =
+            (0..2).map(|_| ds.next_microbatch()).collect();
+        trainer.train_step(&batches, &[]).unwrap();
+    }
+    let params = trainer.params().unwrap();
+    trainer.shutdown();
+    ModelState { man: man.clone(), stage_params: params }
+}
+
+/// The per-request recovery budget used across this suite — generous
+/// enough that exhausting it under the pinned rates is statistically
+/// implausible, small enough that `retries <= MAX_RETRIES` is a real
+/// boundedness assertion.
+const MAX_RETRIES: u32 = 12;
+
+/// A 1-worker pool with self-healing on: micro-checkpoints every 2
+/// tokens, bounded retries with a fast backoff, and a quarantine bar
+/// set far above any plausible flap count so chaos exercises rebuilds,
+/// not abandonment.
+fn heal_cfg(
+    engine: EngineKind,
+    policy: ExitPolicy,
+    cache_positions: usize,
+    lane_fusion: bool,
+    chaos: Option<FaultPlan>,
+) -> PoolConfig {
+    PoolConfig {
+        workers: 1,
+        engine,
+        policy,
+        sched: Policy::Fifo,
+        max_concurrent: 2,
+        prefix_cache_positions: cache_positions,
+        device_tier_positions: 0,
+        convo_idle_ttl: Duration::from_secs(300),
+        lane_fusion,
+        lane_residency: false,
+        control: ControlConfig {
+            heal: HealConfig {
+                checkpoint_interval: 2,
+                checkpoint_capacity: 8,
+                max_retries: MAX_RETRIES,
+                backoff: Duration::from_millis(1),
+                quarantine_after: 32,
+                chaos,
+            },
+            ..ControlConfig::default()
+        },
+    }
+}
+
+/// Run a streamed batch on its own thread with a watchdog, collecting
+/// each request's (token, exit layer) stream: recovery bugs must
+/// surface as typed failures or diverged streams, never as a hung
+/// completion loop.
+fn run_streamed(
+    state: ModelState,
+    cfg: PoolConfig,
+    reqs: Vec<ServeRequest>,
+) -> (BatchOutcome, BTreeMap<u64, Vec<(i32, usize)>>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let mut pool = EnginePool::new(state, cfg);
+        let mut streams: BTreeMap<u64, Vec<(i32, usize)>> = BTreeMap::new();
+        let out = pool
+            .run_batch_streamed(reqs, |ev| {
+                if let ServeEvent::Token { id, token, exit_layer, .. } = ev {
+                    streams
+                        .entry(*id)
+                        .or_default()
+                        .push((*token, *exit_layer));
+                }
+            })
+            .expect("batch");
+        pool.shutdown().expect("shutdown");
+        let _ = tx.send((out, streams));
+    });
+    let got = rx
+        .recv_timeout(Duration::from_secs(180))
+        .expect("pool deadlocked under chaos injection");
+    h.join().unwrap();
+    got
+}
+
+/// Every request completed, stayed within its retry budget, and the
+/// recovery ledger balances: each observed failure episode closed with
+/// exactly one recovery or one give-up.
+fn assert_healed(out: &BatchOutcome, n: usize, label: &str) {
+    assert!(out.failures.is_empty(), "{label}: {:?}", out.failures);
+    assert!(out.sheds.is_empty(), "{label}: {:?}", out.sheds);
+    assert_eq!(out.responses.len(), n, "{label}: dropped requests");
+    let f = &out.metrics.faults;
+    assert_eq!(
+        f.recoveries + f.recovery_failures,
+        f.observed_total(),
+        "{label}: recovery ledger out of balance: {f:?}"
+    );
+    assert_eq!(
+        f.recovery_failures, 0,
+        "{label}: a request gave up without a typed failure: {f:?}"
+    );
+    for r in &out.responses {
+        assert!(
+            r.retries <= MAX_RETRIES,
+            "{label}: retry budget overrun on id {}: {} > {MAX_RETRIES}",
+            r.id,
+            r.retries
+        );
+    }
+}
+
+/// Three of these share the `"fact: the capital "` prefix so cache-on
+/// runs exercise genuine prefix restores under chaos.
+const PROMPTS: [&str; 6] = [
+    "fact: the capital of freedonia is ",
+    "fact: the capital of sylvania is ",
+    "fact: the capital city ",
+    "count: 3 4 5 ",
+    "abc: a b c d ",
+    "the color of ",
+];
+
+fn prompt_reqs(max_new: usize) -> Vec<ServeRequest> {
+    PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest::new(i as u64, *p, max_new))
+        .collect()
+}
+
+/// The headline bar: under pinned-seed uniform chaos at every fault
+/// site, recovered streams are token- and exit-layer-identical to the
+/// fault-free run — on both engines, across >= 3 exit policies
+/// (including the `Never` full-model baseline), with the prefix cache
+/// on and off.
+#[test]
+fn chaos_recovered_streams_match_fault_free_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policies = [
+        ExitPolicy::confidence(0.4),
+        ExitPolicy::Never,
+        ExitPolicy::Entropy { max_nats: 1.0 },
+    ];
+    let cache_budget = 8 * man.model.max_seq;
+    let mut injected_anywhere = 0u64;
+    for &engine in &[EngineKind::Sequential, EngineKind::Pipelined] {
+        for policy in &policies {
+            for &cache in &[0usize, cache_budget] {
+                let label = format!(
+                    "{engine:?}/{policy}/cache={}",
+                    if cache > 0 { "on" } else { "off" }
+                );
+                let (ref_out, want) = run_streamed(
+                    state.clone(),
+                    heal_cfg(engine, policy.clone(), cache, true, None),
+                    prompt_reqs(10),
+                );
+                assert!(
+                    ref_out.failures.is_empty(),
+                    "{label}: fault-free reference run failed: {:?}",
+                    ref_out.failures
+                );
+                assert_eq!(
+                    ref_out.metrics.faults.injected_total(),
+                    0,
+                    "{label}: chaos-off run injected faults"
+                );
+                let chaos =
+                    FaultPlan::new(0xC0FFEE).with_uniform_rate(0.05);
+                let (out, got) = run_streamed(
+                    state.clone(),
+                    heal_cfg(
+                        engine,
+                        policy.clone(),
+                        cache,
+                        true,
+                        Some(chaos),
+                    ),
+                    prompt_reqs(10),
+                );
+                assert_healed(&out, PROMPTS.len(), &label);
+                assert_eq!(
+                    got, want,
+                    "{label}: recovered streams diverged from the \
+                     fault-free run"
+                );
+                injected_anywhere += out.metrics.faults.injected_total();
+            }
+        }
+    }
+    assert!(
+        injected_anywhere > 0,
+        "uniform 5% chaos never fired across the whole matrix — the \
+         injector is dead and the suite proved nothing"
+    );
+}
+
+/// Micro-checkpoints make recovery cheap and observable: under a
+/// decode-site-only schedule on solo steps, failed sessions re-admit
+/// from their latest checkpoint, the already-streamed head is
+/// suppressed on replay (counted as `redecoded_tokens`), and the
+/// stitched stream still matches the fault-free run.
+#[test]
+fn micro_checkpoints_bound_the_redecoded_tail() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let policy = ExitPolicy::confidence(0.4);
+    // lane_fusion off: every step is a solo decode, so the `decode`
+    // fault site sees every token draw.
+    let (ref_out, want) = run_streamed(
+        state.clone(),
+        heal_cfg(EngineKind::Sequential, policy.clone(), 0, false, None),
+        prompt_reqs(16),
+    );
+    assert!(ref_out.failures.is_empty(), "{:?}", ref_out.failures);
+    let chaos = FaultPlan::new(7).with_rate(FaultSite::Decode, 0.12);
+    let (out, got) = run_streamed(
+        state.clone(),
+        heal_cfg(
+            EngineKind::Sequential,
+            policy,
+            0,
+            false,
+            Some(chaos),
+        ),
+        prompt_reqs(16),
+    );
+    assert_healed(&out, PROMPTS.len(), "sequential/solo");
+    assert_eq!(
+        got, want,
+        "checkpoint-recovered streams diverged from the fault-free run"
+    );
+    let f = &out.metrics.faults;
+    assert!(
+        f.observed[FaultSite::Decode.index()] > 0,
+        "12% decode chaos never fired over ~96 solo steps: {f:?}"
+    );
+    assert!(f.recoveries > 0, "faults fired but nothing recovered: {f:?}");
+    assert!(
+        f.checkpoints > 0,
+        "a 2-token checkpoint cadence captured nothing: {f:?}"
+    );
+    assert!(
+        f.redecoded_tokens > 0,
+        "recoveries re-admitted sessions without replaying any \
+         suppressed head — checkpoint restore never engaged: {f:?}"
+    );
+    // Only the tail is re-decoded: replayed work stays well under the
+    // batch's total output (scratch re-decodes would blow past it).
+    let total_tokens: u64 =
+        want.values().map(|s| s.len() as u64).sum();
+    assert!(
+        f.redecoded_tokens < total_tokens,
+        "re-decoded {} of {total_tokens} tokens — recovery is replaying \
+         whole streams, not checkpoint tails: {f:?}",
+        f.redecoded_tokens
+    );
+}
+
+/// Bursty multi-tenant traffic through the full control plane
+/// (priority scheduling + preemption) under uniform chaos: the batch
+/// terminates with zero deadlocks, zero dropped requests, and every
+/// request resolved to a typed non-failure outcome, on both engines.
+#[test]
+fn bursty_chaos_drops_nothing_and_terminates() {
+    if !have_artifacts() {
+        return;
+    }
+    let man = Manifest::load_config(&artifacts_root(), "ee-tiny").unwrap();
+    let state = trained_state(&man, 60);
+    let corpus = Corpus::build(&CorpusSpec {
+        seed: 7,
+        n_entities: 8,
+        target_bytes: 120_000,
+    });
+    let spec = TrafficSpec {
+        seed: 13,
+        n_requests: 12,
+        tenants: vec![3.0, 1.0],
+        period: 6,
+        burst_len: 3,
+        deadline_ms: (20, 200),
+        deadline_rate: 0.6,
+        max_new: (2, 6),
+        prompt_bytes: (16, 64),
+    };
+    let traffic = bursty_traffic(&spec, &corpus.facts);
+    let reqs: Vec<ServeRequest> = traffic
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut r =
+                ServeRequest::new(i as u64, t.prompt.as_str(), t.max_new)
+                    .with_priority(t.priority)
+                    .with_tenant(t.tenant);
+            if let Some(ms) = t.deadline_ms {
+                r = r.with_deadline(Duration::from_millis(ms));
+            }
+            r
+        })
+        .collect();
+    for &engine in &[EngineKind::Sequential, EngineKind::Pipelined] {
+        let mut cfg = heal_cfg(
+            engine,
+            ExitPolicy::confidence(0.4),
+            0,
+            true,
+            Some(FaultPlan::new(29).with_uniform_rate(0.03)),
+        );
+        cfg.sched = Policy::Priority;
+        cfg.control.preempt = true;
+        cfg.control.preempt_horizon = Duration::from_secs(60);
+        cfg.control.park_capacity = 2;
+        cfg.control.tenant_weights = spec.tenants.clone();
+        let (out, _) = run_streamed(state.clone(), cfg, reqs.clone());
+        assert_healed(&out, 12, &format!("{engine:?}/bursty"));
+        let outcomes = out.outcomes();
+        assert_eq!(outcomes.len(), 12, "{engine:?}");
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.id(), i as u64, "{engine:?}");
+            assert!(
+                !matches!(o, Outcome::Failed(_)),
+                "{engine:?}: request {i} failed under recoverable \
+                 chaos: {o:?}"
+            );
+        }
+    }
+}

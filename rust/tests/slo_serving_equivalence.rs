@@ -291,6 +291,7 @@ fn control_cfg(
             shed: None,
             tenant_weights: Vec::new(),
             fault,
+            heal: eellm::serve::HealConfig::default(),
         },
     }
 }
